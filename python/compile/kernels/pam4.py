@@ -1,0 +1,84 @@
+"""L1 Pallas kernels for the PAM4 signal path: transceiver snapping and
+the preprocessing unit P.
+
+`pam4_snap` models the receiving transceiver's limited resolution
+(§III-A): amplitudes snap to the nearest of the four PAM levels.
+`preprocess` is the optical averaging unit P: group `c` consecutive
+symbols into a base-4^c digit per server, average over servers.
+Both have pure-jnp oracles in `ref.py`.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BLOCK = 4096
+
+
+def _snap_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    # Round half away from zero (non-negative amplitudes ⇒ floor(x+0.5)),
+    # clamp to the PAM4 range.
+    o_ref[...] = jnp.clip(jnp.floor(x + 0.5), 0.0, 3.0)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def pam4_snap(x: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    """Snap amplitudes to PAM4 levels. Works on any (batch, m) array."""
+    batch, m = x.shape
+    bb = min(_BLOCK, max(batch, 1))
+    padded = -(-batch // bb) * bb
+    if padded != batch:
+        x = jnp.pad(x, ((0, padded - batch), (0, 0)))
+    out = pl.pallas_call(
+        _snap_kernel,
+        out_shape=jax.ShapeDtypeStruct((padded, m), jnp.float32),
+        grid=(padded // bb,),
+        in_specs=[pl.BlockSpec((bb, m), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bb, m), lambda i: (i, 0)),
+        interpret=interpret,
+    )(x.astype(jnp.float32))
+    return out[:batch]
+
+
+def _preprocess_kernel(plane_ref, o_ref, *, groups: int, c: int, n: int):
+    plane = plane_ref[...]  # (bb, n, groups*c)
+    bb = plane.shape[0]
+    g = plane.reshape(bb, n, groups, c)
+    # Base-4 positional combine, unrolled with python-float weights so the
+    # kernel captures no constant arrays (pallas requires consts as
+    # explicit inputs).
+    combined = g[..., 0] * float(4 ** (c - 1))
+    for j in range(1, c):
+        combined = combined + g[..., j] * float(4 ** (c - 1 - j))
+    o_ref[...] = jnp.sum(combined, axis=1) * (1.0 / n)
+
+
+@partial(jax.jit, static_argnames=("groups", "symbols_per_group", "interpret"))
+def preprocess(
+    plane: jnp.ndarray,
+    groups: int,
+    symbols_per_group: int,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """The P unit: (batch, N, M) symbol plane → (batch, K) averaged inputs."""
+    batch, n, m = plane.shape
+    c = symbols_per_group
+    assert m == groups * c, (m, groups, c)
+    bb = min(1024, max(batch, 1))
+    padded = -(-batch // bb) * bb
+    if padded != batch:
+        plane = jnp.pad(plane, ((0, padded - batch), (0, 0), (0, 0)))
+    out = pl.pallas_call(
+        partial(_preprocess_kernel, groups=groups, c=c, n=n),
+        out_shape=jax.ShapeDtypeStruct((padded, groups), jnp.float32),
+        grid=(padded // bb,),
+        in_specs=[pl.BlockSpec((bb, n, m), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((bb, groups), lambda i: (i, 0)),
+        interpret=interpret,
+    )(plane.astype(jnp.float32))
+    return out[:batch]

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness reference).
+
+Every Pallas kernel in this package has an exact reference here; pytest
+(`python/tests/test_kernels.py`) sweeps shapes/dtypes with hypothesis and
+asserts allclose between kernel and oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_linear(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, relu: bool) -> jnp.ndarray:
+    """o = act(x @ w + b); act = ReLU or identity."""
+    o = x @ w + b
+    return jax.nn.relu(o) if relu else o
+
+
+def pam4_snap(x: jnp.ndarray) -> jnp.ndarray:
+    """Transceiver snapping: round to the nearest PAM4 level, clamp [0, 3].
+
+    Round half away from zero to match rust `pam4::snap_pam4` exactly
+    (`jnp.round` is round-half-even, so implement via floor(x + 0.5)).
+    """
+    return jnp.clip(jnp.floor(x + 0.5), 0.0, 3.0)
+
+
+def preprocess(plane: jnp.ndarray, groups: int, symbols_per_group: int) -> jnp.ndarray:
+    """The P unit (§III-A): combine `c` consecutive PAM4 symbols into a
+    base-4^c digit per server, then average over the N servers.
+
+    plane: (batch, N, M) with M = groups * symbols_per_group
+    returns: (batch, groups)
+    """
+    batch, n, m = plane.shape
+    c = symbols_per_group
+    assert m == groups * c, (m, groups, c)
+    g = plane.reshape(batch, n, groups, c)
+    weights = jnp.asarray([4.0 ** (c - 1 - j) for j in range(c)], dtype=plane.dtype)
+    combined = jnp.einsum("bngc,c->bng", g, weights)
+    return combined.mean(axis=1)
+
+
+def onn_forward(weights: list[tuple[jnp.ndarray, jnp.ndarray]], a: jnp.ndarray) -> jnp.ndarray:
+    """Reference MLP forward over (batch, K) inputs: ReLU between layers,
+    linear head."""
+    h = a
+    for i, (w, b) in enumerate(weights):
+        last = i == len(weights) - 1
+        h = fused_linear(h, w, b, relu=not last)
+    return h

@@ -1,0 +1,80 @@
+"""L2: the OptINC switch compute graph in JAX, calling the L1 kernels.
+
+`switch_forward` is the full optical datapath of Fig. 3 for a batch of
+gradient words:
+
+    symbol plane (batch, N, M)          one PAM4 frame per server
+      → P  (kernels.pam4.preprocess)    optical averaging → (batch, K)
+      → f_θ (kernels.onn_fwd layers)    the trained ONN
+      → T  (splitter: broadcast — a no-op on the math, the rust
+            coordinator fans the one output to all N servers)
+      → (batch, M_out) raw output amplitudes
+
+The snapped variant appends the receiving transceiver's PAM4 snapping so
+the artifact returns integer levels directly. The cascade level-1 variant
+keeps the last symbol fractional (§III-C).
+
+This module is build-time only: `aot.py` embeds trained weights as HLO
+constants and lowers `switch_forward` to `artifacts/*.hlo.txt`, which the
+rust runtime executes through PJRT.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import onn_fwd, pam4
+from .optinc.scenarios import Scenario
+
+
+def onn_apply(weights: list[tuple[jnp.ndarray, jnp.ndarray]], a: jnp.ndarray) -> jnp.ndarray:
+    """ONN forward using the fused Pallas layer kernel."""
+    h = a
+    for i, (w, b) in enumerate(weights):
+        last = i == len(weights) - 1
+        h = onn_fwd.fused_linear(h, w, b, relu=not last)
+    return h
+
+
+def switch_forward(
+    weights: list[tuple[jnp.ndarray, jnp.ndarray]],
+    plane: jnp.ndarray,
+    sc: Scenario,
+) -> jnp.ndarray:
+    """Raw switch output amplitudes for a (batch, N, M) symbol plane."""
+    a = pam4.preprocess(plane, sc.onn_inputs, sc.symbols_per_group)
+    return onn_apply(weights, a)
+
+
+def switch_forward_snapped(
+    weights: list[tuple[jnp.ndarray, jnp.ndarray]],
+    plane: jnp.ndarray,
+    sc: Scenario,
+) -> jnp.ndarray:
+    """Switch output after receiver transceiver snapping (integer PAM4
+    levels as f32) — the artifact used on the rust hot path."""
+    return pam4.pam4_snap(switch_forward(weights, plane, sc))
+
+
+def switch_forward_fractional(
+    weights: list[tuple[jnp.ndarray, jnp.ndarray]],
+    plane: jnp.ndarray,
+    sc: Scenario,
+) -> jnp.ndarray:
+    """Cascade level-1 output: integer snap on all symbols except the
+    last, which carries the decimal remainder at 1/N resolution
+    (§III-C, eq. 10)."""
+    o = switch_forward(weights, plane, sc)
+    n = sc.servers
+    head = pam4.pam4_snap(o[:, :-1])
+    tail = jnp.clip(jnp.floor(o[:, -1:] * n + 0.5) / n, 0.0, 4.0 - 1.0 / n)
+    return jnp.concatenate([head, tail], axis=-1)
+
+
+def weights_from_params(arrs: dict) -> list[tuple[jnp.ndarray, jnp.ndarray]]:
+    """`.otsr`/npz dict (w1, b1, …) → ordered (w, b) list."""
+    n = max(int(k[1:]) for k in arrs if k.startswith("w"))
+    return [
+        (jnp.asarray(arrs[f"w{i}"]), jnp.asarray(arrs[f"b{i}"]))
+        for i in range(1, n + 1)
+    ]

@@ -1,0 +1,79 @@
+"""Matrix approximation ``W_s ≈ Σ_a·U_a`` (paper eqs. 4–6), numpy edition.
+
+Mirror of `rust/src/photonics/approx.rs` (cross-checked by tests via the
+`.otsr` interchange). Used during hardware-aware training: the selected
+layers are periodically projected onto the Σ·U structure so the final
+weights are exactly realizable by one diagonal + one unitary MZI stage.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def approximate_square(w: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Return (d, U_a) with ``W ≈ diag(d) @ U_a`` per eqs. 4–6.
+
+    U_a = U_s V_sᵀ from the SVD of W (the orthogonal Procrustes solution);
+    d_i = ⟨W_i, U_a_i⟩ (rows of U_a are unit norm).
+    """
+    assert w.shape[0] == w.shape[1], "approximation operates on square blocks"
+    u, _s, vt = np.linalg.svd(w)
+    ua = u @ vt
+    d = np.einsum("ij,ij->i", w, ua)
+    return d, ua
+
+
+def project(w: np.ndarray) -> np.ndarray:
+    """Project an arbitrary (possibly rectangular) matrix onto the
+    partitioned Σ·U structure (Fig. 4): square blocks of side min(m, n),
+    ragged tails zero-padded, each block approximated independently."""
+    m, n = w.shape
+    s = min(m, n)
+    out = np.zeros_like(w)
+    if m >= n:  # vertical partition: slabs of rows
+        for r0 in range(0, m, s):
+            rows = min(s, m - r0)
+            block = np.zeros((s, s), dtype=w.dtype)
+            block[:rows] = w[r0 : r0 + rows]
+            d, ua = approximate_square(block)
+            dense = d[:, None] * ua
+            out[r0 : r0 + rows] = dense[:rows]
+    else:  # horizontal partition: slabs of columns
+        for c0 in range(0, n, s):
+            cols = min(s, n - c0)
+            block = np.zeros((s, s), dtype=w.dtype)
+            block[:, :cols] = w[:, c0 : c0 + cols]
+            d, ua = approximate_square(block)
+            dense = d[:, None] * ua
+            out[:, c0 : c0 + cols] = dense[:, :cols]
+    return out
+
+
+def factors(w: np.ndarray) -> list[tuple[np.ndarray, np.ndarray]]:
+    """Per-block (d, U_a) factors of the partitioned matrix — what gets
+    programmed onto the photonic mesh (exported to rust via `.otsr`)."""
+    m, n = w.shape
+    s = min(m, n)
+    blocks: list[tuple[np.ndarray, np.ndarray]] = []
+    if m >= n:
+        for r0 in range(0, m, s):
+            rows = min(s, m - r0)
+            block = np.zeros((s, s), dtype=w.dtype)
+            block[:rows] = w[r0 : r0 + rows]
+            blocks.append(approximate_square(block))
+    else:
+        for c0 in range(0, n, s):
+            cols = min(s, n - c0)
+            block = np.zeros((s, s), dtype=w.dtype)
+            block[:, :cols] = w[:, c0 : c0 + cols]
+            blocks.append(approximate_square(block))
+    return blocks
+
+
+def relative_error(w: np.ndarray) -> float:
+    """‖project(W) − W‖_F / ‖W‖_F."""
+    denom = float(np.linalg.norm(w))
+    if denom == 0.0:
+        return 0.0
+    return float(np.linalg.norm(project(w) - w)) / denom

@@ -1,0 +1,45 @@
+"""MZI-count hardware cost model — python mirror of
+`rust/src/photonics/area.rs` (kept in lock-step by tests). See that file
+for the derivation; reproduces the Table I/II area ratios."""
+
+from __future__ import annotations
+
+from .scenarios import Scenario
+
+
+def unitary_mzis(n: int) -> int:
+    return n * (n - 1) // 2
+
+
+def full_matrix_mzis(m: int, n: int) -> int:
+    """SVD mapping: U (m×m) + Σ (column of m) + Vᵀ (n×n)."""
+    return m * (m + 1) // 2 + n * (n - 1) // 2
+
+
+def approx_block_mzis(s: int) -> int:
+    """Σ_a·U_a: one unitary + one diagonal column."""
+    return s * (s + 1) // 2
+
+
+def approx_matrix_mzis(m: int, n: int) -> int:
+    s = min(m, n)
+    blocks = -(-max(m, n) // s)
+    return blocks * approx_block_mzis(s)
+
+
+def layer_mzis(n_out: int, n_in: int, approximated: bool) -> int:
+    if approximated:
+        return approx_matrix_mzis(n_out, n_in)
+    return full_matrix_mzis(n_out, n_in)
+
+
+def scenario_mzis(sc: Scenario, with_approximation: bool) -> int:
+    total = 0
+    for l in range(1, len(sc.layers)):
+        approx = with_approximation and l in sc.approx_layers
+        total += layer_mzis(sc.layers[l], sc.layers[l - 1], approx)
+    return total
+
+
+def area_ratio(sc: Scenario) -> float:
+    return scenario_mzis(sc, True) / scenario_mzis(sc, False)

@@ -1,0 +1,178 @@
+"""ONN training datasets (paper §III-A and §III-C).
+
+The preprocessing unit **P** turns the N×M plane of PAM4 symbols into
+K averaged inputs: symbols are grouped `c = ceil(M/K)` at a time into a
+base-`4^c` digit per server, then averaged over the N servers, so input
+``A_k ∈ {0, 1/N, …, 4^c − 1}`` — ``N(4^c−1)+1`` levels. The ONN target is
+the PAM4 digit expansion of the round-half-up quantized average word
+
+    target = Q( Σ_k A_k · (4^c)^(K−1−k) )            (eq. 3, after P)
+
+which reduces the learning problem to base-4 carry propagation + rounding.
+The exhaustive dataset therefore has ``input_levels^K`` samples (§III-A's
+``(N(4^{M/K}−1)+1)^K``).
+
+The cascade variants (§III-C, eq. 10) keep the level-1 decimal remainder:
+level 1 outputs the *exact* mean (fraction merged into the last symbol at
+1/N resolution), and level 2 consumes averaged level-1 symbol planes whose
+last channel has 1/N² resolution.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .scenarios import Scenario
+
+
+def round_half_up(x: np.ndarray) -> np.ndarray:
+    """Round half away from zero for non-negative grids — matches
+    `quant::quantized_mean` on the rust side exactly."""
+    return np.floor(x + 0.5)
+
+
+def word_to_digits(words: np.ndarray, num_digits: int) -> np.ndarray:
+    """PAM4 digit expansion, most significant first (eq. 2)."""
+    words = words.astype(np.int64)
+    out = np.empty(words.shape + (num_digits,), dtype=np.int64)
+    for i in range(num_digits):
+        shift = 2 * (num_digits - 1 - i)
+        out[..., i] = (words >> shift) & 0b11
+    return out
+
+
+def digits_to_word(digits: np.ndarray) -> np.ndarray:
+    """Inverse of `word_to_digits` (digits along the last axis)."""
+    num = digits.shape[-1]
+    word = np.zeros(digits.shape[:-1], dtype=np.int64)
+    for i in range(num):
+        word = (word << 2) | digits[..., i].astype(np.int64)
+    return word
+
+
+def group_weights(sc: Scenario) -> np.ndarray:
+    """Positional weight of each averaged input A_k in the word value:
+    (4^c)^(K−1−k)."""
+    base = sc.group_base
+    k = sc.onn_inputs
+    return np.array([base ** (k - 1 - i) for i in range(k)], dtype=np.float64)
+
+
+def target_word(sc: Scenario, steps: np.ndarray) -> np.ndarray:
+    """Quantized average word for integer grid steps `steps` (…, K) where
+    A_k = steps_k / N."""
+    w = group_weights(sc)
+    total = (steps.astype(np.float64) @ w) / sc.servers
+    return round_half_up(total).astype(np.int64)
+
+
+def enumerate_grid(sc: Scenario) -> np.ndarray:
+    """All `input_levels^K` integer step combinations, shape (D, K)."""
+    levels = sc.input_levels
+    k = sc.onn_inputs
+    grids = np.meshgrid(*([np.arange(levels)] * k), indexing="ij")
+    return np.stack([g.reshape(-1) for g in grids], axis=-1)
+
+
+def sample_grid(sc: Scenario, count: int, seed: int) -> np.ndarray:
+    """Uniform sample of grid steps for scenarios whose exhaustive dataset
+    is too large (documented substitution — DESIGN.md §3)."""
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, sc.input_levels, size=(count, sc.onn_inputs))
+
+
+def make_dataset(
+    sc: Scenario, max_samples: int | None = None, seed: int = 0
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Return (inputs A, target digits, target words).
+
+    inputs: float32 (D, K) with A_k = step/N;
+    digits: int64 (D, M); words: int64 (D,).
+    Enumerates exhaustively when the dataset fits in `max_samples`
+    (or unconditionally if `max_samples is None` and size ≤ 2**22).
+    """
+    size = sc.dataset_size
+    cap = max_samples if max_samples is not None else 1 << 22
+    if size <= cap:
+        steps = enumerate_grid(sc)
+    else:
+        steps = sample_grid(sc, cap, seed)
+    words = target_word(sc, steps)
+    digits = word_to_digits(words, sc.symbols)
+    inputs = (steps / sc.servers).astype(np.float32)
+    return inputs, digits, words
+
+
+# ---------------------------------------------------------------------------
+# Cascade datasets (§III-C)
+# ---------------------------------------------------------------------------
+
+
+def exact_mean_value(sc: Scenario, steps: np.ndarray) -> np.ndarray:
+    """Un-quantized average word value (float, resolution 1/N)."""
+    w = group_weights(sc)
+    return (steps.astype(np.float64) @ w) / sc.servers
+
+
+def cascade_level1_dataset(
+    sc: Scenario, max_samples: int | None = None, seed: int = 0
+) -> tuple[np.ndarray, np.ndarray]:
+    """Level-1 OptINC targets: the *exact* mean, encoded as floor-digits
+    with the fractional remainder merged into the last symbol (value in
+    [0, 4 − 1/N], resolution 1/N). Output shape (D, M), float32."""
+    size = sc.dataset_size
+    cap = max_samples if max_samples is not None else 1 << 22
+    steps = enumerate_grid(sc) if size <= cap else sample_grid(sc, cap, seed)
+    mean = exact_mean_value(sc, steps)
+    whole = np.floor(mean).astype(np.int64)
+    frac = (mean - whole).astype(np.float64)
+    digits = word_to_digits(whole, sc.symbols).astype(np.float64)
+    digits[..., -1] += frac
+    inputs = (steps / sc.servers).astype(np.float32)
+    return inputs, digits.astype(np.float32)
+
+
+def cascade_level2_grid(sc: Scenario, max_samples: int, seed: int = 0) -> np.ndarray:
+    """Integer step grid for level 2: first K−1 inputs on the 1/N grid
+    (as level 1), last input on the 1/N² grid spanning [0, 4 − 1/N].
+
+    Steps are integers: step_k/N for k<K, step_K/N² for the last channel.
+    """
+    k = sc.onn_inputs
+    n = sc.servers
+    levels_std = sc.input_levels  # N·(4^c − 1) + 1
+    # Last channel: level-1 symbols live on [0, 4 − 1/N] with 1/N steps,
+    # i.e. 4N − 1 values per server ⇒ averaged over N servers:
+    # N·(4N − 1 − 1) + 1 = N(4N−2)+1 steps on the 1/N² grid.
+    levels_last = n * (4 * n - 2) + 1
+    total = levels_std ** (k - 1) * levels_last
+    if total <= max_samples:
+        grids = np.meshgrid(
+            *([np.arange(levels_std)] * (k - 1) + [np.arange(levels_last)]),
+            indexing="ij",
+        )
+        return np.stack([g.reshape(-1) for g in grids], axis=-1)
+    rng = np.random.default_rng(seed)
+    cols = [rng.integers(0, levels_std, size=max_samples) for _ in range(k - 1)]
+    cols.append(rng.integers(0, levels_last, size=max_samples))
+    return np.stack(cols, axis=-1)
+
+
+def cascade_level2_dataset(
+    sc: Scenario, max_samples: int = 1 << 21, seed: int = 0
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Level-2 dataset: inputs are averaged level-1 planes (last channel at
+    1/N² resolution); targets are the integer digits of the final quantized
+    global average (eq. 10 ⇒ equals Q(mean of all N² words))."""
+    n = sc.servers
+    steps = cascade_level2_grid(sc, max_samples, seed)
+    k = sc.onn_inputs
+    w = group_weights(sc)
+    # Channel values: steps/N except last which is steps/N².
+    a = steps.astype(np.float64)
+    a[:, : k - 1] /= n
+    a[:, k - 1] /= n * n
+    total = a @ w
+    words = round_half_up(total).astype(np.int64)
+    digits = word_to_digits(words, sc.symbols)
+    return a.astype(np.float32), digits, words

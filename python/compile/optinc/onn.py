@@ -1,0 +1,458 @@
+"""ONN definition + hardware-aware training (paper §III-B).
+
+The ONN is an MLP with ReLU activations (paper §IV). Weight matrices map
+onto MZI meshes; biases model the constant-power reference waveguide
+standard in MZI ONNs (Shen et al. [26]). Training follows eq. 7:
+
+  stage 1 (E < E1): importance-weighted MSE on the raw output symbols;
+  stage 2 (E ≥ E1): MSE on the *reconstructed* gradient word
+                    Ḡ = Σ_i O_i·4^(M−i) vs the expected Ḡ*.
+
+During training the selected layers are periodically projected onto the
+Σ_a·U_a structure (eqs. 4–6) so the final network is exactly realizable on
+the approximated photonic mesh; the projection is enforced on the final
+epoch (§III-B last paragraph).
+
+One deviation, documented here and in DESIGN.md: when the two-stage
+schedule plateaus below 100% exact-symbol accuracy, an optional *margin
+polish* stage replaces the MSE with a hinge on |O−O*| − 0.35 (pushing every
+symbol inside the transceiver's ±0.5 snap margin). The paper's claim is
+100% accuracy; this stage is how we reliably reach it on CPU budgets.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import approx
+from .scenarios import Scenario
+
+jax.config.update("jax_enable_x64", False)
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+def init_params(layers: tuple[int, ...], seed: int) -> list[dict]:
+    """He-initialized MLP parameters. w stored (in, out); b (out,)."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(layers) - 1)
+    params = []
+    for key, n_in, n_out in zip(keys, layers[:-1], layers[1:]):
+        w = jax.random.normal(key, (n_in, n_out)) * jnp.sqrt(2.0 / n_in)
+        params.append({"w": w, "b": jnp.zeros((n_out,))})
+    return params
+
+
+def forward(params: list[dict], x: jnp.ndarray) -> jnp.ndarray:
+    """MLP forward; ReLU between layers, linear head. x: (batch, K)."""
+    h = x
+    for layer in params[:-1]:
+        h = jax.nn.relu(h @ layer["w"] + layer["b"])
+    last = params[-1]
+    return h @ last["w"] + last["b"]
+
+
+def output_weights(num_symbols: int) -> np.ndarray:
+    """Importance W_T of each output symbol (MSB first): geometric in the
+    positional significance, normalized to mean 1."""
+    w = 2.0 ** np.arange(num_symbols - 1, -1, -1)
+    return (w / w.mean()).astype(np.float32)
+
+
+def positional_values(num_symbols: int) -> np.ndarray:
+    """4^(M−i) positional value of symbol i (1-based i, MSB first)."""
+    return (4.0 ** np.arange(num_symbols - 1, -1, -1)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Losses (eq. 7)
+# ---------------------------------------------------------------------------
+
+
+def stage1_loss(params, x, y, wt):
+    o = forward(params, x)
+    return jnp.mean(jnp.sum(wt * (o - y) ** 2, axis=-1))
+
+
+def stage2_loss(params, x, y, pos):
+    o = forward(params, x)
+    # Reconstructed word, normalized by the word range so the loss scale
+    # is comparable across bit widths.
+    scale = jnp.sum(pos) * 3.0
+    g = jnp.sum(o * pos, axis=-1) / scale
+    g_star = jnp.sum(y * pos, axis=-1) / scale
+    return jnp.mean((g - g_star) ** 2)
+
+
+def margin_loss(params, x, y, margin: float = 0.35):
+    o = forward(params, x)
+    excess = jax.nn.relu(jnp.abs(o - y) - margin)
+    return jnp.mean(jnp.sum(excess**2, axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# Adam (optax unavailable offline)
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros(())}
+
+
+def adam_update(grads, state, params, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1.0
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat = jax.tree_util.tree_map(lambda m: m / (1 - b1**t), m)
+    vhat = jax.tree_util.tree_map(lambda v: v / (1 - b2**t), v)
+    new_params = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Projection onto the photonic structure
+# ---------------------------------------------------------------------------
+
+
+def project_params(params: list[dict], approx_layers: tuple[int, ...]) -> list[dict]:
+    """Project the selected (1-based) weight matrices onto Σ_a·U_a.
+    Storage is (in, out) = Wᵀ, so we project the transpose."""
+    out = []
+    for idx, layer in enumerate(params, start=1):
+        if idx in approx_layers:
+            w = np.asarray(layer["w"], dtype=np.float64)
+            w_proj = approx.project(w.T).T
+            out.append({"w": jnp.asarray(w_proj, dtype=jnp.float32), "b": layer["b"]})
+        else:
+            out.append(layer)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Evaluation
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def _forward_chunked(params, x, chunk: int = 65536):
+    return forward(params, x)
+
+
+def evaluate(
+    params: list[dict],
+    inputs: np.ndarray,
+    target_digits: np.ndarray,
+    batch: int = 1 << 16,
+) -> dict:
+    """Exact-accuracy + error histogram (Table II columns).
+
+    A sample is correct when *every* output symbol snaps (round, clamp to
+    [0,3]) to its target digit — equivalently the reconstructed word
+    matches exactly. Errors are reported as decoded − expected word.
+    """
+    pos = positional_values(target_digits.shape[-1]).astype(np.int64)
+    errs: dict[int, int] = {}
+    correct = 0
+    total = inputs.shape[0]
+    for i in range(0, total, batch):
+        xb = jnp.asarray(inputs[i : i + batch])
+        o = np.asarray(forward(params, xb))
+        snapped = np.clip(np.round(o), 0, 3).astype(np.int64)
+        tgt = target_digits[i : i + batch]
+        word = (snapped * pos).sum(axis=-1)
+        word_t = (tgt * pos).sum(axis=-1)
+        diff = word - word_t
+        ok = diff == 0
+        correct += int(ok.sum())
+        for v in np.unique(diff[~ok]):
+            errs[int(v)] = errs.get(int(v), 0) + int((diff == v).sum())
+    return {
+        "accuracy": correct / total,
+        "total": total,
+        "errors": errs,
+    }
+
+
+def evaluate_fractional(
+    params: list[dict],
+    inputs: np.ndarray,
+    target_symbols: np.ndarray,
+    resolution: int,
+    batch: int = 1 << 16,
+) -> dict:
+    """Cascade level-1 evaluation: integer snap on all but the last symbol,
+    1/resolution-grid snap on the last (§III-C)."""
+    correct = 0
+    total = inputs.shape[0]
+    worst = 0.0
+    for i in range(0, total, batch):
+        xb = jnp.asarray(inputs[i : i + batch])
+        o = np.asarray(forward(params, xb))
+        tgt = target_symbols[i : i + batch]
+        snapped = o.copy()
+        snapped[:, :-1] = np.clip(np.round(o[:, :-1]), 0, 3)
+        snapped[:, -1] = np.clip(
+            np.round(o[:, -1] * resolution) / resolution, 0, 4 - 1 / resolution
+        )
+        ok = np.all(np.abs(snapped - tgt) < 1e-6, axis=-1)
+        correct += int(ok.sum())
+        worst = max(worst, float(np.abs(o - tgt).max()))
+    return {"accuracy": correct / total, "total": total, "worst_abs_err": worst}
+
+
+# ---------------------------------------------------------------------------
+# Training loop
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TrainConfig:
+    epochs: int = 600
+    stage1_epochs: int = 450  # E1 in eq. 7
+    batch_size: int = 8192
+    lr: float = 6e-3
+    lr_final: float = 6e-4
+    approx_every: int = 1  # per-epoch projection = hard-constraint training
+    margin_polish_rounds: int = 150  # boosted polish if accuracy < 1.0
+    polish_lr: float = 3e-4
+    polish_epochs_per_round: int = 12
+    seed: int = 0
+    log_every: int = 50
+    eval_every: int = 20
+    # Training is run in a centered coordinate system (inputs/targets−1.5)
+    # for conditioning; the shift folds exactly into the first/last biases
+    # at export, so the deployed ONN still maps raw PAM4 amplitudes.
+    center: float = 1.5
+
+
+@dataclass
+class TrainResult:
+    params: list[dict]
+    accuracy: float
+    errors: dict[int, int]
+    epochs_run: int
+    history: list[tuple[int, float, float]] = field(default_factory=list)
+
+
+def _lr_at(cfg: TrainConfig, epoch: int, total: int) -> float:
+    """Cosine decay from lr to lr_final."""
+    import math
+
+    t = min(epoch / max(total - 1, 1), 1.0)
+    return cfg.lr_final + 0.5 * (cfg.lr - cfg.lr_final) * (1 + math.cos(math.pi * t))
+
+
+def fold_centering(params: list[dict], center: float) -> list[dict]:
+    """Fold the centered coordinate system back into the biases so the
+    deployed network maps raw amplitudes: the trained net computes
+    f_c(x − c) with targets y − c; the deployed net must compute
+    f(x) = f_c(x − c) + c. Exact, and touches only biases, so the Σ·U
+    structure of approximated weight matrices is preserved."""
+    if center == 0.0:
+        return params
+    out = [dict(layer) for layer in params]
+    w1 = out[0]["w"]
+    out[0] = {"w": w1, "b": out[0]["b"] - center * jnp.sum(w1, axis=0)}
+    out[-1] = {"w": out[-1]["w"], "b": out[-1]["b"] + center}
+    return out
+
+
+def train(
+    sc: Scenario,
+    inputs: np.ndarray,
+    targets: np.ndarray,
+    cfg: TrainConfig | None = None,
+    fractional_resolution: int | None = None,
+    verbose: bool = True,
+) -> TrainResult:
+    """Hardware-aware training per §III-B.
+
+    `targets` are the expected output symbols (float; integers for the
+    basic dataset, fractional last symbol for cascade level 1).
+    `fractional_resolution` switches evaluation to the cascade level-1
+    rule.
+
+    Schedule: stage 1 (importance-weighted symbol MSE, eq. 7 top) for
+    `stage1_epochs`; stage 2 (reconstructed-word MSE, eq. 7 bottom) for
+    the remainder; then, only if exact accuracy < 100%, a boosted margin
+    polish that resamples the still-failing grid points. Selected layers
+    are projected onto Σ·U every `approx_every` epochs and always on the
+    final network.
+    """
+    cfg = cfg or TrainConfig()
+    c = cfg.center
+    params = init_params(sc.layers, cfg.seed)
+    opt = adam_init(params)
+
+    m_out = targets.shape[-1]
+    wt = jnp.asarray(output_weights(m_out))
+    pos = jnp.asarray(positional_values(m_out))
+    x_all = jnp.asarray(inputs, dtype=jnp.float32) - c
+    y_all = jnp.asarray(targets, dtype=jnp.float32) - c
+    n = x_all.shape[0]
+    targets_np = np.asarray(targets)
+
+    @jax.jit
+    def step1(params, opt, x, y, lr):
+        loss, grads = jax.value_and_grad(stage1_loss)(params, x, y, wt)
+        params, opt = adam_update(grads, opt, params, lr)
+        return params, opt, loss
+
+    @jax.jit
+    def step2(params, opt, x, y, lr):
+        loss, grads = jax.value_and_grad(stage2_loss)(params, x, y, pos)
+        params, opt = adam_update(grads, opt, params, lr)
+        return params, opt, loss
+
+    @jax.jit
+    def step3(params, opt, x, y, lr):
+        loss, grads = jax.value_and_grad(margin_loss)(params, x, y)
+        params, opt = adam_update(grads, opt, params, lr)
+        return params, opt, loss
+
+    rng = np.random.default_rng(cfg.seed + 1)
+    history: list[tuple[int, float, float]] = []
+
+    def deployable(p) -> list[dict]:
+        return fold_centering(project_params(p, sc.approx_layers), c)
+
+    def run_eval(p_deploy) -> float:
+        if fractional_resolution is not None:
+            r = evaluate_fractional(p_deploy, inputs, targets_np, fractional_resolution)
+        else:
+            r = evaluate(p_deploy, inputs, targets_np.astype(np.int64))
+        return r["accuracy"]
+
+    def wrong_mask(p_deploy) -> np.ndarray:
+        o = np.asarray(forward(p_deploy, jnp.asarray(inputs, dtype=jnp.float32)))
+        if fractional_resolution is not None:
+            res = fractional_resolution
+            snapped = o.copy()
+            snapped[:, :-1] = np.clip(np.round(o[:, :-1]), 0, 3)
+            snapped[:, -1] = np.clip(np.round(o[:, -1] * res) / res, 0, 4 - 1 / res)
+            return ~np.all(np.abs(snapped - targets_np) < 1e-6, axis=-1)
+        snapped = np.clip(np.round(o), 0, 3).astype(np.int64)
+        return ~(snapped == targets_np.astype(np.int64)).all(axis=-1)
+
+    def epoch_pass(params, opt, step_fn, lr, pool=None):
+        idx_space = pool if pool is not None else n
+        order = (
+            rng.permutation(pool) if pool is not None else rng.permutation(n)
+        )
+        loss_sum, batches = 0.0, 0
+        for i in range(0, len(order), cfg.batch_size):
+            idx = order[i : i + cfg.batch_size]
+            params, opt, loss = step_fn(
+                params, opt, x_all[idx], y_all[idx], jnp.float32(lr)
+            )
+            loss_sum += float(loss)
+            batches += 1
+        _ = idx_space
+        return params, opt, loss_sum / max(batches, 1)
+
+    epoch = 0
+    done = False
+    plan = [
+        (step1, cfg.stage1_epochs, "stage1"),
+        (step2, cfg.epochs - cfg.stage1_epochs, "stage2"),
+    ]
+    for step_fn, n_epochs, name in plan:
+        if done:
+            break
+        for e in range(n_epochs):
+            lr = _lr_at(cfg, epoch, cfg.epochs)
+            params, opt, loss = epoch_pass(params, opt, step_fn, lr)
+            epoch += 1
+            if sc.approx_layers and epoch % cfg.approx_every == 0:
+                params = project_params(params, sc.approx_layers)
+            if epoch % cfg.eval_every == 0 or e == n_epochs - 1:
+                acc = run_eval(deployable(params))
+                history.append((epoch, loss, acc))
+                if verbose and (epoch % cfg.log_every == 0 or acc == 1.0):
+                    print(f"[{name}] epoch {epoch:4d} loss {loss:.3e} acc {acc:.6f}")
+                if acc == 1.0:
+                    done = True
+                    break
+
+    # Boosted margin polish: concentrate on the failing grid points while
+    # rehearsing a random slice of the correct ones. The best deployable
+    # snapshot is kept — polish can oscillate near the constraint surface.
+    best_params = deployable(params)
+    best_wrong = int(wrong_mask(best_params).sum())
+    if not done and cfg.margin_polish_rounds > 0:
+        opt = adam_init(params)
+        wm = wrong_mask(deployable(params))
+        for rnd in range(cfg.margin_polish_rounds):
+            wrong_idx = np.where(wm)[0]
+            if len(wrong_idx) == 0:
+                done = True
+                break
+            lr = max(cfg.polish_lr * (0.985**rnd), 4e-5)
+            rehearse = rng.choice(n, size=min(n, max(8 * len(wrong_idx), 8192)), replace=False)
+            pool = np.concatenate([np.repeat(wrong_idx, 16), rehearse])
+            for _ in range(cfg.polish_epochs_per_round):
+                params, opt, _loss = epoch_pass(params, opt, step3, lr, pool=pool)
+                epoch += 1
+                if sc.approx_layers:
+                    params = project_params(params, sc.approx_layers)
+            dep = deployable(params)
+            wm = wrong_mask(dep)
+            wrong = int(wm.sum())
+            if wrong < best_wrong:
+                best_wrong, best_params = wrong, dep
+            acc = 1.0 - wrong / n
+            history.append((epoch, float(wrong), acc))
+            if verbose and rnd % 10 == 0:
+                print(
+                    f"[polish] round {rnd:3d} wrong {wrong:6d} (best {best_wrong}) acc {acc:.6f}",
+                    flush=True,
+                )
+
+    # Enforce the structure and fold centering for the deployed network;
+    # return the best snapshot seen.
+    final_dep = deployable(params)
+    if int(wrong_mask(final_dep).sum()) <= best_wrong:
+        params = final_dep
+    else:
+        params = best_params
+    if fractional_resolution is not None:
+        final = evaluate_fractional(params, inputs, targets_np, fractional_resolution)
+        errors: dict[int, int] = {}
+    else:
+        r = evaluate(params, inputs, targets_np.astype(np.int64))
+        final = r
+        errors = r["errors"]
+    return TrainResult(
+        params=params,
+        accuracy=final["accuracy"],
+        errors=errors,
+        epochs_run=epoch,
+        history=history,
+    )
+
+
+def params_to_numpy(params: list[dict]) -> dict[str, np.ndarray]:
+    """Flatten params for `.otsr`/npz export: w{i}, b{i} (1-based)."""
+    out: dict[str, np.ndarray] = {}
+    for i, layer in enumerate(params, start=1):
+        out[f"w{i}"] = np.asarray(layer["w"], dtype=np.float32)
+        out[f"b{i}"] = np.asarray(layer["b"], dtype=np.float32)
+    return out
+
+
+def params_from_numpy(arrs: dict[str, np.ndarray]) -> list[dict]:
+    n = max(int(k[1:]) for k in arrs if k.startswith("w"))
+    return [
+        {"w": jnp.asarray(arrs[f"w{i}"]), "b": jnp.asarray(arrs[f"b{i}"])}
+        for i in range(1, n + 1)
+    ]

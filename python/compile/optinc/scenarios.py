@@ -1,0 +1,84 @@
+"""The paper's evaluation scenarios (Table I/II) — python mirror of
+`rust/src/config/mod.rs`. Both sides assert the same derived quantities in
+tests so the two implementations cannot drift apart.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class Scenario:
+    id: int
+    bits: int  # gradient bit width B
+    servers: int  # N
+    layers: tuple[int, ...]  # ONN structure, inputs/outputs included
+    approx_layers: tuple[int, ...]  # 1-based weight-matrix indices
+
+    @property
+    def symbols(self) -> int:
+        """PAM4 symbols per gradient word (M = B/2)."""
+        return self.bits // 2
+
+    @property
+    def onn_inputs(self) -> int:
+        return self.layers[0]
+
+    @property
+    def onn_outputs(self) -> int:
+        return self.layers[-1]
+
+    @property
+    def symbols_per_group(self) -> int:
+        """c = ceil(M / K)."""
+        return -(-self.symbols // self.onn_inputs)
+
+    @property
+    def group_base(self) -> int:
+        """Value range of one group of c PAM4 symbols: 4^c."""
+        return 4**self.symbols_per_group
+
+    @property
+    def input_levels(self) -> int:
+        """Levels of one averaged input A_k: N*(4^c - 1) + 1."""
+        return self.servers * (self.group_base - 1) + 1
+
+    @property
+    def dataset_size(self) -> int:
+        return self.input_levels**self.onn_inputs
+
+    @property
+    def num_weights(self) -> int:
+        return len(self.layers) - 1
+
+
+TABLE1: dict[int, Scenario] = {
+    1: Scenario(1, 8, 4, (4, 64, 128, 256, 128, 64, 4), tuple(range(1, 7))),
+    2: Scenario(2, 8, 8, (4, 64, 128, 256, 512, 256, 128, 64, 4), tuple(range(2, 8))),
+    3: Scenario(
+        3, 8, 16, (4, 64, 128, 256, 512, 1024, 512, 256, 128, 64, 4), tuple(range(2, 10))
+    ),
+    4: Scenario(4, 16, 4, (4, 64, 128, 256, 512, 256, 128, 64, 8), tuple(range(4, 7))),
+}
+
+# Table II: scenario 4 under different approximated-layer sets.
+TABLE2_LAYER_SETS: list[tuple[int, ...]] = [
+    tuple(range(4, 7)),
+    tuple(range(4, 8)),
+    tuple(range(4, 9)),
+    tuple(range(3, 7)),
+    tuple(range(3, 8)),
+]
+
+
+def table2_variant(i: int) -> Scenario:
+    base = TABLE1[4]
+    return Scenario(4, base.bits, base.servers, base.layers, TABLE2_LAYER_SETS[i])
+
+
+# §III-C cascade: scenario-1 structure expanded with two extra 64x64
+# approximated matrices (after the first layer / before the last layer).
+CASCADE_EXPANDED = Scenario(
+    5, 8, 4, (4, 64, 64, 128, 256, 128, 64, 64, 4), tuple(range(1, 9))
+)

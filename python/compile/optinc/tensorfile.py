@@ -1,0 +1,73 @@
+"""`.otsr` tensor interchange format (python side).
+
+Mirror of `rust/src/util/tensorfile.rs` — see that file for the layout.
+Used to ship trained ONN weights and metrics arrays from the python build
+path to the rust coordinator.
+"""
+
+from __future__ import annotations
+
+import struct
+from pathlib import Path
+
+import numpy as np
+
+MAGIC = b"OTSR\x01\x00\x00\x00"
+
+_DTYPE_TAGS = {
+    np.dtype(np.float32): 0,
+    np.dtype(np.float64): 1,
+    np.dtype(np.int32): 2,
+    np.dtype(np.int64): 3,
+}
+_TAG_DTYPES = {v: k for k, v in _DTYPE_TAGS.items()}
+
+
+def save(path: str | Path, tensors: dict[str, np.ndarray]) -> None:
+    """Write named arrays. Insertion order is preserved."""
+    chunks: list[bytes] = [MAGIC, struct.pack("<I", len(tensors))]
+    for name, arr in tensors.items():
+        arr = np.ascontiguousarray(arr)
+        if arr.dtype not in _DTYPE_TAGS:
+            if np.issubdtype(arr.dtype, np.floating):
+                arr = arr.astype(np.float32)
+            elif np.issubdtype(arr.dtype, np.integer):
+                arr = arr.astype(np.int64)
+            else:
+                raise TypeError(f"unsupported dtype {arr.dtype} for '{name}'")
+        nb = name.encode("utf-8")
+        chunks.append(struct.pack("<I", len(nb)))
+        chunks.append(nb)
+        chunks.append(struct.pack("<I", _DTYPE_TAGS[arr.dtype]))
+        chunks.append(struct.pack("<I", arr.ndim))
+        for d in arr.shape:
+            chunks.append(struct.pack("<Q", d))
+        chunks.append(arr.tobytes())
+    Path(path).write_bytes(b"".join(chunks))
+
+
+def load(path: str | Path) -> dict[str, np.ndarray]:
+    data = Path(path).read_bytes()
+    if data[:8] != MAGIC:
+        raise ValueError(f"bad magic in {path}")
+    off = 8
+    (count,) = struct.unpack_from("<I", data, off)
+    off += 4
+    out: dict[str, np.ndarray] = {}
+    for _ in range(count):
+        (nlen,) = struct.unpack_from("<I", data, off)
+        off += 4
+        name = data[off : off + nlen].decode("utf-8")
+        off += nlen
+        (tag,) = struct.unpack_from("<I", data, off)
+        off += 4
+        (ndim,) = struct.unpack_from("<I", data, off)
+        off += 4
+        shape = struct.unpack_from(f"<{ndim}Q", data, off)
+        off += 8 * ndim
+        dtype = _TAG_DTYPES[tag]
+        n = int(np.prod(shape)) if ndim else 1
+        arr = np.frombuffer(data, dtype=dtype, count=n, offset=off).reshape(shape)
+        off += n * dtype.itemsize
+        out[name] = arr.copy()
+    return out

@@ -1,0 +1,174 @@
+"""Train OptINC ONNs and export weights + metrics to artifacts/.
+
+Build-time only (invoked by `make artifacts`); the rust coordinator loads
+the exported `.otsr` weights / compiled HLO and never calls python.
+
+Usage (from python/):
+  python -m compile.train_onn --scenario 1 --out ../artifacts
+  python -m compile.train_onn --scenario 4 --table2 --out ../artifacts
+  python -m compile.train_onn --cascade --out ../artifacts
+  python -m compile.train_onn --scenario 1 --no-approx --out ../artifacts
+
+Artifacts written:
+  onn_s<k>[ _noapprox ].otsr        weights (w1, b1, …)
+  onn_s<k>[ _noapprox ].metrics.json  accuracy/errors/area for Table I
+  onn_t2_<i>.metrics.json           Table II rows (scenario-4 sweep)
+  onn_cascade_l<1|2>.otsr/.metrics.json  §III-C cascade levels
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from .optinc import area, dataset, onn, tensorfile
+from .optinc.scenarios import CASCADE_EXPANDED, TABLE1, table2_variant
+
+
+def _metrics_json(sc, result, label: str, train_samples: int, wall_s: float) -> dict:
+    return {
+        "label": label,
+        "scenario": {
+            "id": sc.id,
+            "bits": sc.bits,
+            "servers": sc.servers,
+            "layers": list(sc.layers),
+            "approx_layers": list(sc.approx_layers),
+        },
+        "accuracy": result.accuracy,
+        "errors": {str(k): v for k, v in sorted(result.errors.items())},
+        "epochs_run": result.epochs_run,
+        "train_samples": train_samples,
+        "dataset_size": sc.dataset_size,
+        "exhaustive": train_samples == sc.dataset_size,
+        "area_mzis_approx": area.scenario_mzis(sc, True),
+        "area_mzis_full": area.scenario_mzis(sc, False),
+        "area_ratio": area.area_ratio(sc),
+        "wall_seconds": wall_s,
+        "history": [[e, float(l), float(a)] for e, l, a in result.history],
+    }
+
+
+def _save(out: Path, stem: str, sc, result, train_samples: int, wall_s: float):
+    tensorfile.save(out / f"{stem}.otsr", onn.params_to_numpy(result.params))
+    meta = _metrics_json(sc, result, stem, train_samples, wall_s)
+    (out / f"{stem}.metrics.json").write_text(json.dumps(meta, indent=2) + "\n")
+    print(
+        f"[{stem}] acc={result.accuracy:.6f} errors={result.errors} "
+        f"area_ratio={meta['area_ratio']:.3f} ({wall_s:.1f}s)"
+    )
+
+
+def _cfg_for(sc, quick: bool) -> onn.TrainConfig:
+    if quick:
+        return onn.TrainConfig(
+            epochs=60,
+            stage1_epochs=45,
+            margin_polish_rounds=10,
+            polish_epochs_per_round=6,
+            eval_every=10,
+            log_every=20,
+        )
+    # Larger scenarios get more epochs; these were tuned on CPU budgets.
+    big = sc.dataset_size > 10**6 or max(sc.layers) >= 512
+    return onn.TrainConfig(
+        epochs=700 if big else 600,
+        stage1_epochs=500 if big else 450,
+        margin_polish_rounds=250 if big else 150,
+    )
+
+
+def train_scenario(
+    sid: int, out: Path, *, no_approx: bool, quick: bool, max_samples: int | None, seed: int
+):
+    sc = TABLE1[sid]
+    if no_approx:
+        sc = type(sc)(sc.id, sc.bits, sc.servers, sc.layers, ())
+    cap = max_samples
+    if cap is None:
+        cap = 1 << 19 if not quick else 1 << 15  # sampling cap for huge grids
+    x, digits, _words = dataset.make_dataset(sc, max_samples=cap, seed=seed)
+    cfg = _cfg_for(sc, quick)
+    cfg.seed = seed
+    t0 = time.time()
+    result = onn.train(sc, x, digits, cfg)
+    stem = f"onn_s{sid}" + ("_noapprox" if no_approx else "")
+    _save(out, stem, sc, result, x.shape[0], time.time() - t0)
+    return result
+
+
+def train_table2(out: Path, *, quick: bool, max_samples: int | None, seed: int):
+    for i in range(5):
+        sc = table2_variant(i)
+        cap = max_samples or (1 << 19 if not quick else 1 << 15)
+        x, digits, _ = dataset.make_dataset(sc, max_samples=cap, seed=seed)
+        cfg = _cfg_for(sc, quick)
+        cfg.seed = seed
+        t0 = time.time()
+        result = onn.train(sc, x, digits, cfg)
+        _save(out, f"onn_t2_{i}", sc, result, x.shape[0], time.time() - t0)
+
+
+def train_cascade(out: Path, *, quick: bool, seed: int):
+    sc = CASCADE_EXPANDED
+    cfg = _cfg_for(sc, quick)
+    cfg.seed = seed
+    # Level 1: exact-mean targets, fractional last symbol at 1/N.
+    x1, y1 = dataset.cascade_level1_dataset(sc)
+    t0 = time.time()
+    r1 = onn.train(sc, x1, y1, cfg, fractional_resolution=sc.servers)
+    tensorfile.save(out / "onn_cascade_l1.otsr", onn.params_to_numpy(r1.params))
+    meta1 = _metrics_json(sc, r1, "onn_cascade_l1", x1.shape[0], time.time() - t0)
+    (out / "onn_cascade_l1.metrics.json").write_text(json.dumps(meta1, indent=2) + "\n")
+    print(f"[cascade_l1] acc={r1.accuracy:.6f} ({time.time()-t0:.1f}s)")
+
+    # Level 2: averaged level-1 planes, integer outputs.
+    x2, d2, _w2 = dataset.cascade_level2_dataset(sc)
+    t0 = time.time()
+    cfg2 = _cfg_for(sc, quick)
+    cfg2.seed = seed + 1
+    r2 = onn.train(sc, x2, d2, cfg2)
+    tensorfile.save(out / "onn_cascade_l2.otsr", onn.params_to_numpy(r2.params))
+    meta2 = _metrics_json(sc, r2, "onn_cascade_l2", x2.shape[0], time.time() - t0)
+    (out / "onn_cascade_l2.metrics.json").write_text(json.dumps(meta2, indent=2) + "\n")
+    print(f"[cascade_l2] acc={r2.accuracy:.6f} ({time.time()-t0:.1f}s)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scenario", type=int, default=None, help="Table I scenario 1..4")
+    ap.add_argument("--table2", action="store_true", help="run the Table II sweep")
+    ap.add_argument("--cascade", action="store_true", help="train §III-C cascade levels")
+    ap.add_argument("--no-approx", action="store_true", help="disable matrix approximation")
+    ap.add_argument("--quick", action="store_true", help="reduced epochs (CI smoke)")
+    ap.add_argument("--max-samples", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", type=str, default="../artifacts")
+    args = ap.parse_args()
+
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    if args.table2:
+        train_table2(out, quick=args.quick, max_samples=args.max_samples, seed=args.seed)
+    elif args.cascade:
+        train_cascade(out, quick=args.quick, seed=args.seed)
+    elif args.scenario is not None:
+        train_scenario(
+            args.scenario,
+            out,
+            no_approx=args.no_approx,
+            quick=args.quick,
+            max_samples=args.max_samples,
+            seed=args.seed,
+        )
+    else:
+        ap.error("choose --scenario N, --table2, or --cascade")
+
+
+if __name__ == "__main__":
+    main()

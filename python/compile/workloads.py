@@ -1,0 +1,353 @@
+"""Fig 7a training workloads, lowered to HLO for the rust DP trainer.
+
+The paper trains ResNet50/CIFAR-100 and an 8-layer LLaMA network on
+Wikipedia-1B across 4 servers. Neither dataset nor that GPU budget exists
+here (repro band 0/5), so we build the documented substitutions
+(DESIGN.md §3):
+
+  * `lm`  — a LLaMA-style decoder (RMSNorm, SwiGLU, RoPE, causal attention)
+            on synthetic Zipfian token streams;
+  * `cnn` — a small residual ConvNet on synthetic 32×32 10-class images.
+
+Both use a **flat parameter vector** so the rust coordinator can treat
+model state as one gradient buffer — exactly the thing OptINC averages.
+Artifacts per model:
+
+  <name>_grad_b<B>.hlo.txt   (params, batch...) -> (loss, grads)
+  <name>_adam.hlo.txt        (params, m, v, t, grad) -> (params', m', v')
+  <name>_params.otsr         seeded initial parameters (python-side init)
+  workload meta in manifest.json (param count, shapes, hyperparams)
+
+Model scale is CPU-sized by default (the paper's LLaMA is 8×384; ours is
+4×128 ≈ 0.9M params, configurable) — the *relative* claim of Fig 7a
+(OptINC averaging ≈ exact averaging) is what must survive the shrink.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .optinc import tensorfile
+
+# ---------------------------------------------------------------------------
+# Flat parameter packing
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    names: tuple[str, ...]
+    shapes: tuple[tuple[int, ...], ...]
+
+    @property
+    def sizes(self) -> tuple[int, ...]:
+        return tuple(int(np.prod(s)) for s in self.shapes)
+
+    @property
+    def offsets(self) -> tuple[int, ...]:
+        off, out = 0, []
+        for s in self.sizes:
+            out.append(off)
+            off += s
+        return tuple(out)
+
+    @property
+    def total(self) -> int:
+        return sum(self.sizes)
+
+    def unpack(self, flat: jnp.ndarray) -> dict[str, jnp.ndarray]:
+        out = {}
+        for name, shape, size, off in zip(self.names, self.shapes, self.sizes, self.offsets):
+            out[name] = jax.lax.dynamic_slice(flat, (off,), (size,)).reshape(shape)
+        return out
+
+    def pack(self, tree: dict[str, np.ndarray]) -> np.ndarray:
+        return np.concatenate(
+            [np.asarray(tree[n], dtype=np.float32).reshape(-1) for n in self.names]
+        )
+
+
+# ---------------------------------------------------------------------------
+# LLaMA-style LM
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LmConfig:
+    vocab: int = 512
+    dim: int = 128
+    layers: int = 4
+    heads: int = 4
+    ffn: int = 352  # SwiGLU hidden
+    seq: int = 64
+    batch: int = 8
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.heads
+
+
+def lm_param_spec(cfg: LmConfig) -> ParamSpec:
+    names, shapes = ["embed"], [(cfg.vocab, cfg.dim)]
+    for l in range(cfg.layers):
+        for n, s in [
+            (f"l{l}.attn_norm", (cfg.dim,)),
+            (f"l{l}.wq", (cfg.dim, cfg.dim)),
+            (f"l{l}.wk", (cfg.dim, cfg.dim)),
+            (f"l{l}.wv", (cfg.dim, cfg.dim)),
+            (f"l{l}.wo", (cfg.dim, cfg.dim)),
+            (f"l{l}.ffn_norm", (cfg.dim,)),
+            (f"l{l}.w_gate", (cfg.dim, cfg.ffn)),
+            (f"l{l}.w_up", (cfg.dim, cfg.ffn)),
+            (f"l{l}.w_down", (cfg.ffn, cfg.dim)),
+        ]:
+            names.append(n)
+            shapes.append(s)
+    names += ["final_norm", "head"]
+    shapes += [(cfg.dim,), (cfg.dim, cfg.vocab)]
+    return ParamSpec(tuple(names), tuple(shapes))
+
+
+def lm_init(cfg: LmConfig, seed: int = 0) -> np.ndarray:
+    spec = lm_param_spec(cfg)
+    rng = np.random.default_rng(seed)
+    tree = {}
+    for name, shape in zip(spec.names, spec.shapes):
+        if name.endswith("norm"):
+            tree[name] = np.ones(shape, dtype=np.float32)
+        else:
+            fan_in = shape[0] if len(shape) == 2 else shape[-1]
+            tree[name] = rng.normal(0, fan_in**-0.5, size=shape).astype(np.float32)
+    return spec.pack(tree)
+
+
+def _rmsnorm(x, g):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6) * g
+
+
+def _rope(x, positions):
+    # x: (B, T, H, Dh); rotate pairs.
+    b, t, h, dh = x.shape
+    half = dh // 2
+    freqs = 1.0 / (10000 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]  # (T, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [
+            x1 * cos[None, :, None, :] - x2 * sin[None, :, None, :],
+            x1 * sin[None, :, None, :] + x2 * cos[None, :, None, :],
+        ],
+        axis=-1,
+    )
+
+
+def lm_forward_loss(cfg: LmConfig, spec: ParamSpec, flat: jnp.ndarray, tokens: jnp.ndarray):
+    """tokens: (B, seq+1) int32. Returns mean cross-entropy."""
+    p = spec.unpack(flat)
+    x_tok, y_tok = tokens[:, :-1], tokens[:, 1:]
+    b, t = x_tok.shape
+    h = p["embed"][x_tok]  # (B, T, D)
+    positions = jnp.arange(t)
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    for l in range(cfg.layers):
+        a_in = _rmsnorm(h, p[f"l{l}.attn_norm"])
+        q = (a_in @ p[f"l{l}.wq"]).reshape(b, t, cfg.heads, cfg.head_dim)
+        k = (a_in @ p[f"l{l}.wk"]).reshape(b, t, cfg.heads, cfg.head_dim)
+        v = (a_in @ p[f"l{l}.wv"]).reshape(b, t, cfg.heads, cfg.head_dim)
+        q, k = _rope(q, positions), _rope(k, positions)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(cfg.head_dim)
+        att = jnp.where(mask[None, None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, t, cfg.dim)
+        h = h + o @ p[f"l{l}.wo"]
+        f_in = _rmsnorm(h, p[f"l{l}.ffn_norm"])
+        gate = jax.nn.silu(f_in @ p[f"l{l}.w_gate"])
+        h = h + (gate * (f_in @ p[f"l{l}.w_up"])) @ p[f"l{l}.w_down"]
+    h = _rmsnorm(h, p["final_norm"])
+    logits = h @ p["head"]  # (B, T, V)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y_tok[..., None], axis=-1).squeeze(-1)
+    return nll.mean()
+
+
+# ---------------------------------------------------------------------------
+# Small residual ConvNet (ResNet50/CIFAR stand-in)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CnnConfig:
+    classes: int = 10
+    width: int = 32  # base channels
+    batch: int = 32
+    image: int = 32
+
+
+def cnn_param_spec(cfg: CnnConfig) -> ParamSpec:
+    w = cfg.width
+    names, shapes = [], []
+
+    def add(n, s):
+        names.append(n)
+        shapes.append(s)
+
+    add("stem", (3, 3, 3, w))
+    # Three stages of two residual 3×3 conv blocks; stride-2 between stages.
+    chans = [w, 2 * w, 4 * w]
+    for s, ch in enumerate(chans):
+        cin = w if s == 0 else chans[s - 1]
+        add(f"s{s}.down", (3, 3, cin, ch))
+        add(f"s{s}.c1", (3, 3, ch, ch))
+        add(f"s{s}.c2", (3, 3, ch, ch))
+        add(f"s{s}.g1", (ch,))
+        add(f"s{s}.g2", (ch,))
+    add("fc", (4 * w, cfg.classes))
+    add("fc_b", (cfg.classes,))
+    return ParamSpec(tuple(names), tuple(shapes))
+
+
+def cnn_init(cfg: CnnConfig, seed: int = 0) -> np.ndarray:
+    spec = cnn_param_spec(cfg)
+    rng = np.random.default_rng(seed)
+    tree = {}
+    for name, shape in zip(spec.names, spec.shapes):
+        if name.endswith(("g1", "g2")):
+            tree[name] = np.ones(shape, dtype=np.float32)
+        elif name == "fc_b":
+            tree[name] = np.zeros(shape, dtype=np.float32)
+        elif name == "fc":
+            # Small head init keeps the initial loss near ln(classes).
+            tree[name] = rng.normal(0, 0.02, size=shape).astype(np.float32)
+        else:
+            fan_in = int(np.prod(shape[:-1]))
+            tree[name] = rng.normal(0, (2.0 / fan_in) ** 0.5, size=shape).astype(
+                np.float32
+            )
+    return spec.pack(tree)
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def _chan_norm(x, g):
+    mu = x.mean(axis=(1, 2), keepdims=True)
+    var = x.var(axis=(1, 2), keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * g
+
+
+def cnn_forward_loss(cfg: CnnConfig, spec: ParamSpec, flat, images, labels):
+    """images (B, 32, 32, 3) f32; labels (B,) int32."""
+    p = spec.unpack(flat)
+    h = jax.nn.relu(_conv(images, p["stem"]))
+    chans = [cfg.width, 2 * cfg.width, 4 * cfg.width]
+    for s, _ch in enumerate(chans):
+        stride = 1 if s == 0 else 2
+        h = jax.nn.relu(_conv(h, p[f"s{s}.down"], stride=stride))
+        r = jax.nn.relu(_chan_norm(_conv(h, p[f"s{s}.c1"]), p[f"s{s}.g1"]))
+        r = _chan_norm(_conv(r, p[f"s{s}.c2"]), p[f"s{s}.g2"])
+        h = jax.nn.relu(h + r)
+    h = h.mean(axis=(1, 2))  # global average pool
+    logits = h @ p["fc"] + p["fc_b"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1).squeeze(-1)
+    acc = (logits.argmax(axis=-1) == labels).astype(jnp.float32).mean()
+    return nll.mean(), acc
+
+
+# ---------------------------------------------------------------------------
+# Shared Adam step (flat vectors)
+# ---------------------------------------------------------------------------
+
+
+def adam_step(params, m, v, t, grad, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = t + 1.0
+    m = b1 * m + (1 - b1) * grad
+    v = b2 * v + (1 - b2) * grad * grad
+    mhat = m / (1 - b1**t)
+    vhat = v / (1 - b2**t)
+    params = params - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return params, m, v, t
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+
+def lower_all(out_dir: Path, manifest: dict, write_artifact) -> None:
+    lm_cfg, cnn_cfg = LmConfig(), CnnConfig()
+
+    # -- LM --
+    spec = lm_param_spec(lm_cfg)
+    flat0 = lm_init(lm_cfg)
+    tensorfile.save(out_dir / "lm_params.otsr", {"params": flat0})
+
+    def lm_grad(flat, tokens):
+        loss, g = jax.value_and_grad(partial(lm_forward_loss, lm_cfg, spec))(flat, tokens)
+        return loss, g
+
+    p_spec = jax.ShapeDtypeStruct((spec.total,), jnp.float32)
+    tok_spec = jax.ShapeDtypeStruct((lm_cfg.batch, lm_cfg.seq + 1), jnp.int32)
+    write_artifact(out_dir, f"lm_grad_b{lm_cfg.batch}", lm_grad, (p_spec, tok_spec), manifest)
+    manifest[f"lm_grad_b{lm_cfg.batch}"].update(
+        {
+            "params": spec.total,
+            "vocab": lm_cfg.vocab,
+            "dim": lm_cfg.dim,
+            "layers": lm_cfg.layers,
+            "heads": lm_cfg.heads,
+            "seq": lm_cfg.seq,
+            "batch": lm_cfg.batch,
+        }
+    )
+
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    write_artifact(
+        out_dir,
+        "lm_adam",
+        lambda p, m, v, t, g: adam_step(p, m, v, t, g, lr=3e-3),
+        (p_spec, p_spec, p_spec, scalar, p_spec),
+        manifest,
+    )
+
+    # -- CNN --
+    cspec = cnn_param_spec(cnn_cfg)
+    cflat0 = cnn_init(cnn_cfg)
+    tensorfile.save(out_dir / "cnn_params.otsr", {"params": cflat0})
+
+    def cnn_grad(flat, images, labels):
+        def loss_only(f):
+            loss, acc = cnn_forward_loss(cnn_cfg, cspec, f, images, labels)
+            return loss, acc
+
+        (loss, acc), g = jax.value_and_grad(loss_only, has_aux=True)(flat)
+        return loss, acc, g
+
+    cp_spec = jax.ShapeDtypeStruct((cspec.total,), jnp.float32)
+    img_spec = jax.ShapeDtypeStruct(
+        (cnn_cfg.batch, cnn_cfg.image, cnn_cfg.image, 3), jnp.float32
+    )
+    lbl_spec = jax.ShapeDtypeStruct((cnn_cfg.batch,), jnp.int32)
+    write_artifact(
+        out_dir, f"cnn_grad_b{cnn_cfg.batch}", cnn_grad, (cp_spec, img_spec, lbl_spec), manifest
+    )
+    manifest[f"cnn_grad_b{cnn_cfg.batch}"].update(
+        {"params": cspec.total, "classes": cnn_cfg.classes, "batch": cnn_cfg.batch}
+    )
+    write_artifact(
+        out_dir,
+        "cnn_adam",
+        lambda p, m, v, t, g: adam_step(p, m, v, t, g, lr=2e-3),
+        (cp_spec, cp_spec, cp_spec, scalar, cp_spec),
+        manifest,
+    )

@@ -1,0 +1,33 @@
+use optinc::config::Scenario;
+use optinc::onn::OnnNetwork;
+use optinc::runtime::{lit_f32, to_f32, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let sc = Scenario::table1(1)?;
+    let dir = optinc::config::artifacts_dir();
+    let net = OnnNetwork::load(&dir.join("onn_s1.otsr"))?;
+    // one frame: words [10, 20, 30, 40]
+    let words = [10u32, 20, 30, 40];
+    let codec = optinc::pam4::Pam4Codec::new(8);
+    let mut plane = vec![0.0f32; 4096 * 4 * 4];
+    for (s, &w) in words.iter().enumerate() {
+        let sym = codec.encode_word(w);
+        for (j, &v) in sym.iter().enumerate() {
+            plane[s * 4 + j] = v as f32;
+        }
+    }
+    // native: preprocess + forward
+    let pre = optinc::optinc::preprocess::Preprocess::new(&sc);
+    let mut a = vec![0.0f32; 4];
+    pre.apply_frame(&plane[..16], &mut a);
+    println!("preprocessed inputs: {a:?}");
+    let o = net.forward(&a, 1);
+    println!("native output amplitudes: {o:?}");
+
+    let rt = Runtime::new()?;
+    let exe = rt.load("switch_onn_s1_b4096_raw")?;
+    let out = exe.run(&[lit_f32(&plane, &[4096, 4, 4])?])?;
+    let levels = to_f32(&out[0])?;
+    println!("pjrt raw output[0..4]: {:?}", &levels[..4]);
+    Ok(())
+}

@@ -1,0 +1,105 @@
+"""Matrix approximation (eqs. 4–6) and area model — python side, plus the
+cross-language contract with the rust implementation (same formulas)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.optinc import approx, area
+from compile.optinc.scenarios import TABLE1, table2_variant
+
+settings.register_profile("approx", max_examples=25, deadline=None)
+settings.load_profile("approx")
+
+
+def random_orthogonal(n, seed):
+    rng = np.random.default_rng(seed)
+    q, _ = np.linalg.qr(rng.normal(size=(n, n)))
+    return q
+
+
+class TestApproximateSquare:
+    @given(st.integers(2, 24), st.integers(0, 2**31 - 1))
+    def test_ua_is_orthogonal(self, n, seed):
+        rng = np.random.default_rng(seed)
+        w = rng.normal(size=(n, n))
+        d, ua = approx.approximate_square(w)
+        np.testing.assert_allclose(ua @ ua.T, np.eye(n), atol=1e-9)
+        assert d.shape == (n,)
+
+    @given(st.integers(2, 16), st.integers(0, 2**31 - 1))
+    def test_exact_for_scaled_orthogonal(self, n, seed):
+        q = random_orthogonal(n, seed)
+        rng = np.random.default_rng(seed + 1)
+        d_true = rng.uniform(0.5, 2.0, size=n) * rng.choice([-1, 1], size=n)
+        w = d_true[:, None] * q
+        d, ua = approx.approximate_square(w)
+        np.testing.assert_allclose(d[:, None] * ua, w, atol=1e-8)
+
+    @given(st.integers(2, 12), st.integers(0, 2**31 - 1))
+    def test_d_is_least_squares_optimal(self, n, seed):
+        rng = np.random.default_rng(seed)
+        w = rng.normal(size=(n, n))
+        d, ua = approx.approximate_square(w)
+        base = np.sum((w - d[:, None] * ua) ** 2, axis=1)
+        for delta in (-0.05, 0.05):
+            pert = np.sum((w - (d + delta)[:, None] * ua) ** 2, axis=1)
+            assert (pert >= base - 1e-10).all()
+
+
+class TestProject:
+    @given(
+        st.sampled_from([(64, 4), (4, 64), (128, 64), (64, 128), (10, 3)]),
+        st.integers(0, 2**31 - 1),
+    )
+    def test_projection_is_idempotent(self, shape, seed):
+        rng = np.random.default_rng(seed)
+        w = rng.normal(size=shape)
+        p1 = approx.project(w)
+        p2 = approx.project(p1)
+        np.testing.assert_allclose(p1, p2, atol=1e-7)
+
+    def test_projection_reduces_to_block_structure(self):
+        rng = np.random.default_rng(3)
+        w = rng.normal(size=(8, 2))
+        p = approx.project(w)
+        # Each 2x2 vertical block must be (diag @ orthogonal): check the
+        # rows of each block are orthogonal after normalization.
+        for r0 in range(0, 8, 2):
+            blk = p[r0 : r0 + 2]
+            norms = np.linalg.norm(blk, axis=1, keepdims=True)
+            nz = norms[:, 0] > 1e-12
+            if nz.all():
+                g = (blk / norms) @ (blk / norms).T
+                np.testing.assert_allclose(g, np.eye(2), atol=1e-8)
+
+    def test_relative_error_bounds(self):
+        rng = np.random.default_rng(4)
+        w = rng.normal(size=(32, 32))
+        e = approx.relative_error(w)
+        assert 0.0 < e < 1.0
+        q = random_orthogonal(16, 5)
+        assert approx.relative_error(q) < 1e-9
+
+
+class TestArea:
+    def test_table1_paper_values(self):
+        paper = {1: 0.393, 2: 0.409, 3: 0.404, 4: 0.493}
+        for sid, want in paper.items():
+            got = area.area_ratio(TABLE1[sid])
+            assert got == pytest.approx(want, abs=0.002), sid
+
+    def test_table2_paper_values(self):
+        paper = [0.493, 0.479, 0.474, 0.437, 0.422]
+        for i, want in enumerate(paper):
+            got = area.area_ratio(table2_variant(i))
+            assert got == pytest.approx(want, abs=0.002), i
+
+    def test_block_saving_near_half(self):
+        for s in (64, 128, 256):
+            r = area.approx_block_mzis(s) / area.full_matrix_mzis(s, s)
+            assert 0.5 <= r < 0.51
+
+    def test_fig2_example(self):
+        # Fig. 2: a 4×4 unitary needs six MZIs.
+        assert area.unitary_mzis(4) == 6

@@ -1,0 +1,122 @@
+"""Dataset semantics (§III-A, §III-C): digit codecs, target construction,
+cascade datasets. Cross-checked against the closed forms in the paper."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.optinc import dataset
+from compile.optinc.scenarios import CASCADE_EXPANDED, TABLE1, table2_variant
+
+
+class TestDigits:
+    @given(st.integers(0, 255))
+    def test_word_digit_roundtrip_8bit(self, w):
+        d = dataset.word_to_digits(np.array([w]), 4)
+        assert d.shape == (1, 4)
+        assert (d >= 0).all() and (d <= 3).all()
+        assert dataset.digits_to_word(d)[0] == w
+
+    @given(st.integers(0, 65535))
+    def test_word_digit_roundtrip_16bit(self, w):
+        d = dataset.word_to_digits(np.array([w]), 8)
+        assert dataset.digits_to_word(d)[0] == w
+
+    def test_eq2_example(self):
+        # 210 = 0b11010010 -> PAM4 digits [3, 1, 0, 2] (MSB first).
+        d = dataset.word_to_digits(np.array([210]), 4)
+        assert d.tolist() == [[3, 1, 0, 2]]
+
+    def test_round_half_up_matches_rust(self):
+        # rust quantized_mean([1,2]) == 2 (1.5 rounds up).
+        assert dataset.round_half_up(np.array([1.5]))[0] == 2
+        assert dataset.round_half_up(np.array([0.75]))[0] == 1
+        assert dataset.round_half_up(np.array([0.25]))[0] == 0
+
+
+class TestScenarios:
+    def test_paper_dataset_sizes(self):
+        assert TABLE1[1].dataset_size == 13**4
+        assert TABLE1[2].dataset_size == 25**4
+        assert TABLE1[3].dataset_size == 49**4
+        assert TABLE1[4].dataset_size == 61**4
+
+    def test_table2_variants_only_change_approx(self):
+        base = TABLE1[4]
+        for i in range(5):
+            v = table2_variant(i)
+            assert v.layers == base.layers
+        assert table2_variant(2).approx_layers == (4, 5, 6, 7, 8)
+
+
+class TestBasicDataset:
+    def test_exhaustive_enumeration_scenario1(self):
+        sc = TABLE1[1]
+        x, digits, words = dataset.make_dataset(sc)
+        assert x.shape == (28561, 4)
+        assert digits.shape == (28561, 4)
+        # Inputs live on the 1/N grid within [0, 3].
+        assert x.min() == 0.0 and x.max() == 3.0
+        steps = x * sc.servers
+        assert np.allclose(steps, np.round(steps))
+
+    def test_targets_equal_quantized_mean_of_words(self):
+        # Reconstruct N words whose digit-groups average to the grid point
+        # and check eq. 3 end-to-end for a sample of grid points.
+        sc = TABLE1[1]
+        rng = np.random.default_rng(0)
+        for _ in range(200):
+            words = rng.integers(0, 256, size=sc.servers)
+            planes = dataset.word_to_digits(words, 4)  # (N, 4)
+            steps = planes.sum(axis=0)  # per-digit sums = grid steps
+            expect = dataset.round_half_up(words.mean())
+            got = dataset.target_word(sc, steps[None, :])[0]
+            assert got == expect
+
+    def test_sampled_dataset_shapes(self):
+        sc = TABLE1[4]
+        x, digits, words = dataset.make_dataset(sc, max_samples=1000, seed=1)
+        assert x.shape == (1000, 4)
+        assert digits.shape == (1000, 8)
+        assert (words >> 16 == 0).all()
+
+    @given(st.integers(0, 3))
+    @settings(max_examples=4, deadline=None)
+    def test_identical_servers_average_to_input(self, digit):
+        # If every server sends the same word, Q(mean) is that word.
+        sc = TABLE1[1]
+        word = int("".join(str(digit) for _ in range(4)), 4)
+        planes = dataset.word_to_digits(np.array([word] * 4), 4)
+        steps = planes.sum(axis=0)
+        assert dataset.target_word(sc, steps[None, :])[0] == word
+
+
+class TestCascadeDatasets:
+    def test_level1_keeps_exact_mean(self):
+        sc = CASCADE_EXPANDED
+        x, y = dataset.cascade_level1_dataset(sc)
+        assert y.shape[-1] == 4
+        # Reconstruct: digits (floor) + fraction on the last channel must
+        # equal the exact mean.
+        steps = np.round(x * sc.servers).astype(np.int64)
+        mean = dataset.exact_mean_value(sc, steps)
+        recon = (
+            y[:, 0] * 64 + y[:, 1] * 16 + y[:, 2] * 4 + y[:, 3]
+        )
+        assert np.allclose(recon, mean, atol=1e-5)
+
+    def test_level2_targets_match_global_quantized_mean(self):
+        sc = CASCADE_EXPANDED
+        a, digits, words = dataset.cascade_level2_dataset(sc, max_samples=5000)
+        w = dataset.group_weights(sc)
+        total = a.astype(np.float64) @ w
+        expect = dataset.round_half_up(total)
+        assert (words == expect).all()
+
+    def test_level2_last_channel_has_fine_grid(self):
+        sc = CASCADE_EXPANDED
+        a, _, _ = dataset.cascade_level2_dataset(sc, max_samples=5000)
+        n2 = sc.servers * sc.servers
+        scaled = a[:, -1] * n2
+        assert np.allclose(scaled, np.round(scaled), atol=1e-4)
+        assert a[:, -1].max() <= 4 - 1 / sc.servers + 1e-6

@@ -1,0 +1,102 @@
+"""L1 Pallas kernels vs pure-jnp oracles — the core correctness signal.
+
+Hypothesis sweeps shapes and values; assert_allclose against ref.py.
+All kernels run with interpret=True (mandatory on CPU PJRT).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import onn_fwd, pam4, ref
+
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")
+
+
+@st.composite
+def linear_case(draw):
+    batch = draw(st.integers(1, 700))
+    n_in = draw(st.sampled_from([1, 3, 4, 64, 128]))
+    n_out = draw(st.sampled_from([1, 4, 8, 64, 256]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    relu = draw(st.booleans())
+    return batch, n_in, n_out, seed, relu
+
+
+class TestFusedLinear:
+    @given(linear_case())
+    def test_matches_reference(self, case):
+        batch, n_in, n_out, seed, relu = case
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=(batch, n_in)).astype(np.float32)
+        w = rng.normal(size=(n_in, n_out)).astype(np.float32)
+        b = rng.normal(size=(n_out,)).astype(np.float32)
+        got = onn_fwd.fused_linear(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), relu=relu)
+        want = ref.fused_linear(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), relu=relu)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+    def test_non_multiple_batch_padding(self):
+        # batch not divisible by the block size must be handled.
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(onn_fwd.DEFAULT_BLOCK_B + 17, 8)).astype(np.float32)
+        w = rng.normal(size=(8, 16)).astype(np.float32)
+        b = np.zeros(16, dtype=np.float32)
+        got = onn_fwd.fused_linear(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+        assert got.shape == (onn_fwd.DEFAULT_BLOCK_B + 17, 16)
+        want = ref.fused_linear(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+    def test_relu_actually_clamps(self):
+        x = jnp.asarray([[-1.0, -2.0]])
+        w = jnp.eye(2, dtype=jnp.float32)
+        b = jnp.zeros(2)
+        out = onn_fwd.fused_linear(x, w, b, relu=True)
+        assert (np.asarray(out) == 0).all()
+
+    def test_vmem_estimate_positive(self):
+        assert onn_fwd.vmem_bytes_per_tile(256, 512) > 0
+
+
+class TestPam4Snap:
+    @given(
+        st.integers(1, 300),
+        st.integers(1, 8),
+        st.integers(0, 2**31 - 1),
+    )
+    def test_matches_reference(self, batch, m, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.uniform(-1, 4.5, size=(batch, m)).astype(np.float32)
+        got = pam4.pam4_snap(jnp.asarray(x))
+        want = ref.pam4_snap(jnp.asarray(x))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_matches_rust_snap_semantics(self):
+        # Mirrors rust pam4::snap_pam4 unit cases (round half away from 0).
+        x = jnp.asarray([[-0.4, 0.49, 0.51, 2.5, 3.7]])
+        out = np.asarray(pam4.pam4_snap(x))[0]
+        assert out.tolist() == [0.0, 0.0, 1.0, 3.0, 3.0]
+
+
+class TestPreprocess:
+    @given(
+        st.integers(1, 200),
+        st.sampled_from([(4, 4, 1), (8, 4, 1), (4, 8, 2), (16, 4, 1)]),
+        st.integers(0, 2**31 - 1),
+    )
+    def test_matches_reference(self, batch, cfg, seed):
+        n, k, c = cfg
+        m = k * c
+        rng = np.random.default_rng(seed)
+        plane = rng.integers(0, 4, size=(batch, n, m)).astype(np.float32)
+        got = pam4.preprocess(jnp.asarray(plane), k, c)
+        want = ref.preprocess(jnp.asarray(plane), k, c)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+    def test_known_average(self):
+        plane = np.zeros((1, 4, 4), dtype=np.float32)
+        plane[0, :, 0] = [0, 1, 2, 3]
+        out = np.asarray(pam4.preprocess(jnp.asarray(plane), 4, 1))
+        assert out[0, 0] == pytest.approx(1.5)
+        assert (out[0, 1:] == 0).all()

@@ -1,0 +1,81 @@
+"""L2 switch graph: kernel-composed datapath vs oracle, end-to-end
+against integer arithmetic (eq. 3)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+from compile.optinc import dataset, onn
+from compile.optinc.scenarios import CASCADE_EXPANDED, TABLE1
+
+
+def random_weights(layers, seed):
+    params = onn.init_params(layers, seed)
+    return [(l["w"], l["b"]) for l in params]
+
+
+class TestSwitchForward:
+    def test_matches_reference_pipeline(self):
+        sc = TABLE1[1]
+        weights = random_weights(sc.layers, 0)
+        rng = np.random.default_rng(1)
+        plane = rng.integers(0, 4, size=(32, 4, 4)).astype(np.float32)
+        got = model.switch_forward(weights, jnp.asarray(plane), sc)
+        a = ref.preprocess(jnp.asarray(plane), sc.onn_inputs, sc.symbols_per_group)
+        want = ref.onn_forward(weights, a)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+    def test_snapped_is_integer_levels(self):
+        sc = TABLE1[1]
+        weights = random_weights(sc.layers, 2)
+        rng = np.random.default_rng(3)
+        plane = rng.integers(0, 4, size=(16, 4, 4)).astype(np.float32)
+        out = np.asarray(model.switch_forward_snapped(weights, jnp.asarray(plane), sc))
+        assert ((out >= 0) & (out <= 3)).all()
+        assert (out == np.round(out)).all()
+
+    def test_scenario4_pair_grouping(self):
+        sc = TABLE1[4]
+        weights = random_weights(sc.layers, 4)
+        rng = np.random.default_rng(5)
+        plane = rng.integers(0, 4, size=(8, 4, 8)).astype(np.float32)
+        out = model.switch_forward(weights, jnp.asarray(plane), sc)
+        assert out.shape == (8, 8)
+
+    def test_fractional_last_symbol(self):
+        sc = CASCADE_EXPANDED
+        weights = random_weights(sc.layers, 6)
+        rng = np.random.default_rng(7)
+        plane = rng.integers(0, 4, size=(16, 4, 4)).astype(np.float32)
+        out = np.asarray(model.switch_forward_fractional(weights, jnp.asarray(plane), sc))
+        head, tail = out[:, :-1], out[:, -1]
+        assert (head == np.round(head)).all()
+        scaled = tail * sc.servers
+        np.testing.assert_allclose(scaled, np.round(scaled), atol=1e-5)
+        assert tail.max() <= 4 - 1 / sc.servers + 1e-6
+
+
+class TestEndToEndWithTrainedStub:
+    def test_oracle_consistency_on_grid(self):
+        # For any plane, the target the dataset module computes from the
+        # preprocessed inputs equals Q(mean of the words) (eq. 3).
+        sc = TABLE1[1]
+        rng = np.random.default_rng(11)
+        words = rng.integers(0, 256, size=(64, 4))
+        digits = dataset.word_to_digits(words, 4)  # (64, N, M)
+        plane = digits.astype(np.float32)
+        a = np.asarray(ref.preprocess(jnp.asarray(plane), 4, 1))
+        steps = np.round(a * sc.servers).astype(np.int64)
+        got = dataset.target_word(sc, steps)
+        want = dataset.round_half_up(words.mean(axis=1))
+        np.testing.assert_array_equal(got, want)
+
+    def test_weights_from_params_ordering(self):
+        params = onn.init_params((4, 8, 4), seed=9)
+        arrs = onn.params_to_numpy(params)
+        ws = model.weights_from_params(arrs)
+        assert len(ws) == 2
+        np.testing.assert_array_equal(np.asarray(ws[0][0]), arrs["w1"])
+        np.testing.assert_array_equal(np.asarray(ws[1][1]), arrs["b2"])

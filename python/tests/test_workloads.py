@@ -1,0 +1,102 @@
+"""Fig. 7a workload graphs: flat-param packing, LM/CNN forward+grad
+sanity, Adam step semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import workloads
+
+
+class TestParamSpec:
+    def test_pack_unpack_roundtrip(self):
+        cfg = workloads.LmConfig(vocab=32, dim=16, layers=1, heads=2, ffn=24, seq=8, batch=2)
+        spec = workloads.lm_param_spec(cfg)
+        flat = workloads.lm_init(cfg, seed=0)
+        assert flat.shape == (spec.total,)
+        tree = spec.unpack(jnp.asarray(flat))
+        repacked = spec.pack({k: np.asarray(v) for k, v in tree.items()})
+        np.testing.assert_array_equal(repacked, flat)
+
+    def test_offsets_are_contiguous(self):
+        cfg = workloads.CnnConfig(width=8, batch=4)
+        spec = workloads.cnn_param_spec(cfg)
+        offs = spec.offsets
+        sizes = spec.sizes
+        for i in range(1, len(offs)):
+            assert offs[i] == offs[i - 1] + sizes[i - 1]
+        assert spec.total == offs[-1] + sizes[-1]
+
+
+class TestLmForward:
+    @pytest.fixture(scope="class")
+    def small(self):
+        cfg = workloads.LmConfig(vocab=64, dim=32, layers=2, heads=4, ffn=48, seq=16, batch=2)
+        spec = workloads.lm_param_spec(cfg)
+        flat = jnp.asarray(workloads.lm_init(cfg, seed=1))
+        return cfg, spec, flat
+
+    def test_loss_is_near_uniform_at_init(self, small):
+        cfg, spec, flat = small
+        rng = np.random.default_rng(0)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab, size=(cfg.batch, cfg.seq + 1)), dtype=jnp.int32)
+        loss = workloads.lm_forward_loss(cfg, spec, flat, toks)
+        assert abs(float(loss) - np.log(cfg.vocab)) < 0.7
+
+    def test_grad_shapes_and_finiteness(self, small):
+        cfg, spec, flat = small
+        rng = np.random.default_rng(1)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab, size=(cfg.batch, cfg.seq + 1)), dtype=jnp.int32)
+        loss, g = jax.value_and_grad(lambda f: workloads.lm_forward_loss(cfg, spec, f, toks))(flat)
+        assert g.shape == flat.shape
+        assert np.isfinite(np.asarray(g)).all()
+        assert float(jnp.abs(g).max()) > 0
+
+    def test_causality(self, small):
+        # Changing a future token must not change earlier next-token
+        # losses: compare per-position logits via a probe.
+        cfg, spec, flat = small
+        rng = np.random.default_rng(2)
+        toks = rng.integers(0, cfg.vocab, size=(1, cfg.seq + 1)).astype(np.int32)
+        toks2 = toks.copy()
+        toks2[0, -1] = (toks2[0, -1] + 1) % cfg.vocab
+
+        def first_half_loss(t):
+            # loss over first seq/2 positions only
+            p = spec.unpack(flat)
+            x_tok = jnp.asarray(t[:, :-1])
+            h = p["embed"][x_tok]
+            # full forward is monolithic; instead compare full-model loss
+            # restricted by masking targets — use the mean loss of the
+            # first half by zeroing later contributions via stop-gradient
+            # trick: easiest is recompute with truncated input.
+            tt = jnp.asarray(t[:, : cfg.seq // 2 + 1])
+            return float(workloads.lm_forward_loss(cfg, spec, flat, tt))
+
+        assert first_half_loss(toks) == pytest.approx(first_half_loss(toks2), abs=1e-6)
+
+
+class TestCnnForward:
+    def test_loss_and_acc_ranges(self):
+        cfg = workloads.CnnConfig(width=8, batch=4, image=16)
+        spec = workloads.cnn_param_spec(cfg)
+        flat = jnp.asarray(workloads.cnn_init(cfg, seed=2))
+        rng = np.random.default_rng(3)
+        imgs = jnp.asarray(rng.normal(size=(4, 16, 16, 3)).astype(np.float32))
+        labels = jnp.asarray(rng.integers(0, 10, size=(4,)), dtype=jnp.int32)
+        loss, acc = workloads.cnn_forward_loss(cfg, spec, flat, imgs, labels)
+        assert abs(float(loss) - np.log(10)) < 1.0
+        assert 0.0 <= float(acc) <= 1.0
+
+
+class TestAdam:
+    def test_first_step_moves_against_gradient(self):
+        p = jnp.asarray([1.0, -1.0, 0.5])
+        zeros = jnp.zeros_like(p)
+        g = jnp.asarray([0.3, -0.2, 0.0])
+        p2, m, v, t = workloads.adam_step(p, zeros, zeros, jnp.float32(0.0), g, lr=0.01)
+        # Adam's first step ≈ −lr·sign(g).
+        np.testing.assert_allclose(np.asarray(p2 - p)[:2], [-0.01, 0.01], atol=1e-4)
+        assert float(p2[2]) == pytest.approx(0.5)
+        assert float(t) == 1.0

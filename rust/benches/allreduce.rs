@@ -1,0 +1,57 @@
+//! Collective micro-benchmarks: ring vs OptINC vs two-tree vs cascade at
+//! matched payloads, plus scaling in element count — the L3 hot loop the
+//! perf pass optimizes (EXPERIMENTS.md §Perf).
+
+use optinc::collectives::hierarchical::HierarchicalOptInc;
+use optinc::collectives::optinc::OptIncAllReduce;
+use optinc::collectives::ring::RingAllReduce;
+use optinc::collectives::two_tree::TwoTreeAllReduce;
+use optinc::collectives::AllReduce;
+use optinc::config::Scenario;
+use optinc::optinc::cascade::CascadeMode;
+use optinc::util::bench::{black_box, BenchSuite};
+use optinc::util::rng::Pcg32;
+
+fn shards(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..n)
+        .map(|_| (0..len).map(|_| rng.normal() as f32 * 0.1).collect())
+        .collect()
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("allreduce");
+    let sc = Scenario::table1(1).unwrap();
+
+    for len in [10_000usize, 100_000, 1_000_000] {
+        let base = shards(4, len, len as u64);
+        let mut work = base.clone();
+
+        suite.bench_throughput(&format!("ring/4x{len}"), len as f64, "elem", || {
+            work.clone_from(&base);
+            black_box(RingAllReduce.all_reduce(&mut work));
+        });
+
+        let mut coll = OptIncAllReduce::exact(sc.clone(), 1);
+        suite.bench_throughput(&format!("optinc/4x{len}"), len as f64, "elem", || {
+            work.clone_from(&base);
+            black_box(coll.all_reduce(&mut work));
+        });
+
+        suite.bench_throughput(&format!("two_tree/4x{len}"), len as f64, "elem", || {
+            work.clone_from(&base);
+            black_box(TwoTreeAllReduce.all_reduce(&mut work));
+        });
+    }
+
+    // Cascade at 16 workers.
+    let base = shards(16, 100_000, 99);
+    let mut work = base.clone();
+    let mut casc = HierarchicalOptInc::new(sc, CascadeMode::Remainder);
+    suite.bench_throughput("cascade/16x100000", 100_000.0, "elem", || {
+        work.clone_from(&base);
+        black_box(casc.all_reduce(&mut work));
+    });
+
+    suite.finish();
+}

@@ -1,0 +1,54 @@
+//! End-to-end step latency through the PJRT path (needs `make artifacts`):
+//! grad execution + collective + Adam update for the LM workload, the
+//! whole-stack number the perf pass tracks. Skips gracefully when the
+//! artifacts have not been built.
+
+use std::sync::Arc;
+
+use optinc::collectives::optinc::OptIncAllReduce;
+use optinc::collectives::ring::RingAllReduce;
+use optinc::config::Scenario;
+use optinc::runtime::Runtime;
+use optinc::train::{DpTrainer, WorkloadKind};
+use optinc::util::bench::BenchSuite;
+
+fn main() {
+    let rt = match Runtime::new() {
+        Ok(rt) => Arc::new(rt),
+        Err(e) => {
+            println!("e2e_step: PJRT unavailable ({e}); skipping");
+            return;
+        }
+    };
+    if !rt.artifact_exists("lm_adam") {
+        println!("e2e_step: artifacts missing (run `make artifacts`); skipping");
+        return;
+    }
+    let mut suite = BenchSuite::new("e2e_step");
+
+    // One full DP step (4 workers) under each collective.
+    let mut ring = RingAllReduce;
+    let mut trainer = DpTrainer::new(rt.clone(), WorkloadKind::Lm).unwrap();
+    let params = trainer.param_count() as f64;
+    suite.bench_throughput("lm_step/ring/4w", params, "param", || {
+        trainer.run(4, 1, &mut ring, 5, 0).unwrap();
+    });
+
+    let mut coll = OptIncAllReduce::exact(Scenario::table1(4).unwrap(), 5);
+    let mut trainer = DpTrainer::new(rt.clone(), WorkloadKind::Lm).unwrap();
+    suite.bench_throughput("lm_step/optinc/4w", params, "param", || {
+        trainer.run(4, 1, &mut coll, 5, 0).unwrap();
+    });
+
+    // The PJRT switch artifact itself, if lowered (scenario 1, b4096).
+    if rt.artifact_exists("switch_onn_s1_b4096") {
+        let exe = rt.load("switch_onn_s1_b4096").unwrap();
+        let plane = vec![1.0f32; 4096 * 4 * 4];
+        let lit = optinc::runtime::lit_f32(&plane, &[4096, 4, 4]).unwrap();
+        suite.bench_throughput("pjrt_switch/s1/b4096", 4096.0, "word", || {
+            exe.run(std::slice::from_ref(&lit)).unwrap();
+        });
+    }
+
+    suite.finish();
+}

@@ -1,0 +1,67 @@
+//! Bench/regeneration target for Fig. 6: normalized communication data
+//! for ring all-reduce vs OptINC at N ∈ {4, 8, 16} — measured from the
+//! simulator's byte counters and asserted against the closed forms —
+//! plus wall-clock throughput of the collectives themselves.
+
+use optinc::collectives::optinc::OptIncAllReduce;
+use optinc::collectives::ring::RingAllReduce;
+use optinc::collectives::AllReduce;
+use optinc::config::Scenario;
+use optinc::experiments::fig6;
+use optinc::util::bench::{black_box, BenchSuite};
+use optinc::util::rng::Pcg32;
+
+fn main() {
+    let mut suite = BenchSuite::new("fig6_comm");
+
+    // The figure's data series (measured byte counters).
+    for row in fig6::rows(100_000).unwrap() {
+        suite.record_scalar(
+            &format!("N{}/ring_normalized", row.servers),
+            row.ring_measured,
+            "x payload",
+        );
+        suite.record_scalar(
+            &format!("N{}/optinc_normalized", row.servers),
+            row.optinc_measured,
+            "x payload",
+        );
+        suite.record_scalar(
+            &format!("N{}/two_tree_normalized", row.servers),
+            row.two_tree_measured,
+            "x payload",
+        );
+        assert!((row.ring_measured - row.ring_analytic).abs() < 0.01);
+        assert!((row.optinc_measured - 1.0).abs() < 0.01);
+    }
+
+    // Collective wall-clock (simulator throughput, elements/s).
+    let elements = 250_000usize;
+    for (id, n) in [(1usize, 4usize), (2, 8), (3, 16)] {
+        let mut rng = Pcg32::seeded(n as u64);
+        let shards: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..elements).map(|_| rng.normal() as f32 * 0.1).collect())
+            .collect();
+
+        let mut work = shards.clone();
+        suite.bench_throughput(&format!("ring/N{n}/{elements}"), elements as f64, "elem", || {
+            work.clone_from(&shards);
+            black_box(RingAllReduce.all_reduce(&mut work));
+        });
+
+        let sc = Scenario::table1(id).unwrap();
+        let mut coll = OptIncAllReduce::exact(sc, 3);
+        let mut work = shards.clone();
+        suite.bench_throughput(
+            &format!("optinc_oracle/N{n}/{elements}"),
+            elements as f64,
+            "elem",
+            || {
+                work.clone_from(&shards);
+                black_box(coll.all_reduce(&mut work));
+            },
+        );
+    }
+
+    suite.finish();
+}

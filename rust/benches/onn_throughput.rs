@@ -1,0 +1,68 @@
+//! ONN forward throughput — the switch's compute hot path (L3 native
+//! executor; the PJRT path is covered by `e2e_step`). Sweeps batch size
+//! and scenario structure; reports words/s through the full
+//! encode → P → ONN → snap → decode datapath.
+
+use optinc::config::Scenario;
+use optinc::onn::random_network;
+use optinc::optinc::switch::{OnnMode, OptIncSwitch};
+use optinc::util::bench::{black_box, BenchSuite};
+use optinc::util::rng::Pcg32;
+
+fn main() {
+    let mut suite = BenchSuite::new("onn_throughput");
+
+    // Raw MLP forward per scenario structure.
+    for id in [1usize, 2, 4] {
+        let sc = Scenario::table1(id).unwrap();
+        let net = random_network(&sc.layers, id as u64);
+        let batch = 1024usize;
+        let mut rng = Pcg32::seeded(3);
+        let x: Vec<f32> = (0..batch * sc.onn_inputs())
+            .map(|_| rng.gen_range(13) as f32 * 0.25)
+            .collect();
+        let macs = (net.macs_per_sample() * batch) as f64;
+        suite.bench_throughput(
+            &format!("onn_fwd/s{id}/b{batch}"),
+            macs,
+            "MAC",
+            || {
+                black_box(net.forward(&x, batch));
+            },
+        );
+    }
+
+    // Full switch datapath (scenario 1), batch sweep.
+    let sc = Scenario::table1(1).unwrap();
+    for batch in [256usize, 1024, 4096, 16384] {
+        let net = random_network(&sc.layers, 7);
+        let mut sw = OptIncSwitch::new(sc.clone(), OnnMode::Native(net)).unwrap();
+        let mut rng = Pcg32::seeded(batch as u64);
+        let shards: Vec<Vec<u32>> = (0..4)
+            .map(|_| (0..batch).map(|_| rng.gen_range(256)).collect())
+            .collect();
+        let views: Vec<&[u32]> = shards.iter().map(|s| s.as_slice()).collect();
+        suite.bench_throughput(
+            &format!("switch_native/b{batch}"),
+            batch as f64,
+            "word",
+            || {
+                black_box(sw.average_words(&views));
+            },
+        );
+    }
+
+    // Oracle switch (arithmetic floor — how fast the datapath itself is).
+    let mut sw = OptIncSwitch::exact(sc);
+    let mut rng = Pcg32::seeded(77);
+    let batch = 16384usize;
+    let shards: Vec<Vec<u32>> = (0..4)
+        .map(|_| (0..batch).map(|_| rng.gen_range(256)).collect())
+        .collect();
+    let views: Vec<&[u32]> = shards.iter().map(|s| s.as_slice()).collect();
+    suite.bench_throughput("switch_oracle/b16384", batch as f64, "word", || {
+        black_box(sw.average_words(&views));
+    });
+
+    suite.finish();
+}

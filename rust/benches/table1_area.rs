@@ -1,0 +1,58 @@
+//! Bench/regeneration target for Table I: area ratios per scenario (the
+//! analytic MZI model) plus the cost of programming real meshes for the
+//! scenario-1 layer sizes.
+//!
+//! Run: `cargo bench --bench table1_area` (OPTINC_BENCH_QUICK=1 for CI).
+
+use optinc::config::Scenario;
+use optinc::linalg::random_orthogonal;
+use optinc::photonics::{area, mesh::MziMesh};
+use optinc::util::bench::{black_box, BenchSuite};
+use optinc::util::rng::Pcg32;
+
+fn main() {
+    let mut suite = BenchSuite::new("table1_area");
+
+    // The table itself (analytic, recorded as scalars for provenance).
+    for id in 1..=4 {
+        let sc = Scenario::table1(id).unwrap();
+        suite.record_scalar(
+            &format!("scenario{id}/area_ratio"),
+            area::area_ratio(&sc),
+            "ratio",
+        );
+        suite.record_scalar(
+            &format!("scenario{id}/mzis_approx"),
+            area::scenario_mzis(&sc, true) as f64,
+            "MZIs",
+        );
+    }
+    let paper = [0.393, 0.409, 0.404, 0.493];
+    for (id, want) in (1..=4).zip(paper) {
+        let got = area::area_ratio(&Scenario::table1(id).unwrap());
+        assert!(
+            (got - want).abs() < 0.002,
+            "scenario {id} diverged from paper: {got} vs {want}"
+        );
+    }
+
+    // Mesh-programming cost (the offline compile path) per unitary size.
+    for n in [64usize, 128, 256] {
+        let mut rng = Pcg32::seeded(n as u64);
+        let q = random_orthogonal(&mut rng, n);
+        suite.bench(&format!("program_mesh/{n}x{n}"), || {
+            black_box(MziMesh::program(&q, 1e-7).unwrap());
+        });
+    }
+
+    // Signal propagation through a programmed mesh (the optical forward).
+    let mut rng = Pcg32::seeded(9);
+    let q = random_orthogonal(&mut rng, 128);
+    let mesh = MziMesh::program(&q, 1e-7).unwrap();
+    let x: Vec<f64> = (0..128).map(|i| (i as f64).sin()).collect();
+    suite.bench_throughput("propagate/128", 128.0, "elem", || {
+        black_box(mesh.propagate(&x));
+    });
+
+    suite.finish();
+}

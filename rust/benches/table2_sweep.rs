@@ -1,0 +1,42 @@
+//! Bench/regeneration target for Table II: the scenario-4 approximation
+//! sweep (area column analytically; the ONN-accuracy columns come from
+//! the training metrics, printed by `optinc-repro table2`), plus the cost
+//! of the Σ·U approximation itself at the paper's block sizes.
+
+use optinc::config::Scenario;
+use optinc::linalg::random_mat;
+use optinc::photonics::{approx::ApproxMatrix, area};
+use optinc::util::bench::{black_box, BenchSuite};
+use optinc::util::rng::Pcg32;
+
+fn main() {
+    let mut suite = BenchSuite::new("table2_sweep");
+
+    let paper = [0.493, 0.479, 0.474, 0.437, 0.422];
+    for ((label, sc), want) in Scenario::table2_variants().into_iter().zip(paper) {
+        let got = area::area_ratio(&sc);
+        suite.record_scalar(&format!("layers[{label}]/area_ratio"), got, "ratio");
+        assert!(
+            (got - want).abs() < 0.002,
+            "layer set {label} diverged from paper: {got} vs {want}"
+        );
+    }
+
+    // Approximation (SVD + Procrustes) cost per square block size —
+    // the offline compile-path cost the paper's scheme adds.
+    let mut rng = Pcg32::seeded(5);
+    for s in [64usize, 128, 256] {
+        let w = random_mat(&mut rng, s, s);
+        suite.bench(&format!("approx_block/{s}x{s}"), || {
+            black_box(ApproxMatrix::from_dense(&w));
+        });
+    }
+
+    // Approximation error distribution on random weights (context for
+    // why hardware-aware training is needed).
+    let w = random_mat(&mut rng, 128, 128);
+    let a = ApproxMatrix::from_dense(&w);
+    suite.record_scalar("approx_block/128_rel_error", a.relative_error(&w), "rel");
+
+    suite.finish();
+}

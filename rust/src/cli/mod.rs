@@ -1,0 +1,176 @@
+//! Hand-rolled CLI argument parsing (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positionals, and `-h`.
+//! Subcommand dispatch lives in `main.rs`; this module only provides the
+//! argument model.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed arguments: options by name plus ordered positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positionals: Vec<String>,
+    /// Declared option help, for usage printing.
+    spec: Vec<(String, String, Option<String>)>,
+}
+
+impl Args {
+    /// Parse raw argv (without the program/subcommand names).
+    /// `flag_names` lists options that take no value.
+    pub fn parse(raw: &[String], flag_names: &[&str]) -> Result<Args> {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let tok = &raw[i];
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&stripped) {
+                    a.flags.push(stripped.to_string());
+                } else {
+                    i += 1;
+                    let v = raw
+                        .get(i)
+                        .with_context(|| format!("--{stripped} expects a value"))?;
+                    a.opts.insert(stripped.to_string(), v.clone());
+                }
+            } else if tok == "-h" {
+                a.flags.push("help".to_string());
+            } else if tok.starts_with('-') && tok.len() > 1 && !tok[1..].starts_with(|c: char| c.is_ascii_digit()) {
+                bail!("unknown short option '{tok}' (only --long options supported)");
+            } else {
+                a.positionals.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(a)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<usize>()
+                .with_context(|| format!("--{name} expects an unsigned integer, got '{v}'")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<u64>()
+                .with_context(|| format!("--{name} expects a u64, got '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<f64>()
+                .with_context(|| format!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    /// Comma-separated list of usize, e.g. `--servers 4,8,16`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse::<usize>()
+                        .with_context(|| format!("--{name}: bad element '{s}'"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Record (name, help, default) for usage output.
+    pub fn describe(&mut self, name: &str, help: &str, default: Option<&str>) {
+        self.spec
+            .push((name.to_string(), help.to_string(), default.map(String::from)));
+    }
+}
+
+/// A subcommand entry for the top-level dispatcher.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub run: fn(&Args) -> Result<()>,
+}
+
+pub fn print_usage(prog: &str, commands: &[Command]) {
+    eprintln!("OptINC reproduction — optical in-network computing for distributed learning\n");
+    eprintln!("usage: {prog} <command> [--options]\n\ncommands:");
+    for c in commands {
+        eprintln!("  {:<14} {}", c.name, c.about);
+    }
+    eprintln!("\nglobal env: OPTINC_LOG=error|warn|info|debug, OPTINC_ARTIFACTS=<dir>");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn raw(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_options_flags_positionals() {
+        let a = Args::parse(
+            &raw(&["--servers", "8", "--quick", "run1", "--lr=0.1"]),
+            &["quick"],
+        )
+        .unwrap();
+        assert_eq!(a.usize_or("servers", 4).unwrap(), 8);
+        assert!(a.flag("quick"));
+        assert_eq!(a.positionals, vec!["run1"]);
+        assert!((a.f64_or("lr", 0.0).unwrap() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&raw(&["--servers"]), &[]).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse(&raw(&["--ns", "4,8,16"]), &[]).unwrap();
+        assert_eq!(a.usize_list_or("ns", &[]).unwrap(), vec![4, 8, 16]);
+        assert_eq!(a.usize_list_or("other", &[2]).unwrap(), vec![2]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&raw(&[]), &[]).unwrap();
+        assert_eq!(a.usize_or("n", 7).unwrap(), 7);
+        assert_eq!(a.str_or("mode", "ring"), "ring");
+        assert!(!a.flag("quick"));
+    }
+
+    #[test]
+    fn negative_numbers_are_positionals() {
+        let a = Args::parse(&raw(&["-3.5"]), &[]).unwrap();
+        assert_eq!(a.positionals, vec!["-3.5"]);
+    }
+}

@@ -1,0 +1,102 @@
+//! Cluster metrics: accumulated byte/round/time accounting across steps.
+
+use crate::collectives::CollectiveStats;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ClusterMetrics {
+    pub label: String,
+    steps: usize,
+    bytes_per_server: u64,
+    sync_bytes_per_server: u64,
+    rounds: u64,
+    elements: u64,
+    modeled_comm_s: f64,
+}
+
+impl ClusterMetrics {
+    pub fn new(label: &str) -> ClusterMetrics {
+        ClusterMetrics {
+            label: label.to_string(),
+            steps: 0,
+            bytes_per_server: 0,
+            sync_bytes_per_server: 0,
+            rounds: 0,
+            elements: 0,
+            modeled_comm_s: 0.0,
+        }
+    }
+
+    pub fn record(&mut self, stats: &CollectiveStats, comm_s: f64) {
+        self.steps += 1;
+        self.bytes_per_server += stats.bytes_sent_per_server;
+        self.sync_bytes_per_server += stats.sync_bytes_per_server;
+        self.rounds += stats.rounds as u64;
+        self.elements += stats.elements as u64;
+        self.modeled_comm_s += comm_s;
+    }
+
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    pub fn total_bytes_per_server(&self) -> u64 {
+        self.bytes_per_server + self.sync_bytes_per_server
+    }
+
+    pub fn total_rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    pub fn modeled_comm_s(&self) -> f64 {
+        self.modeled_comm_s
+    }
+
+    /// Mean normalized communication per step (Fig. 6 metric), given the
+    /// bytes one element occupies on the wire for this collective.
+    pub fn normalized_comm(&self, element_bytes: f64) -> f64 {
+        if self.elements == 0 {
+            return 0.0;
+        }
+        self.total_bytes_per_server() as f64 / (self.elements as f64 * element_bytes)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            ("steps", Json::Num(self.steps as f64)),
+            ("bytes_per_server", Json::Num(self.bytes_per_server as f64)),
+            (
+                "sync_bytes_per_server",
+                Json::Num(self.sync_bytes_per_server as f64),
+            ),
+            ("rounds", Json::Num(self.rounds as f64)),
+            ("modeled_comm_s", Json::Num(self.modeled_comm_s)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let mut m = ClusterMetrics::new("x");
+        let st = CollectiveStats {
+            bytes_sent_per_server: 100,
+            rounds: 6,
+            sync_bytes_per_server: 5,
+            elements: 100,
+        };
+        m.record(&st, 0.5);
+        m.record(&st, 0.25);
+        assert_eq!(m.steps(), 2);
+        assert_eq!(m.total_bytes_per_server(), 210);
+        assert_eq!(m.total_rounds(), 12);
+        assert!((m.modeled_comm_s() - 0.75).abs() < 1e-12);
+        assert!((m.normalized_comm(1.0) - 1.05).abs() < 1e-12);
+        let j = m.to_json();
+        assert_eq!(j.get("steps").as_usize(), Some(2));
+    }
+}

@@ -1,0 +1,158 @@
+//! Hierarchical OptINC collective: the §III-C cascade for up to N²
+//! servers, built from `level1_fan_in`-port switches.
+//!
+//! Each group of N servers transmits into its level-1 OptINC; level-1
+//! outputs (exact means with the decimal remainder on the last symbol,
+//! eq. 10) feed the level-2 OptINC which emits the final quantized
+//! average, broadcast back down through the level-1 splitters. The whole
+//! aggregation remains a single network traversal per server.
+
+use crate::config::Scenario;
+use crate::optinc::cascade::{Cascade, CascadeMode};
+use crate::quant::GlobalQuantizer;
+
+use super::{AllReduce, CollectiveStats};
+
+pub struct HierarchicalOptInc {
+    pub scenario: Scenario,
+    pub cascade: Cascade,
+    pub quantizer: GlobalQuantizer,
+}
+
+impl HierarchicalOptInc {
+    pub fn new(sc: Scenario, mode: CascadeMode) -> HierarchicalOptInc {
+        let cascade = Cascade::new(&sc, mode);
+        let bits = sc.bits;
+        HierarchicalOptInc {
+            scenario: sc,
+            cascade,
+            quantizer: GlobalQuantizer::new(bits),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cascade.capacity()
+    }
+}
+
+impl AllReduce for HierarchicalOptInc {
+    fn name(&self) -> &'static str {
+        match self.cascade.mode {
+            CascadeMode::Basic => "optinc-cascade-basic",
+            CascadeMode::Remainder => "optinc-cascade",
+        }
+    }
+
+    fn all_reduce(&mut self, shards: &mut [Vec<f32>]) -> CollectiveStats {
+        let n_servers = shards.len();
+        assert!(
+            n_servers % self.cascade.level1_fan_in == 0 && n_servers <= self.capacity(),
+            "cascade of fan-in {} supports multiples up to {} servers",
+            self.cascade.level1_fan_in,
+            self.capacity()
+        );
+        let len = shards[0].len();
+        let views: Vec<&[f32]> = shards.iter().map(|s| s.as_slice()).collect();
+        let scale = GlobalQuantizer::global_scale(&views);
+        let words: Vec<Vec<u32>> = shards
+            .iter()
+            .map(|s| self.quantizer.quantize_vec(s, scale))
+            .collect();
+
+        let mut avg = vec![0.0f32; len];
+        let mut word_buf = vec![0u32; n_servers];
+        for i in 0..len {
+            for (w, shard) in word_buf.iter_mut().zip(&words) {
+                *w = shard[i];
+            }
+            avg[i] = self.quantizer.dequantize(self.cascade.aggregate(&word_buf), scale);
+        }
+        for s in shards.iter_mut() {
+            s.copy_from_slice(&avg);
+        }
+        CollectiveStats {
+            bytes_sent_per_server: (len as u64 * self.scenario.bits as u64).div_ceil(8),
+            rounds: 1,
+            sync_bytes_per_server: 4 + (self.scenario.bits as u64).div_ceil(8),
+            elements: len,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support::{max_diff, random_shards};
+    use super::super::{exact_mean, AllReduce};
+    use super::*;
+    use crate::collectives::optinc::OptIncAllReduce;
+    use crate::config::Scenario;
+
+    #[test]
+    fn sixteen_servers_match_flat_quantized_average() {
+        // A remainder-mode cascade of 4-port switches must equal a flat
+        // 16-port switch exactly (the §IV cascade validation).
+        let sc4 = Scenario::table1(1).unwrap();
+        let sc16 = Scenario::table1(3).unwrap();
+        let mut cascade = HierarchicalOptInc::new(sc4, CascadeMode::Remainder);
+        let mut flat = OptIncAllReduce::exact(sc16, 0);
+
+        let base = random_shards(16, 800, 21);
+        let mut a = base.clone();
+        let mut b = base.clone();
+        cascade.all_reduce(&mut a);
+        flat.all_reduce(&mut b);
+        assert_eq!(a[0], b[0], "cascade must equal flat 16-server switch");
+    }
+
+    #[test]
+    fn basic_mode_is_worse_than_remainder() {
+        let sc = Scenario::table1(1).unwrap();
+        let base = random_shards(16, 3000, 23);
+        let want = exact_mean(&base);
+
+        let mut basic = HierarchicalOptInc::new(sc.clone(), CascadeMode::Basic);
+        let mut rem = HierarchicalOptInc::new(sc, CascadeMode::Remainder);
+        let mut a = base.clone();
+        basic.all_reduce(&mut a);
+        let mut b = base.clone();
+        rem.all_reduce(&mut b);
+
+        // Mean abs error comparison (remainder ≤ basic, strictly better
+        // in aggregate).
+        let mae = |xs: &Vec<Vec<f32>>| -> f64 {
+            xs[0].iter()
+                .zip(&want)
+                .map(|(x, w)| (x - w).abs() as f64)
+                .sum::<f64>()
+                / want.len() as f64
+        };
+        assert!(mae(&b) < mae(&a), "remainder {} !< basic {}", mae(&b), mae(&a));
+        let _ = max_diff(&a[0], &b[0]);
+    }
+
+    #[test]
+    fn single_traversal_accounting() {
+        let sc = Scenario::table1(1).unwrap();
+        let mut c = HierarchicalOptInc::new(sc, CascadeMode::Remainder);
+        let mut shards = random_shards(16, 1000, 25);
+        let st = c.all_reduce(&mut shards);
+        assert_eq!(st.rounds, 1);
+        assert_eq!(st.bytes_sent_per_server, 1000);
+        assert_eq!(c.capacity(), 16);
+    }
+
+    #[test]
+    fn partial_groups_supported() {
+        let sc = Scenario::table1(1).unwrap();
+        let mut c = HierarchicalOptInc::new(sc, CascadeMode::Remainder);
+        let mut shards = random_shards(8, 200, 27);
+        let want = exact_mean(&shards);
+        // Scale must be taken from the inputs (it is what the workers
+        // agree on before quantizing).
+        let views: Vec<&[f32]> = shards.iter().map(|s| s.as_slice()).collect();
+        let scale = GlobalQuantizer::global_scale(&views);
+        let tol = c.quantizer.max_abs_error(scale) * 2.0 + 1e-6;
+        c.all_reduce(&mut shards);
+        assert!(max_diff(&shards[0], &want) <= tol * 2.0);
+    }
+}

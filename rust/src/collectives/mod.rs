@@ -1,0 +1,134 @@
+//! All-reduce collectives over per-server gradient shards.
+//!
+//! The paper's comparison (Fig. 6 / Fig. 7) is between:
+//! - [`ring`] — the standard chunked ring all-reduce baseline
+//!   (reduce-scatter + all-gather, `2(N−1)` rounds, exact f32 averaging
+//!   in the servers);
+//! - [`optinc`] — quantize → one traversal of the OptINC switch (the
+//!   network computes) → dequantize;
+//! - [`two_tree`] — the two-tree topology of Sanders et al. [9]
+//!   (the "alternative logical topologies" the intro argues are complex);
+//! - [`hierarchical`] — the §III-C cascade for N² servers.
+//!
+//! Every implementation returns [`CollectiveStats`] with the byte/round
+//! accounting the figures are built from.
+
+pub mod hierarchical;
+pub mod optinc;
+pub mod ring;
+pub mod two_tree;
+
+use crate::config::HardwareModel;
+
+/// Accounting for one all-reduce invocation.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CollectiveStats {
+    /// Bytes each server transmitted (max across servers).
+    pub bytes_sent_per_server: u64,
+    /// Synchronous communication rounds.
+    pub rounds: u32,
+    /// Extra synchronization payload (e.g. quantizer scale exchange).
+    pub sync_bytes_per_server: u64,
+    /// Number of gradient elements reduced.
+    pub elements: usize,
+}
+
+impl CollectiveStats {
+    /// Communication volume normalized by the payload a server holds —
+    /// the y-axis of Fig. 6 (payload = elements × element bytes).
+    pub fn normalized_comm(&self, element_bytes: f64) -> f64 {
+        let payload = self.elements as f64 * element_bytes;
+        (self.bytes_sent_per_server + self.sync_bytes_per_server) as f64 / payload
+    }
+
+    /// Modeled wall time on the paper's hardware (per-server full-duplex
+    /// bandwidth; per-round link latency).
+    pub fn modeled_time_s(&self, hw: &HardwareModel) -> f64 {
+        let bw = hw.server_bandwidth_bytes();
+        (self.bytes_sent_per_server + self.sync_bytes_per_server) as f64 / bw
+            + self.rounds as f64 * hw.link_latency_s
+    }
+}
+
+/// An all-reduce collective: averages the shards in place (every worker
+/// ends with the same averaged gradient).
+pub trait AllReduce {
+    fn name(&self) -> &'static str;
+
+    /// `shards[n]` is worker n's local gradient; all must be equal length.
+    /// On return every shard holds the (possibly quantized) average.
+    fn all_reduce(&mut self, shards: &mut [Vec<f32>]) -> CollectiveStats;
+}
+
+/// Exact float mean across shards (test oracle shared by implementations).
+pub fn exact_mean(shards: &[Vec<f32>]) -> Vec<f32> {
+    let n = shards.len();
+    let len = shards[0].len();
+    let mut out = vec![0.0f32; len];
+    for s in shards {
+        assert_eq!(s.len(), len);
+        for (o, &v) in out.iter_mut().zip(s.iter()) {
+            *o += v;
+        }
+    }
+    let inv = 1.0 / n as f32;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+    out
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use crate::util::rng::Pcg32;
+
+    pub fn random_shards(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..n)
+            .map(|_| (0..len).map(|_| (rng.normal() * 0.1) as f32).collect())
+            .collect()
+    }
+
+    /// Max |a − b| across matched elements.
+    pub fn max_diff(a: &[f32], b: &[f32]) -> f32 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_mean_known() {
+        let shards = vec![vec![1.0, 2.0], vec![3.0, 6.0]];
+        assert_eq!(exact_mean(&shards), vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn normalized_comm_math() {
+        let st = CollectiveStats {
+            bytes_sent_per_server: 1500,
+            rounds: 6,
+            sync_bytes_per_server: 0,
+            elements: 1000,
+        };
+        assert!((st.normalized_comm(1.0) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn modeled_time_uses_bandwidth_and_latency() {
+        let st = CollectiveStats {
+            bytes_sent_per_server: 800_000_000_000,
+            rounds: 2,
+            sync_bytes_per_server: 0,
+            elements: 1,
+        };
+        let hw = HardwareModel::default();
+        let t = st.modeled_time_s(&hw);
+        assert!((t - (1.0 + 2.0 * hw.link_latency_s)).abs() < 1e-9);
+    }
+}

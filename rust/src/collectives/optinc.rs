@@ -1,0 +1,184 @@
+//! The OptINC collective: quantize → one switch traversal → dequantize.
+//!
+//! Per all-reduce:
+//! 1. workers agree on the global quantization scale (a one-float
+//!    exchange — the paper's <0.4% sync cost);
+//! 2. each worker quantizes its shard to B-bit offset-binary words and
+//!    transmits the PAM4 frames into the switch **once** (full duplex:
+//!    the averaged frames stream back simultaneously);
+//! 3. the switch's ONN computes Q(mean) in flight; receivers snap/decode
+//!    and dequantize.
+//!
+//! Optional residual-error injection models a <100%-accurate ONN
+//! (Table II → Fig. 7a).
+
+use crate::config::Scenario;
+use crate::optinc::error_model::ErrorModel;
+use crate::optinc::switch::OptIncSwitch;
+use crate::quant::GlobalQuantizer;
+use crate::util::rng::Pcg32;
+
+use super::{AllReduce, CollectiveStats};
+
+/// OptINC-backed all-reduce.
+pub struct OptIncAllReduce {
+    pub switch: OptIncSwitch,
+    pub quantizer: GlobalQuantizer,
+    pub error_model: ErrorModel,
+    rng: Pcg32,
+    /// Running count of injected word errors (observability).
+    pub injected_errors: u64,
+}
+
+impl OptIncAllReduce {
+    pub fn new(switch: OptIncSwitch, error_model: ErrorModel, seed: u64) -> OptIncAllReduce {
+        let bits = switch.scenario.bits;
+        OptIncAllReduce {
+            switch,
+            quantizer: GlobalQuantizer::new(bits),
+            error_model,
+            rng: Pcg32::seeded(seed),
+            injected_errors: 0,
+        }
+    }
+
+    /// Exact-oracle variant (perfectly-trained ONN) for a scenario.
+    pub fn exact(sc: Scenario, seed: u64) -> OptIncAllReduce {
+        OptIncAllReduce::new(OptIncSwitch::exact(sc), ErrorModel::perfect(), seed)
+    }
+}
+
+impl AllReduce for OptIncAllReduce {
+    fn name(&self) -> &'static str {
+        "optinc"
+    }
+
+    fn all_reduce(&mut self, shards: &mut [Vec<f32>]) -> CollectiveStats {
+        let n = shards.len();
+        assert_eq!(
+            n,
+            self.switch.scenario.servers,
+            "collective wired for {} servers",
+            self.switch.scenario.servers
+        );
+        let len = shards[0].len();
+
+        // 1. Global scale exchange (the sync cost).
+        let views: Vec<&[f32]> = shards.iter().map(|s| s.as_slice()).collect();
+        let scale = GlobalQuantizer::global_scale(&views);
+
+        // 2. Quantize each shard to words.
+        let words: Vec<Vec<u32>> = shards
+            .iter()
+            .map(|s| self.quantizer.quantize_vec(s, scale))
+            .collect();
+        let word_views: Vec<&[u32]> = words.iter().map(|w| w.as_slice()).collect();
+
+        // 3. One traversal of the switch.
+        let mut avg_words = self.switch.average_words(&word_views);
+
+        // 3b. Residual ONN error injection (Fig. 7a with-errors runs).
+        self.injected_errors += self.error_model.inject(
+            &mut avg_words,
+            self.switch.scenario.bits,
+            &mut self.rng,
+        ) as u64;
+
+        // 4. Broadcast (splitter) + dequantize into every shard.
+        let avg = self.quantizer.dequantize_vec(&avg_words, scale);
+        for s in shards.iter_mut() {
+            s.copy_from_slice(&avg);
+        }
+
+        CollectiveStats {
+            bytes_sent_per_server: self.switch.bytes_per_server(len),
+            rounds: 1,
+            // scale broadcast + ack (matches GlobalQuantizer::sync_cost).
+            sync_bytes_per_server: 4 + (self.switch.scenario.bits as u64).div_ceil(8),
+            elements: len,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support::{max_diff, random_shards};
+    use super::super::{exact_mean, AllReduce};
+    use super::*;
+    use crate::config::Scenario;
+
+    #[test]
+    fn exact_switch_matches_mean_within_quantization() {
+        let sc = Scenario::table1(1).unwrap();
+        let mut coll = OptIncAllReduce::exact(sc, 1);
+        let mut shards = random_shards(4, 2000, 11);
+        let want = exact_mean(&shards);
+        let views: Vec<&[f32]> = shards.iter().map(|s| s.as_slice()).collect();
+        let scale = GlobalQuantizer::global_scale(&views);
+        let stats = coll.all_reduce(&mut shards);
+        // All workers agree…
+        for s in &shards[1..] {
+            assert_eq!(s, &shards[0]);
+        }
+        // …and the result is the mean up to quantization error.
+        let tol = coll.quantizer.max_abs_error(scale) * 2.0 + 1e-6;
+        assert!(
+            max_diff(&shards[0], &want) <= tol,
+            "diff {} > tol {tol}",
+            max_diff(&shards[0], &want)
+        );
+        // Single round; payload sent once.
+        assert_eq!(stats.rounds, 1);
+        assert_eq!(stats.bytes_sent_per_server, 2000);
+    }
+
+    #[test]
+    fn sixteen_bit_scenario_tighter_error() {
+        let sc8 = Scenario::table1(1).unwrap();
+        let sc16 = Scenario::table1(4).unwrap();
+        let mut c8 = OptIncAllReduce::exact(sc8, 2);
+        let mut c16 = OptIncAllReduce::exact(sc16, 2);
+        let base = random_shards(4, 3000, 13);
+        let want = exact_mean(&base);
+
+        let mut s8 = base.clone();
+        c8.all_reduce(&mut s8);
+        let mut s16 = base.clone();
+        c16.all_reduce(&mut s16);
+        let e8 = max_diff(&s8[0], &want);
+        let e16 = max_diff(&s16[0], &want);
+        assert!(e16 < e8, "16-bit ({e16}) should beat 8-bit ({e8})");
+    }
+
+    #[test]
+    fn fig6_normalized_comm_is_one() {
+        // OptINC: payload crosses the network exactly once regardless of N.
+        for id in [1, 2, 3] {
+            let sc = Scenario::table1(id).unwrap();
+            let n = sc.servers;
+            let mut coll = OptIncAllReduce::exact(sc, 3);
+            let mut shards = random_shards(n, 1000, 17);
+            let stats = coll.all_reduce(&mut shards);
+            let norm = stats.normalized_comm(1.0); // 8-bit words = 1 B/elem
+            assert!(
+                (norm - 1.0).abs() < 0.01,
+                "N={n}: normalized {norm} should be ~1.0"
+            );
+        }
+    }
+
+    #[test]
+    fn error_injection_perturbs_results() {
+        let sc = Scenario::table1(1).unwrap();
+        let em = ErrorModel::new(0.5, vec![(8, 100.0)], 5);
+        let mut coll =
+            OptIncAllReduce::new(crate::optinc::switch::OptIncSwitch::exact(sc), em, 5);
+        let mut shards = random_shards(4, 5000, 19);
+        let mut clean = shards.clone();
+        let mut clean_coll = OptIncAllReduce::exact(Scenario::table1(1).unwrap(), 5);
+        clean_coll.all_reduce(&mut clean);
+        coll.all_reduce(&mut shards);
+        assert!(coll.injected_errors > 1000, "injected {}", coll.injected_errors);
+        assert!(max_diff(&shards[0], &clean[0]) > 0.0);
+    }
+}

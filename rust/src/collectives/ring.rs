@@ -1,0 +1,170 @@
+//! Chunked ring all-reduce (the paper's baseline, Fig. 1).
+//!
+//! N servers form a logical ring; gradients are partitioned into N
+//! chunks. **Reduce-scatter**: N−1 rounds in which each server sends one
+//! chunk to its successor and accumulates the chunk arriving from its
+//! predecessor; afterwards server n holds the fully-reduced chunk
+//! `(n+1) mod N`. **All-gather**: N−1 more rounds circulating the reduced
+//! chunks. Total `2(N−1)` rounds, each server transmitting
+//! `2(N−1)/N · S` bytes — the `(N−2)/N ≈ 100%` relative overhead the
+//! paper opens with (counting the extra traffic beyond one payload).
+//!
+//! The averaging here is *exact* f32 (performed in the servers), which is
+//! what the paper's "baseline: accurate gradient averaging in servers"
+//! means for Fig. 7a.
+
+use super::{AllReduce, CollectiveStats};
+
+/// Ring all-reduce over f32 gradients.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RingAllReduce;
+
+impl RingAllReduce {
+    /// Analytic bytes-per-server for a payload of `bytes` (the Fig. 6
+    /// line): `2(N−1)/N · bytes`.
+    pub fn bytes_per_server(n: usize, bytes: u64) -> u64 {
+        (2 * (n as u64 - 1) * bytes) / n as u64
+    }
+
+    /// Rounds: `2(N−1)`.
+    pub fn rounds(n: usize) -> u32 {
+        2 * (n as u32 - 1)
+    }
+}
+
+impl AllReduce for RingAllReduce {
+    fn name(&self) -> &'static str {
+        "ring"
+    }
+
+    fn all_reduce(&mut self, shards: &mut [Vec<f32>]) -> CollectiveStats {
+        let n = shards.len();
+        assert!(n >= 2, "ring needs at least two workers");
+        let len = shards[0].len();
+        assert!(shards.iter().all(|s| s.len() == len));
+
+        // Chunk boundaries (last chunk absorbs the remainder).
+        let bounds: Vec<(usize, usize)> = (0..n)
+            .map(|c| {
+                let lo = c * len / n;
+                let hi = (c + 1) * len / n;
+                (lo, hi)
+            })
+            .collect();
+        let mut bytes_sent = vec![0u64; n];
+
+        // Reduce-scatter: in round r, server s sends chunk (s − r) mod n
+        // to (s+1) mod n, which accumulates into its copy.
+        for r in 0..n - 1 {
+            // Snapshot the outgoing chunks first (simultaneous exchange).
+            let outgoing: Vec<Vec<f32>> = (0..n)
+                .map(|s| {
+                    let c = (s + n - r) % n;
+                    let (lo, hi) = bounds[c];
+                    bytes_sent[s] += ((hi - lo) * 4) as u64;
+                    shards[s][lo..hi].to_vec()
+                })
+                .collect();
+            for s in 0..n {
+                let src = (s + n - 1) % n;
+                let c = (src + n - r) % n;
+                let (lo, hi) = bounds[c];
+                for (dst, &v) in shards[s][lo..hi].iter_mut().zip(&outgoing[src]) {
+                    *dst += v;
+                }
+            }
+        }
+        // Server s now holds the fully-reduced chunk (s+1) mod n; divide.
+        for (s, shard) in shards.iter_mut().enumerate() {
+            let c = (s + 1) % n;
+            let (lo, hi) = bounds[c];
+            let inv = 1.0 / n as f32;
+            for v in &mut shard[lo..hi] {
+                *v *= inv;
+            }
+        }
+        // All-gather: circulate the reduced chunks N−1 rounds.
+        for r in 0..n - 1 {
+            let outgoing: Vec<Vec<f32>> = (0..n)
+                .map(|s| {
+                    let c = (s + 1 + n - r) % n;
+                    let (lo, hi) = bounds[c];
+                    bytes_sent[s] += ((hi - lo) * 4) as u64;
+                    shards[s][lo..hi].to_vec()
+                })
+                .collect();
+            for s in 0..n {
+                let src = (s + n - 1) % n;
+                let c = (src + 1 + n - r) % n;
+                let (lo, hi) = bounds[c];
+                shards[s][lo..hi].copy_from_slice(&outgoing[src]);
+            }
+        }
+
+        CollectiveStats {
+            bytes_sent_per_server: bytes_sent.iter().copied().max().unwrap_or(0),
+            rounds: Self::rounds(n),
+            sync_bytes_per_server: 0,
+            elements: len,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support::{max_diff, random_shards};
+    use super::super::{exact_mean, AllReduce};
+    use super::*;
+
+    #[test]
+    fn averages_exactly_for_all_n() {
+        for n in [2, 3, 4, 8, 16] {
+            let mut shards = random_shards(n, 1037, n as u64);
+            let want = exact_mean(&shards);
+            let mut ring = RingAllReduce;
+            let stats = ring.all_reduce(&mut shards);
+            for s in &shards {
+                assert!(max_diff(s, &want) < 1e-5, "n={n}");
+            }
+            assert_eq!(stats.rounds, 2 * (n as u32 - 1));
+            assert_eq!(stats.elements, 1037);
+        }
+    }
+
+    #[test]
+    fn byte_accounting_matches_formula() {
+        let n = 4;
+        let len = 4000; // divisible by n ⇒ exact formula
+        let mut shards = random_shards(n, len, 3);
+        let mut ring = RingAllReduce;
+        let stats = ring.all_reduce(&mut shards);
+        let payload = (len * 4) as u64;
+        assert_eq!(
+            stats.bytes_sent_per_server,
+            RingAllReduce::bytes_per_server(n, payload)
+        );
+        // Fig. 6: normalized comm = 2(N−1)/N = 1.5 for N=4.
+        assert!((stats.normalized_comm(4.0) - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn uneven_lengths_still_average() {
+        // len not divisible by n exercises the remainder chunk.
+        let mut shards = random_shards(8, 1001, 5);
+        let want = exact_mean(&shards);
+        let mut ring = RingAllReduce;
+        ring.all_reduce(&mut shards);
+        for s in &shards {
+            assert!(max_diff(s, &want) < 1e-5);
+        }
+    }
+
+    #[test]
+    fn all_workers_agree() {
+        let mut shards = random_shards(4, 513, 7);
+        RingAllReduce.all_reduce(&mut shards);
+        for s in &shards[1..] {
+            assert_eq!(s, &shards[0]);
+        }
+    }
+}

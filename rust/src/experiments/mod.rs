@@ -1,0 +1,10 @@
+//! Experiment drivers: one function per paper table/figure, shared by the
+//! CLI (`optinc-repro <exp>`) and the bench targets so there is a single
+//! source of truth for every reproduced number.
+
+pub mod cascade;
+pub mod fig6;
+pub mod fig7a;
+pub mod fig7b;
+pub mod table1;
+pub mod table2;

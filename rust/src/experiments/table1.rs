@@ -1,0 +1,123 @@
+//! Table I: area ratio + ONN accuracy per scenario.
+//!
+//! Area ratios are computed analytically from the MZI model (exact, no
+//! training needed). Accuracies come from the training metrics JSONs that
+//! `python -m compile.train_onn` wrote into artifacts/ — rows without a
+//! trained artifact are reported as "not trained" rather than invented.
+
+use anyhow::Result;
+
+use crate::config::{artifacts_dir, Scenario};
+use crate::photonics::area;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct Table1Row {
+    pub scenario: usize,
+    pub bits: u32,
+    pub servers: usize,
+    pub layers: Vec<usize>,
+    pub approx_layers: Vec<usize>,
+    pub area_ratio: f64,
+    pub paper_area_ratio: f64,
+    /// (accuracy, trained-on-samples, exhaustive?) when metrics exist.
+    pub accuracy: Option<(f64, u64, bool)>,
+}
+
+pub const PAPER_AREA: [f64; 4] = [0.393, 0.409, 0.404, 0.493];
+
+pub fn rows() -> Result<Vec<Table1Row>> {
+    let dir = artifacts_dir();
+    let mut out = Vec::new();
+    for id in 1..=4 {
+        let sc = Scenario::table1(id)?;
+        let metrics_path = dir.join(format!("onn_s{id}.metrics.json"));
+        let accuracy = std::fs::read_to_string(&metrics_path)
+            .ok()
+            .and_then(|s| Json::parse(&s).ok())
+            .map(|j| {
+                (
+                    j.get("accuracy").as_f64().unwrap_or(f64::NAN),
+                    j.get("train_samples").as_f64().unwrap_or(0.0) as u64,
+                    j.get("exhaustive").as_bool().unwrap_or(false),
+                )
+            });
+        out.push(Table1Row {
+            scenario: id,
+            bits: sc.bits,
+            servers: sc.servers,
+            layers: sc.layers.clone(),
+            approx_layers: sc.approx_layers.clone(),
+            area_ratio: area::area_ratio(&sc),
+            paper_area_ratio: PAPER_AREA[id - 1],
+            accuracy,
+        });
+    }
+    Ok(out)
+}
+
+pub fn print() -> Result<()> {
+    println!("\nTable I — area ratio & ONN accuracy per scenario");
+    println!(
+        "{:<4} {:<5} {:<8} {:<44} {:>10} {:>10} {:>12}",
+        "#", "bits", "servers", "ONN structure (approx layers)", "area", "paper", "accuracy"
+    );
+    for r in rows()? {
+        let layers = r
+            .layers
+            .iter()
+            .map(|l| l.to_string())
+            .collect::<Vec<_>>()
+            .join("-");
+        let approx = format!(
+            "{} ({})",
+            layers,
+            if r.approx_layers.is_empty() {
+                "none".to_string()
+            } else {
+                format!(
+                    "{}–{}",
+                    r.approx_layers.first().unwrap(),
+                    r.approx_layers.last().unwrap()
+                )
+            }
+        );
+        let acc = match r.accuracy {
+            Some((a, n, true)) => format!("{:.4}% ({n} exh.)", a * 100.0),
+            Some((a, n, false)) => format!("{:.4}% ({n} smp.)", a * 100.0),
+            None => "not trained".to_string(),
+        };
+        println!(
+            "{:<4} {:<5} {:<8} {:<44} {:>9.1}% {:>9.1}% {:>12}",
+            r.scenario,
+            r.bits,
+            r.servers,
+            approx,
+            r.area_ratio * 100.0,
+            r.paper_area_ratio * 100.0,
+            acc
+        );
+    }
+    println!("(paper accuracies: 100% for all rows; area model max dev < 0.2 pp)");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_cover_all_scenarios_and_match_paper_area() {
+        let rows = rows().unwrap();
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert!(
+                (r.area_ratio - r.paper_area_ratio).abs() < 0.002,
+                "scenario {}: {} vs paper {}",
+                r.scenario,
+                r.area_ratio,
+                r.paper_area_ratio
+            );
+        }
+    }
+}

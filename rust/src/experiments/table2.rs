@@ -1,0 +1,117 @@
+//! Table II: scenario-4 approximated-layer sweep — accuracy, error
+//! values with relative ratios, normalized area.
+
+use anyhow::Result;
+
+use crate::config::{artifacts_dir, Scenario};
+use crate::photonics::area;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct Table2Row {
+    pub layers_label: String,
+    pub area_ratio: f64,
+    pub paper_area_ratio: f64,
+    pub paper_accuracy: f64,
+    /// Measured (accuracy, error histogram) when trained.
+    pub measured: Option<(f64, Vec<(i64, f64)>)>,
+}
+
+pub const PAPER: [(&str, f64, f64); 5] = [
+    ("4, 5, 6", 1.0, 0.493),
+    ("4, 5, 6, 7", 0.9999986, 0.479),
+    ("4, 5, 6, 7, 8", 0.9999999, 0.474),
+    ("3, 4, 5, 6", 0.9998891, 0.437),
+    ("3, 4, 5, 6, 7", 0.9999936, 0.422),
+];
+
+pub fn rows() -> Result<Vec<Table2Row>> {
+    let dir = artifacts_dir();
+    let mut out = Vec::new();
+    for (i, (label, sc)) in Scenario::table2_variants().into_iter().enumerate() {
+        let metrics_path = dir.join(format!("onn_t2_{i}.metrics.json"));
+        let measured = std::fs::read_to_string(&metrics_path)
+            .ok()
+            .and_then(|s| Json::parse(&s).ok())
+            .map(|j| {
+                let acc = j.get("accuracy").as_f64().unwrap_or(f64::NAN);
+                let mut hist: Vec<(i64, f64)> = Vec::new();
+                if let Some(obj) = j.get("errors").as_obj() {
+                    let total: f64 = obj.values().filter_map(|v| v.as_f64()).sum();
+                    for (k, v) in obj {
+                        if let (Ok(d), Some(c)) = (k.parse::<i64>(), v.as_f64()) {
+                            hist.push((d, if total > 0.0 { c / total } else { 0.0 }));
+                        }
+                    }
+                    hist.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+                }
+                (acc, hist)
+            });
+        out.push(Table2Row {
+            layers_label: label,
+            area_ratio: area::area_ratio(&sc),
+            paper_area_ratio: PAPER[i].2,
+            paper_accuracy: PAPER[i].1,
+            measured,
+        });
+    }
+    Ok(out)
+}
+
+pub fn print() -> Result<()> {
+    println!("\nTable II — scenario 4 approximated-layer sweep");
+    println!(
+        "{:<16} {:>9} {:>9} {:>12} {:>12}  top error values (ratio)",
+        "layers", "area", "paper", "paper acc", "measured acc"
+    );
+    for r in rows()? {
+        let (acc, hist) = match &r.measured {
+            Some((a, h)) => (format!("{:.5}%", a * 100.0), summarize_hist(h)),
+            None => ("not trained".to_string(), String::new()),
+        };
+        println!(
+            "{:<16} {:>8.1}% {:>8.1}% {:>11.5}% {:>12}  {}",
+            r.layers_label,
+            r.area_ratio * 100.0,
+            r.paper_area_ratio * 100.0,
+            r.paper_accuracy * 100.0,
+            acc,
+            hist
+        );
+    }
+    Ok(())
+}
+
+fn summarize_hist(hist: &[(i64, f64)]) -> String {
+    hist.iter()
+        .take(4)
+        .map(|(v, r)| format!("{v} ({:.1}%)", r * 100.0))
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn area_column_matches_paper() {
+        for r in rows().unwrap() {
+            assert!(
+                (r.area_ratio - r.paper_area_ratio).abs() < 0.002,
+                "{}: {} vs {}",
+                r.layers_label,
+                r.area_ratio,
+                r.paper_area_ratio
+            );
+        }
+    }
+
+    #[test]
+    fn five_rows_in_paper_order() {
+        let r = rows().unwrap();
+        assert_eq!(r.len(), 5);
+        assert_eq!(r[0].layers_label, "4, 5, 6");
+        assert!(r.windows(2).all(|w| w[0].area_ratio >= w[1].area_ratio));
+    }
+}

@@ -1,0 +1,207 @@
+//! Analytic latency model (Fig. 7b): per-step compute vs communication
+//! breakdown on the paper's hardware (H100 @ 60 TFLOPs · 0.6 utilization,
+//! 8 × 800 Gb/s full-duplex transceivers per server).
+//!
+//! The paper normalizes each bar by the total ring-all-reduce step time;
+//! compute is unchanged between schemes, communication shrinks from
+//! `2(N−1)/N · S/BW` (ring) to `S/BW` (OptINC one traversal).
+
+use crate::config::HardwareModel;
+
+/// A training workload's per-step compute/communication characteristics.
+#[derive(Clone, Debug)]
+pub struct WorkloadModel {
+    pub name: String,
+    /// Trainable parameters (the gradient payload).
+    pub params: u64,
+    /// Forward FLOPs for one step's local batch (per server).
+    pub fwd_flops: f64,
+    /// Bytes on the wire per gradient element (4 = fp32 ring; B/8 for
+    /// OptINC's quantized words).
+    pub grad_bytes_ring: f64,
+    pub grad_bytes_optinc: f64,
+}
+
+impl WorkloadModel {
+    /// ResNet50 on CIFAR-100 (paper workload #1). 25.6M params;
+    /// fwd ≈ 1.30 GFLOPs/image at 32×32 (standard stride-adapted CIFAR
+    /// variant).
+    ///
+    /// Calibration note (see EXPERIMENTS.md): the paper states the
+    /// hardware constants but not per-server batch sizes; Fig. 7b's bars
+    /// (comm-dominated ResNet, balanced LLaMA) imply a strong-scaling
+    /// regime with small local batches. Default `batch = 2` lands the
+    /// compute:comm ratio in the paper's regime; both schemes ship 16-bit
+    /// gradients (ring: fp16; OptINC: the scenario-4 16-bit fixed-point
+    /// words), so OptINC's gain is exactly the eliminated `2(N−1)/N`
+    /// round overhead — matching the paper's 17%/25% deltas.
+    pub fn resnet50_cifar(batch: usize) -> WorkloadModel {
+        WorkloadModel {
+            name: "ResNet50/CIFAR-100".into(),
+            params: 25_600_000,
+            fwd_flops: 1.30e9 * batch as f64,
+            grad_bytes_ring: 2.0,   // fp16 gradients on the wire
+            grad_bytes_optinc: 2.0, // 16-bit fixed-point words (scenario 4)
+        }
+    }
+
+    /// LLaMA-based network (paper workload #2): 8 layers, d=384, 8 heads;
+    /// params ≈ embeddings (32k vocab) + 8·(4d² + 3·d·ffn) ≈ 26M;
+    /// fwd FLOPs ≈ 2·P·tokens. Default 176 tokens/server/step (see the
+    /// calibration note on [`Self::resnet50_cifar`]).
+    pub fn llama_wiki(tokens_per_step: usize) -> WorkloadModel {
+        let params = 26_000_000u64;
+        WorkloadModel {
+            name: "LLaMA-8L/Wikipedia-1B".into(),
+            params,
+            fwd_flops: 2.0 * params as f64 * tokens_per_step as f64,
+            grad_bytes_ring: 2.0,
+            grad_bytes_optinc: 2.0,
+        }
+    }
+
+    /// Paper-regime defaults (Fig. 7b).
+    pub fn resnet50_default() -> WorkloadModel {
+        Self::resnet50_cifar(2)
+    }
+
+    pub fn llama_default() -> WorkloadModel {
+        Self::llama_wiki(176)
+    }
+
+    /// Compute time per step (fwd + bwd ≈ 3× fwd).
+    pub fn compute_s(&self, hw: &HardwareModel) -> f64 {
+        3.0 * self.fwd_flops / hw.effective_flops()
+    }
+
+    /// Per-link bandwidth available to a collective: a ring neighbor link
+    /// is one transceiver; OptINC symbol streams also ride one
+    /// transceiver per direction (M ≤ 8 symbols time-share it).
+    fn link_bytes_per_s(hw: &HardwareModel) -> f64 {
+        hw.transceiver_bps / 8.0
+    }
+
+    /// Ring all-reduce communication time: `2(N−1)/N` payload crossings
+    /// of the neighbor link.
+    pub fn ring_comm_s(&self, hw: &HardwareModel, servers: usize) -> f64 {
+        let payload = self.params as f64 * self.grad_bytes_ring;
+        2.0 * (servers as f64 - 1.0) / servers as f64 * payload / Self::link_bytes_per_s(hw)
+            + (2 * (servers - 1)) as f64 * hw.link_latency_s
+    }
+
+    /// OptINC communication time: the payload crosses the network exactly
+    /// once (+ the negligible scale sync).
+    pub fn optinc_comm_s(&self, hw: &HardwareModel, _servers: usize) -> f64 {
+        let payload = self.params as f64 * self.grad_bytes_optinc + 8.0;
+        payload / Self::link_bytes_per_s(hw) + hw.link_latency_s
+    }
+}
+
+/// One Fig. 7b bar pair, normalized to the ring total.
+#[derive(Clone, Debug)]
+pub struct LatencyBreakdown {
+    pub workload: String,
+    pub servers: usize,
+    pub compute_s: f64,
+    pub ring_comm_s: f64,
+    pub optinc_comm_s: f64,
+}
+
+impl LatencyBreakdown {
+    pub fn new(w: &WorkloadModel, hw: &HardwareModel, servers: usize) -> LatencyBreakdown {
+        LatencyBreakdown {
+            workload: w.name.clone(),
+            servers,
+            compute_s: w.compute_s(hw),
+            ring_comm_s: w.ring_comm_s(hw, servers),
+            optinc_comm_s: w.optinc_comm_s(hw, servers),
+        }
+    }
+
+    pub fn ring_total(&self) -> f64 {
+        self.compute_s + self.ring_comm_s
+    }
+
+    pub fn optinc_total(&self) -> f64 {
+        self.compute_s + self.optinc_comm_s
+    }
+
+    /// Overall latency reduction (the paper's ">25%" / "~17%" numbers).
+    pub fn reduction(&self) -> f64 {
+        1.0 - self.optinc_total() / self.ring_total()
+    }
+
+    /// Normalized components (ring total = 1.0), as printed by the bench.
+    pub fn normalized(&self) -> [(String, f64); 4] {
+        let t = self.ring_total();
+        [
+            ("ring/compute".into(), self.compute_s / t),
+            ("ring/comm".into(), self.ring_comm_s / t),
+            ("optinc/compute".into(), self.compute_s / t),
+            ("optinc/comm".into(), self.optinc_comm_s / t),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet_is_comm_dominated_and_improves_over_25pct() {
+        // Fig. 7b: for ResNet50 the communication dominates and OptINC
+        // cuts the step by >25%.
+        let hw = HardwareModel::default();
+        let w = WorkloadModel::resnet50_default();
+        let b = LatencyBreakdown::new(&w, &hw, 4);
+        assert!(
+            b.ring_comm_s > b.compute_s,
+            "comm {:.4} should dominate compute {:.4}",
+            b.ring_comm_s,
+            b.compute_s
+        );
+        assert!(
+            b.reduction() > 0.25,
+            "reduction {:.3} should exceed 25%",
+            b.reduction()
+        );
+    }
+
+    #[test]
+    fn llama_balanced_and_improves_around_17pct() {
+        // Fig. 7b: LLaMA compute ≈ comm; OptINC cuts ~17%.
+        let hw = HardwareModel::default();
+        let w = WorkloadModel::llama_default();
+        let b = LatencyBreakdown::new(&w, &hw, 4);
+        let ratio = b.compute_s / b.ring_comm_s;
+        assert!(
+            (0.3..3.0).contains(&ratio),
+            "compute/comm ratio {ratio:.2} should be comparable"
+        );
+        assert!(
+            (0.10..0.30).contains(&b.reduction()),
+            "reduction {:.3} should be around 17%",
+            b.reduction()
+        );
+    }
+
+    #[test]
+    fn reduction_grows_with_server_count() {
+        let hw = HardwareModel::default();
+        let w = WorkloadModel::resnet50_default();
+        let r4 = LatencyBreakdown::new(&w, &hw, 4).reduction();
+        let r8 = LatencyBreakdown::new(&w, &hw, 8).reduction();
+        let r16 = LatencyBreakdown::new(&w, &hw, 16).reduction();
+        assert!(r4 < r8 && r8 < r16, "{r4} {r8} {r16}");
+    }
+
+    #[test]
+    fn normalized_ring_sums_to_one() {
+        let hw = HardwareModel::default();
+        let w = WorkloadModel::llama_default();
+        let b = LatencyBreakdown::new(&w, &hw, 4);
+        let n = b.normalized();
+        assert!((n[0].1 + n[1].1 - 1.0).abs() < 1e-12);
+        assert!(n[3].1 < n[1].1, "optinc comm must beat ring comm");
+    }
+}

@@ -1,0 +1,39 @@
+//! # OptINC — Optical In-Network-Computing for Scalable Distributed Learning
+//!
+//! Full-system reproduction of the OptINC paper (Fei et al., 2026) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the distributed-learning coordinator: a cluster
+//!   simulator with worker threads and modeled optical links, the ring
+//!   all-reduce baseline, and the OptINC collective that routes gradients
+//!   through a simulated optical switch (PAM4 transceivers → preprocessing
+//!   unit → MZI-mapped ONN → splitter).
+//! - **L2 (python/compile, build time)** — JAX graphs for the ONN switch and
+//!   the training workloads, AOT-lowered to HLO text artifacts.
+//! - **L1 (python/compile/kernels, build time)** — Pallas kernels for the
+//!   ONN forward hot spot, lowered inside the L2 graphs.
+//!
+//! The `runtime` module loads the HLO artifacts through PJRT (the `xla`
+//! crate); python is never on the request path.
+//!
+//! See `DESIGN.md` for the paper-to-module map and `EXPERIMENTS.md` for the
+//! reproduced tables/figures.
+
+pub mod cli;
+pub mod cluster;
+pub mod experiments;
+pub mod collectives;
+pub mod config;
+pub mod latency;
+pub mod linalg;
+pub mod onn;
+pub mod optinc;
+pub mod pam4;
+pub mod photonics;
+pub mod quant;
+pub mod runtime;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result type (anyhow-backed).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,259 @@
+//! Dense linear algebra substrate (f64).
+//!
+//! The photonics compile path (mapping trained ONN weights onto MZI meshes)
+//! needs matrix products, SVD, and orthogonality checks. No LAPACK is
+//! available offline, so this module implements a small, well-tested core:
+//! row-major [`Mat`], one-sided Jacobi SVD, and helpers.
+
+pub mod svd;
+
+pub use svd::{svd, Svd};
+
+/// Row-major dense f64 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn identity(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> Mat {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |row| row.len());
+        assert!(rows.iter().all(|row| row.len() == c), "ragged rows");
+        Mat {
+            rows: r,
+            cols: c,
+            data: rows.into_iter().flatten().collect(),
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat {
+            rows,
+            cols,
+            data: data.iter().map(|&x| x as f64).collect(),
+        }
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// `self · other`.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(
+            self.cols, other.rows,
+            "matmul shape mismatch: {}x{} · {}x{}",
+            self.rows, self.cols, other.rows, other.cols
+        );
+        let mut out = Mat::zeros(self.rows, other.cols);
+        // ikj loop order for cache-friendly access to `other` rows.
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = other.row(k);
+                let out_row = out.row_mut(i);
+                for (o, &b) in out_row.iter_mut().zip(orow.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// `self · v` for a vector.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len());
+        (0..self.rows)
+            .map(|i| self.row(i).iter().zip(v).map(|(&a, &b)| a * b).sum())
+            .collect()
+    }
+
+    pub fn frobenius(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// `‖QᵀQ − I‖_max` — 0 for an orthogonal matrix.
+    pub fn orthogonality_error(&self) -> f64 {
+        assert_eq!(self.rows, self.cols, "orthogonality is for square matrices");
+        let qtq = self.transpose().matmul(self);
+        qtq.max_abs_diff(&Mat::identity(self.rows))
+    }
+
+    /// Extract the square submatrix block starting at (r0, c0) of size s.
+    pub fn block(&self, r0: usize, c0: usize, s_rows: usize, s_cols: usize) -> Mat {
+        assert!(r0 + s_rows <= self.rows && c0 + s_cols <= self.cols);
+        let mut b = Mat::zeros(s_rows, s_cols);
+        for i in 0..s_rows {
+            for j in 0..s_cols {
+                b[(i, j)] = self[(r0 + i, c0 + j)];
+            }
+        }
+        b
+    }
+
+    /// Write a block back at (r0, c0).
+    pub fn set_block(&mut self, r0: usize, c0: usize, b: &Mat) {
+        assert!(r0 + b.rows <= self.rows && c0 + b.cols <= self.cols);
+        for i in 0..b.rows {
+            for j in 0..b.cols {
+                self[(r0 + i, c0 + j)] = b[(i, j)];
+            }
+        }
+    }
+
+    pub fn scale(&self, s: f64) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|x| x * s).collect(),
+        }
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Random matrix with entries ~ N(0, 1)/sqrt(cols) (useful in tests).
+pub fn random_mat(rng: &mut crate::util::rng::Pcg32, rows: usize, cols: usize) -> Mat {
+    let scale = 1.0 / (cols as f64).sqrt();
+    let data = (0..rows * cols).map(|_| rng.normal() * scale).collect();
+    Mat { rows, cols, data }
+}
+
+/// Random orthogonal matrix via Jacobi-SVD of a random square matrix.
+pub fn random_orthogonal(rng: &mut crate::util::rng::Pcg32, n: usize) -> Mat {
+    let m = random_mat(rng, n, n);
+    let s = svd(&m);
+    s.u
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Pcg32::seeded(1);
+        let a = random_mat(&mut rng, 5, 7);
+        let i5 = Mat::identity(5);
+        let i7 = Mat::identity(7);
+        assert!(i5.matmul(&a).max_abs_diff(&a) < 1e-15);
+        assert!(a.matmul(&i7).max_abs_diff(&a) < 1e-15);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Mat::from_rows(vec![vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg32::seeded(2);
+        let a = random_mat(&mut rng, 4, 9);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Pcg32::seeded(3);
+        let a = random_mat(&mut rng, 6, 4);
+        let v: Vec<f64> = (0..4).map(|i| i as f64 + 0.5).collect();
+        let vm = Mat::from_vec(4, 1, v.clone());
+        let want = a.matmul(&vm);
+        let got = a.matvec(&v);
+        for i in 0..6 {
+            assert!((got[i] - want[(i, 0)]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn blocks_roundtrip() {
+        let mut rng = Pcg32::seeded(4);
+        let a = random_mat(&mut rng, 8, 8);
+        let b = a.block(2, 4, 3, 2);
+        let mut c = a.clone();
+        c.set_block(2, 4, &b);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn random_orthogonal_is_orthogonal() {
+        let mut rng = Pcg32::seeded(5);
+        for n in [2, 3, 8, 16] {
+            let q = random_orthogonal(&mut rng, n);
+            assert!(q.orthogonality_error() < 1e-9, "n={n}");
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! One-sided Jacobi SVD.
+//!
+//! `A = U Σ Vᵀ` for real matrices. One-sided Jacobi orthogonalizes the
+//! columns of `A` by repeated plane rotations accumulated into `V`; the
+//! column norms become the singular values and the normalized columns form
+//! `U`. Accurate for the small/medium matrices the photonics mapping needs
+//! (the paper's largest weight block is 1024×1024; ONN mapping happens at
+//! build time, not on the request path).
+
+use super::Mat;
+
+/// Thin SVD result: `u` is m×n (m ≥ n), `s` descending, `v` is n×n, and
+/// `a ≈ u · diag(s) · vᵀ`.
+#[derive(Clone, Debug)]
+pub struct Svd {
+    pub u: Mat,
+    pub s: Vec<f64>,
+    pub v: Mat,
+}
+
+impl Svd {
+    /// Reconstruct `U Σ Vᵀ`.
+    pub fn reconstruct(&self) -> Mat {
+        let n = self.s.len();
+        let mut us = self.u.clone();
+        for i in 0..us.rows {
+            for j in 0..n {
+                us[(i, j)] *= self.s[j];
+            }
+        }
+        us.matmul(&self.v.transpose())
+    }
+}
+
+/// Compute the SVD of an arbitrary matrix. For m < n the problem is
+/// transposed internally (`svd(Aᵀ)` with U/V swapped).
+pub fn svd(a: &Mat) -> Svd {
+    if a.rows < a.cols {
+        let t = svd(&a.transpose());
+        return Svd {
+            u: t.v,
+            s: t.s,
+            v: t.u,
+        };
+    }
+    one_sided_jacobi(a)
+}
+
+fn one_sided_jacobi(a: &Mat) -> Svd {
+    let m = a.rows;
+    let n = a.cols;
+    // Work on columns: store A column-major for cache-friendly rotations.
+    let mut cols: Vec<Vec<f64>> = (0..n)
+        .map(|j| (0..m).map(|i| a[(i, j)]).collect())
+        .collect();
+    let mut v = Mat::identity(n);
+
+    let eps = 1e-14;
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Gram entries for the (p, q) column pair.
+                let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                for i in 0..m {
+                    app += cols[p][i] * cols[p][i];
+                    aqq += cols[q][i] * cols[q][i];
+                    apq += cols[p][i] * cols[q][i];
+                }
+                let denom = (app * aqq).sqrt();
+                if denom <= 0.0 || apq.abs() <= eps * denom {
+                    continue;
+                }
+                off = off.max(apq.abs() / denom);
+                // Jacobi rotation that zeroes the (p,q) Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let (xp, xq) = (cols[p][i], cols[q][i]);
+                    cols[p][i] = c * xp - s * xq;
+                    cols[q][i] = s * xp + c * xq;
+                }
+                for i in 0..n {
+                    let (vp, vq) = (v[(i, p)], v[(i, q)]);
+                    v[(i, p)] = c * vp - s * vq;
+                    v[(i, q)] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < 1e-13 {
+            break;
+        }
+    }
+
+    // Singular values = column norms; U = normalized columns.
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = cols
+        .iter()
+        .map(|c| c.iter().map(|x| x * x).sum::<f64>().sqrt())
+        .collect();
+    order.sort_by(|&i, &j| norms[j].partial_cmp(&norms[i]).unwrap());
+
+    let mut u = Mat::zeros(m, n);
+    let mut s = Vec::with_capacity(n);
+    let mut v_sorted = Mat::zeros(n, n);
+    for (slot, &j) in order.iter().enumerate() {
+        let norm = norms[j];
+        s.push(norm);
+        if norm > 1e-300 {
+            for i in 0..m {
+                u[(i, slot)] = cols[j][i] / norm;
+            }
+        } else {
+            // Null direction: fill with a unit vector orthogonalized later;
+            // keep zero column (caller-visible singular value is 0).
+            u[(i_min(slot, m), slot)] = 1.0;
+        }
+        for i in 0..n {
+            v_sorted[(i, slot)] = v[(i, j)];
+        }
+    }
+    Svd { u, s, v: v_sorted }
+}
+
+fn i_min(a: usize, m: usize) -> usize {
+    a.min(m - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::random_mat;
+    use crate::util::rng::Pcg32;
+
+    fn check_svd(a: &Mat, tol: f64) {
+        let d = svd(a);
+        let rec = d.reconstruct();
+        let err = rec.max_abs_diff(a);
+        assert!(err < tol, "reconstruction err {err} for {}x{}", a.rows, a.cols);
+        // Singular values descending, non-negative.
+        for w in d.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+        assert!(d.s.iter().all(|&x| x >= 0.0));
+        // U and V have orthonormal columns (both may be thin when the
+        // input is rectangular). Columns for zero singular values may be
+        // unnormalized; only check when all singular values are positive.
+        if d.s.iter().all(|&x| x > 1e-12) {
+            let utu = d.u.transpose().matmul(&d.u);
+            assert!(utu.max_abs_diff(&Mat::identity(utu.rows)) < 1e-9);
+            let vtv = d.v.transpose().matmul(&d.v);
+            assert!(vtv.max_abs_diff(&Mat::identity(vtv.rows)) < 1e-9);
+        }
+    }
+
+    #[test]
+    fn svd_known_diagonal() {
+        let a = Mat::from_rows(vec![vec![3.0, 0.0], vec![0.0, -2.0]]);
+        let d = svd(&a);
+        assert!((d.s[0] - 3.0).abs() < 1e-12);
+        assert!((d.s[1] - 2.0).abs() < 1e-12);
+        check_svd(&a, 1e-10);
+    }
+
+    #[test]
+    fn svd_random_square_sizes() {
+        let mut rng = Pcg32::seeded(11);
+        for n in [1, 2, 3, 5, 8, 16, 33] {
+            let a = random_mat(&mut rng, n, n);
+            check_svd(&a, 1e-9);
+        }
+    }
+
+    #[test]
+    fn svd_rectangular_both_orientations() {
+        let mut rng = Pcg32::seeded(12);
+        let tall = random_mat(&mut rng, 12, 5);
+        check_svd(&tall, 1e-9);
+        let wide = random_mat(&mut rng, 5, 12);
+        check_svd(&wide, 1e-9);
+    }
+
+    #[test]
+    fn svd_rank_deficient() {
+        // rank-1 matrix.
+        let mut a = Mat::zeros(4, 4);
+        for i in 0..4 {
+            for j in 0..4 {
+                a[(i, j)] = (i + 1) as f64 * (j + 1) as f64;
+            }
+        }
+        let d = svd(&a);
+        assert!(d.s[1] < 1e-9, "rank-1 should have one singular value");
+        assert!(d.reconstruct().max_abs_diff(&a) < 1e-9);
+    }
+
+    #[test]
+    fn svd_frobenius_invariant() {
+        let mut rng = Pcg32::seeded(13);
+        let a = random_mat(&mut rng, 10, 7);
+        let d = svd(&a);
+        let fro_s: f64 = d.s.iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!((fro_s - a.frobenius()).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,247 @@
+//! `optinc-repro` — leader entrypoint + CLI for the OptINC reproduction.
+//!
+//! Every paper table/figure has a subcommand; `examples/` hosts the
+//! runnable scenario drivers, `rust/benches/` the timed harnesses.
+
+use anyhow::Result;
+use optinc::cli::{print_usage, Args, Command};
+use optinc::train::WorkloadKind;
+
+const COMMANDS: &[Command] = &[
+    Command {
+        name: "table1",
+        about: "Table I: area ratios + ONN accuracy per scenario",
+        run: cmd_table1,
+    },
+    Command {
+        name: "table2",
+        about: "Table II: scenario-4 approximation sweep",
+        run: cmd_table2,
+    },
+    Command {
+        name: "fig6",
+        about: "Fig. 6: normalized communication, ring vs OptINC (N=4,8,16)",
+        run: cmd_fig6,
+    },
+    Command {
+        name: "fig7a",
+        about: "Fig. 7a: training quality, exact vs OptINC averaging (needs artifacts)",
+        run: cmd_fig7a,
+    },
+    Command {
+        name: "fig7b",
+        about: "Fig. 7b: modeled latency breakdown on paper hardware",
+        run: cmd_fig7b,
+    },
+    Command {
+        name: "cascade",
+        about: "§III-C cascade validation (eq. 9 vs eq. 10, HW overhead)",
+        run: cmd_cascade,
+    },
+    Command {
+        name: "selftest",
+        about: "Cross-check PJRT switch artifact vs native ONN vs oracle",
+        run: cmd_selftest,
+    },
+    Command {
+        name: "info",
+        about: "Show runtime platform, artifact inventory, scenario table",
+        run: cmd_info,
+    },
+];
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd_name) = argv.first() else {
+        print_usage("optinc-repro", COMMANDS);
+        std::process::exit(2);
+    };
+    let Some(cmd) = COMMANDS.iter().find(|c| c.name == cmd_name) else {
+        eprintln!("unknown command '{cmd_name}'\n");
+        print_usage("optinc-repro", COMMANDS);
+        std::process::exit(2);
+    };
+    let args = match Args::parse(&argv[1..], &["quick", "help", "errors-only"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = (cmd.run)(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_table1(_args: &Args) -> Result<()> {
+    optinc::experiments::table1::print()
+}
+
+fn cmd_table2(_args: &Args) -> Result<()> {
+    optinc::experiments::table2::print()
+}
+
+fn cmd_fig6(args: &Args) -> Result<()> {
+    let elements = args.usize_or("elements", 100_000)?;
+    optinc::experiments::fig6::print(elements)
+}
+
+fn cmd_fig7a(args: &Args) -> Result<()> {
+    let steps = args.usize_or("steps", 120)?;
+    let workers = args.usize_or("workers", 4)?;
+    let row = args.usize_or("table2-row", 1)?;
+    let seed = args.u64_or("seed", 0)?;
+    let tail = args.usize_or("tail", 20)?;
+    let which = args.str_or("workload", "both");
+    let kinds: Vec<WorkloadKind> = match which.as_str() {
+        "lm" => vec![WorkloadKind::Lm],
+        "cnn" => vec![WorkloadKind::Cnn],
+        _ => vec![WorkloadKind::Cnn, WorkloadKind::Lm],
+    };
+    for kind in kinds {
+        let res = optinc::experiments::fig7a::run(kind, workers, steps, row, seed, 20)?;
+        optinc::experiments::fig7a::print(&res, tail);
+        // Persist the curves for EXPERIMENTS.md provenance.
+        let dir = std::path::Path::new("target/bench-results");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("fig7a_{}.json", res.workload));
+        std::fs::write(&path, res.to_json(tail).to_pretty())?;
+        println!("  curves -> {}", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_fig7b(args: &Args) -> Result<()> {
+    let servers = args.usize_or("servers", 4)?;
+    optinc::experiments::fig7b::print(servers)
+}
+
+fn cmd_cascade(args: &Args) -> Result<()> {
+    let samples = args.usize_or("samples", 100_000)?;
+    let seed = args.u64_or("seed", 3)?;
+    let report = optinc::experiments::cascade::run(samples, seed)?;
+    optinc::experiments::cascade::print(&report);
+    Ok(())
+}
+
+fn cmd_selftest(args: &Args) -> Result<()> {
+    use optinc::config::Scenario;
+    use optinc::onn::OnnNetwork;
+    use optinc::optinc::switch::{OnnMode, OptIncSwitch};
+    use optinc::runtime::{lit_f32, to_f32, Runtime};
+    use optinc::util::rng::Pcg32;
+
+    let sid = args.usize_or("scenario", 1)?;
+    let sc = Scenario::table1(sid)?;
+    let dir = optinc::config::artifacts_dir();
+    let stem = format!("onn_s{sid}");
+    let weights = dir.join(format!("{stem}.otsr"));
+    anyhow::ensure!(
+        weights.exists(),
+        "{} missing — run `make artifacts`",
+        weights.display()
+    );
+
+    // Native switch with the trained ONN vs the arithmetic oracle.
+    let net = OnnNetwork::load(&weights)?;
+    let m_out = net.output_dim();
+    let mut native = OptIncSwitch::new(sc.clone(), OnnMode::Native(net))?;
+    let mut oracle = OptIncSwitch::exact(sc.clone());
+
+    let mut rng = Pcg32::seeded(args.u64_or("seed", 9)?);
+    let count = 4096usize;
+    let shards: Vec<Vec<u32>> = (0..sc.servers)
+        .map(|_| {
+            (0..count)
+                .map(|_| (rng.next_u64() % (1u64 << sc.bits)) as u32)
+                .collect()
+        })
+        .collect();
+    let views: Vec<&[u32]> = shards.iter().map(|s| s.as_slice()).collect();
+    let native_avg = native.average_words(&views);
+    let oracle_avg = oracle.average_words(&views);
+    let native_acc = native_avg
+        .iter()
+        .zip(&oracle_avg)
+        .filter(|(a, b)| a == b)
+        .count() as f64
+        / count as f64;
+    println!("native ONN vs oracle accuracy : {native_acc:.6} ({count} words)");
+
+    // PJRT artifact cross-check (the production path).
+    let rt = Runtime::new()?;
+    let art = format!("switch_{stem}_b4096");
+    if rt.artifact_exists(&art) {
+        let exe = rt.load(&art)?;
+        let m = sc.symbols();
+        let mut plane = vec![0.0f32; count * sc.servers * m];
+        let codec = optinc::pam4::Pam4Codec::new(sc.bits);
+        let mut sym = vec![0u8; m];
+        for (s, shard) in shards.iter().enumerate() {
+            for (i, &w) in shard.iter().enumerate() {
+                codec.encode_word_into(w, &mut sym);
+                for (j, &v) in sym.iter().enumerate() {
+                    plane[i * sc.servers * m + s * m + j] = v as f32;
+                }
+            }
+        }
+        let out = exe.run(&[lit_f32(&plane, &[count, sc.servers, m])?])?;
+        let levels = to_f32(&out[0])?;
+        let pjrt_avg: Vec<u32> = levels
+            .chunks_exact(m_out)
+            .map(|frame| {
+                let mut w = 0u32;
+                for &a in frame {
+                    w = (w << 2) | optinc::pam4::snap_pam4(a) as u32;
+                }
+                w
+            })
+            .collect();
+        let agree = pjrt_avg
+            .iter()
+            .zip(&native_avg)
+            .filter(|(a, b)| a == b)
+            .count() as f64
+            / count as f64;
+        println!("PJRT artifact vs native ONN   : {agree:.6} (must be 1.0)");
+        anyhow::ensure!(agree == 1.0, "PJRT and native switch disagree");
+    } else {
+        println!("(PJRT artifact {art} not present — skipping the AOT cross-check)");
+    }
+    Ok(())
+}
+
+fn cmd_info(_args: &Args) -> Result<()> {
+    use optinc::config::Scenario;
+    let dir = optinc::config::artifacts_dir();
+    println!("artifacts dir : {}", dir.display());
+    if dir.exists() {
+        let mut names: Vec<String> = std::fs::read_dir(&dir)?
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().to_string())
+            .collect();
+        names.sort();
+        for n in names {
+            println!("  {n}");
+        }
+    } else {
+        println!("  (missing — run `make artifacts`)");
+    }
+    match optinc::runtime::Runtime::new() {
+        Ok(rt) => println!("PJRT platform : {}", rt.platform()),
+        Err(e) => println!("PJRT platform : unavailable ({e})"),
+    }
+    println!("\nscenarios:");
+    for id in 1..=4 {
+        let sc = Scenario::table1(id)?;
+        println!(
+            "  #{id}: B={} N={} layers {:?} dataset {}",
+            sc.bits,
+            sc.servers,
+            sc.layers,
+            sc.dataset_size()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,308 @@
+//! Native ONN executor: runs a trained MLP (loaded from `.otsr`) on the
+//! CPU without PJRT.
+//!
+//! Two execution paths exist for the switch ONN:
+//! - **PJRT** (`runtime::` + `artifacts/switch_*.hlo.txt`) — the production
+//!   path, exercising the full L1/L2 AOT pipeline;
+//! - **native** (this module) — a dependency-free mirror used for tests,
+//!   cross-validation against the python oracle, and benches that must run
+//!   before artifacts exist.
+//!
+//! Weights are stored exactly as python exports them: `w{i}` of shape
+//! `(n_in, n_out)` row-major, `b{i}` of shape `(n_out,)`.
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::config::Scenario;
+use crate::util::tensorfile::TensorFile;
+
+/// One dense layer, weights in (n_in, n_out) row-major layout.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub n_in: usize,
+    pub n_out: usize,
+    pub weight: Vec<f32>,
+    pub bias: Vec<f32>,
+    pub relu: bool,
+}
+
+impl Layer {
+    /// y[b] = act(x[b] @ W + bias) for a row-major batch.
+    ///
+    /// Hot path of the native switch: register-blocked over 4 batch rows
+    /// so each weight row is loaded once per 4 samples (the weight matrix
+    /// is the dominant memory traffic at these shapes). ~1.8× over the
+    /// row-at-a-time version — see EXPERIMENTS.md §Perf.
+    pub fn forward(&self, x: &[f32], batch: usize, out: &mut Vec<f32>) {
+        debug_assert_eq!(x.len(), batch * self.n_in);
+        out.clear();
+        out.resize(batch * self.n_out, 0.0);
+        let (n_in, n_out) = (self.n_in, self.n_out);
+
+        let mut b = 0;
+        while b + 4 <= batch {
+            // Initialize 4 output rows with the bias.
+            for r in 0..4 {
+                out[(b + r) * n_out..(b + r + 1) * n_out].copy_from_slice(&self.bias);
+            }
+            for i in 0..n_in {
+                let x0 = x[b * n_in + i];
+                let x1 = x[(b + 1) * n_in + i];
+                let x2 = x[(b + 2) * n_in + i];
+                let x3 = x[(b + 3) * n_in + i];
+                if x0 == 0.0 && x1 == 0.0 && x2 == 0.0 && x3 == 0.0 {
+                    continue; // ReLU sparsity
+                }
+                let wrow = &self.weight[i * n_out..(i + 1) * n_out];
+                let (h0, rest) = out[b * n_out..].split_at_mut(n_out);
+                let (h1, rest) = rest.split_at_mut(n_out);
+                let (h2, h3) = rest.split_at_mut(n_out);
+                for j in 0..n_out {
+                    let w = wrow[j];
+                    h0[j] += x0 * w;
+                    h1[j] += x1 * w;
+                    h2[j] += x2 * w;
+                    h3[j] += x3 * w;
+                }
+            }
+            b += 4;
+        }
+        // Remainder rows, one at a time.
+        for b in b..batch {
+            let xrow = &x[b * n_in..(b + 1) * n_in];
+            let orow = &mut out[b * n_out..(b + 1) * n_out];
+            orow.copy_from_slice(&self.bias);
+            for (i, &xi) in xrow.iter().enumerate() {
+                if xi == 0.0 {
+                    continue;
+                }
+                let wrow = &self.weight[i * n_out..(i + 1) * n_out];
+                for (o, &w) in orow.iter_mut().zip(wrow.iter()) {
+                    *o += xi * w;
+                }
+            }
+        }
+        if self.relu {
+            for o in out.iter_mut() {
+                if *o < 0.0 {
+                    *o = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// A loaded MLP.
+#[derive(Clone, Debug)]
+pub struct OnnNetwork {
+    pub layers: Vec<Layer>,
+}
+
+impl OnnNetwork {
+    pub fn input_dim(&self) -> usize {
+        self.layers.first().map_or(0, |l| l.n_in)
+    }
+
+    pub fn output_dim(&self) -> usize {
+        self.layers.last().map_or(0, |l| l.n_out)
+    }
+
+    /// Load from an `.otsr` weight file (w1/b1, w2/b2, …).
+    pub fn load(path: &Path) -> Result<OnnNetwork> {
+        let tf = TensorFile::load(path)?;
+        Self::from_tensorfile(&tf)
+    }
+
+    pub fn from_tensorfile(tf: &TensorFile) -> Result<OnnNetwork> {
+        let mut count = 0;
+        for t in &tf.tensors {
+            if let Some(i) = t.name.strip_prefix('w').and_then(|s| s.parse::<usize>().ok()) {
+                count = count.max(i);
+            }
+        }
+        ensure!(count >= 1, "no weight tensors (w1, w2, …) found");
+        let mut layers = Vec::with_capacity(count);
+        for i in 1..=count {
+            let w = tf.get(&format!("w{i}"))?;
+            let b = tf.get(&format!("b{i}"))?;
+            let (n_in, n_out, wdata) = w.as_matrix()?;
+            let bias = b.as_f32()?.to_vec();
+            ensure!(
+                bias.len() == n_out,
+                "layer {i}: bias len {} != n_out {n_out}",
+                bias.len()
+            );
+            layers.push(Layer {
+                n_in,
+                n_out,
+                weight: wdata.to_vec(),
+                bias,
+                relu: i != count, // linear head
+            });
+        }
+        // Shape chain must be consistent.
+        for pair in layers.windows(2) {
+            if pair[0].n_out != pair[1].n_in {
+                bail!(
+                    "layer shape chain broken: {} -> {}",
+                    pair[0].n_out,
+                    pair[1].n_in
+                );
+            }
+        }
+        Ok(OnnNetwork { layers })
+    }
+
+    /// Check this network matches a scenario's declared structure.
+    pub fn check_scenario(&self, sc: &Scenario) -> Result<()> {
+        let dims: Vec<usize> = std::iter::once(self.input_dim())
+            .chain(self.layers.iter().map(|l| l.n_out))
+            .collect();
+        ensure!(
+            dims == sc.layers,
+            "network dims {dims:?} != scenario layers {:?}",
+            sc.layers
+        );
+        Ok(())
+    }
+
+    /// Batched forward: x is (batch × input_dim) row-major.
+    pub fn forward(&self, x: &[f32], batch: usize) -> Vec<f32> {
+        let mut cur = x.to_vec();
+        let mut next = Vec::new();
+        for layer in &self.layers {
+            layer.forward(&cur, batch, &mut next);
+            std::mem::swap(&mut cur, &mut next);
+        }
+        cur
+    }
+
+    /// Forward reusing caller-provided scratch buffers (hot path).
+    /// Returns the number of valid output floats in `scratch.output()`.
+    pub fn forward_into(&self, x: &[f32], batch: usize, scratch: &mut OnnScratch) -> usize {
+        scratch.a.clear();
+        scratch.a.extend_from_slice(x);
+        for layer in &self.layers {
+            layer.forward(&scratch.a, batch, &mut scratch.b);
+            std::mem::swap(&mut scratch.a, &mut scratch.b);
+        }
+        batch * self.output_dim()
+    }
+
+    /// Total multiply-accumulates per sample.
+    pub fn macs_per_sample(&self) -> usize {
+        self.layers.iter().map(|l| l.n_in * l.n_out).sum()
+    }
+}
+
+/// Reusable forward buffers.
+#[derive(Default, Clone, Debug)]
+pub struct OnnScratch {
+    pub a: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+impl OnnScratch {
+    pub fn output(&self) -> &[f32] {
+        &self.a
+    }
+}
+
+/// Build a small deterministic random network (tests/benches without
+/// artifacts).
+pub fn random_network(dims: &[usize], seed: u64) -> OnnNetwork {
+    use crate::util::rng::Pcg32;
+    let mut rng = Pcg32::seeded(seed);
+    let mut layers = Vec::new();
+    for (i, w) in dims.windows(2).enumerate() {
+        let (n_in, n_out) = (w[0], w[1]);
+        let scale = (2.0 / n_in as f64).sqrt();
+        let weight: Vec<f32> = (0..n_in * n_out)
+            .map(|_| (rng.normal() * scale) as f32)
+            .collect();
+        layers.push(Layer {
+            n_in,
+            n_out,
+            weight,
+            bias: vec![0.0; n_out],
+            relu: i != dims.len() - 2,
+        });
+    }
+    OnnNetwork { layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tensorfile::{Tensor, TensorFile};
+
+    fn save_test_net(dir: &Path) -> std::path::PathBuf {
+        // 2-3-2 net with known weights.
+        let mut tf = TensorFile::new();
+        tf.push(Tensor::f32("w1", vec![2, 3], vec![1., 0., 2., 0., 1., -1.]));
+        tf.push(Tensor::f32("b1", vec![3], vec![0.0, 0.5, 0.0]));
+        tf.push(Tensor::f32("w2", vec![3, 2], vec![1., 0., 0., 1., 1., 0.]));
+        tf.push(Tensor::f32("b2", vec![2], vec![-1.0, 0.0]));
+        let p = dir.join("net.otsr");
+        tf.save(&p).unwrap();
+        p
+    }
+
+    #[test]
+    fn load_and_forward_known_values() {
+        let dir = std::env::temp_dir().join("optinc_onn_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = save_test_net(&dir);
+        let net = OnnNetwork::load(&p).unwrap();
+        assert_eq!(net.input_dim(), 2);
+        assert_eq!(net.output_dim(), 2);
+        assert!(net.layers[0].relu);
+        assert!(!net.layers[1].relu);
+        // x = [1, 2]: h = relu([1, 2.5, 0]); o = [h0 + h2 - 1, h1] = [0, 2.5]
+        let o = net.forward(&[1.0, 2.0], 1);
+        assert_eq!(o, vec![0.0, 2.5]);
+    }
+
+    #[test]
+    fn batch_forward_matches_single() {
+        let net = random_network(&[4, 16, 8, 3], 42);
+        let mut rng = crate::util::rng::Pcg32::seeded(3);
+        let batch = 7;
+        let x: Vec<f32> = (0..batch * 4).map(|_| rng.next_f32() * 3.0).collect();
+        let all = net.forward(&x, batch);
+        for b in 0..batch {
+            let one = net.forward(&x[b * 4..(b + 1) * 4], 1);
+            for (i, &v) in one.iter().enumerate() {
+                assert!((all[b * 3 + i] - v).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn forward_into_matches_forward() {
+        let net = random_network(&[4, 32, 4], 1);
+        let x: Vec<f32> = (0..4 * 5).map(|i| (i % 4) as f32).collect();
+        let expect = net.forward(&x, 5);
+        let mut scratch = OnnScratch::default();
+        let n = net.forward_into(&x, 5, &mut scratch);
+        assert_eq!(n, expect.len());
+        assert_eq!(&scratch.output()[..n], &expect[..]);
+    }
+
+    #[test]
+    fn scenario_check_catches_mismatch() {
+        let net = random_network(&[4, 64, 128, 256, 128, 64, 4], 2);
+        let sc = crate::config::Scenario::table1(1).unwrap();
+        net.check_scenario(&sc).unwrap();
+        let sc2 = crate::config::Scenario::table1(2).unwrap();
+        assert!(net.check_scenario(&sc2).is_err());
+    }
+
+    #[test]
+    fn macs_count() {
+        let net = random_network(&[4, 8, 2], 0);
+        assert_eq!(net.macs_per_sample(), 4 * 8 + 8 * 2);
+    }
+}

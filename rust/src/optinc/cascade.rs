@@ -1,0 +1,161 @@
+//! Cascading OptINC topology (§III-C, Fig. 5): N switches in level 1 feed
+//! one switch in level 2, supporting up to N² servers.
+//!
+//! Naive cascading double-quantizes (eq. 9) and loses the level-1
+//! fractions. The paper's fix (eq. 10) keeps the discarded decimal part
+//! `d` by merging it into the last PAM4 symbol of the level-1 output at
+//! 1/N resolution, which makes the cascade output equal the single-level
+//! quantized global average exactly. Both behaviours are implemented so
+//! the error of the naive scheme is measurable (ablation bench).
+
+use crate::config::Scenario;
+use crate::quant::quantized_mean;
+
+/// Exact-arithmetic cascade models (the ONN-backed path runs through the
+/// trained `onn_cascade_l{1,2}` artifacts; see `collectives` + aot.py).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CascadeMode {
+    /// eq. 9: quantize at both levels (accumulates error).
+    Basic,
+    /// eq. 10: level 1 forwards the exact mean (fraction on the last
+    /// symbol at 1/N resolution); level 2 quantizes once.
+    Remainder,
+}
+
+/// Two-level cascade of OptINCs, each level-1 switch serving `n` servers.
+#[derive(Clone, Debug)]
+pub struct Cascade {
+    pub level1_fan_in: usize,
+    pub mode: CascadeMode,
+}
+
+impl Cascade {
+    pub fn new(sc: &Scenario, mode: CascadeMode) -> Cascade {
+        Cascade {
+            level1_fan_in: sc.servers,
+            mode,
+        }
+    }
+
+    /// Total servers supported (N²).
+    pub fn capacity(&self) -> usize {
+        self.level1_fan_in * self.level1_fan_in
+    }
+
+    /// Aggregate one word from each of up to N² servers.
+    /// `words.len()` must be a multiple of `level1_fan_in` (unused inputs
+    /// are wired to zero per §III-C — the caller pads explicitly so the
+    /// averaging semantics stay visible).
+    pub fn aggregate(&self, words: &[u32]) -> u32 {
+        let n = self.level1_fan_in;
+        assert!(!words.is_empty() && words.len() % n == 0);
+        assert!(words.len() <= self.capacity());
+        let groups: Vec<&[u32]> = words.chunks(n).collect();
+        match self.mode {
+            CascadeMode::Basic => {
+                // Level 1 quantizes each group mean; level 2 quantizes the
+                // mean of the quantized means (eq. 9).
+                let l1: Vec<u32> = groups.iter().map(|g| quantized_mean(g)).collect();
+                quantized_mean(&l1)
+            }
+            CascadeMode::Remainder => {
+                // Level 1 forwards exact group means at 1/N resolution:
+                // mean_i = sum_i / n. Level 2 computes
+                // Q((1/G) Σ mean_i) = Q(Σ sums / (G·n)) exactly in integer
+                // arithmetic — identical to the flat quantized average.
+                let g = groups.len() as u64;
+                let total: u64 = groups
+                    .iter()
+                    .map(|grp| grp.iter().map(|&w| w as u64).sum::<u64>())
+                    .sum();
+                let denom = g * n as u64;
+                ((total * 2 + denom) / (2 * denom)) as u32
+            }
+        }
+    }
+
+    /// Flat reference: single quantization over all words (eq. 8).
+    pub fn flat_reference(words: &[u32]) -> u32 {
+        quantized_mean(words)
+    }
+
+    /// Signed error vs the flat reference for a batch.
+    pub fn error(&self, words: &[u32]) -> i64 {
+        self.aggregate(words) as i64 - Self::flat_reference(words) as i64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scenario;
+    use crate::util::proptest::{forall, Config};
+
+    fn cascade(mode: CascadeMode) -> Cascade {
+        Cascade::new(&Scenario::table1(1).unwrap(), mode)
+    }
+
+    #[test]
+    fn capacity_is_n_squared() {
+        assert_eq!(cascade(CascadeMode::Basic).capacity(), 16);
+    }
+
+    #[test]
+    fn remainder_mode_always_matches_flat() {
+        // eq. 10 ⇒ cascade ≡ flat quantized average, for every input.
+        let c = cascade(CascadeMode::Remainder);
+        forall(
+            Config { cases: 2000, seed: 3 },
+            |rng| (0..16).map(|_| rng.gen_range(256)).collect::<Vec<u32>>(),
+            |words| {
+                if c.error(words) == 0 {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "cascade {} != flat {}",
+                        c.aggregate(words),
+                        Cascade::flat_reference(words)
+                    ))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn basic_mode_exhibits_two_level_error() {
+        // eq. 9 must err for at least some inputs (the motivation for the
+        // modified dataset) — and never by more than ±1 word for N=4 with
+        // round-half-up at both levels... (error bound is small; assert a
+        // nonzero error exists and magnitude stays ≤ 2).
+        let c = cascade(CascadeMode::Basic);
+        let mut rng = crate::util::rng::Pcg32::seeded(7);
+        let mut saw_error = false;
+        for _ in 0..4000 {
+            let words: Vec<u32> = (0..16).map(|_| rng.gen_range(256)).collect();
+            let e = c.error(&words);
+            if e != 0 {
+                saw_error = true;
+            }
+            assert!(e.abs() <= 2, "unexpectedly large cascade error {e}");
+        }
+        assert!(saw_error, "basic cascade should show quantization error");
+    }
+
+    #[test]
+    fn partial_population_pads_with_zero_groups() {
+        // 8 of 16 servers: two level-1 groups.
+        let c = cascade(CascadeMode::Remainder);
+        let words: Vec<u32> = (0..8).map(|i| 10 + i).collect();
+        let expect = Cascade::flat_reference(&words);
+        assert_eq!(c.aggregate(&words), expect);
+    }
+
+    #[test]
+    fn identical_words_pass_through_both_modes() {
+        for mode in [CascadeMode::Basic, CascadeMode::Remainder] {
+            let c = cascade(mode);
+            let words = vec![77u32; 16];
+            assert_eq!(c.aggregate(&words), 77);
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! Residual-error injection (Table II → Fig. 7a).
+//!
+//! A trained ONN that is not exactly 100% accurate perturbs the averaged
+//! gradient word by small discrete values with measured probabilities
+//! (Table II, third column: e.g. "±1 (90%), −64 (10%)" for layer set
+//! 4–7). During the Fig. 7a workload simulations these errors are
+//! injected into the averaged gradient words with the measured rates.
+
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+
+/// Discrete word-error distribution.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ErrorModel {
+    /// Probability that any given word is erroneous (1 − accuracy).
+    pub error_rate: f64,
+    /// Conditional distribution over error values given an error:
+    /// (delta, relative ratio); ratios sum to 1.
+    pub values: Vec<(i64, f64)>,
+    pub seed: u64,
+}
+
+impl ErrorModel {
+    /// A perfect ONN (Table I rows at 100%).
+    pub fn perfect() -> ErrorModel {
+        ErrorModel {
+            error_rate: 0.0,
+            values: Vec::new(),
+            seed: 0,
+        }
+    }
+
+    /// From an accuracy plus (value, ratio) pairs.
+    pub fn new(accuracy: f64, values: Vec<(i64, f64)>, seed: u64) -> ErrorModel {
+        assert!((0.0..=1.0).contains(&accuracy));
+        let total: f64 = values.iter().map(|v| v.1).sum();
+        let values = if total > 0.0 {
+            values.into_iter().map(|(v, r)| (v, r / total)).collect()
+        } else {
+            values
+        };
+        ErrorModel {
+            error_rate: 1.0 - accuracy,
+            values,
+            seed,
+        }
+    }
+
+    /// Paper Table II rows (scenario 4, B=16), by approximated-layer set.
+    /// Index matches `Scenario::table2_variants()`.
+    pub fn paper_table2(row: usize, seed: u64) -> ErrorModel {
+        match row {
+            0 => ErrorModel::perfect(), // layers 4,5,6: 100%
+            1 => ErrorModel::new(
+                0.9999986,
+                vec![(1, 45.0), (-1, 45.0), (-64, 10.0)],
+                seed,
+            ),
+            2 => ErrorModel::new(0.9999999, vec![(1024, 100.0)], seed),
+            3 => ErrorModel::new(
+                0.9998891,
+                vec![(1, 49.5), (-1, 49.5), (1024, 0.45), (-1024, 0.45), (-4, 0.1)],
+                seed,
+            ),
+            4 => ErrorModel::new(
+                0.9999936,
+                vec![(4, 39.75), (-4, 39.75), (-16, 17.0), (12, 3.5)],
+                seed,
+            ),
+            _ => panic!("Table II has rows 0..=4"),
+        }
+    }
+
+    /// From a training metrics JSON (artifacts/onn_*.metrics.json):
+    /// `accuracy` + `errors` histogram measured over the full dataset.
+    pub fn from_metrics(metrics: &Json, seed: u64) -> ErrorModel {
+        let acc = metrics.get("accuracy").as_f64().unwrap_or(1.0);
+        let mut values = Vec::new();
+        if let Some(obj) = metrics.get("errors").as_obj() {
+            for (k, v) in obj {
+                if let (Ok(delta), Some(count)) = (k.parse::<i64>(), v.as_f64()) {
+                    values.push((delta, count));
+                }
+            }
+        }
+        ErrorModel::new(acc, values, seed)
+    }
+
+    /// Perturb a batch of averaged words in place; words saturate at the
+    /// bit-width bounds. Returns the number of injected errors.
+    pub fn inject(&self, words: &mut [u32], bits: u32, rng: &mut Pcg32) -> usize {
+        if self.error_rate <= 0.0 || self.values.is_empty() {
+            return 0;
+        }
+        let max = if bits >= 32 {
+            u32::MAX as i64
+        } else {
+            (1i64 << bits) - 1
+        };
+        let ratios: Vec<f64> = self.values.iter().map(|v| v.1).collect();
+        let mut injected = 0;
+        for w in words.iter_mut() {
+            if (rng.next_f64()) < self.error_rate {
+                let (delta, _) = self.values[rng.weighted_index(&ratios)];
+                let v = (*w as i64 + delta).clamp(0, max);
+                *w = v as u32;
+                injected += 1;
+            }
+        }
+        injected
+    }
+
+    /// Expected |Δ| per word (for analytic sanity checks).
+    pub fn expected_abs_error(&self) -> f64 {
+        self.error_rate
+            * self
+                .values
+                .iter()
+                .map(|(v, r)| v.unsigned_abs() as f64 * r)
+                .sum::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_injects_nothing() {
+        let em = ErrorModel::perfect();
+        let mut words = vec![5u32; 1000];
+        let mut rng = Pcg32::seeded(1);
+        assert_eq!(em.inject(&mut words, 8, &mut rng), 0);
+        assert!(words.iter().all(|&w| w == 5));
+    }
+
+    #[test]
+    fn rates_are_respected() {
+        let em = ErrorModel::new(0.9, vec![(1, 90.0), (-64, 10.0)], 7);
+        let mut rng = Pcg32::seeded(2);
+        let mut words = vec![128u32; 100_000];
+        let injected = em.inject(&mut words, 8, &mut rng);
+        let rate = injected as f64 / words.len() as f64;
+        assert!((rate - 0.1).abs() < 0.01, "rate {rate}");
+        let minus64 = words.iter().filter(|&&w| w == 64).count() as f64;
+        let plus1 = words.iter().filter(|&&w| w == 129).count() as f64;
+        let ratio = minus64 / (minus64 + plus1);
+        assert!((ratio - 0.1).abs() < 0.03, "ratio {ratio}");
+    }
+
+    #[test]
+    fn saturation_at_bounds() {
+        let em = ErrorModel::new(0.0, vec![(-64, 100.0)], 3); // always err
+        let mut words = vec![3u32; 100];
+        let mut rng = Pcg32::seeded(3);
+        em.inject(&mut words, 8, &mut rng);
+        assert!(words.iter().all(|&w| w == 0)); // clamped, not wrapped
+    }
+
+    #[test]
+    fn from_metrics_roundtrip() {
+        let j = Json::parse(
+            r#"{"accuracy": 0.999, "errors": {"1": 90, "-64": 10}}"#,
+        )
+        .unwrap();
+        let em = ErrorModel::from_metrics(&j, 0);
+        assert!((em.error_rate - 0.001).abs() < 1e-12);
+        assert_eq!(em.values.len(), 2);
+        let sum: f64 = em.values.iter().map(|v| v.1).sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_rows_parse() {
+        for row in 0..5 {
+            let em = ErrorModel::paper_table2(row, 1);
+            assert!(em.error_rate < 2e-4, "row {row}");
+        }
+        assert_eq!(ErrorModel::paper_table2(0, 1), ErrorModel::perfect());
+    }
+
+    #[test]
+    fn expected_abs_error_formula() {
+        let em = ErrorModel::new(0.9, vec![(1, 90.0), (-64, 10.0)], 0);
+        // 0.1 · (1·0.9 + 64·0.1) = 0.73
+        assert!((em.expected_abs_error() - 0.73).abs() < 1e-12);
+    }
+}

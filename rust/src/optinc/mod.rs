@@ -1,0 +1,20 @@
+//! The OptINC switch: the paper's system contribution (Fig. 3).
+//!
+//! Signal path for one batch of gradient words:
+//!
+//! ```text
+//! servers ──PAM4──► [ P preprocess ] ──► [ ONN f_θ ] ──► [ T splitter ] ──► servers
+//!                    average M·N          average+        broadcast to
+//!                    symbols → K          quantize        all N receivers
+//! ```
+//!
+//! Submodules: [`preprocess`] (P), [`switch`] (the composed datapath with
+//! native-ONN, PJRT, and exact-oracle execution modes), [`splitter`] (T),
+//! [`cascade`] (§III-C two-level scaling), [`error_model`] (Table II
+//! residual-error injection for the Fig. 7a experiments).
+
+pub mod cascade;
+pub mod error_model;
+pub mod preprocess;
+pub mod splitter;
+pub mod switch;

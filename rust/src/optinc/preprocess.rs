@@ -1,0 +1,141 @@
+//! Preprocessing unit **P** (§III-A): reduce the N×M PAM4 symbol plane to
+//! K averaged ONN inputs.
+//!
+//! Symbols are grouped `c = ⌈M/K⌉` at a time into a base-4^c digit per
+//! server, then averaged across the N servers. Optically this is passive
+//! combining (weighted power sums); numerically it is exactly
+//! `A_k = (1/N) Σ_n Σ_j 4^(c−1−j) · plane[n, k·c+j]`.
+
+use crate::config::Scenario;
+
+/// Configured P unit for one scenario.
+#[derive(Clone, Debug)]
+pub struct Preprocess {
+    pub servers: usize,
+    pub groups: usize,
+    pub symbols_per_group: usize,
+    weights: Vec<f32>, // 4^(c-1-j)
+}
+
+impl Preprocess {
+    pub fn new(sc: &Scenario) -> Preprocess {
+        let c = sc.symbols_per_group();
+        Preprocess {
+            servers: sc.servers,
+            groups: sc.onn_inputs(),
+            symbols_per_group: c,
+            weights: (0..c).map(|j| 4f32.powi((c - 1 - j) as i32)).collect(),
+        }
+    }
+
+    /// Symbols per server (`M`).
+    pub fn symbols(&self) -> usize {
+        self.groups * self.symbols_per_group
+    }
+
+    /// One frame: `plane` is N×M (server-major). Returns K inputs.
+    pub fn apply_frame(&self, plane: &[f32], out: &mut [f32]) {
+        let m = self.symbols();
+        debug_assert_eq!(plane.len(), self.servers * m);
+        debug_assert_eq!(out.len(), self.groups);
+        out.fill(0.0);
+        for s in 0..self.servers {
+            let row = &plane[s * m..(s + 1) * m];
+            for k in 0..self.groups {
+                let mut acc = 0.0f32;
+                for (j, &w) in self.weights.iter().enumerate() {
+                    acc += w * row[k * self.symbols_per_group + j];
+                }
+                out[k] += acc;
+            }
+        }
+        let inv = 1.0 / self.servers as f32;
+        for o in out.iter_mut() {
+            *o *= inv;
+        }
+    }
+
+    /// Batched: `planes` is batch × N × M row-major; returns batch × K.
+    pub fn apply_batch(&self, planes: &[f32], batch: usize) -> Vec<f32> {
+        let m = self.symbols();
+        let frame = self.servers * m;
+        debug_assert_eq!(planes.len(), batch * frame);
+        let mut out = vec![0.0f32; batch * self.groups];
+        for b in 0..batch {
+            let (src, dst) = (
+                &planes[b * frame..(b + 1) * frame],
+                &mut out[b * self.groups..(b + 1) * self.groups],
+            );
+            self.apply_frame(src, dst);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scenario;
+
+    #[test]
+    fn scenario1_is_plain_average() {
+        // c = 1: P is a plain per-symbol average over servers.
+        let sc = Scenario::table1(1).unwrap();
+        let p = Preprocess::new(&sc);
+        assert_eq!(p.symbols_per_group, 1);
+        // 4 servers × 4 symbols.
+        let plane: Vec<f32> = vec![
+            0., 1., 2., 3., //
+            1., 1., 2., 3., //
+            2., 3., 2., 3., //
+            1., 3., 2., 3., //
+        ];
+        let mut out = vec![0.0; 4];
+        p.apply_frame(&plane, &mut out);
+        assert_eq!(out, vec![1.0, 2.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn scenario4_combines_pairs_base16() {
+        // B=16 → M=8, K=4, c=2: pairs combine as 4·s0 + s1.
+        let sc = Scenario::table1(4).unwrap();
+        let p = Preprocess::new(&sc);
+        assert_eq!(p.symbols_per_group, 2);
+        assert_eq!(p.symbols(), 8);
+        // single-server check (other three rows zero → divide by 4)
+        let mut plane = vec![0.0f32; 4 * 8];
+        plane[..8].copy_from_slice(&[3., 2., 0., 1., 1., 0., 2., 3.]);
+        let mut out = vec![0.0; 4];
+        p.apply_frame(&plane, &mut out);
+        assert_eq!(out, vec![14.0 / 4.0, 1.0 / 4.0, 4.0 / 4.0, 11.0 / 4.0]);
+    }
+
+    #[test]
+    fn batch_matches_frames() {
+        let sc = Scenario::table1(1).unwrap();
+        let p = Preprocess::new(&sc);
+        let mut rng = crate::util::rng::Pcg32::seeded(5);
+        let batch = 6;
+        let frame = sc.servers * sc.symbols();
+        let planes: Vec<f32> = (0..batch * frame)
+            .map(|_| rng.gen_range(4) as f32)
+            .collect();
+        let all = p.apply_batch(&planes, batch);
+        for b in 0..batch {
+            let mut one = vec![0.0; 4];
+            p.apply_frame(&planes[b * frame..(b + 1) * frame], &mut one);
+            assert_eq!(&all[b * 4..(b + 1) * 4], &one[..]);
+        }
+    }
+
+    #[test]
+    fn averaged_input_range_matches_paper() {
+        // A_k ∈ [0, 4^c − 1] with N(4^c−1)+1 levels.
+        let sc = Scenario::table1(1).unwrap();
+        let p = Preprocess::new(&sc);
+        let plane = vec![3.0f32; 4 * 4]; // all symbols at max
+        let mut out = vec![0.0; 4];
+        p.apply_frame(&plane, &mut out);
+        assert_eq!(out, vec![3.0; 4]);
+    }
+}

@@ -1,0 +1,219 @@
+//! The composed OptINC switch datapath (Fig. 3): PAM4 encode → P → ONN →
+//! transceiver snap → decode.
+//!
+//! Three execution modes for the ONN stage:
+//! - [`OnnMode::Native`] — the in-process MLP executor (`crate::onn`);
+//! - [`OnnMode::Exact`] — an oracle that computes the quantized average
+//!   arithmetically (what a *perfectly trained* ONN realizes; used for
+//!   byte accounting, topology tests, and as the reference the trained
+//!   network is measured against);
+//! - PJRT artifacts are wired in at the `collectives::optinc` level via
+//!   `runtime::SwitchExecutor`, which shares this module's framing.
+
+use anyhow::Result;
+
+use crate::config::Scenario;
+use crate::onn::{OnnNetwork, OnnScratch};
+use crate::pam4::{snap_pam4, Pam4Codec};
+#[cfg(test)]
+use crate::quant::quantized_mean;
+
+use super::preprocess::Preprocess;
+use super::splitter::Splitter;
+
+/// ONN execution mode.
+pub enum OnnMode {
+    /// Trained MLP, run natively.
+    Native(OnnNetwork),
+    /// Arithmetic oracle: Q(mean) computed exactly.
+    Exact,
+}
+
+/// One OptINC switch instance.
+pub struct OptIncSwitch {
+    pub scenario: Scenario,
+    pub mode: OnnMode,
+    pub preprocess: Preprocess,
+    pub splitter: Splitter,
+    codec: Pam4Codec,
+    scratch: OnnScratch,
+}
+
+impl OptIncSwitch {
+    pub fn new(scenario: Scenario, mode: OnnMode) -> Result<OptIncSwitch> {
+        if let OnnMode::Native(net) = &mode {
+            net.check_scenario(&scenario)?;
+        }
+        let preprocess = Preprocess::new(&scenario);
+        let splitter = Splitter::new(scenario.servers);
+        let codec = Pam4Codec::new(scenario.bits);
+        Ok(OptIncSwitch {
+            scenario,
+            mode,
+            preprocess,
+            splitter,
+            codec,
+            scratch: OnnScratch::default(),
+        })
+    }
+
+    pub fn exact(scenario: Scenario) -> OptIncSwitch {
+        Self::new(scenario, OnnMode::Exact).expect("exact mode cannot fail")
+    }
+
+    pub fn codec(&self) -> &Pam4Codec {
+        &self.codec
+    }
+
+    /// Average a batch of words: `shards[n][i]` is word `i` of server `n`.
+    /// Returns the quantized average word per element — what every server
+    /// receives back through the splitter.
+    ///
+    /// This is the network traversal: each server transmits its symbols
+    /// exactly once; the averaging happens "in flight".
+    pub fn average_words(&mut self, shards: &[&[u32]]) -> Vec<u32> {
+        let n = self.scenario.servers;
+        assert_eq!(shards.len(), n, "switch wired for {n} servers");
+        let count = shards[0].len();
+        assert!(shards.iter().all(|s| s.len() == count));
+        match &self.mode {
+            OnnMode::Exact => {
+                // Q(mean) arithmetically (eq. 3). Accumulate shard-major
+                // (sequential reads per shard) instead of element-major —
+                // ~8× faster on large batches (EXPERIMENTS.md §Perf).
+                let mut sums = vec![0u64; count];
+                for s in shards {
+                    for (acc, &w) in sums.iter_mut().zip(s.iter()) {
+                        *acc += w as u64;
+                    }
+                }
+                let n64 = n as u64;
+                sums.iter()
+                    .map(|&s| ((s * 2 + n64) / (2 * n64)) as u32)
+                    .collect()
+            }
+            OnnMode::Native(_) => self.average_words_onn(shards, count),
+        }
+    }
+
+    fn average_words_onn(&mut self, shards: &[&[u32]], count: usize) -> Vec<u32> {
+        let n = self.scenario.servers;
+        let m = self.scenario.symbols();
+        let k = self.scenario.onn_inputs();
+        // Build batch × N × M symbol planes (PAM4 encode per server).
+        let mut planes = vec![0.0f32; count * n * m];
+        let mut sym = vec![0u8; m];
+        for (s, shard) in shards.iter().enumerate() {
+            for (i, &w) in shard.iter().enumerate() {
+                self.codec.encode_word_into(w, &mut sym);
+                let base = i * n * m + s * m;
+                for (j, &v) in sym.iter().enumerate() {
+                    planes[base + j] = v as f32;
+                }
+            }
+        }
+        // P: batch × K inputs.
+        let inputs = self.preprocess.apply_batch(&planes, count);
+        debug_assert_eq!(inputs.len(), count * k);
+        // ONN forward.
+        let net = match &self.mode {
+            OnnMode::Native(net) => net,
+            _ => unreachable!(),
+        };
+        let out_len = net.forward_into(&inputs, count, &mut self.scratch);
+        let outputs = &self.scratch.output()[..out_len];
+        // Receiver transceivers snap to PAM4 and decode.
+        let m_out = net.output_dim();
+        outputs
+            .chunks_exact(m_out)
+            .map(|frame| {
+                let mut word = 0u32;
+                for &a in frame {
+                    word = (word << 2) | snap_pam4(a) as u32;
+                }
+                word
+            })
+            .collect()
+    }
+
+    /// Bytes each server transmits to move `count` words through the
+    /// switch once (the Fig. 6 accounting: OptINC sends the payload
+    /// exactly once, full duplex).
+    pub fn bytes_per_server(&self, count: usize) -> u64 {
+        (count as u64 * self.scenario.bits as u64).div_ceil(8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn random_shards(n: usize, count: usize, bits: u32, seed: u64) -> Vec<Vec<u32>> {
+        let mut rng = Pcg32::seeded(seed);
+        let bound = 1u64 << bits;
+        (0..n)
+            .map(|_| {
+                (0..count)
+                    .map(|_| (rng.next_u64() % bound) as u32)
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn exact_mode_matches_quantized_mean() {
+        let sc = Scenario::table1(1).unwrap();
+        let mut sw = OptIncSwitch::exact(sc);
+        let shards = random_shards(4, 100, 8, 1);
+        let refs: Vec<&[u32]> = shards.iter().map(|s| s.as_slice()).collect();
+        let avg = sw.average_words(&refs);
+        for i in 0..100 {
+            let words: Vec<u32> = shards.iter().map(|s| s[i]).collect();
+            assert_eq!(avg[i], quantized_mean(&words));
+        }
+    }
+
+    #[test]
+    fn identical_inputs_average_to_themselves() {
+        let sc = Scenario::table1(2).unwrap();
+        let mut sw = OptIncSwitch::exact(sc);
+        let shard: Vec<u32> = (0..50).map(|i| i * 5).collect();
+        let shards: Vec<&[u32]> = (0..8).map(|_| shard.as_slice()).collect();
+        assert_eq!(sw.average_words(&shards), shard);
+    }
+
+    #[test]
+    fn onn_mode_plumbing_shapes() {
+        // A random (untrained) net exercises the full encode→P→ONN→snap
+        // path; output words must be within the bit range.
+        let sc = Scenario::table1(1).unwrap();
+        let net = crate::onn::random_network(&[4, 64, 128, 256, 128, 64, 4], 9);
+        let mut sw = OptIncSwitch::new(sc, OnnMode::Native(net)).unwrap();
+        let shards = random_shards(4, 32, 8, 2);
+        let refs: Vec<&[u32]> = shards.iter().map(|s| s.as_slice()).collect();
+        let avg = sw.average_words(&refs);
+        assert_eq!(avg.len(), 32);
+        assert!(avg.iter().all(|&w| w < 256));
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let sc = Scenario::table1(1).unwrap();
+        let sw = OptIncSwitch::exact(sc);
+        assert_eq!(sw.bytes_per_server(1000), 1000); // 8-bit words
+        let sc16 = Scenario::table1(4).unwrap();
+        let sw16 = OptIncSwitch::exact(sc16);
+        assert_eq!(sw16.bytes_per_server(1000), 2000);
+    }
+
+    #[test]
+    #[should_panic(expected = "switch wired for 4 servers")]
+    fn wrong_server_count_panics() {
+        let sc = Scenario::table1(1).unwrap();
+        let mut sw = OptIncSwitch::exact(sc);
+        let shard = vec![1u32, 2];
+        let refs: Vec<&[u32]> = vec![&shard; 3];
+        sw.average_words(&refs);
+    }
+}

@@ -1,0 +1,209 @@
+//! PAM4 gradient encoding/decoding (paper eq. 2).
+//!
+//! A `B`-bit gradient word `G` is split into `M = ⌈B/2⌉` 2-bit segments,
+//! each mapped to one 4-level Pulse-Amplitude-Modulation symbol:
+//!
+//! ```text
+//! I^(i) = floor(G / 4^(M-i)) mod 4,   i = 1..=M     (most significant first)
+//! ```
+//!
+//! The receiving transceiver has limited resolution and snaps incoming
+//! analog amplitudes to the nearest PAM4 level (§III-A). The cascade path
+//! (§III-C) extends the last symbol's resolution to carry the level-1
+//! decimal remainder — see [`Pam4Codec::decode_extended`].
+
+/// Codec for `B`-bit words over `M = B/2` PAM4 symbols.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Pam4Codec {
+    bits: u32,
+    symbols: usize,
+}
+
+impl Pam4Codec {
+    /// `bits` must be even and ≤ 32 (the paper uses 8 and 16).
+    pub fn new(bits: u32) -> Self {
+        assert!(bits > 0 && bits % 2 == 0 && bits <= 32, "bits must be even, 2..=32");
+        Pam4Codec {
+            bits,
+            symbols: (bits / 2) as usize,
+        }
+    }
+
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Number of PAM4 symbols per word (`M` in the paper).
+    pub fn symbols(&self) -> usize {
+        self.symbols
+    }
+
+    /// Maximum representable word value (2^B − 1).
+    pub fn max_word(&self) -> u64 {
+        if self.bits == 32 {
+            u32::MAX as u64
+        } else {
+            (1u64 << self.bits) - 1
+        }
+    }
+
+    /// Encode one word to `M` PAM4 levels (0..=3), most significant first.
+    pub fn encode_word(&self, word: u32) -> Vec<u8> {
+        debug_assert!((word as u64) <= self.max_word());
+        let mut out = vec![0u8; self.symbols];
+        self.encode_word_into(word, &mut out);
+        out
+    }
+
+    /// Zero-allocation variant used on the hot path.
+    #[inline]
+    pub fn encode_word_into(&self, word: u32, out: &mut [u8]) {
+        debug_assert_eq!(out.len(), self.symbols);
+        for (i, slot) in out.iter_mut().enumerate() {
+            let shift = 2 * (self.symbols - 1 - i) as u32;
+            *slot = ((word >> shift) & 0b11) as u8;
+        }
+    }
+
+    /// Decode `M` PAM4 levels back into a word (inverse of eq. 2).
+    #[inline]
+    pub fn decode_word(&self, symbols: &[u8]) -> u32 {
+        debug_assert_eq!(symbols.len(), self.symbols);
+        let mut word = 0u32;
+        for &s in symbols {
+            debug_assert!(s < 4);
+            word = (word << 2) | s as u32;
+        }
+        word
+    }
+
+    /// Encode a gradient vector into a symbol plane: `words.len() * M`
+    /// levels as f32 amplitudes (row-major: word-major, symbol-minor).
+    pub fn encode_block(&self, words: &[u32]) -> Vec<f32> {
+        let mut out = vec![0f32; words.len() * self.symbols];
+        let mut sym = vec![0u8; self.symbols];
+        for (w, chunk) in words.iter().zip(out.chunks_exact_mut(self.symbols)) {
+            self.encode_word_into(*w, &mut sym);
+            for (dst, &s) in chunk.iter_mut().zip(sym.iter()) {
+                *dst = s as f32;
+            }
+        }
+        out
+    }
+
+    /// Decode a symbol plane (after transceiver snapping) back to words.
+    pub fn decode_block(&self, amplitudes: &[f32]) -> Vec<u32> {
+        assert_eq!(amplitudes.len() % self.symbols, 0);
+        amplitudes
+            .chunks_exact(self.symbols)
+            .map(|chunk| {
+                let mut word = 0u32;
+                for &a in chunk {
+                    word = (word << 2) | snap_pam4(a) as u32;
+                }
+                word
+            })
+            .collect()
+    }
+}
+
+/// Transceiver behaviour: snap an analog amplitude to the nearest PAM4
+/// level (0..=3), clamping out-of-range excursions.
+#[inline]
+pub fn snap_pam4(a: f32) -> u8 {
+    let v = a.round();
+    if v <= 0.0 {
+        0
+    } else if v >= 3.0 {
+        3
+    } else {
+        v as u8
+    }
+}
+
+/// Snap to the nearest level on a grid with `1/n` fractional resolution,
+/// clamped to `[0, max_level]` — models the higher-resolution transceivers
+/// used between cascade levels (§III-C, eq. 10: the level-1 remainder `d`
+/// rides on the last symbol).
+#[inline]
+pub fn snap_fractional(a: f32, n: u32, max_level: f32) -> f32 {
+    let scaled = (a * n as f32).round() / n as f32;
+    scaled.clamp(0.0, max_level)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, vec_u32};
+
+    #[test]
+    fn eq2_example_matches_paper_definition() {
+        // B=8, M=4: word 0b11_01_00_10 = 0xD2 = 210.
+        let c = Pam4Codec::new(8);
+        assert_eq!(c.encode_word(210), vec![3, 1, 0, 2]);
+        assert_eq!(c.decode_word(&[3, 1, 0, 2]), 210);
+    }
+
+    #[test]
+    fn sixteen_bit_symbol_count() {
+        let c = Pam4Codec::new(16);
+        assert_eq!(c.symbols(), 8);
+        assert_eq!(c.max_word(), 65535);
+        assert_eq!(c.encode_word(65535), vec![3; 8]);
+    }
+
+    #[test]
+    fn roundtrip_all_8bit_words() {
+        let c = Pam4Codec::new(8);
+        for w in 0..=255u32 {
+            assert_eq!(c.decode_word(&c.encode_word(w)), w);
+        }
+    }
+
+    #[test]
+    fn block_roundtrip_property() {
+        let c = Pam4Codec::new(8);
+        check(
+            |rng| vec_u32(rng, 64, 256),
+            |words| {
+                let plane = c.encode_block(words);
+                let back = c.decode_block(&plane);
+                if &back == words {
+                    Ok(())
+                } else {
+                    Err("block roundtrip mismatch".to_string())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn snapping_clamps_and_rounds() {
+        assert_eq!(snap_pam4(-0.4), 0);
+        assert_eq!(snap_pam4(0.49), 0);
+        assert_eq!(snap_pam4(0.51), 1);
+        assert_eq!(snap_pam4(2.5), 3); // round-half-even at .5 -> 2? `round` rounds half away from zero -> 3
+        assert_eq!(snap_pam4(3.7), 3);
+    }
+
+    #[test]
+    fn fractional_snap_grid() {
+        assert!((snap_fractional(1.26, 4, 3.0) - 1.25).abs() < 1e-6);
+        assert!((snap_fractional(3.9, 4, 3.0) - 3.0).abs() < 1e-6);
+        assert!((snap_fractional(-0.1, 4, 3.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn noisy_symbols_within_margin_decode_exactly() {
+        let c = Pam4Codec::new(8);
+        let mut rng = crate::util::rng::Pcg32::seeded(17);
+        for _ in 0..500 {
+            let w = rng.gen_range(256);
+            let mut plane: Vec<f32> = c.encode_word(w).iter().map(|&s| s as f32).collect();
+            for a in plane.iter_mut() {
+                *a += (rng.next_f32() - 0.5) * 0.9; // |noise| < 0.45 < 0.5 margin
+            }
+            assert_eq!(c.decode_block(&plane), vec![w]);
+        }
+    }
+}

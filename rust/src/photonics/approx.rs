@@ -1,0 +1,242 @@
+//! Matrix approximation `W_s ≈ Σ_a · U_a` (paper eqs. 4–6).
+//!
+//! Each square submatrix `W_s` of a partitioned weight matrix (Fig. 4) is
+//! replaced by one diagonal and one orthogonal factor:
+//!
+//! ```text
+//! U_a = U_s · V_sᵀ                (eq. 5 — the orthogonal Procrustes factor)
+//! d_i = argmin ‖W_sⁱ − d_i·U_aⁱ‖² = ⟨W_sⁱ, U_aⁱ⟩ / ‖U_aⁱ‖²  (eq. 6)
+//! ```
+//!
+//! `U_a` rows are unit-norm, so `d_i = ⟨W_sⁱ, U_aⁱ⟩`. The python training
+//! path (`python/compile/optinc/approx.py`) implements the same math; this
+//! rust version serves the photonics compile path (programming meshes from
+//! trained weights) and is cross-checked against python in tests.
+
+use crate::linalg::{svd, Mat};
+
+/// One approximated square block: `W_a = diag(d) · U_a`.
+#[derive(Clone, Debug)]
+pub struct ApproxBlock {
+    pub d: Vec<f64>,
+    pub u: Mat,
+}
+
+impl ApproxBlock {
+    /// Dense form `diag(d) · U`.
+    pub fn to_matrix(&self) -> Mat {
+        let mut m = self.u.clone();
+        for i in 0..m.rows {
+            let di = self.d[i];
+            for x in m.row_mut(i) {
+                *x *= di;
+            }
+        }
+        m
+    }
+
+    /// `y = diag(d) · (U · x)` — the optical signal path: mesh then
+    /// per-channel amplitude modulators.
+    pub fn apply(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = self.u.matvec(x);
+        for (yi, &di) in y.iter_mut().zip(&self.d) {
+            *yi *= di;
+        }
+        y
+    }
+}
+
+/// Approximate one square matrix per eqs. 4–6.
+pub fn approximate_square(w: &Mat) -> ApproxBlock {
+    assert_eq!(w.rows, w.cols, "approximation operates on square blocks");
+    let d = svd(w);
+    // U_a = U · Vᵀ.
+    let ua = d.u.matmul(&d.v.transpose());
+    // d_i = <W_i, Ua_i> (rows of Ua are unit norm since Ua is orthogonal).
+    let dvec: Vec<f64> = (0..w.rows)
+        .map(|i| {
+            w.row(i)
+                .iter()
+                .zip(ua.row(i))
+                .map(|(&a, &b)| a * b)
+                .sum::<f64>()
+        })
+        .collect();
+    ApproxBlock { d: dvec, u: ua }
+}
+
+/// Partition an `m×n` matrix into square `s×s` blocks (`s = min(m, n)`,
+/// horizontal or vertical per Fig. 4; a ragged tail block is zero-padded)
+/// and approximate each.
+#[derive(Clone, Debug)]
+pub struct ApproxMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// Blocks in partition order (top-to-bottom or left-to-right).
+    pub blocks: Vec<ApproxBlock>,
+    /// true = vertical partition (tall matrix sliced by rows).
+    pub vertical: bool,
+}
+
+impl ApproxMatrix {
+    pub fn from_dense(w: &Mat) -> ApproxMatrix {
+        let (m, n) = (w.rows, w.cols);
+        let s = m.min(n);
+        let vertical = m >= n;
+        let count = m.max(n).div_ceil(s);
+        let mut blocks = Vec::with_capacity(count);
+        for b in 0..count {
+            let mut sq = Mat::zeros(s, s);
+            if vertical {
+                let r0 = b * s;
+                let rows = s.min(m - r0);
+                sq.set_block(0, 0, &w.block(r0, 0, rows, s));
+            } else {
+                let c0 = b * s;
+                let cols = s.min(n - c0);
+                sq.set_block(0, 0, &w.block(0, c0, s, cols));
+            }
+            blocks.push(approximate_square(&sq));
+        }
+        ApproxMatrix {
+            rows: m,
+            cols: n,
+            blocks,
+            vertical,
+        }
+    }
+
+    /// Reassemble the dense approximation (for error measurement and for
+    /// loading into the ONN executor).
+    pub fn to_matrix(&self) -> Mat {
+        let s = self.rows.min(self.cols);
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for (b, blk) in self.blocks.iter().enumerate() {
+            let dense = blk.to_matrix();
+            if self.vertical {
+                let r0 = b * s;
+                let rows = s.min(self.rows - r0);
+                out.set_block(r0, 0, &dense.block(0, 0, rows, s));
+            } else {
+                let c0 = b * s;
+                let cols = s.min(self.cols - c0);
+                out.set_block(0, c0, &dense.block(0, 0, s, cols));
+            }
+        }
+        out
+    }
+
+    /// Relative Frobenius approximation error vs the original.
+    pub fn relative_error(&self, w: &Mat) -> f64 {
+        let diff = self
+            .to_matrix()
+            .data
+            .iter()
+            .zip(&w.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        diff / w.frobenius().max(1e-300)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{random_mat, random_orthogonal};
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn orthogonal_input_is_exact() {
+        // If W is already orthogonal, Σ_a = I and U_a = W: zero error.
+        let mut rng = Pcg32::seeded(21);
+        let q = random_orthogonal(&mut rng, 16);
+        let a = approximate_square(&q);
+        assert!(a.to_matrix().max_abs_diff(&q) < 1e-9);
+        assert!(a.d.iter().all(|&d| (d - 1.0).abs() < 1e-9));
+    }
+
+    #[test]
+    fn scaled_orthogonal_recovers_scales() {
+        // W = diag(d)·Q is representable exactly.
+        let mut rng = Pcg32::seeded(22);
+        let q = random_orthogonal(&mut rng, 8);
+        let mut w = q.clone();
+        let gains = [2.0, 0.5, -1.5, 3.0, 1.0, 0.25, -0.75, 1.25];
+        for i in 0..8 {
+            for x in w.row_mut(i) {
+                *x *= gains[i];
+            }
+        }
+        let a = approximate_square(&w);
+        assert!(
+            a.to_matrix().max_abs_diff(&w) < 1e-8,
+            "diag·orthogonal should be exact"
+        );
+    }
+
+    #[test]
+    fn d_is_least_squares_optimal() {
+        // Perturbing any d_i away from the computed optimum must not
+        // reduce the row error (eq. 6 optimality).
+        let mut rng = Pcg32::seeded(23);
+        let w = random_mat(&mut rng, 6, 6);
+        let a = approximate_square(&w);
+        for i in 0..6 {
+            let row_err = |d: f64| -> f64 {
+                w.row(i)
+                    .iter()
+                    .zip(a.u.row(i))
+                    .map(|(&wi, &ui)| (wi - d * ui) * (wi - d * ui))
+                    .sum()
+            };
+            let base = row_err(a.d[i]);
+            for delta in [-0.1, -0.01, 0.01, 0.1] {
+                assert!(row_err(a.d[i] + delta) >= base - 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn apply_matches_dense() {
+        let mut rng = Pcg32::seeded(24);
+        let w = random_mat(&mut rng, 8, 8);
+        let a = approximate_square(&w);
+        let x: Vec<f64> = (0..8).map(|_| rng.normal()).collect();
+        let via_apply = a.apply(&x);
+        let via_dense = a.to_matrix().matvec(&x);
+        for (p, q) in via_apply.iter().zip(&via_dense) {
+            assert!((p - q).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn partition_shapes_both_orientations() {
+        let mut rng = Pcg32::seeded(25);
+        // Tall 64×4 -> 16 vertical blocks of 4×4.
+        let tall = random_mat(&mut rng, 64, 4);
+        let at = ApproxMatrix::from_dense(&tall);
+        assert!(at.vertical);
+        assert_eq!(at.blocks.len(), 16);
+        assert_eq!(at.to_matrix().rows, 64);
+        // Wide 4×64 -> 16 horizontal blocks.
+        let wide = random_mat(&mut rng, 4, 64);
+        let aw = ApproxMatrix::from_dense(&wide);
+        assert!(!aw.vertical);
+        assert_eq!(aw.blocks.len(), 16);
+        assert_eq!(aw.to_matrix().cols, 64);
+    }
+
+    #[test]
+    fn approximation_error_is_moderate_for_random() {
+        // Random Gaussian matrices lose information under Σ·U but the
+        // relative error stays bounded (sanity: approximation is a real
+        // approximation, not garbage).
+        let mut rng = Pcg32::seeded(26);
+        let w = random_mat(&mut rng, 32, 32);
+        let a = ApproxMatrix::from_dense(&w);
+        let err = a.relative_error(&w);
+        assert!(err > 0.01, "random matrix should not be exact: {err}");
+        assert!(err < 1.0, "error should be bounded: {err}");
+    }
+}

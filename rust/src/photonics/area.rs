@@ -1,0 +1,155 @@
+//! Hardware cost model: MZI counts (paper §II-B / §III-B).
+//!
+//! A full `M×N` weight matrix mapped through SVD (eq. 1) costs
+//! `M(M+1)/2 + N(N−1)/2` MZIs: `U` (M×M unitary) = `M(M−1)/2`,
+//! `Vᵀ` (N×N unitary) = `N(N−1)/2`, `Σ` = a column of `M` MZIs.
+//!
+//! With matrix approximation (eqs. 4–6), `W` is partitioned into square
+//! `s×s` submatrices (`s = min(M, N)`, Fig. 4) and each becomes
+//! `Σ_a·U_a`, costing `s(s−1)/2 + s = s(s+1)/2` — "nearly 50%" less than
+//! the `s²` of a full square block.
+//!
+//! These formulas reproduce the paper's Table I area ratios to within
+//! 0.2 pp (39.1/40.8/40.3/49.2% vs 39.3/40.9/40.4/49.3%) and the Table II
+//! sweep — see `rust/benches/table1_area.rs`.
+
+use crate::config::Scenario;
+
+/// MZIs for an `n×n` unitary implemented as an interleaving array.
+pub fn unitary_mzis(n: usize) -> usize {
+    n * (n - 1) / 2
+}
+
+/// MZIs for a full `m×n` matrix via SVD: `U Σ Vᵀ`.
+pub fn full_matrix_mzis(m: usize, n: usize) -> usize {
+    m * (m + 1) / 2 + n * (n - 1) / 2
+}
+
+/// MZIs for one approximated square block: `Σ_a U_a` (one unitary + one
+/// diagonal column).
+pub fn approx_block_mzis(s: usize) -> usize {
+    s * (s + 1) / 2
+}
+
+/// MZIs for an `m×n` matrix partitioned into square blocks of side
+/// `s = min(m, n)` (horizontal or vertical partitioning, Fig. 4), each
+/// approximated per eq. 4. Partial blocks are padded to `s`.
+pub fn approx_matrix_mzis(m: usize, n: usize) -> usize {
+    let s = m.min(n);
+    let blocks = m.max(n).div_ceil(s);
+    blocks * approx_block_mzis(s)
+}
+
+/// MZI count for a weight matrix taking `n_in` inputs to `n_out` outputs.
+pub fn layer_mzis(n_out: usize, n_in: usize, approximated: bool) -> usize {
+    if approximated {
+        approx_matrix_mzis(n_out, n_in)
+    } else {
+        full_matrix_mzis(n_out, n_in)
+    }
+}
+
+/// Total MZIs for an ONN scenario (weight matrix `l` is
+/// `layers[l] × layers[l-1]`, 1-based `l`).
+pub fn scenario_mzis(sc: &Scenario, with_approximation: bool) -> usize {
+    (1..sc.layers.len())
+        .map(|l| {
+            let approx = with_approximation && sc.approx_layers.contains(&l);
+            layer_mzis(sc.layers[l], sc.layers[l - 1], approx)
+        })
+        .sum()
+}
+
+/// Area ratio of a scenario with its configured approximation vs none —
+/// Table I's "Area Ratio" column.
+pub fn area_ratio(sc: &Scenario) -> f64 {
+    scenario_mzis(sc, true) as f64 / scenario_mzis(sc, false) as f64
+}
+
+/// Per-layer cost breakdown for reporting.
+pub fn layer_breakdown(sc: &Scenario) -> Vec<(usize, usize, usize, bool, usize)> {
+    (1..sc.layers.len())
+        .map(|l| {
+            let approx = sc.approx_layers.contains(&l);
+            let cost = layer_mzis(sc.layers[l], sc.layers[l - 1], approx);
+            (l, sc.layers[l - 1], sc.layers[l], approx, cost)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scenario;
+
+    #[test]
+    fn unit_formulas() {
+        assert_eq!(unitary_mzis(4), 6); // Fig. 2: 4×4 = six MZIs
+        assert_eq!(full_matrix_mzis(4, 4), 16); // 10 + 6
+        assert_eq!(approx_block_mzis(4), 10);
+        // 64×4 partitions into 16 blocks of 4×4.
+        assert_eq!(approx_matrix_mzis(64, 4), 16 * 10);
+        // symmetric in orientation
+        assert_eq!(approx_matrix_mzis(4, 64), 160);
+    }
+
+    #[test]
+    fn approx_saves_nearly_half_per_block() {
+        for s in [64usize, 128, 256, 512] {
+            let ratio = approx_block_mzis(s) as f64 / full_matrix_mzis(s, s) as f64;
+            assert!(
+                (0.5..0.51).contains(&ratio),
+                "s={s} ratio={ratio}"
+            );
+        }
+    }
+
+    #[test]
+    fn table1_area_ratios_match_paper() {
+        // Paper Table I: 39.3%, 40.9%, 40.4%, 49.3%. Our analytic counts
+        // land within 0.2 percentage points.
+        let expected = [(1, 0.393), (2, 0.409), (3, 0.404), (4, 0.493)];
+        for (id, want) in expected {
+            let sc = Scenario::table1(id).unwrap();
+            let got = area_ratio(&sc);
+            assert!(
+                (got - want).abs() < 0.002,
+                "scenario {id}: got {got:.4}, paper {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn table2_area_ratios_match_paper() {
+        // Paper Table II: 49.3, 47.9, 47.4, 43.7, 42.2 (%).
+        let want = [0.493, 0.479, 0.474, 0.437, 0.422];
+        for ((_, sc), want) in Scenario::table2_variants().iter().zip(want) {
+            let got = area_ratio(sc);
+            assert!(
+                (got - want).abs() < 0.002,
+                "layers {:?}: got {got:.4}, paper {want}",
+                sc.approx_layers
+            );
+        }
+    }
+
+    #[test]
+    fn cascade_overhead_about_ten_percent() {
+        // §IV: the expanded ONN (two extra 64×64 approximated matrices)
+        // costs about 10.5% more than the scenario-1 ONN.
+        let base = Scenario::table1(1).unwrap();
+        let exp = Scenario::cascade_expanded();
+        let overhead = scenario_mzis(&exp, true) as f64 / scenario_mzis(&base, true) as f64 - 1.0;
+        assert!(
+            (0.08..0.13).contains(&overhead),
+            "overhead {overhead:.4} not ~10.5%"
+        );
+    }
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let sc = Scenario::table1(2).unwrap();
+        let total: usize = layer_breakdown(&sc).iter().map(|r| r.4).sum();
+        assert_eq!(total, scenario_mzis(&sc, true));
+    }
+}

@@ -1,0 +1,201 @@
+//! MZI mesh: programming an orthogonal matrix onto an interleaving array
+//! of adjacent-pair MZIs, and propagating signals through it.
+//!
+//! Any real orthogonal `M×M` matrix factors into `M(M−1)/2` adjacent-pair
+//! Givens rotations plus a final column of ±1 sign shifters — the same MZI
+//! count as the paper's interleaving array (§II-B, Fig. 2). The
+//! decomposition below eliminates sub-diagonal entries column by column
+//! with adjacent-plane rotations (Reck-style ordering); `propagate` then
+//! *is* the optical forward pass: light enters, each MZI applies its 2×2
+//! rotation, the sign column flips phases at the output.
+
+use super::mzi::Mzi;
+use crate::linalg::Mat;
+
+/// A fully-programmed mesh realizing one orthogonal matrix.
+#[derive(Clone, Debug)]
+pub struct MziMesh {
+    /// Size `M` (number of waveguides).
+    pub size: usize,
+    /// Rotations in application (light-propagation) order.
+    pub mzis: Vec<Mzi>,
+    /// Output sign shifters (±1 per waveguide).
+    pub signs: Vec<f64>,
+}
+
+impl MziMesh {
+    /// Decompose an orthogonal matrix `q` (‖QᵀQ−I‖ small) into a mesh.
+    ///
+    /// Returns an error if `q` is not square or not orthogonal to `tol`.
+    pub fn program(q: &Mat, tol: f64) -> anyhow::Result<MziMesh> {
+        anyhow::ensure!(q.rows == q.cols, "mesh needs a square matrix");
+        let err = q.orthogonality_error();
+        anyhow::ensure!(
+            err <= tol,
+            "matrix is not orthogonal (error {err:.3e} > tol {tol:.3e})"
+        );
+        let n = q.rows;
+        let mut w = q.clone();
+        // Eliminate from the RIGHT with adjacent-column rotations:
+        //   W · R₁ · R₂ · … · R_k = D   (D diagonal of ±1)
+        // where each Rᵢ = [[c, −s], [s, c]] acts on columns (j−1, j).
+        // Hence W = D · R_kᵀ · … · R₁ᵀ, and light propagating through the
+        // mesh computes W·x by applying R₁ᵀ, R₂ᵀ, …, R_kᵀ (the inverse
+        // rotations, i.e. −θ) in elimination order, then the ±1 sign
+        // shifters at the output facet. So we store Mzi{−θ} in elimination
+        // order and `propagate` applies them followed by `signs`.
+        let mut mzis = Vec::with_capacity(n * (n - 1) / 2);
+        // Zero out, for each row i from bottom, the entries right of the
+        // diagonal? We zero w[i][j] for j > i using adjacent-column
+        // rotations, producing lower-triangular orthogonal = diagonal.
+        for i in 0..n {
+            for j in ((i + 1)..n).rev() {
+                // Rotate columns (j-1, j) to zero w[i][j].
+                let a = w[(i, j - 1)];
+                let b = w[(i, j)];
+                if b.abs() < 1e-300 {
+                    mzis.push(Mzi::new(j - 1, 0.0));
+                    continue;
+                }
+                let theta = b.atan2(a); // rotation angle
+                let (s, c) = theta.sin_cos();
+                // Column rotation: col_{j-1} ← c·col_{j-1} + s·col_j;
+                //                  col_j    ← −s·col_{j-1} + c·col_j.
+                for r in 0..n {
+                    let (x, y) = (w[(r, j - 1)], w[(r, j)]);
+                    w[(r, j - 1)] = c * x + s * y;
+                    w[(r, j)] = -s * x + c * y;
+                }
+                debug_assert!(w[(i, j)].abs() < 1e-9);
+                // Store the inverse rotation (see derivation above).
+                mzis.push(Mzi::new(j - 1, -theta));
+            }
+        }
+        // W is now lower-triangular and orthogonal ⇒ diagonal of ±1.
+        let mut signs = Vec::with_capacity(n);
+        for i in 0..n {
+            signs.push(if w[(i, i)] >= 0.0 { 1.0 } else { -1.0 });
+        }
+        Ok(MziMesh {
+            size: n,
+            mzis,
+            signs,
+        })
+    }
+
+    /// Number of programmable MZIs (`M(M−1)/2`).
+    pub fn mzi_count(&self) -> usize {
+        self.mzis.len()
+    }
+
+    /// Propagate a signal vector through the mesh: `y = Q · x`.
+    pub fn propagate(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.size);
+        let mut y = x.to_vec();
+        for m in &self.mzis {
+            m.apply(&mut y);
+        }
+        for (v, &s) in y.iter_mut().zip(self.signs.iter()) {
+            *v *= s;
+        }
+        y
+    }
+
+    /// Dense matrix this mesh realizes (for verification).
+    pub fn to_matrix(&self) -> Mat {
+        let n = self.size;
+        let mut q = Mat::zeros(n, n);
+        for j in 0..n {
+            let mut e = vec![0.0; n];
+            e[j] = 1.0;
+            let col = self.propagate(&e);
+            for i in 0..n {
+                q[(i, j)] = col[i];
+            }
+        }
+        q
+    }
+
+    /// Apply multiplicative phase noise to every MZI angle (non-ideality
+    /// ablation; see `photonics::noise`).
+    pub fn perturb(&mut self, deltas: &[f64]) {
+        assert_eq!(deltas.len(), self.mzis.len());
+        for (m, &d) in self.mzis.iter_mut().zip(deltas) {
+            m.theta += d;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{random_orthogonal, Mat};
+    use crate::util::proptest::{forall, Config};
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn identity_programs_to_zero_rotations() {
+        let mesh = MziMesh::program(&Mat::identity(4), 1e-12).unwrap();
+        assert_eq!(mesh.mzi_count(), 6);
+        assert!(mesh.mzis.iter().all(|m| m.theta.abs() < 1e-12));
+        assert!(mesh.signs.iter().all(|&s| s == 1.0));
+    }
+
+    #[test]
+    fn mesh_count_matches_paper_formula() {
+        let mut rng = Pcg32::seeded(7);
+        for n in [2, 3, 4, 8, 16] {
+            let q = random_orthogonal(&mut rng, n);
+            let mesh = MziMesh::program(&q, 1e-8).unwrap();
+            assert_eq!(mesh.mzi_count(), n * (n - 1) / 2, "n={n}");
+        }
+    }
+
+    #[test]
+    fn programmed_mesh_reproduces_matrix() {
+        let mut rng = Pcg32::seeded(8);
+        for n in [2, 3, 5, 8, 16, 32] {
+            let q = random_orthogonal(&mut rng, n);
+            let mesh = MziMesh::program(&q, 1e-8).unwrap();
+            let err = mesh.to_matrix().max_abs_diff(&q);
+            assert!(err < 1e-9, "n={n}, err={err}");
+        }
+    }
+
+    #[test]
+    fn propagation_preserves_power() {
+        let mut rng = Pcg32::seeded(9);
+        let q = random_orthogonal(&mut rng, 8);
+        let mesh = MziMesh::program(&q, 1e-8).unwrap();
+        forall(
+            Config { cases: 64, seed: 5 },
+            |rng| (0..8).map(|_| rng.normal()).collect::<Vec<f64>>(),
+            |x| {
+                let y = mesh.propagate(x);
+                let px: f64 = x.iter().map(|v| v * v).sum();
+                let py: f64 = y.iter().map(|v| v * v).sum();
+                if (px - py).abs() < 1e-9 {
+                    Ok(())
+                } else {
+                    Err(format!("power {px} -> {py}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn reflection_gets_sign_shifter() {
+        // A permutation-with-reflection has det −1; mesh must use a −1 sign.
+        let q = Mat::from_rows(vec![vec![0.0, 1.0], vec![1.0, 0.0]]);
+        let mesh = MziMesh::program(&q, 1e-12).unwrap();
+        assert!(mesh.signs.iter().any(|&s| s == -1.0));
+        assert!(mesh.to_matrix().max_abs_diff(&q) < 1e-12);
+    }
+
+    #[test]
+    fn non_orthogonal_rejected() {
+        let mut m = Mat::identity(3);
+        m[(0, 1)] = 0.5;
+        assert!(MziMesh::program(&m, 1e-8).is_err());
+    }
+}

@@ -1,0 +1,19 @@
+//! Photonic substrate: the simulated optical hardware OptINC runs on.
+//!
+//! - [`mzi`] — the 2×2 Mach-Zehnder-Interferometer transfer model and
+//!   meshes of MZIs over adjacent waveguide pairs.
+//! - [`mesh`] — decomposition of orthogonal matrices into `M(M−1)/2`
+//!   adjacent-pair MZI rotations (+ output sign shifters), and signal
+//!   propagation through the programmed mesh (light through the array).
+//! - [`area`] — the paper's hardware-cost model: MZI counts for full
+//!   (SVD) and approximated (Σ·U) layer implementations; reproduces the
+//!   Table I / Table II area ratios.
+//! - [`approx`] — matrix approximation `W_s ≈ Σ_a·U_a` (paper eqs. 4–6).
+//! - [`noise`] — phase-shifter noise / crosstalk model (paper future work;
+//!   our non-ideality ablation).
+
+pub mod approx;
+pub mod area;
+pub mod mesh;
+pub mod mzi;
+pub mod noise;

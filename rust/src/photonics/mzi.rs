@@ -1,0 +1,147 @@
+//! Mach-Zehnder-Interferometer model.
+//!
+//! An MZI (two 50:50 directional couplers + two phase shifters, Fig. 2)
+//! implements a programmable 2×2 unitary on a pair of waveguides. For the
+//! real-amplitude signals OptINC uses, the reachable transfer matrices are
+//! the planar rotations with optional sign flips:
+//!
+//! ```text
+//! T(θ) = [ cos θ  −sin θ ]
+//!        [ sin θ   cos θ ]
+//! ```
+//!
+//! The internal phase `2θ` between the interferometer arms sets the
+//! coupling ratio; the external phase shifter contributes the sign
+//! structure. We track `θ` directly (the thermo-optic heater setting a
+//! deployment would program, cf. Harris et al. [19]).
+
+/// One programmed MZI: rotation by `theta` acting on waveguide pair
+/// `(port, port+1)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Mzi {
+    /// Upper waveguide index; acts on `(port, port + 1)`.
+    pub port: usize,
+    /// Rotation angle in radians.
+    pub theta: f64,
+}
+
+impl Mzi {
+    pub fn new(port: usize, theta: f64) -> Mzi {
+        Mzi { port, theta }
+    }
+
+    /// 2×2 transfer matrix `[[c, -s], [s, c]]`.
+    pub fn transfer(&self) -> [[f64; 2]; 2] {
+        let (s, c) = self.theta.sin_cos();
+        [[c, -s], [s, c]]
+    }
+
+    /// Apply in place to a signal vector (light propagating through).
+    #[inline]
+    pub fn apply(&self, x: &mut [f64]) {
+        let (s, c) = self.theta.sin_cos();
+        let (a, b) = (x[self.port], x[self.port + 1]);
+        x[self.port] = c * a - s * b;
+        x[self.port + 1] = s * a + c * b;
+    }
+
+    /// Apply the inverse rotation (θ → −θ).
+    #[inline]
+    pub fn apply_inverse(&self, x: &mut [f64]) {
+        let (s, c) = self.theta.sin_cos();
+        let (a, b) = (x[self.port], x[self.port + 1]);
+        x[self.port] = c * a + s * b;
+        x[self.port + 1] = -s * a + c * b;
+    }
+}
+
+/// Phase-shifter column realizing a diagonal of ±gains: the `Σ` stage of an
+/// SVD-mapped layer (amplitude modulation on each waveguide, one MZI per
+/// channel operated as a variable attenuator — paper §II-B).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DiagonalStage {
+    pub gains: Vec<f64>,
+}
+
+impl DiagonalStage {
+    pub fn new(gains: Vec<f64>) -> Self {
+        DiagonalStage { gains }
+    }
+
+    pub fn apply(&self, x: &mut [f64]) {
+        assert!(x.len() >= self.gains.len());
+        for (xi, &g) in x.iter_mut().zip(self.gains.iter()) {
+            *xi *= g;
+        }
+        // Channels beyond the diagonal length are dropped (dark ports).
+        for xi in x.iter_mut().skip(self.gains.len()) {
+            *xi = 0.0;
+        }
+    }
+
+    /// MZI count: one per diagonal element (a column of MZIs).
+    pub fn mzi_count(&self) -> usize {
+        self.gains.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_is_rotation() {
+        let m = Mzi::new(0, 0.7);
+        let t = m.transfer();
+        // det = 1, orthonormal columns.
+        let det = t[0][0] * t[1][1] - t[0][1] * t[1][0];
+        assert!((det - 1.0).abs() < 1e-12);
+        let dot = t[0][0] * t[0][1] + t[1][0] * t[1][1];
+        assert!(dot.abs() < 1e-12);
+    }
+
+    #[test]
+    fn apply_matches_transfer() {
+        let m = Mzi::new(1, 1.1);
+        let mut x = vec![0.0, 2.0, -3.0, 1.0];
+        let t = m.transfer();
+        let want1 = t[0][0] * 2.0 + t[0][1] * -3.0;
+        let want2 = t[1][0] * 2.0 + t[1][1] * -3.0;
+        m.apply(&mut x);
+        assert!((x[1] - want1).abs() < 1e-12);
+        assert!((x[2] - want2).abs() < 1e-12);
+        assert_eq!(x[0], 0.0);
+        assert_eq!(x[3], 1.0);
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let m = Mzi::new(0, -2.3);
+        let mut x = vec![1.5, -0.5];
+        let orig = x.clone();
+        m.apply(&mut x);
+        m.apply_inverse(&mut x);
+        assert!((x[0] - orig[0]).abs() < 1e-12);
+        assert!((x[1] - orig[1]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn energy_conservation() {
+        // Rotations preserve optical power (unitarity).
+        let m = Mzi::new(0, 0.3);
+        let mut x = vec![0.6, -0.8];
+        let p0: f64 = x.iter().map(|v| v * v).sum();
+        m.apply(&mut x);
+        let p1: f64 = x.iter().map(|v| v * v).sum();
+        assert!((p0 - p1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diagonal_stage_drops_dark_ports() {
+        let d = DiagonalStage::new(vec![0.5, 2.0]);
+        let mut x = vec![4.0, 3.0, 9.0];
+        d.apply(&mut x);
+        assert_eq!(x, vec![2.0, 6.0, 0.0]);
+        assert_eq!(d.mzi_count(), 2);
+    }
+}

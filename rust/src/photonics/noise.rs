@@ -1,0 +1,115 @@
+//! Physical-layer non-idealities (the paper's stated future work; here as
+//! an ablation substrate).
+//!
+//! Models two effects on a programmed mesh:
+//! - **phase noise**: Gaussian perturbation of each MZI angle (thermal
+//!   crosstalk / heater quantization, cf. Zhu et al. [21]);
+//! - **insertion loss**: per-MZI amplitude attenuation (dB), compounding
+//!   along each light path.
+
+use super::mesh::MziMesh;
+use crate::util::rng::Pcg32;
+
+/// Non-ideality parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct NoiseModel {
+    /// Std-dev of per-MZI phase error, radians.
+    pub phase_sigma: f64,
+    /// Per-MZI insertion loss in dB (0 = lossless).
+    pub insertion_loss_db: f64,
+    pub seed: u64,
+}
+
+impl Default for NoiseModel {
+    fn default() -> Self {
+        NoiseModel {
+            phase_sigma: 0.0,
+            insertion_loss_db: 0.0,
+            seed: 0x5EED,
+        }
+    }
+}
+
+impl NoiseModel {
+    pub fn new(phase_sigma: f64, insertion_loss_db: f64, seed: u64) -> Self {
+        NoiseModel {
+            phase_sigma,
+            insertion_loss_db,
+            seed,
+        }
+    }
+
+    /// Apply this noise model to a mesh, returning the perturbed copy and
+    /// the global amplitude factor from insertion loss.
+    ///
+    /// Every light path in an interleaved mesh of size `M` crosses ~`M`
+    /// MZIs, so loss is modeled as a uniform `(10^(−loss/20))^M` amplitude
+    /// factor (power loss per MZI is `10^(−loss/10)`).
+    pub fn apply(&self, mesh: &MziMesh) -> (MziMesh, f64) {
+        let mut noisy = mesh.clone();
+        if self.phase_sigma > 0.0 {
+            let mut rng = Pcg32::seeded(self.seed);
+            let deltas: Vec<f64> = (0..mesh.mzis.len())
+                .map(|_| rng.normal() * self.phase_sigma)
+                .collect();
+            noisy.perturb(&deltas);
+        }
+        let amp = 10f64.powf(-self.insertion_loss_db / 20.0 * mesh.size as f64);
+        (noisy, amp)
+    }
+
+    /// Matrix-level deviation introduced by this noise on a given mesh:
+    /// `‖Q̃ − Q‖_max` (ignoring the uniform loss factor, which transceiver
+    /// AGC compensates).
+    pub fn matrix_deviation(&self, mesh: &MziMesh) -> f64 {
+        let (noisy, _) = self.apply(mesh);
+        noisy.to_matrix().max_abs_diff(&mesh.to_matrix())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::random_orthogonal;
+    use crate::util::rng::Pcg32;
+
+    fn mesh(n: usize, seed: u64) -> MziMesh {
+        let mut rng = Pcg32::seeded(seed);
+        let q = random_orthogonal(&mut rng, n);
+        MziMesh::program(&q, 1e-8).unwrap()
+    }
+
+    #[test]
+    fn zero_noise_is_identity() {
+        let m = mesh(8, 1);
+        let nm = NoiseModel::new(0.0, 0.0, 7);
+        let (noisy, amp) = nm.apply(&m);
+        assert_eq!(amp, 1.0);
+        assert!(noisy.to_matrix().max_abs_diff(&m.to_matrix()) < 1e-12);
+    }
+
+    #[test]
+    fn deviation_grows_with_sigma() {
+        let m = mesh(8, 2);
+        let d1 = NoiseModel::new(0.001, 0.0, 7).matrix_deviation(&m);
+        let d2 = NoiseModel::new(0.05, 0.0, 7).matrix_deviation(&m);
+        assert!(d1 < d2, "{d1} !< {d2}");
+        assert!(d1 > 0.0);
+    }
+
+    #[test]
+    fn insertion_loss_amplitude() {
+        let m = mesh(4, 3);
+        let (_, amp) = NoiseModel::new(0.0, 0.1, 7).apply(&m);
+        // 0.1 dB per MZI over 4 stages: 10^(-0.1*4/20) ≈ 0.955.
+        assert!((amp - 10f64.powf(-0.02)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noisy_mesh_still_near_orthogonal() {
+        // Phase noise preserves unitarity (angles change, structure not).
+        let m = mesh(8, 4);
+        let (noisy, _) = NoiseModel::new(0.05, 0.0, 9).apply(&m);
+        assert!(noisy.to_matrix().orthogonality_error() < 1e-9);
+    }
+}

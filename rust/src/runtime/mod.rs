@@ -1,0 +1,203 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them on
+//! the request path (python is build-time only).
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Executables are compiled once and cached in an [`ArtifactRegistry`].
+//!
+//! Interchange is HLO *text* — see `python/compile/aot.py` and
+//! /opt/xla-example/README.md for why serialized protos are rejected by
+//! xla_extension 0.5.1.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+
+use crate::config::artifacts_dir;
+
+/// Shared PJRT CPU client + compiled-executable cache.
+pub struct Runtime {
+    client: PjRtClient,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, Arc<Executor>>>,
+}
+
+impl Runtime {
+    /// CPU client rooted at the default artifacts directory.
+    pub fn new() -> Result<Runtime> {
+        Self::with_dir(artifacts_dir())
+    }
+
+    pub fn with_dir(dir: PathBuf) -> Result<Runtime> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            dir,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    pub fn artifact_exists(&self, name: &str) -> bool {
+        self.artifact_path(name).exists()
+    }
+
+    /// Load + compile an artifact by stem name (cached).
+    pub fn load(&self, name: &str) -> Result<Arc<Executor>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.artifact_path(name);
+        let exe = Executor::from_file(&self.client, &path, name)?;
+        let exe = Arc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Compile HLO text directly (tests).
+    pub fn compile_text(&self, name: &str, hlo_text: &str) -> Result<Executor> {
+        let tmp = std::env::temp_dir().join(format!("optinc_rt_{name}.hlo.txt"));
+        std::fs::write(&tmp, hlo_text)?;
+        Executor::from_file(&self.client, &tmp, name)
+    }
+}
+
+/// One compiled executable.
+pub struct Executor {
+    pub name: String,
+    exe: PjRtLoadedExecutable,
+}
+
+impl Executor {
+    fn from_file(client: &PjRtClient, path: &Path, name: &str) -> Result<Executor> {
+        if !path.exists() {
+            bail!(
+                "artifact {} not found — run `make artifacts` first",
+                path.display()
+            );
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executor {
+            name: name.to_string(),
+            exe,
+        })
+    }
+
+    /// Execute with literal inputs; returns the flattened tuple outputs.
+    /// (aot.py lowers with return_tuple=True, so the single device output
+    /// is always a tuple literal.)
+    pub fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let result = self
+            .exe
+            .execute::<Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        Ok(out.to_tuple()?)
+    }
+}
+
+// -- literal helpers ---------------------------------------------------------
+
+/// f32 array literal with shape.
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "shape {:?} != len {}", dims, data.len());
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::F32,
+        dims,
+        bytes,
+    )?)
+}
+
+/// i32 array literal with shape.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "shape {:?} != len {}", dims, data.len());
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::S32,
+        dims,
+        bytes,
+    )?)
+}
+
+/// f32 scalar literal.
+pub fn lit_scalar_f32(v: f32) -> Literal {
+    Literal::from(v)
+}
+
+/// Extract a literal to Vec<f32>.
+pub fn to_f32(l: &Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // A tiny HLO module computing (x + y,) over f32[4] — hand-written so
+    // runtime tests don't depend on `make artifacts` having run.
+    const ADD_HLO: &str = r#"
+HloModule add4, entry_computation_layout={(f32[4]{0}, f32[4]{0})->(f32[4]{0})}
+
+ENTRY main {
+  x = f32[4]{0} parameter(0)
+  y = f32[4]{0} parameter(1)
+  s = f32[4]{0} add(x, y)
+  ROOT t = (f32[4]{0}) tuple(s)
+}
+"#;
+
+    #[test]
+    fn compile_and_run_handwritten_hlo() {
+        let rt = Runtime::new().unwrap();
+        assert!(rt.platform().to_lowercase().contains("cpu")
+            || rt.platform().to_lowercase().contains("host"));
+        let exe = rt.compile_text("add4", ADD_HLO).unwrap();
+        let x = lit_f32(&[1.0, 2.0, 3.0, 4.0], &[4]).unwrap();
+        let y = lit_f32(&[10.0, 20.0, 30.0, 40.0], &[4]).unwrap();
+        let out = exe.run(&[x, y]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(to_f32(&out[0]).unwrap(), vec![11.0, 22.0, 33.0, 44.0]);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_errors() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(lit_i32(&[1], &[1]).is_ok());
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clear_error() {
+        let rt = Runtime::new().unwrap();
+        match rt.load("definitely_not_an_artifact") {
+            Ok(_) => panic!("expected an error"),
+            Err(err) => assert!(err.to_string().contains("make artifacts")),
+        }
+    }
+}

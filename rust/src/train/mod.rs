@@ -1,0 +1,230 @@
+//! Data-parallel training driver: the end-to-end path that proves all
+//! three layers compose (Fig. 7a + the repo's e2e example).
+//!
+//! Per step, for each of N workers: execute the AOT `*_grad` artifact
+//! (PJRT) on the worker's local batch → local gradient; average the
+//! gradients through the configured collective (ring baseline or the
+//! OptINC switch with quantization + error injection); apply the averaged
+//! gradient with the AOT `*_adam` artifact. Python never runs.
+
+pub mod data;
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::collectives::AllReduce;
+use crate::runtime::{lit_f32, lit_i32, lit_scalar_f32, to_f32, Executor, Runtime};
+use crate::util::json::Json;
+use data::{SyntheticCorpus, SyntheticImages};
+
+/// Which Fig. 7a workload to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkloadKind {
+    Lm,
+    Cnn,
+}
+
+/// Loaded model state (flat parameter + Adam moments).
+pub struct DpTrainer {
+    pub kind: WorkloadKind,
+    rt: Arc<Runtime>,
+    grad_exe: Arc<Executor>,
+    adam_exe: Arc<Executor>,
+    pub params: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: f32,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+/// One step's outcome.
+#[derive(Clone, Debug)]
+pub struct StepLog {
+    pub step: usize,
+    pub mean_loss: f64,
+    pub aux: f64, // CNN: mean accuracy; LM: unused (0)
+}
+
+impl DpTrainer {
+    pub fn new(rt: Arc<Runtime>, kind: WorkloadKind) -> Result<DpTrainer> {
+        let manifest_path = crate::config::artifacts_dir().join("manifest.json");
+        let manifest = Json::parse(
+            &std::fs::read_to_string(&manifest_path)
+                .with_context(|| format!("reading {}", manifest_path.display()))?,
+        )
+        .context("parsing manifest.json")?;
+        let (stem, params_file) = match kind {
+            WorkloadKind::Lm => ("lm", "lm_params.otsr"),
+            WorkloadKind::Cnn => ("cnn", "cnn_params.otsr"),
+        };
+        // Find the grad artifact (batch is encoded in the name).
+        let grad_name = manifest
+            .as_obj()
+            .context("manifest not an object")?
+            .keys()
+            .find(|k| k.starts_with(&format!("{stem}_grad_b")))
+            .cloned()
+            .with_context(|| format!("no {stem}_grad artifact in manifest"))?;
+        let meta = manifest.get(&grad_name);
+        let batch = meta.get("batch").as_usize().context("batch missing")?;
+        let seq = meta.get("seq").as_usize().unwrap_or(0);
+
+        let grad_exe = rt.load(&grad_name)?;
+        let adam_exe = rt.load(&format!("{stem}_adam"))?;
+        let tf = crate::util::tensorfile::TensorFile::load(
+            &crate::config::artifacts_dir().join(params_file),
+        )?;
+        let params = tf.get("params")?.as_f32()?.to_vec();
+        let n = params.len();
+        Ok(DpTrainer {
+            kind,
+            rt,
+            grad_exe,
+            adam_exe,
+            params,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            t: 0.0,
+            batch,
+            seq,
+        })
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.params.len()
+    }
+
+    /// One worker's local gradient. Returns (loss, aux, grad).
+    fn local_grad(
+        &self,
+        corpus: &mut Option<SyntheticCorpus>,
+        images: &mut Option<SyntheticImages>,
+    ) -> Result<(f64, f64, Vec<f32>)> {
+        let p = lit_f32(&self.params, &[self.params.len()])?;
+        match self.kind {
+            WorkloadKind::Lm => {
+                let toks = corpus.as_mut().unwrap().batch(self.batch, self.seq);
+                let t = lit_i32(&toks, &[self.batch, self.seq + 1])?;
+                let out = self.grad_exe.run(&[p, t])?;
+                let loss = to_f32(&out[0])?[0] as f64;
+                let grad = to_f32(&out[1])?;
+                Ok((loss, 0.0, grad))
+            }
+            WorkloadKind::Cnn => {
+                let gen = images.as_mut().unwrap();
+                let (imgs, labels) = gen.batch(self.batch);
+                let i = lit_f32(&imgs, &[self.batch, gen.size, gen.size, 3])?;
+                let l = lit_i32(&labels, &[self.batch])?;
+                let out = self.grad_exe.run(&[p, i, l])?;
+                let loss = to_f32(&out[0])?[0] as f64;
+                let acc = to_f32(&out[1])?[0] as f64;
+                let grad = to_f32(&out[2])?;
+                Ok((loss, acc, grad))
+            }
+        }
+    }
+
+    /// Apply the averaged gradient via the AOT Adam step.
+    fn apply(&mut self, avg: &[f32]) -> Result<()> {
+        let out = self.adam_exe.run(&[
+            lit_f32(&self.params, &[self.params.len()])?,
+            lit_f32(&self.m, &[self.m.len()])?,
+            lit_f32(&self.v, &[self.v.len()])?,
+            lit_scalar_f32(self.t),
+            lit_f32(avg, &[avg.len()])?,
+        ])?;
+        self.params = to_f32(&out[0])?;
+        self.m = to_f32(&out[1])?;
+        self.v = to_f32(&out[2])?;
+        self.t += 1.0;
+        Ok(())
+    }
+
+    /// Run synchronous DP training for `steps` with `workers` shards.
+    /// Per-worker data streams are seeded independently; the collective is
+    /// pluggable (ring vs OptINC — the Fig. 7a comparison).
+    pub fn run(
+        &mut self,
+        workers: usize,
+        steps: usize,
+        collective: &mut dyn AllReduce,
+        seed: u64,
+        log_every: usize,
+    ) -> Result<Vec<StepLog>> {
+        // Per-worker data sources (same underlying task, different
+        // streams — the data-parallel setting).
+        let mut corpora: Vec<Option<SyntheticCorpus>> = Vec::new();
+        let mut image_gens: Vec<Option<SyntheticImages>> = Vec::new();
+        for w in 0..workers {
+            match self.kind {
+                WorkloadKind::Lm => {
+                    corpora.push(Some(SyntheticCorpus::new(512, 0.9, seed + w as u64)));
+                    image_gens.push(None);
+                }
+                WorkloadKind::Cnn => {
+                    corpora.push(None);
+                    image_gens.push(Some(SyntheticImages::new(10, 32, 0.35, seed + w as u64)));
+                }
+            }
+        }
+
+        let mut logs = Vec::with_capacity(steps);
+        let mut shards: Vec<Vec<f32>> = vec![Vec::new(); workers];
+        for step in 0..steps {
+            let mut loss_sum = 0.0;
+            let mut aux_sum = 0.0;
+            for w in 0..workers {
+                let (loss, aux, grad) =
+                    self.local_grad(&mut corpora[w], &mut image_gens[w])?;
+                loss_sum += loss;
+                aux_sum += aux;
+                shards[w] = grad;
+            }
+            collective.all_reduce(&mut shards);
+            self.apply(&shards[0].clone())?;
+            let log = StepLog {
+                step,
+                mean_loss: loss_sum / workers as f64,
+                aux: aux_sum / workers as f64,
+            };
+            if log_every > 0 && step % log_every == 0 {
+                crate::log_info!(
+                    "step {:4} loss {:.4} aux {:.4} [{}]",
+                    step,
+                    log.mean_loss,
+                    log.aux,
+                    collective.name()
+                );
+            }
+            logs.push(log);
+        }
+        let _ = &self.rt;
+        Ok(logs)
+    }
+}
+
+/// Mean loss over the last `k` steps (curve summarization).
+pub fn tail_loss(logs: &[StepLog], k: usize) -> f64 {
+    let tail = &logs[logs.len().saturating_sub(k)..];
+    tail.iter().map(|l| l.mean_loss).sum::<f64>() / tail.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tail_loss_math() {
+        let logs: Vec<StepLog> = (0..10)
+            .map(|i| StepLog {
+                step: i,
+                mean_loss: i as f64,
+                aux: 0.0,
+            })
+            .collect();
+        assert!((tail_loss(&logs, 2) - 8.5).abs() < 1e-12);
+        assert!((tail_loss(&logs, 100) - 4.5).abs() < 1e-12);
+    }
+}

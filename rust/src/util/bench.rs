@@ -1,0 +1,241 @@
+//! Bench harness, criterion-lite.
+//!
+//! `cargo bench` targets in `rust/benches/` use `harness = false` and drive
+//! this module directly. Each benchmark runs a warmup phase, then timed
+//! iterations until both a minimum sample count and a minimum wall-time are
+//! reached; results are printed as a table and optionally appended as JSON
+//! (for EXPERIMENTS.md provenance).
+
+use std::time::{Duration, Instant};
+
+use super::json::Json;
+use super::stats::{percentile, Summary};
+
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub min_time: Duration,
+    pub min_samples: usize,
+    pub max_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(200),
+            min_time: Duration::from_millis(700),
+            min_samples: 10,
+            max_samples: 2000,
+        }
+    }
+}
+
+/// One measured benchmark result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>, // seconds per iteration
+    /// Optional units processed per iteration (for throughput).
+    pub units_per_iter: Option<f64>,
+    pub unit_name: &'static str,
+}
+
+impl BenchResult {
+    pub fn mean_s(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn p50_s(&self) -> f64 {
+        percentile(&self.samples, 50.0)
+    }
+
+    pub fn throughput(&self) -> Option<f64> {
+        self.units_per_iter.map(|u| u / self.mean_s())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("name", Json::Str(self.name.clone())),
+            ("mean_s", Json::Num(self.mean_s())),
+            ("p50_s", Json::Num(self.p50_s())),
+            ("min_s", Json::Num(percentile(&self.samples, 0.0))),
+            ("max_s", Json::Num(percentile(&self.samples, 100.0))),
+            ("samples", Json::Num(self.samples.len() as f64)),
+        ];
+        if let Some(t) = self.throughput() {
+            fields.push(("throughput", Json::Num(t)));
+            fields.push(("unit", Json::Str(self.unit_name.to_string())));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// A suite of benchmarks sharing a config; prints a report at the end.
+pub struct BenchSuite {
+    pub cfg: BenchConfig,
+    pub results: Vec<BenchResult>,
+    title: String,
+}
+
+impl BenchSuite {
+    pub fn new(title: &str) -> Self {
+        // Honor quick mode for CI-ish runs: OPTINC_BENCH_QUICK=1.
+        let quick = std::env::var("OPTINC_BENCH_QUICK").is_ok_and(|v| v == "1");
+        let cfg = if quick {
+            BenchConfig {
+                warmup: Duration::from_millis(20),
+                min_time: Duration::from_millis(60),
+                min_samples: 3,
+                max_samples: 50,
+            }
+        } else {
+            BenchConfig::default()
+        };
+        println!("\n== bench suite: {title} ==");
+        BenchSuite {
+            cfg,
+            results: Vec::new(),
+            title: title.to_string(),
+        }
+    }
+
+    /// Time `f` (one call = one iteration).
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> &BenchResult {
+        self.bench_units(name, None, "", &mut f)
+    }
+
+    /// Time `f`, reporting `units` of work per iteration as throughput.
+    pub fn bench_throughput(
+        &mut self,
+        name: &str,
+        units: f64,
+        unit_name: &'static str,
+        mut f: impl FnMut(),
+    ) -> &BenchResult {
+        self.bench_units(name, Some(units), unit_name, &mut f)
+    }
+
+    fn bench_units(
+        &mut self,
+        name: &str,
+        units: Option<f64>,
+        unit_name: &'static str,
+        f: &mut dyn FnMut(),
+    ) -> &BenchResult {
+        // Warmup.
+        let wstart = Instant::now();
+        while wstart.elapsed() < self.cfg.warmup {
+            f();
+        }
+        // Timed samples.
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while (samples.len() < self.cfg.min_samples || start.elapsed() < self.cfg.min_time)
+            && samples.len() < self.cfg.max_samples
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            samples,
+            units_per_iter: units,
+            unit_name,
+        };
+        print_result(&res);
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Record an analytically computed (not timed) scalar as a result row —
+    /// used by model-based benches (Fig 6 / Fig 7b) so everything the paper
+    /// reports flows through one reporting path.
+    pub fn record_scalar(&mut self, name: &str, value: f64, unit: &'static str) {
+        println!("  {name:<44} {value:>12.6} {unit}");
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            samples: vec![value],
+            units_per_iter: None,
+            unit_name: unit,
+        });
+    }
+
+    /// Write results JSON next to target/ for provenance.
+    pub fn finish(self) {
+        let arr = Json::Arr(self.results.iter().map(|r| r.to_json()).collect());
+        let out = Json::obj(vec![
+            ("suite", Json::Str(self.title.clone())),
+            ("results", arr),
+        ]);
+        let dir = std::path::Path::new("target/bench-results");
+        let _ = std::fs::create_dir_all(dir);
+        let path = dir.join(format!("{}.json", self.title.replace(['/', ' '], "_")));
+        if std::fs::write(&path, out.to_pretty()).is_ok() {
+            println!("-- wrote {}", path.display());
+        }
+    }
+}
+
+fn print_result(r: &BenchResult) {
+    let mut s = Summary::new();
+    for &x in &r.samples {
+        s.add(x);
+    }
+    let line = format!(
+        "  {:<44} {:>10} / iter  (p50 {:>10}, n={})",
+        r.name,
+        fmt_duration(s.mean()),
+        fmt_duration(r.p50_s()),
+        r.samples.len()
+    );
+    match r.throughput() {
+        Some(t) => println!("{line}  {:.3e} {}/s", t, r.unit_name),
+        None => println!("{line}"),
+    }
+}
+
+pub fn fmt_duration(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_positive_time() {
+        std::env::set_var("OPTINC_BENCH_QUICK", "1");
+        let mut suite = BenchSuite::new("selftest");
+        let mut acc = 0u64;
+        let r = suite.bench("sum_loop", || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert!(r.mean_s() > 0.0);
+        assert!(r.samples.len() >= 3);
+    }
+
+    #[test]
+    fn fmt_duration_scales() {
+        assert!(fmt_duration(2.0).ends_with(" s"));
+        assert!(fmt_duration(2e-3).ends_with(" ms"));
+        assert!(fmt_duration(2e-6).ends_with(" us"));
+        assert!(fmt_duration(2e-9).ends_with(" ns"));
+    }
+}

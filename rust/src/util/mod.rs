@@ -1,0 +1,14 @@
+//! Self-built substrates.
+//!
+//! The build environment vendors only the `xla` crate's dependency closure,
+//! so the usual ecosystem crates (`rand`, `serde`, `clap`, `criterion`,
+//! `proptest`) are unavailable. This module implements the small slices of
+//! each that the reproduction needs, from scratch, with tests.
+
+pub mod bench;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod tensorfile;

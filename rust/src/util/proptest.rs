@@ -1,0 +1,114 @@
+//! Property-based testing, minimal edition.
+//!
+//! `proptest`/`quickcheck` are unavailable offline, so this provides the
+//! subset we use: run a property over N generated cases from a seeded RNG,
+//! and on failure report the case index + seed so the exact case is
+//! replayable (`Pcg32::seeded(seed)` advanced to the failing case).
+
+use super::rng::Pcg32;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 256,
+            seed: 0x0697_1C01_D15C_0B4A,
+        }
+    }
+}
+
+/// Run `prop` over `cfg.cases` inputs drawn by `gen`. Panics with a
+/// replayable diagnostic on the first failure.
+pub fn forall<T: std::fmt::Debug>(
+    cfg: Config,
+    mut gen: impl FnMut(&mut Pcg32) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        let mut rng = Pcg32::seeded(cfg.seed.wrapping_add(case as u64));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {:#x}): {msg}\ninput: {input:?}",
+                cfg.seed.wrapping_add(case as u64)
+            );
+        }
+    }
+}
+
+/// Shorthand with the default config.
+pub fn check<T: std::fmt::Debug>(
+    gen: impl FnMut(&mut Pcg32) -> T,
+    prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    forall(Config::default(), gen, prop)
+}
+
+// -- common generators -------------------------------------------------------
+
+/// Vector of f32 in [lo, hi) of random length in [1, max_len].
+pub fn vec_f32(rng: &mut Pcg32, max_len: usize, lo: f32, hi: f32) -> Vec<f32> {
+    let len = 1 + rng.gen_range(max_len as u32) as usize;
+    (0..len)
+        .map(|_| lo + (hi - lo) * rng.next_f32())
+        .collect()
+}
+
+/// Vector of u32 words below `bound`.
+pub fn vec_u32(rng: &mut Pcg32, max_len: usize, bound: u32) -> Vec<u32> {
+    let len = 1 + rng.gen_range(max_len as u32) as usize;
+    (0..len).map(|_| rng.gen_range(bound)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut ran = 0;
+        forall(
+            Config { cases: 50, seed: 1 },
+            |rng| rng.gen_range(100),
+            |_| {
+                ran += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(ran, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_case() {
+        forall(
+            Config { cases: 50, seed: 1 },
+            |rng| rng.gen_range(100),
+            |&v| {
+                if v < 90 {
+                    Ok(())
+                } else {
+                    Err(format!("{v} too big"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut rng = Pcg32::seeded(2);
+        for _ in 0..100 {
+            let v = vec_f32(&mut rng, 16, -1.0, 1.0);
+            assert!(!v.is_empty() && v.len() <= 16);
+            assert!(v.iter().all(|x| (-1.0..1.0).contains(x)));
+            let u = vec_u32(&mut rng, 8, 4);
+            assert!(u.iter().all(|&x| x < 4));
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! Summary statistics and histograms for metrics/bench reporting.
+
+/// Running mean/variance (Welford) with min/max.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Percentile over a copy of the data (nearest-rank on sorted values with
+/// linear interpolation).
+pub fn percentile(data: &[f64], p: f64) -> f64 {
+    assert!(!data.is_empty());
+    assert!((0.0..=100.0).contains(&p));
+    let mut v: Vec<f64> = data.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+pub fn mean(data: &[f64]) -> f64 {
+    if data.is_empty() {
+        return 0.0;
+    }
+    data.iter().sum::<f64>() / data.len() as f64
+}
+
+/// Discrete histogram over integer-valued observations (e.g. injected
+/// gradient error values in Table II).
+#[derive(Clone, Debug, Default)]
+pub struct IntHistogram {
+    counts: std::collections::BTreeMap<i64, u64>,
+    total: u64,
+}
+
+impl IntHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, v: i64) {
+        *self.counts.entry(v).or_insert(0) += 1;
+        self.total += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn count(&self, v: i64) -> u64 {
+        self.counts.get(&v).copied().unwrap_or(0)
+    }
+
+    /// (value, relative frequency) pairs, descending frequency.
+    pub fn relative(&self) -> Vec<(i64, f64)> {
+        let mut v: Vec<(i64, f64)> = self
+            .counts
+            .iter()
+            .map(|(&k, &c)| (k, c as f64 / self.total.max(1) as f64))
+            .collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&i64, &u64)> {
+        self.counts.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_matches_closed_form() {
+        let mut s = Summary::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.add(x);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.std() - (32.0f64 / 7.0).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+        assert_eq!(s.count(), 8);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let data = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&data, 0.0), 1.0);
+        assert_eq!(percentile(&data, 100.0), 4.0);
+        assert!((percentile(&data, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_relative_ratios() {
+        let mut h = IntHistogram::new();
+        for _ in 0..90 {
+            h.add(1);
+        }
+        for _ in 0..10 {
+            h.add(-64);
+        }
+        let rel = h.relative();
+        assert_eq!(rel[0], (1, 0.9));
+        assert_eq!(rel[1], (-64, 0.1));
+        assert_eq!(h.total(), 100);
+    }
+}

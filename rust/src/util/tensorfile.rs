@@ -1,0 +1,306 @@
+//! `.otsr` ("optical tensor") binary format — the weight/array interchange
+//! between the python build path and the rust runtime.
+//!
+//! Layout (all little-endian):
+//! ```text
+//! magic   : 8 bytes  = b"OTSR\x01\x00\x00\x00"
+//! count   : u32      number of tensors
+//! per tensor:
+//!   name_len : u32, name bytes (utf-8)
+//!   dtype    : u32   (0 = f32, 1 = f64, 2 = i32, 3 = i64)
+//!   ndim     : u32, dims: u64 × ndim
+//!   data     : element bytes, row-major
+//! ```
+//! The python writer lives in `python/compile/optinc/tensorfile.py`; the two
+//! are covered by a cross-language round-trip test in `rust/tests/`.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub const MAGIC: [u8; 8] = *b"OTSR\x01\x00\x00\x00";
+
+/// Element type tags.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32 = 0,
+    F64 = 1,
+    I32 = 2,
+    I64 = 3,
+}
+
+impl DType {
+    fn from_u32(v: u32) -> Result<Self> {
+        Ok(match v {
+            0 => DType::F32,
+            1 => DType::F64,
+            2 => DType::I32,
+            3 => DType::I64,
+            _ => bail!("unknown dtype tag {v}"),
+        })
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::F64 | DType::I64 => 8,
+        }
+    }
+}
+
+/// A named n-dimensional array. Data is stored as `f32` or `i64` vectors
+/// internally depending on tag; f64/i32 are widened/narrowed on read.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: TensorData,
+}
+
+#[derive(Clone, Debug)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I64(Vec<i64>),
+}
+
+impl Tensor {
+    pub fn f32(name: &str, dims: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor {
+            name: name.to_string(),
+            dims,
+            data: TensorData::F32(data),
+        }
+    }
+
+    pub fn i64(name: &str, dims: Vec<usize>, data: Vec<i64>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor {
+            name: name.to_string(),
+            dims,
+            data: TensorData::I64(data),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor '{}' is not f32", self.name),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<&[i64]> {
+        match &self.data {
+            TensorData::I64(v) => Ok(v),
+            _ => bail!("tensor '{}' is not i64", self.name),
+        }
+    }
+
+    /// 2-D accessor: (rows, cols, row-major data).
+    pub fn as_matrix(&self) -> Result<(usize, usize, &[f32])> {
+        if self.dims.len() != 2 {
+            bail!("tensor '{}' is not 2-D (dims {:?})", self.name, self.dims);
+        }
+        Ok((self.dims[0], self.dims[1], self.as_f32()?))
+    }
+}
+
+/// An ordered collection of named tensors.
+#[derive(Clone, Debug, Default)]
+pub struct TensorFile {
+    pub tensors: Vec<Tensor>,
+}
+
+impl TensorFile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, t: Tensor) {
+        self.tensors.push(t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .iter()
+            .find(|t| t.name == name)
+            .with_context(|| format!("tensor '{name}' not found"))
+    }
+
+    pub fn by_name(&self) -> BTreeMap<&str, &Tensor> {
+        self.tensors.iter().map(|t| (t.name.as_str(), t)).collect()
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(&MAGIC);
+        buf.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for t in &self.tensors {
+            let name = t.name.as_bytes();
+            buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            buf.extend_from_slice(name);
+            let tag = match t.data {
+                TensorData::F32(_) => DType::F32,
+                TensorData::I64(_) => DType::I64,
+            };
+            buf.extend_from_slice(&(tag as u32).to_le_bytes());
+            buf.extend_from_slice(&(t.dims.len() as u32).to_le_bytes());
+            for &d in &t.dims {
+                buf.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+            match &t.data {
+                TensorData::F32(v) => {
+                    for x in v {
+                        buf.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                TensorData::I64(v) => {
+                    for x in v {
+                        buf.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+            }
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        f.write_all(&buf)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?
+            .read_to_end(&mut bytes)?;
+        Self::from_bytes(&bytes).with_context(|| format!("parse {}", path.display()))
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let mut r = Reader { bytes, pos: 0 };
+        let magic = r.take(8)?;
+        if magic != MAGIC {
+            bail!("bad magic: {magic:?}");
+        }
+        let count = r.u32()? as usize;
+        let mut tensors = Vec::with_capacity(count);
+        for _ in 0..count {
+            let name_len = r.u32()? as usize;
+            let name = String::from_utf8(r.take(name_len)?.to_vec())
+                .context("tensor name not utf-8")?;
+            let dtype = DType::from_u32(r.u32()?)?;
+            let ndim = r.u32()? as usize;
+            if ndim > 8 {
+                bail!("implausible ndim {ndim}");
+            }
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(r.u64()? as usize);
+            }
+            let n: usize = dims.iter().product();
+            let raw = r.take(n * dtype.size())?;
+            let data = match dtype {
+                DType::F32 => TensorData::F32(
+                    raw.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                ),
+                DType::F64 => TensorData::F32(
+                    raw.chunks_exact(8)
+                        .map(|c| f64::from_le_bytes(c.try_into().unwrap()) as f32)
+                        .collect(),
+                ),
+                DType::I32 => TensorData::I64(
+                    raw.chunks_exact(4)
+                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()) as i64)
+                        .collect(),
+                ),
+                DType::I64 => TensorData::I64(
+                    raw.chunks_exact(8)
+                        .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                ),
+            };
+            tensors.push(Tensor { name, dims, data });
+        }
+        Ok(TensorFile { tensors })
+    }
+}
+
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.bytes.len() {
+            bail!("truncated tensor file at byte {}", self.pos);
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_in_memory() {
+        let mut tf = TensorFile::new();
+        tf.push(Tensor::f32("w", vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]));
+        tf.push(Tensor::i64("idx", vec![4], vec![1, -2, 3, 9_000_000_000]));
+        let dir = std::env::temp_dir().join("optinc_test_otsr");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.otsr");
+        tf.save(&path).unwrap();
+        let re = TensorFile::load(&path).unwrap();
+        assert_eq!(re.tensors.len(), 2);
+        let (r, c, data) = re.get("w").unwrap().as_matrix().unwrap();
+        assert_eq!((r, c), (2, 3));
+        assert_eq!(data, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(re.get("idx").unwrap().as_i64().unwrap()[3], 9_000_000_000);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(TensorFile::from_bytes(b"NOTATENSOR").is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let mut tf = TensorFile::new();
+        tf.push(Tensor::f32("w", vec![8], (0..8).map(|i| i as f32).collect()));
+        let dir = std::env::temp_dir().join("optinc_test_otsr");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trunc.otsr");
+        tf.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(TensorFile::from_bytes(&bytes[..bytes.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn missing_tensor_errors() {
+        let tf = TensorFile::new();
+        assert!(tf.get("nope").is_err());
+    }
+}

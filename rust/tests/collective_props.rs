@@ -1,0 +1,194 @@
+//! Property-based tests on collective invariants (the proptest-lite
+//! harness in util::proptest): agreement, permutation-invariance,
+//! idempotence on identical shards, byte-accounting closed forms.
+
+use optinc::collectives::hierarchical::HierarchicalOptInc;
+use optinc::collectives::optinc::OptIncAllReduce;
+use optinc::collectives::ring::RingAllReduce;
+use optinc::collectives::two_tree::TwoTreeAllReduce;
+use optinc::collectives::{exact_mean, AllReduce};
+use optinc::config::Scenario;
+use optinc::optinc::cascade::CascadeMode;
+use optinc::quant::{quantized_mean, GlobalQuantizer};
+use optinc::util::proptest::{forall, Config};
+use optinc::util::rng::Pcg32;
+
+fn gen_shards(rng: &mut Pcg32, n: usize, max_len: usize) -> Vec<Vec<f32>> {
+    let len = 1 + rng.gen_range(max_len as u32) as usize;
+    (0..n)
+        .map(|_| {
+            (0..len)
+                .map(|_| (rng.normal() * rng.uniform(0.01, 2.0)) as f32)
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn prop_all_workers_agree_after_any_collective() {
+    forall(
+        Config { cases: 60, seed: 1 },
+        |rng| gen_shards(rng, 4, 512),
+        |shards| {
+            let collectives: Vec<Box<dyn AllReduce>> = vec![
+                Box::new(RingAllReduce),
+                Box::new(TwoTreeAllReduce),
+                Box::new(OptIncAllReduce::exact(Scenario::table1(1).unwrap(), 1)),
+            ];
+            for mut c in collectives {
+                let mut work = shards.clone();
+                c.all_reduce(&mut work);
+                for s in &work[1..] {
+                    if s != &work[0] {
+                        return Err(format!("{} workers disagree", c.name()));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_optinc_average_is_permutation_invariant() {
+    // The switch averages; server order must not matter.
+    forall(
+        Config { cases: 80, seed: 2 },
+        |rng| {
+            let shards = gen_shards(rng, 4, 256);
+            let perm_seed = rng.next_u64();
+            (shards, perm_seed)
+        },
+        |(shards, perm_seed)| {
+            let mut a = shards.clone();
+            OptIncAllReduce::exact(Scenario::table1(1).unwrap(), 1).all_reduce(&mut a);
+            let mut order: Vec<usize> = (0..4).collect();
+            Pcg32::seeded(*perm_seed).shuffle(&mut order);
+            let mut permuted: Vec<Vec<f32>> =
+                order.iter().map(|&i| shards[i].clone()).collect();
+            OptIncAllReduce::exact(Scenario::table1(1).unwrap(), 1).all_reduce(&mut permuted);
+            if a[0] == permuted[0] {
+                Ok(())
+            } else {
+                Err("permutation changed the average".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_identical_shards_are_fixed_points() {
+    // Averaging N copies of the same gradient must return it (up to one
+    // quantization round-trip for OptINC).
+    forall(
+        Config { cases: 60, seed: 3 },
+        |rng| {
+            let len = 1 + rng.gen_range(300) as usize;
+            (0..len).map(|_| rng.normal() as f32).collect::<Vec<f32>>()
+        },
+        |shard| {
+            let mut shards: Vec<Vec<f32>> = (0..4).map(|_| shard.clone()).collect();
+            RingAllReduce.all_reduce(&mut shards);
+            for (a, b) in shards[0].iter().zip(shard) {
+                if (a - b).abs() > 1e-6 {
+                    return Err(format!("ring moved a fixed point: {a} vs {b}"));
+                }
+            }
+            let mut shards: Vec<Vec<f32>> = (0..4).map(|_| shard.clone()).collect();
+            let q = GlobalQuantizer::new(8);
+            let views: Vec<&[f32]> = shards.iter().map(|s| s.as_slice()).collect();
+            let scale = GlobalQuantizer::global_scale(&views);
+            OptIncAllReduce::exact(Scenario::table1(1).unwrap(), 1).all_reduce(&mut shards);
+            let tol = q.max_abs_error(scale) * 2.0 + 1e-6;
+            for (a, b) in shards[0].iter().zip(shard) {
+                if (a - b).abs() > tol {
+                    return Err(format!("optinc fixed point err {} > {tol}", (a - b).abs()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_quantized_mean_bounds() {
+    // Q(mean) lies within [min, max] of the inputs and matches the
+    // round-half-up closed form.
+    forall(
+        Config { cases: 300, seed: 4 },
+        |rng| {
+            let n = 1 + rng.gen_range(16) as usize;
+            (0..n).map(|_| rng.gen_range(256)).collect::<Vec<u32>>()
+        },
+        |words| {
+            let q = quantized_mean(words);
+            let lo = *words.iter().min().unwrap();
+            let hi = *words.iter().max().unwrap();
+            if q < lo || q > hi {
+                return Err(format!("mean {q} outside [{lo}, {hi}]"));
+            }
+            let f = words.iter().map(|&w| w as f64).sum::<f64>() / words.len() as f64;
+            let expect = (f + 0.5).floor() as u32;
+            if q != expect {
+                return Err(format!("rounding mismatch: {q} vs {expect} (mean {f})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cascade_remainder_equals_flat_for_any_group_count() {
+    forall(
+        Config { cases: 120, seed: 5 },
+        |rng| {
+            let groups = 1 + rng.gen_range(4) as usize; // 4..16 servers
+            let shards = gen_shards(rng, 4 * groups, 128);
+            shards
+        },
+        |shards| {
+            let sc = Scenario::table1(1).unwrap();
+            let mut a = shards.clone();
+            HierarchicalOptInc::new(sc.clone(), CascadeMode::Remainder).all_reduce(&mut a);
+            // Flat reference: quantize + integer mean + dequantize.
+            let views: Vec<&[f32]> = shards.iter().map(|s| s.as_slice()).collect();
+            let scale = GlobalQuantizer::global_scale(&views);
+            let q = GlobalQuantizer::new(8);
+            let len = shards[0].len();
+            for i in 0..len {
+                let words: Vec<u32> =
+                    shards.iter().map(|s| q.quantize(s[i], scale)).collect();
+                let want = q.dequantize(quantized_mean(&words), scale);
+                if (a[0][i] - want).abs() > 1e-6 {
+                    return Err(format!("element {i}: {} vs {want}", a[0][i]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ring_byte_accounting_matches_closed_form() {
+    forall(
+        Config { cases: 60, seed: 6 },
+        |rng| {
+            let n = 2 + rng.gen_range(15) as usize;
+            let chunks = 1 + rng.gen_range(64) as usize;
+            (n, n * chunks) // divisible => exact formula
+        },
+        |&(n, len)| {
+            let mut shards: Vec<Vec<f32>> = (0..n).map(|_| vec![1.0; len]).collect();
+            let stats = RingAllReduce.all_reduce(&mut shards);
+            let want = RingAllReduce::bytes_per_server(n, (len * 4) as u64);
+            if stats.bytes_sent_per_server == want {
+                Ok(())
+            } else {
+                Err(format!(
+                    "N={n} len={len}: {} vs {want}",
+                    stats.bytes_sent_per_server
+                ))
+            }
+        },
+    );
+}

@@ -1,0 +1,205 @@
+//! Cross-module integration tests: the OptINC datapath end to end
+//! (quantize → encode → P → ONN/oracle → snap → decode → dequantize),
+//! photonics compile path on real ONN shapes, and the cluster driver
+//! with the OptINC collective.
+
+use optinc::cluster::{Cluster, ClusterMetrics, Workload};
+use optinc::collectives::hierarchical::HierarchicalOptInc;
+use optinc::collectives::optinc::OptIncAllReduce;
+use optinc::collectives::ring::RingAllReduce;
+use optinc::collectives::{exact_mean, AllReduce};
+use optinc::config::Scenario;
+use optinc::linalg::Mat;
+use optinc::optinc::cascade::CascadeMode;
+use optinc::photonics::approx::ApproxMatrix;
+use optinc::photonics::mesh::MziMesh;
+use optinc::quant::GlobalQuantizer;
+use optinc::util::rng::Pcg32;
+
+fn random_shards(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..n)
+        .map(|_| (0..len).map(|_| rng.normal() as f32 * 0.08).collect())
+        .collect()
+}
+
+#[test]
+fn optinc_collective_tracks_ring_within_quantization_floor() {
+    // The central functional claim: OptINC's one-traversal average equals
+    // the exact ring average up to the B-bit quantization error.
+    for (sid, n) in [(1usize, 4usize), (2, 8), (4, 4)] {
+        let sc = Scenario::table1(sid).unwrap();
+        let base = random_shards(n, 20_000, sid as u64);
+        let want = exact_mean(&base);
+        let views: Vec<&[f32]> = base.iter().map(|s| s.as_slice()).collect();
+        let scale = GlobalQuantizer::global_scale(&views);
+
+        let mut ring_shards = base.clone();
+        RingAllReduce.all_reduce(&mut ring_shards);
+        let mut oi_shards = base.clone();
+        let mut oi = OptIncAllReduce::exact(sc, 1);
+        oi.all_reduce(&mut oi_shards);
+
+        let q = GlobalQuantizer::new(if sid == 4 { 16 } else { 8 });
+        let tol = q.max_abs_error(scale) * 2.0 + 1e-6;
+        for (a, b) in oi_shards[0].iter().zip(&want) {
+            assert!((a - b).abs() <= tol, "scenario {sid}: {a} vs {b} tol {tol}");
+        }
+        // Ring is exact.
+        for (a, b) in ring_shards[0].iter().zip(&want) {
+            assert!((a - b).abs() <= 1e-5);
+        }
+    }
+}
+
+#[test]
+fn trained_onn_weights_map_onto_mzi_meshes() {
+    // Photonics compile path on a scenario-1-shaped approximated layer:
+    // project → per-block Σ·U → program U onto a mesh → propagate and
+    // compare against the dense matvec.
+    let mut rng = Pcg32::seeded(31);
+    let w = optinc::linalg::random_mat(&mut rng, 64, 64);
+    let approx = ApproxMatrix::from_dense(&w);
+    assert_eq!(approx.blocks.len(), 1);
+    let block = &approx.blocks[0];
+    let mesh = MziMesh::program(&block.u, 1e-7).unwrap();
+    assert_eq!(mesh.mzi_count(), 64 * 63 / 2);
+
+    let x: Vec<f64> = (0..64).map(|i| ((i * 7) % 13) as f64 * 0.25).collect();
+    let through_mesh: Vec<f64> = mesh
+        .propagate(&x)
+        .iter()
+        .zip(&block.d)
+        .map(|(y, d)| y * d)
+        .collect();
+    let dense = approx.to_matrix().matvec(&x);
+    for (a, b) in through_mesh.iter().zip(&dense) {
+        assert!((a - b).abs() < 1e-8, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn cluster_training_converges_with_optinc_collective() {
+    // A linear-regression workload trained data-parallel through the
+    // exact-oracle OptINC switch must converge like ring does.
+    struct LinReg {
+        w: Vec<f32>,
+        rng: Pcg32,
+    }
+
+    impl Workload for LinReg {
+        fn grad(&mut self, _step: usize, worker: usize) -> (Vec<f32>, f64) {
+            // True weights = [1, -2, 3, 0.5, ...]; squared loss gradient
+            // on a fresh random sample.
+            let dim = self.w.len();
+            let true_w: Vec<f32> = (0..dim).map(|i| ((i % 7) as f32 - 3.0) * 0.5).collect();
+            let mut g = vec![0.0f32; dim];
+            let mut loss = 0.0f64;
+            let batch = 16;
+            for _ in 0..batch {
+                let x: Vec<f32> = (0..dim).map(|_| self.rng.normal() as f32).collect();
+                let y: f32 = x.iter().zip(&true_w).map(|(a, b)| a * b).sum();
+                let pred: f32 = x.iter().zip(&self.w).map(|(a, b)| a * b).sum();
+                let err = pred - y;
+                loss += (err * err) as f64;
+                for (gi, xi) in g.iter_mut().zip(&x) {
+                    *gi += 2.0 * err * xi / batch as f32;
+                }
+            }
+            let _ = worker;
+            (g, loss / batch as f64)
+        }
+
+        fn apply(&mut self, _step: usize, _worker: usize, avg: &[f32]) {
+            for (w, g) in self.w.iter_mut().zip(avg) {
+                *w -= 0.05 * g;
+            }
+        }
+    }
+
+    let run = |coll: &mut dyn AllReduce| -> (f64, f64) {
+        let cluster = Cluster::new(4);
+        let mut metrics = ClusterMetrics::new("linreg");
+        let records = cluster
+            .run(
+                60,
+                |w| LinReg {
+                    w: vec![0.0; 32],
+                    rng: Pcg32::seeded(100 + w as u64),
+                },
+                coll,
+                &mut metrics,
+            )
+            .unwrap();
+        (records[0].mean_loss, records.last().unwrap().mean_loss)
+    };
+
+    let (ring_first, ring_last) = run(&mut RingAllReduce);
+    let sc = Scenario::table1(4).unwrap(); // 16-bit for a tight floor
+    let (oi_first, oi_last) = run(&mut OptIncAllReduce::exact(sc, 3));
+
+    assert!(ring_last < ring_first * 0.05, "ring: {ring_first} -> {ring_last}");
+    assert!(oi_last < oi_first * 0.05, "optinc: {oi_first} -> {oi_last}");
+    // Final quality comparable (within 5x — both near the noise floor).
+    assert!(oi_last < ring_last * 5.0 + 1e-3);
+}
+
+#[test]
+fn cascade_collective_equals_flat_switch_on_cluster_gradients() {
+    let base = random_shards(16, 5_000, 77);
+    let sc4 = Scenario::table1(1).unwrap();
+    let sc16 = Scenario::table1(3).unwrap();
+
+    let mut a = base.clone();
+    HierarchicalOptInc::new(sc4, CascadeMode::Remainder).all_reduce(&mut a);
+    let mut b = base.clone();
+    OptIncAllReduce::exact(sc16, 1).all_reduce(&mut b);
+    assert_eq!(a[0], b[0]);
+}
+
+#[test]
+fn mesh_noise_ablation_degrades_gracefully() {
+    // Non-ideality substrate: phase noise perturbs the realized matrix
+    // smoothly (no catastrophic failures at small sigma).
+    use optinc::photonics::noise::NoiseModel;
+    let mut rng = Pcg32::seeded(5);
+    let q = optinc::linalg::random_orthogonal(&mut rng, 16);
+    let mesh = MziMesh::program(&q, 1e-8).unwrap();
+    let mut last = 0.0;
+    for sigma in [1e-4, 1e-3, 1e-2] {
+        let dev = NoiseModel::new(sigma, 0.0, 11).matrix_deviation(&mesh);
+        assert!(dev > last, "deviation should grow with sigma");
+        assert!(dev < 1.0);
+        last = dev;
+    }
+}
+
+#[test]
+fn area_model_consistency_rust_vs_scenarios() {
+    // The same MZI counts drive Table I and the cascade overhead claim;
+    // spot-check the absolute counts so a formula regression is caught
+    // by more than ratios.
+    use optinc::photonics::area;
+    assert_eq!(area::full_matrix_mzis(64, 4), 64 * 65 / 2 + 4 * 3 / 2);
+    assert_eq!(area::scenario_mzis(&Scenario::table1(1).unwrap(), false), 106_512);
+    assert_eq!(area::scenario_mzis(&Scenario::table1(1).unwrap(), true), 41_664);
+}
+
+#[test]
+fn json_metrics_cross_language_contract() {
+    // Parse a python-written metrics file shape (hand-rolled fixture) and
+    // build an error model from it — the Fig. 7a wiring.
+    use optinc::optinc::error_model::ErrorModel;
+    use optinc::util::json::Json;
+    let fixture = r#"{
+        "accuracy": 0.9999,
+        "errors": {"-1": 30, "1": 60, "-64": 10},
+        "area_ratio": 0.393
+    }"#;
+    let j = Json::parse(fixture).unwrap();
+    let em = ErrorModel::from_metrics(&j, 1);
+    assert!((em.error_rate - 1e-4).abs() < 1e-9);
+    assert_eq!(em.values.len(), 3);
+    let mat = Mat::identity(2);
+    assert_eq!(mat.rows, 2); // keep linalg linked in this test crate
+}

@@ -1,0 +1,156 @@
+//! PJRT artifact tests: execute every HLO artifact present in artifacts/
+//! and cross-check the switch artifact against the native ONN executor
+//! and the arithmetic oracle. Artifact-dependent tests skip (with a
+//! message) when `make artifacts` has not run — the handwritten-HLO test
+//! always runs.
+
+use optinc::config::{artifacts_dir, Scenario};
+use optinc::onn::OnnNetwork;
+use optinc::optinc::switch::{OnnMode, OptIncSwitch};
+use optinc::pam4::{snap_pam4, Pam4Codec};
+use optinc::runtime::{lit_f32, lit_i32, lit_scalar_f32, to_f32, Runtime};
+use optinc::util::rng::Pcg32;
+
+#[test]
+fn handwritten_hlo_roundtrip() {
+    let hlo = r#"
+HloModule scale, entry_computation_layout={(f32[8]{0})->(f32[8]{0})}
+
+ENTRY main {
+  x = f32[8]{0} parameter(0)
+  c = f32[] constant(3)
+  b = f32[8]{0} broadcast(c), dimensions={}
+  m = f32[8]{0} multiply(x, b)
+  ROOT t = (f32[8]{0}) tuple(m)
+}
+"#;
+    let rt = Runtime::new().unwrap();
+    let exe = rt.compile_text("scale", hlo).unwrap();
+    let x: Vec<f32> = (0..8).map(|i| i as f32).collect();
+    let out = exe.run(&[lit_f32(&x, &[8]).unwrap()]).unwrap();
+    let y = to_f32(&out[0]).unwrap();
+    assert_eq!(y, (0..8).map(|i| 3.0 * i as f32).collect::<Vec<_>>());
+}
+
+#[test]
+fn switch_artifact_matches_native_onn_and_words_stay_in_range() {
+    let rt = Runtime::new().unwrap();
+    let name = "switch_onn_s1_b4096";
+    if !rt.artifact_exists(name) {
+        eprintln!("skipping: {name} not built (run `make artifacts`)");
+        return;
+    }
+    let sc = Scenario::table1(1).unwrap();
+    let weights = artifacts_dir().join("onn_s1.otsr");
+    let net = OnnNetwork::load(&weights).unwrap();
+    let m_out = net.output_dim();
+    let mut native = OptIncSwitch::new(sc.clone(), OnnMode::Native(net)).unwrap();
+
+    let mut rng = Pcg32::seeded(123);
+    let count = 4096usize;
+    let shards: Vec<Vec<u32>> = (0..4)
+        .map(|_| (0..count).map(|_| rng.gen_range(256)).collect())
+        .collect();
+    let views: Vec<&[u32]> = shards.iter().map(|s| s.as_slice()).collect();
+    let native_avg = native.average_words(&views);
+
+    // PJRT path.
+    let exe = rt.load(name).unwrap();
+    let m = sc.symbols();
+    let codec = Pam4Codec::new(8);
+    let mut plane = vec![0.0f32; count * 4 * m];
+    let mut sym = vec![0u8; m];
+    for (s, shard) in shards.iter().enumerate() {
+        for (i, &w) in shard.iter().enumerate() {
+            codec.encode_word_into(w, &mut sym);
+            for (j, &v) in sym.iter().enumerate() {
+                plane[i * 4 * m + s * m + j] = v as f32;
+            }
+        }
+    }
+    let out = exe
+        .run(&[lit_f32(&plane, &[count, 4, m]).unwrap()])
+        .unwrap();
+    let levels = to_f32(&out[0]).unwrap();
+    assert_eq!(levels.len(), count * m_out);
+    let pjrt_avg: Vec<u32> = levels
+        .chunks_exact(m_out)
+        .map(|f| {
+            let mut w = 0u32;
+            for &a in f {
+                w = (w << 2) | snap_pam4(a) as u32;
+            }
+            w
+        })
+        .collect();
+    let agree = pjrt_avg
+        .iter()
+        .zip(&native_avg)
+        .filter(|(a, b)| a == b)
+        .count();
+    assert_eq!(agree, count, "PJRT artifact must match the native executor");
+    assert!(pjrt_avg.iter().all(|&w| w < 256));
+}
+
+#[test]
+fn lm_grad_artifact_runs_and_adam_applies() {
+    let rt = Runtime::new().unwrap();
+    if !rt.artifact_exists("lm_adam") {
+        eprintln!("skipping: lm artifacts not built (run `make artifacts`)");
+        return;
+    }
+    // Load params + manifest-declared shapes indirectly via the trainer.
+    use optinc::train::{DpTrainer, WorkloadKind};
+    use std::sync::Arc;
+    let rt = Arc::new(rt);
+    let mut trainer = DpTrainer::new(rt.clone(), WorkloadKind::Lm).unwrap();
+    let p0 = trainer.params.clone();
+    let mut ring = optinc::collectives::ring::RingAllReduce;
+    let logs = trainer.run(2, 3, &mut ring, 42, 0).unwrap();
+    assert_eq!(logs.len(), 3);
+    // Loss should be near ln(vocab) at init and finite.
+    assert!(logs[0].mean_loss.is_finite());
+    assert!(logs[0].mean_loss < 10.0 && logs[0].mean_loss > 1.0);
+    // Parameters moved.
+    let moved = trainer
+        .params
+        .iter()
+        .zip(&p0)
+        .filter(|(a, b)| a != b)
+        .count();
+    assert!(moved > p0.len() / 2, "adam should update most parameters");
+}
+
+#[test]
+fn adam_artifact_matches_reference_formula() {
+    let rt = Runtime::new().unwrap();
+    if !rt.artifact_exists("lm_adam") {
+        eprintln!("skipping: lm artifacts not built");
+        return;
+    }
+    // The artifact's P is fixed; probe with synthetic vectors of that
+    // size loaded from the params file.
+    let tf = optinc::util::tensorfile::TensorFile::load(
+        &artifacts_dir().join("lm_params.otsr"),
+    )
+    .unwrap();
+    let p0 = tf.get("params").unwrap().as_f32().unwrap().to_vec();
+    let n = p0.len();
+    let exe = rt.load("lm_adam").unwrap();
+    let g = vec![0.25f32; n];
+    let zeros = vec![0f32; n];
+    let out = exe
+        .run(&[
+            lit_f32(&p0, &[n]).unwrap(),
+            lit_f32(&zeros, &[n]).unwrap(),
+            lit_f32(&zeros, &[n]).unwrap(),
+            lit_scalar_f32(0.0),
+            lit_f32(&g, &[n]).unwrap(),
+        ])
+        .unwrap();
+    let p1 = to_f32(&out[0]).unwrap();
+    // First Adam step ≈ −lr·sign(g) with lr = 3e-3 (workloads.py).
+    let delta = p1[0] - p0[0];
+    assert!((delta + 3e-3).abs() < 3e-4, "delta {delta}");
+    let _ = lit_i32(&[1, 2], &[2]).unwrap(); // exercise the i32 literal path
+}
