@@ -40,7 +40,7 @@ fn main() -> anyhow::Result<()> {
     };
 
     let sc = Scenario::table1(4)?;
-    let (bl, ba) = run("ring baseline", &mut RingAllReduce)?;
+    let (bl, ba) = run("ring baseline", &mut RingAllReduce::new())?;
     let mut oi = OptIncAllReduce::exact(sc.clone(), 5);
     let (ol, oa) = run("optinc", &mut oi)?;
     let em = ErrorModel::paper_table2(1, 6);

@@ -55,7 +55,7 @@ fn main() -> anyhow::Result<()> {
     let mut results: Vec<(String, f64)> = Vec::new();
 
     if which == "all" || which == "ring" {
-        let (_, l) = run("ring (exact fp32 baseline)", &mut RingAllReduce)?;
+        let (_, l) = run("ring (exact fp32 baseline)", &mut RingAllReduce::new())?;
         results.push(("ring".into(), l));
     }
     if which == "all" || which == "optinc" {

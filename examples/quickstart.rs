@@ -34,7 +34,7 @@ fn main() -> anyhow::Result<()> {
 
     // 3. Baseline: ring all-reduce (exact fp32, 2(N−1) rounds).
     let mut ring_shards = shards.clone();
-    let ring_stats = RingAllReduce.all_reduce(&mut ring_shards);
+    let ring_stats = RingAllReduce::new().all_reduce(&mut ring_shards);
 
     // 4. OptINC: quantize → one switch traversal → dequantize.
     let mut oi_shards = shards.clone();

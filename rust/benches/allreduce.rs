@@ -1,13 +1,17 @@
 //! Collective micro-benchmarks: ring vs OptINC vs two-tree vs cascade at
-//! matched payloads, plus scaling in element count — the L3 hot loop the
-//! perf pass optimizes (EXPERIMENTS.md §Perf).
+//! matched payloads, scaling in element count, and the chunked streaming
+//! engine vs the monolithic one-shot path — both wall-clock (the
+//! chunking overhead must stay negligible) and modeled step time (the
+//! overlap win, measured rather than asserted). The L3 hot loop the perf
+//! pass optimizes (EXPERIMENTS.md §Perf, §Pipelined engine).
 
+use optinc::collectives::engine::ChunkedDriver;
 use optinc::collectives::hierarchical::HierarchicalOptInc;
 use optinc::collectives::optinc::OptIncAllReduce;
 use optinc::collectives::ring::RingAllReduce;
 use optinc::collectives::two_tree::TwoTreeAllReduce;
 use optinc::collectives::AllReduce;
-use optinc::config::Scenario;
+use optinc::config::{HardwareModel, Scenario};
 use optinc::optinc::cascade::CascadeMode;
 use optinc::util::bench::{black_box, BenchSuite};
 use optinc::util::rng::Pcg32;
@@ -29,7 +33,7 @@ fn main() {
 
         suite.bench_throughput(&format!("ring/4x{len}"), len as f64, "elem", || {
             work.clone_from(&base);
-            black_box(RingAllReduce.all_reduce(&mut work));
+            black_box(RingAllReduce::new().all_reduce(&mut work));
         });
 
         let mut coll = OptIncAllReduce::exact(sc.clone(), 1);
@@ -40,13 +44,83 @@ fn main() {
 
         suite.bench_throughput(&format!("two_tree/4x{len}"), len as f64, "elem", || {
             work.clone_from(&base);
-            black_box(TwoTreeAllReduce.all_reduce(&mut work));
+            black_box(TwoTreeAllReduce::new().all_reduce(&mut work));
         });
+    }
+
+    // Chunked streaming vs monolithic, sweeping the chunk grain: the
+    // wall-clock cost of chunking (copies + per-chunk setup) against the
+    // monolithic baseline at the same 1M-element payload.
+    let len = 1_000_000usize;
+    let base = shards(4, len, 77);
+    let mut work = base.clone();
+    for chunk in [len, 262_144usize, 65_536, 16_384] {
+        let mut driver = ChunkedDriver::new(chunk);
+        let mut ring = RingAllReduce::new();
+        suite.bench_throughput(
+            &format!("ring_chunked/c{chunk}/4x{len}"),
+            len as f64,
+            "elem",
+            || {
+                work.clone_from(&base);
+                black_box(driver.all_reduce(&mut ring, &mut work));
+            },
+        );
+        let mut coll = OptIncAllReduce::exact(sc.clone(), 1);
+        suite.bench_throughput(
+            &format!("optinc_chunked/c{chunk}/4x{len}"),
+            len as f64,
+            "elem",
+            || {
+                work.clone_from(&base);
+                black_box(driver.all_reduce(&mut coll, &mut work));
+            },
+        );
+    }
+
+    // Modeled step time: the pipelined schedule vs the monolithic one,
+    // per worker count — the overlap win the engine exists for. The
+    // speedup scalar must exceed 1.0 for every N ≥ 4.
+    let hw = HardwareModel::default();
+    for (sid, workers) in [(1usize, 4usize), (2, 8), (3, 16)] {
+        let len = 100_000usize;
+        let base = shards(workers, len, 90 + workers as u64);
+        let scn = Scenario::table1(sid).unwrap();
+
+        let mut coll = OptIncAllReduce::exact(scn, 5);
+        let mut mono = base.clone();
+        let mono_stats = coll.all_reduce(&mut mono);
+        let mut piped = base.clone();
+        let mut driver = ChunkedDriver::new(len / 16);
+        let piped_stats = driver.all_reduce(&mut coll, &mut piped);
+
+        let t_mono = mono_stats.modeled_step_time_s(&hw);
+        let t_piped = piped_stats.modeled_step_time_s(&hw);
+        suite.record_scalar(
+            &format!("modeled_step/optinc/N{workers}/monolithic"),
+            t_mono * 1e6,
+            "us",
+        );
+        suite.record_scalar(
+            &format!("modeled_step/optinc/N{workers}/pipelined"),
+            t_piped * 1e6,
+            "us",
+        );
+        suite.record_scalar(
+            &format!("modeled_step/optinc/N{workers}/speedup"),
+            t_mono / t_piped,
+            "x",
+        );
+        assert!(
+            t_piped < t_mono,
+            "N={workers}: pipelined {t_piped} must beat monolithic {t_mono}"
+        );
     }
 
     // Cascade at 16 workers.
     let base = shards(16, 100_000, 99);
     let mut work = base.clone();
+    let sc = Scenario::table1(1).unwrap();
     let mut casc = HierarchicalOptInc::new(sc, CascadeMode::Remainder);
     suite.bench_throughput("cascade/16x100000", 100_000.0, "elem", || {
         work.clone_from(&base);

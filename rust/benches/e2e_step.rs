@@ -27,7 +27,7 @@ fn main() {
     let mut suite = BenchSuite::new("e2e_step");
 
     // One full DP step (4 workers) under each collective.
-    let mut ring = RingAllReduce;
+    let mut ring = RingAllReduce::new();
     let mut trainer = DpTrainer::new(rt.clone(), WorkloadKind::Lm).unwrap();
     let params = trainer.param_count() as f64;
     suite.bench_throughput("lm_step/ring/4w", params, "param", || {

@@ -46,7 +46,7 @@ fn main() {
         let mut work = shards.clone();
         suite.bench_throughput(&format!("ring/N{n}/{elements}"), elements as f64, "elem", || {
             work.clone_from(&shards);
-            black_box(RingAllReduce.all_reduce(&mut work));
+            black_box(RingAllReduce::new().all_reduce(&mut work));
         });
 
         let sc = Scenario::table1(id).unwrap();

@@ -71,6 +71,17 @@ impl Args {
         }
     }
 
+    /// Optional usize: `None` when the flag is absent (for options whose
+    /// default is derived from other arguments, e.g. `--chunk`).
+    pub fn usize_opt(&self, name: &str) -> Result<Option<usize>> {
+        self.get(name)
+            .map(|v| {
+                v.parse::<usize>()
+                    .with_context(|| format!("--{name} expects an unsigned integer, got '{v}'"))
+            })
+            .transpose()
+    }
+
     pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
         match self.get(name) {
             None => Ok(default),
@@ -166,6 +177,15 @@ mod tests {
         assert_eq!(a.usize_or("n", 7).unwrap(), 7);
         assert_eq!(a.str_or("mode", "ring"), "ring");
         assert!(!a.flag("quick"));
+    }
+
+    #[test]
+    fn optional_usize_distinguishes_absence() {
+        let a = Args::parse(&raw(&["--chunk", "4096"]), &[]).unwrap();
+        assert_eq!(a.usize_opt("chunk").unwrap(), Some(4096));
+        assert_eq!(a.usize_opt("other").unwrap(), None);
+        let bad = Args::parse(&raw(&["--chunk", "xyz"]), &[]).unwrap();
+        assert!(bad.usize_opt("chunk").is_err());
     }
 
     #[test]

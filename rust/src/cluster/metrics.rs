@@ -1,4 +1,5 @@
-//! Cluster metrics: accumulated byte/round/time accounting across steps.
+//! Cluster metrics: accumulated byte/round/time accounting across steps,
+//! including the streaming engine's chunk/overlap bookkeeping.
 
 use crate::collectives::CollectiveStats;
 use crate::util::json::Json;
@@ -12,6 +13,8 @@ pub struct ClusterMetrics {
     rounds: u64,
     elements: u64,
     modeled_comm_s: f64,
+    chunks: u64,
+    overlap_sum: f64,
 }
 
 impl ClusterMetrics {
@@ -24,6 +27,8 @@ impl ClusterMetrics {
             rounds: 0,
             elements: 0,
             modeled_comm_s: 0.0,
+            chunks: 0,
+            overlap_sum: 0.0,
         }
     }
 
@@ -34,6 +39,8 @@ impl ClusterMetrics {
         self.rounds += stats.rounds as u64;
         self.elements += stats.elements as u64;
         self.modeled_comm_s += comm_s;
+        self.chunks += stats.chunks as u64;
+        self.overlap_sum += stats.overlap_fraction;
     }
 
     pub fn steps(&self) -> usize {
@@ -50,6 +57,21 @@ impl ClusterMetrics {
 
     pub fn modeled_comm_s(&self) -> f64 {
         self.modeled_comm_s
+    }
+
+    /// Total chunks streamed across all steps (equals `steps` on the
+    /// monolithic path).
+    pub fn total_chunks(&self) -> u64 {
+        self.chunks
+    }
+
+    /// Mean per-step `overlap_fraction` — 0.0 monolithic, approaching 1
+    /// as the stream deepens.
+    pub fn mean_overlap_fraction(&self) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        self.overlap_sum / self.steps as f64
     }
 
     /// Mean normalized communication per step (Fig. 6 metric), given the
@@ -72,6 +94,11 @@ impl ClusterMetrics {
             ),
             ("rounds", Json::Num(self.rounds as f64)),
             ("modeled_comm_s", Json::Num(self.modeled_comm_s)),
+            ("chunks", Json::Num(self.chunks as f64)),
+            (
+                "mean_overlap_fraction",
+                Json::Num(self.mean_overlap_fraction()),
+            ),
         ])
     }
 }
@@ -88,6 +115,7 @@ mod tests {
             rounds: 6,
             sync_bytes_per_server: 5,
             elements: 100,
+            ..CollectiveStats::default()
         };
         m.record(&st, 0.5);
         m.record(&st, 0.25);
@@ -98,5 +126,24 @@ mod tests {
         assert!((m.normalized_comm(1.0) - 1.05).abs() < 1e-12);
         let j = m.to_json();
         assert_eq!(j.get("steps").as_usize(), Some(2));
+    }
+
+    #[test]
+    fn tracks_streaming_overlap() {
+        let mut m = ClusterMetrics::new("piped");
+        let st = CollectiveStats {
+            bytes_sent_per_server: 100,
+            rounds: 1,
+            sync_bytes_per_server: 0,
+            elements: 100,
+            chunks: 4,
+            overlap_fraction: 0.75,
+        };
+        m.record(&st, 0.1);
+        m.record(&st, 0.1);
+        assert_eq!(m.total_chunks(), 8);
+        assert!((m.mean_overlap_fraction() - 0.75).abs() < 1e-12);
+        let j = m.to_json();
+        assert_eq!(j.get("chunks").as_usize(), Some(8));
     }
 }

@@ -1,26 +1,51 @@
-//! Cluster simulator: N worker threads + a leader, exchanging gradients
-//! through a pluggable collective.
+//! Cluster simulator: N worker threads + a leader, streaming gradients
+//! chunk-by-chunk through a pluggable chunked collective.
 //!
-//! The workers model the paper's servers: each owns a data shard, computes
-//! local gradients (either synthetic or by executing a PJRT train-step
-//! artifact — see `train::`), and participates in the all-reduce. The
-//! leader owns the collective (ring or OptINC switch), the metrics, and
-//! the modeled-time accounting.
+//! The workers model the paper's servers: each owns a data shard,
+//! computes local gradients (either synthetic or by executing a PJRT
+//! train-step artifact — see `train::`), and participates in the
+//! all-reduce. The leader owns the collective (ring or OptINC switch),
+//! the metrics, and the modeled-time accounting.
+//!
+//! **Double-buffered pipeline.** Per step every worker splits its
+//! gradient into `chunk_elems`-sized chunks and streams them to the
+//! leader; the leader reduces chunk k through the
+//! [`ChunkedAllReduce`](crate::collectives::engine::ChunkedAllReduce)
+//! engine as soon as all N copies have arrived — while chunks k+1, k+2,
+//! … are still in flight — and broadcasts each averaged chunk as a
+//! shared `Arc<[f32]>` (one allocation per chunk, N refcount bumps; the
+//! leader never clones the average per worker). Every spent upload
+//! buffer rides the broadcast back to its worker's
+//! [`BufferPool`](crate::collectives::engine::BufferPool), so after the
+//! first step the upload path allocates nothing — the shared broadcast
+//! Arc is the step's only per-chunk allocation.
+//! `CollectiveStats::overlap_fraction` records how much of the
+//! return leg the schedule hid, and
+//! [`CollectiveStats::modeled_step_time_s`] turns that into the modeled
+//! pipelined step time.
 //!
 //! Threads communicate over std mpsc channels; the design intentionally
-//! keeps the collective itself single-threaded (the paper's switch is one
-//! physical device) while gradient *computation* runs genuinely parallel.
+//! keeps the collective itself single-threaded (the paper's switch is
+//! one physical device) while gradient *computation* runs genuinely
+//! parallel.
 
 pub mod metrics;
 
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread;
 
 use anyhow::Result;
 
-use crate::collectives::{AllReduce, CollectiveStats};
+use crate::collectives::engine::{BufferPool, ChunkedAllReduce, ShardChunk};
+use crate::collectives::CollectiveStats;
 use crate::config::HardwareModel;
 pub use metrics::ClusterMetrics;
+
+/// Default streaming grain: small enough to pipeline ResNet-scale
+/// gradients tens of chunks deep, large enough to keep per-chunk
+/// overhead negligible.
+pub const DEFAULT_CHUNK_ELEMS: usize = 65_536;
 
 /// A gradient-producing workload executed by each worker per step.
 /// `step` is the global step index; `worker` the worker id. Returns the
@@ -31,19 +56,31 @@ pub trait Workload: Send + 'static {
     fn apply(&mut self, step: usize, worker: usize, avg: &[f32]);
 }
 
-/// Messages workers send the leader.
+/// Messages workers send the leader. Gradients travel as chunks; the
+/// first chunk of a step carries the worker's loss and the gradient's
+/// total length.
 enum ToLeader {
-    Grad {
+    Chunk {
         worker: usize,
-        grad: Vec<f32>,
-        loss: f64,
+        offset: usize,
+        /// Total gradient length this step (same in every chunk).
+        total: usize,
+        data: Vec<f32>,
+        /// Present on the first chunk of a worker's step only.
+        loss: Option<f64>,
     },
     Done,
 }
 
-/// Messages the leader sends each worker.
+/// Messages the leader sends each worker. The averaged chunk is shared:
+/// one `Arc<[f32]>` allocation serves all workers. `recycle` returns a
+/// spent upload buffer to one worker's pool.
 enum ToWorker {
-    Avg(Vec<f32>),
+    Avg {
+        offset: usize,
+        data: Arc<[f32]>,
+        recycle: Option<Vec<f32>>,
+    },
     Stop,
 }
 
@@ -60,6 +97,18 @@ pub struct StepRecord {
 pub struct Cluster {
     pub workers: usize,
     pub hw: HardwareModel,
+    /// Elements per streamed chunk (the pipeline grain).
+    pub chunk_elems: usize,
+}
+
+/// Chunks a `total`-element gradient splits into at grain `chunk`
+/// (at least one, so empty gradients still complete the step protocol).
+fn chunk_count(total: usize, chunk: usize) -> usize {
+    if total == 0 {
+        1
+    } else {
+        total.div_ceil(chunk)
+    }
 }
 
 impl Cluster {
@@ -67,17 +116,27 @@ impl Cluster {
         Cluster {
             workers,
             hw: HardwareModel::default(),
+            chunk_elems: DEFAULT_CHUNK_ELEMS,
         }
     }
 
-    /// Run `steps` of synchronous data-parallel training: each worker
-    /// computes a gradient (in parallel threads), the collective averages,
-    /// every worker applies the average. Returns per-step records.
+    /// Builder: override the streaming grain.
+    pub fn with_chunk_elems(mut self, chunk_elems: usize) -> Cluster {
+        assert!(chunk_elems >= 1, "chunk size must be at least one element");
+        self.chunk_elems = chunk_elems;
+        self
+    }
+
+    /// Run `steps` of synchronous data-parallel training through the
+    /// double-buffered streaming pipeline: each worker computes a
+    /// gradient (in parallel threads) and streams it in chunks, the
+    /// collective averages chunk k while chunk k+1 uploads, every worker
+    /// applies the assembled average. Returns per-step records.
     pub fn run<W, F>(
         &self,
         steps: usize,
         make_workload: F,
-        collective: &mut dyn AllReduce,
+        collective: &mut dyn ChunkedAllReduce,
         metrics: &mut ClusterMetrics,
     ) -> Result<Vec<StepRecord>>
     where
@@ -85,6 +144,9 @@ impl Cluster {
         F: Fn(usize) -> W,
     {
         let n = self.workers;
+        anyhow::ensure!(n > 0, "cluster needs at least one worker");
+        let chunk = self.chunk_elems.max(1);
+
         let (to_leader_tx, to_leader_rx) = mpsc::channel::<ToLeader>();
         let mut to_worker_txs = Vec::with_capacity(n);
         let mut handles = Vec::with_capacity(n);
@@ -95,18 +157,53 @@ impl Cluster {
             to_worker_txs.push(tx);
             let mut workload = make_workload(w);
             handles.push(thread::spawn(move || {
+                let mut pool = BufferPool::<f32>::new();
+                let mut avg = Vec::<f32>::new();
                 for step in 0..steps {
                     let (grad, loss) = workload.grad(step, w);
-                    if leader_tx
-                        .send(ToLeader::Grad { worker: w, grad, loss })
-                        .is_err()
-                    {
-                        return;
+                    let total = grad.len();
+                    let nchunks = chunk_count(total, chunk);
+                    // Stream the gradient: chunk k+1 departs while the
+                    // leader is still reducing chunk k (the overlap).
+                    let mut sent = 0usize;
+                    for k in 0..nchunks {
+                        let hi = sent.saturating_add(chunk).min(total);
+                        let mut data = pool.take(hi - sent);
+                        data.copy_from_slice(&grad[sent..hi]);
+                        let msg = ToLeader::Chunk {
+                            worker: w,
+                            offset: sent,
+                            total,
+                            data,
+                            loss: (k == 0).then_some(loss),
+                        };
+                        if leader_tx.send(msg).is_err() {
+                            return;
+                        }
+                        sent = hi;
                     }
-                    match rx.recv() {
-                        Ok(ToWorker::Avg(avg)) => workload.apply(step, w, &avg),
-                        _ => return,
+                    // Drain averaged chunks (they start arriving while
+                    // later chunks may still be uploading elsewhere).
+                    avg.clear();
+                    avg.resize(total, 0.0);
+                    let mut got = 0usize;
+                    while got < nchunks {
+                        match rx.recv() {
+                            Ok(ToWorker::Avg {
+                                offset,
+                                data,
+                                recycle,
+                            }) => {
+                                avg[offset..offset + data.len()].copy_from_slice(&data);
+                                if let Some(buf) = recycle {
+                                    pool.put(buf);
+                                }
+                                got += 1;
+                            }
+                            _ => return,
+                        }
                     }
+                    workload.apply(step, w, &avg);
                 }
                 let _ = leader_tx.send(ToLeader::Done);
             }));
@@ -114,27 +211,57 @@ impl Cluster {
         drop(to_leader_tx);
 
         let mut records = Vec::with_capacity(steps);
-        let mut shards: Vec<Vec<f32>> = vec![Vec::new(); n];
         for step in 0..steps {
             let mut losses = 0.0;
-            let mut received = 0;
-            while received < n {
+            let mut total: Option<usize> = None;
+            let mut nchunks = 0usize;
+            let mut reduced = 0usize;
+            // chunk index -> worker chunks gathered so far
+            let mut pending: Vec<Vec<ShardChunk>> = Vec::new();
+            while total.is_none() || reduced < nchunks {
                 match to_leader_rx.recv()? {
-                    ToLeader::Grad { worker, grad, loss } => {
-                        shards[worker] = grad;
-                        losses += loss;
-                        received += 1;
+                    ToLeader::Chunk {
+                        worker,
+                        offset,
+                        total: t,
+                        data,
+                        loss,
+                    } => {
+                        if total.is_none() {
+                            total = Some(t);
+                            nchunks = chunk_count(t, chunk);
+                            pending = (0..nchunks).map(|_| Vec::with_capacity(n)).collect();
+                            collective.begin(n, t);
+                        }
+                        assert_eq!(
+                            total,
+                            Some(t),
+                            "workers disagree on the gradient size this step"
+                        );
+                        if let Some(l) = loss {
+                            losses += l;
+                        }
+                        let idx = offset / chunk;
+                        let slot = &mut pending[idx];
+                        slot.push(ShardChunk {
+                            worker,
+                            offset,
+                            data,
+                        });
+                        if slot.len() == n {
+                            // All N copies of this chunk are in: reduce it
+                            // now, while later chunks are still uploading.
+                            collective.reduce_chunk(slot);
+                            broadcast_avg(&to_worker_txs, offset, slot);
+                            reduced += 1;
+                        }
                     }
                     ToLeader::Done => {}
                 }
             }
-            let stats = collective.all_reduce(&mut shards);
-            let comm_s = stats.modeled_time_s(&self.hw);
+            let stats = collective.finish();
+            let comm_s = stats.modeled_step_time_s(&self.hw);
             metrics.record(&stats, comm_s);
-            // Broadcast the average (all shards are identical post-reduce).
-            for (tx, shard) in to_worker_txs.iter().zip(&shards) {
-                tx.send(ToWorker::Avg(shard.clone())).ok();
-            }
             records.push(StepRecord {
                 step,
                 mean_loss: losses / n as f64,
@@ -149,6 +276,45 @@ impl Cluster {
             let _ = h.join();
         }
         Ok(records)
+    }
+
+    /// The pre-engine behavior for comparison: one monolithic chunk per
+    /// step (no streaming, no overlap — `overlap_fraction` = 0). The
+    /// bench suite measures the pipelined `run` against this.
+    pub fn run_monolithic<W, F>(
+        &self,
+        steps: usize,
+        make_workload: F,
+        collective: &mut dyn ChunkedAllReduce,
+        metrics: &mut ClusterMetrics,
+    ) -> Result<Vec<StepRecord>>
+    where
+        W: Workload,
+        F: Fn(usize) -> W,
+    {
+        let mono = Cluster {
+            workers: self.workers,
+            hw: self.hw,
+            chunk_elems: usize::MAX,
+        };
+        mono.run(steps, make_workload, collective, metrics)
+    }
+}
+
+/// Broadcast one reduced chunk: all entries of `slot` hold the average,
+/// so one shared `Arc<[f32]>` (the step's single broadcast allocation)
+/// serves every worker, and all N spent upload buffers ride the
+/// messages back — one per worker — so every worker's pool stays warm.
+fn broadcast_avg(txs: &[mpsc::Sender<ToWorker>], offset: usize, slot: &mut Vec<ShardChunk>) {
+    assert!(!slot.is_empty(), "broadcast of an empty chunk set");
+    let avg: Arc<[f32]> = Arc::from(slot[0].data.as_slice());
+    for (tx, ch) in txs.iter().zip(slot.drain(..)) {
+        tx.send(ToWorker::Avg {
+            offset,
+            data: avg.clone(),
+            recycle: Some(ch.data),
+        })
+        .ok();
     }
 }
 
@@ -178,7 +344,7 @@ mod tests {
     #[test]
     fn synchronous_dp_with_ring() {
         let cluster = Cluster::new(4);
-        let mut ring = RingAllReduce;
+        let mut ring = RingAllReduce::new();
         let mut metrics = ClusterMetrics::new("test");
         let records = cluster
             .run(
@@ -199,11 +365,128 @@ mod tests {
     #[test]
     fn single_element_gradients() {
         let cluster = Cluster::new(2);
-        let mut ring = RingAllReduce;
+        let mut ring = RingAllReduce::new();
         let mut metrics = ClusterMetrics::new("tiny");
         let records = cluster
             .run(1, |_| Toy { state: 0.0, dim: 1 }, &mut ring, &mut metrics)
             .unwrap();
         assert!((records[0].mean_loss - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_workers_is_an_error() {
+        let cluster = Cluster::new(0);
+        let mut ring = RingAllReduce::new();
+        let mut metrics = ClusterMetrics::new("none");
+        let res = cluster.run(1, |_| Toy { state: 0.0, dim: 4 }, &mut ring, &mut metrics);
+        assert!(res.is_err(), "zero workers must be a clear Err");
+        assert!(res.unwrap_err().to_string().contains("at least one worker"));
+    }
+
+    /// Workload that ships every applied average back to the test thread
+    /// so pipelined chunk reassembly can be checked exactly.
+    struct Probe {
+        dim: usize,
+        tx: mpsc::Sender<(usize, usize, Vec<f32>)>,
+    }
+
+    impl Workload for Probe {
+        fn grad(&mut self, step: usize, worker: usize) -> (Vec<f32>, f64) {
+            let v = (worker + 1) as f32 + step as f32;
+            ((0..self.dim).map(|i| v + i as f32).collect(), v as f64)
+        }
+
+        fn apply(&mut self, step: usize, worker: usize, avg: &[f32]) {
+            self.tx.send((step, worker, avg.to_vec())).ok();
+        }
+    }
+
+    #[test]
+    fn pipelined_chunks_reassemble_exactly() {
+        // dim = 10, chunk = 3 → 4 chunks with a remainder; the applied
+        // average must equal the exact mean for every worker and step.
+        let (tx, rx) = mpsc::channel();
+        let cluster = Cluster::new(4).with_chunk_elems(3);
+        let mut ring = RingAllReduce::new();
+        let mut metrics = ClusterMetrics::new("probe");
+        let records = cluster
+            .run(
+                2,
+                move |_| Probe {
+                    dim: 10,
+                    tx: tx.clone(),
+                },
+                &mut ring,
+                &mut metrics,
+            )
+            .unwrap();
+        assert_eq!(records[0].stats.chunks, 4);
+        assert!((records[0].stats.overlap_fraction - 0.75).abs() < 1e-12);
+        let mut seen = 0;
+        while let Ok((step, worker, avg)) = rx.try_recv() {
+            // mean over workers of (w+1) + step + i = 2.5 + step + i.
+            for (i, &a) in avg.iter().enumerate() {
+                let want = 2.5 + step as f32 + i as f32;
+                assert!(
+                    (a - want).abs() < 1e-5,
+                    "step {step} worker {worker} elem {i}: {a} vs {want}"
+                );
+            }
+            seen += 1;
+        }
+        assert_eq!(seen, 8, "4 workers × 2 steps applied averages");
+    }
+
+    #[test]
+    fn broadcast_shares_one_allocation() {
+        // The satellite fix: the leader must not clone the averaged chunk
+        // once per worker — every Avg message shares one Arc allocation.
+        let (tx1, rx1) = mpsc::channel::<ToWorker>();
+        let (tx2, rx2) = mpsc::channel::<ToWorker>();
+        let mut slot = vec![
+            ShardChunk { worker: 0, offset: 0, data: vec![2.5f32; 4] },
+            ShardChunk { worker: 1, offset: 0, data: vec![2.5f32; 4] },
+        ];
+        broadcast_avg(&[tx1, tx2], 0, &mut slot);
+        let take = |m: ToWorker| match m {
+            ToWorker::Avg { data, recycle, .. } => (data, recycle),
+            _ => panic!("expected Avg"),
+        };
+        let (a, ra) = take(rx1.recv().unwrap());
+        let (b, rb) = take(rx2.recv().unwrap());
+        assert!(
+            Arc::ptr_eq(&a, &b),
+            "broadcast must share one allocation, not copy per worker"
+        );
+        assert_eq!(&a[..], &[2.5f32; 4]);
+        // Every worker gets one spent upload buffer back (pool stays warm).
+        assert!(ra.is_some() && rb.is_some());
+    }
+
+    #[test]
+    fn pipelined_beats_monolithic_modeled_step_time() {
+        for workers in [4usize, 8] {
+            let make = |_| Toy { state: 0.0, dim: 4096 };
+            let mut metrics = ClusterMetrics::new("piped");
+            let piped = Cluster::new(workers)
+                .with_chunk_elems(512)
+                .run(1, make, &mut RingAllReduce::new(), &mut metrics)
+                .unwrap();
+            let make = |_| Toy { state: 0.0, dim: 4096 };
+            let mut metrics = ClusterMetrics::new("mono");
+            let mono = Cluster::new(workers)
+                .run_monolithic(1, make, &mut RingAllReduce::new(), &mut metrics)
+                .unwrap();
+            assert_eq!(mono[0].stats.chunks, 1);
+            assert_eq!(piped[0].stats.chunks, 8);
+            assert!(
+                piped[0].modeled_comm_s < mono[0].modeled_comm_s,
+                "N={workers}: pipelined {} !< monolithic {}",
+                piped[0].modeled_comm_s,
+                mono[0].modeled_comm_s
+            );
+            // Same arithmetic: identical mean loss.
+            assert!((piped[0].mean_loss - mono[0].mean_loss).abs() < 1e-12);
+        }
     }
 }

@@ -1,0 +1,381 @@
+//! The chunked streaming collective engine.
+//!
+//! Instead of handing a collective one monolithic owned gradient per
+//! worker, the engine streams the payload as a sequence of aligned
+//! [`ShardChunk`]s: `begin(workers, elements)` opens a collective,
+//! `reduce_chunk` averages one chunk across all workers in place, and
+//! `finish` closes it and returns the aggregated [`CollectiveStats`].
+//! Drivers that interleave `reduce_chunk` calls with other work (the
+//! double-buffered pipeline in `cluster::Cluster::run`, where workers
+//! transmit chunk k+1 while the leader reduces chunk k) get
+//! compute/communication overlap for free; the per-chunk accounting
+//! surfaces as `CollectiveStats::chunks` / `overlap_fraction`.
+//!
+//! Three pieces live here:
+//! - [`ChunkedAllReduce`] — the streaming trait every collective
+//!   implements (`AllReduce` is a thin adapter over one whole-shard
+//!   chunk, see `collectives::mod`);
+//! - [`BufferPool`] — recycles chunk-sized scratch buffers so the hot
+//!   path stops allocating per step;
+//! - [`ChunkedDriver`] — an in-memory streaming driver (benches,
+//!   property tests) that splits resident shards into chunks and runs
+//!   them through a collective.
+
+use super::CollectiveStats;
+
+/// One worker's slice of the gradient at a given offset, owned so it can
+/// travel through channels and buffer pools without copies.
+#[derive(Clone, Debug)]
+pub struct ShardChunk {
+    /// Worker (server) index this chunk belongs to.
+    pub worker: usize,
+    /// Element offset of this chunk within the full gradient.
+    pub offset: usize,
+    /// The chunk payload (recycled via [`BufferPool`]).
+    pub data: Vec<f32>,
+}
+
+/// A streaming all-reduce: the payload arrives as aligned chunks, each
+/// averaged across workers in place, with byte/round accounting
+/// aggregated over the whole collective.
+///
+/// Protocol: `begin` → `reduce_chunk`* → `finish`. Chunks may arrive in
+/// any offset order but each call must carry the same offset/length for
+/// every worker, and the chunk lengths must sum to the `elements`
+/// declared in `begin`.
+pub trait ChunkedAllReduce {
+    fn name(&self) -> &'static str;
+
+    /// Open a collective over `workers` shards of `elements` elements
+    /// each. Panics (with a clear message) on a worker count the
+    /// topology cannot serve.
+    fn begin(&mut self, workers: usize, elements: usize);
+
+    /// Average one aligned chunk across all workers: `chunks[i]` is
+    /// worker i's data at a common offset/length; on return every chunk
+    /// holds the (possibly quantized) average.
+    fn reduce_chunk(&mut self, chunks: &mut [ShardChunk]);
+
+    /// Close the collective and return stats aggregated over all chunks.
+    fn finish(&mut self) -> CollectiveStats;
+}
+
+/// Validate that a chunk set is aligned (same offset and length for
+/// every worker) and non-empty; returns `(offset, len)`.
+pub fn check_aligned(chunks: &[ShardChunk]) -> (usize, usize) {
+    assert!(!chunks.is_empty(), "reduce_chunk needs at least one chunk");
+    let offset = chunks[0].offset;
+    let len = chunks[0].data.len();
+    for c in chunks {
+        assert_eq!(c.offset, offset, "chunks must share one offset");
+        assert_eq!(c.data.len(), len, "chunks must share one length");
+    }
+    (offset, len)
+}
+
+/// Per-collective accounting shared by every [`ChunkedAllReduce`]
+/// implementation: tracks progress between `begin` and `finish` and
+/// derives the pipeline stats (`chunks`, `overlap_fraction`).
+#[derive(Clone, Debug, Default)]
+pub struct Session {
+    workers: usize,
+    elements: usize,
+    reduced: usize,
+    chunks: u32,
+    bytes: u64,
+    sync_bytes: u64,
+    rounds: u32,
+    active: bool,
+}
+
+impl Session {
+    /// Reset for a new collective.
+    pub fn begin(&mut self, workers: usize, elements: usize) {
+        assert!(workers > 0, "collective needs at least one worker shard");
+        *self = Session {
+            workers,
+            elements,
+            active: true,
+            ..Session::default()
+        };
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Record one reduced chunk: its element count, the max bytes any
+    /// server transmitted for it, its sync payload, and its round count
+    /// (rounds of different chunks pipeline, so the collective-level
+    /// round count is the max, not the sum).
+    pub fn chunk_done(&mut self, len: usize, bytes_per_server: u64, sync_bytes: u64, rounds: u32) {
+        assert!(self.active, "reduce_chunk called before begin");
+        self.reduced += len;
+        assert!(
+            self.reduced <= self.elements,
+            "reduced {} elements but begin declared {}",
+            self.reduced,
+            self.elements
+        );
+        self.chunks += 1;
+        self.bytes += bytes_per_server;
+        self.sync_bytes += sync_bytes;
+        self.rounds = self.rounds.max(rounds);
+    }
+
+    /// Close the collective. Panics if the streamed chunks do not cover
+    /// the declared element count (a driver bug).
+    pub fn finish(&mut self) -> CollectiveStats {
+        assert!(self.active, "finish called before begin");
+        assert_eq!(
+            self.reduced, self.elements,
+            "collective finished with {} of {} elements reduced",
+            self.reduced, self.elements
+        );
+        self.active = false;
+        let chunks = self.chunks.max(1);
+        // Double-buffered schedule: the return leg of every chunk except
+        // the last overlaps the upload of its successor, so (C−1)/C of
+        // the broadcast wire time is hidden. Monolithic (C = 1) hides
+        // nothing.
+        let overlap_fraction = (chunks - 1) as f64 / chunks as f64;
+        CollectiveStats {
+            bytes_sent_per_server: self.bytes,
+            rounds: self.rounds,
+            sync_bytes_per_server: self.sync_bytes,
+            elements: self.elements,
+            chunks,
+            overlap_fraction,
+        }
+    }
+}
+
+/// Recycles equally-shaped scratch buffers across chunks and steps so
+/// the streaming hot path stops allocating: `take` hands out a buffer of
+/// the requested length (reusing a retired one when available), `put`
+/// retires a buffer for reuse.
+#[derive(Clone, Debug, Default)]
+pub struct BufferPool<T: Copy + Default> {
+    free: Vec<Vec<T>>,
+    allocations: u64,
+    reuses: u64,
+}
+
+impl<T: Copy + Default> BufferPool<T> {
+    pub fn new() -> BufferPool<T> {
+        BufferPool {
+            free: Vec::new(),
+            allocations: 0,
+            reuses: 0,
+        }
+    }
+
+    /// A buffer of exactly `len` elements (contents zeroed/defaulted).
+    pub fn take(&mut self, len: usize) -> Vec<T> {
+        match self.free.pop() {
+            Some(mut buf) => {
+                self.reuses += 1;
+                buf.clear();
+                buf.resize(len, T::default());
+                buf
+            }
+            None => {
+                self.allocations += 1;
+                vec![T::default(); len]
+            }
+        }
+    }
+
+    /// Retire a buffer for reuse by a later `take`.
+    pub fn put(&mut self, buf: Vec<T>) {
+        if buf.capacity() > 0 {
+            self.free.push(buf);
+        }
+    }
+
+    /// Fresh allocations performed (observability: a steady-state
+    /// pipeline should stop incrementing this after warmup).
+    pub fn allocations(&self) -> u64 {
+        self.allocations
+    }
+
+    pub fn reuses(&self) -> u64 {
+        self.reuses
+    }
+}
+
+/// Drive a [`ChunkedAllReduce`] over memory-resident shards by streaming
+/// them in `chunk_elems`-sized chunks (the last chunk absorbs the
+/// remainder). This is the in-memory mirror of the threaded pipeline in
+/// `cluster::Cluster::run`, used by benches and property tests; chunk
+/// buffers are recycled across calls through an internal [`BufferPool`].
+#[derive(Clone, Debug)]
+pub struct ChunkedDriver {
+    pub chunk_elems: usize,
+    pool: BufferPool<f32>,
+}
+
+impl ChunkedDriver {
+    pub fn new(chunk_elems: usize) -> ChunkedDriver {
+        assert!(chunk_elems >= 1, "chunk size must be at least one element");
+        ChunkedDriver {
+            chunk_elems,
+            pool: BufferPool::new(),
+        }
+    }
+
+    /// Stream `shards` through `collective` chunk by chunk; on return
+    /// every shard holds the averaged gradient.
+    pub fn all_reduce(
+        &mut self,
+        collective: &mut dyn ChunkedAllReduce,
+        shards: &mut [Vec<f32>],
+    ) -> CollectiveStats {
+        assert!(!shards.is_empty(), "chunked all-reduce needs at least one shard");
+        let n = shards.len();
+        let len = shards[0].len();
+        assert!(
+            shards.iter().all(|s| s.len() == len),
+            "all shards must be the same length"
+        );
+        collective.begin(n, len);
+        let mut chunks: Vec<ShardChunk> = Vec::with_capacity(n);
+        let mut offset = 0usize;
+        loop {
+            let hi = offset.saturating_add(self.chunk_elems).min(len);
+            chunks.clear();
+            for (w, s) in shards.iter().enumerate() {
+                let mut buf = self.pool.take(hi - offset);
+                buf.copy_from_slice(&s[offset..hi]);
+                chunks.push(ShardChunk {
+                    worker: w,
+                    offset,
+                    data: buf,
+                });
+            }
+            collective.reduce_chunk(&mut chunks);
+            for ch in chunks.drain(..) {
+                shards[ch.worker][ch.offset..ch.offset + ch.data.len()]
+                    .copy_from_slice(&ch.data);
+                self.pool.put(ch.data);
+            }
+            offset = hi;
+            if offset >= len {
+                break;
+            }
+        }
+        collective.finish()
+    }
+
+    /// Pool observability (benches assert warm steady state).
+    pub fn pool_allocations(&self) -> u64 {
+        self.pool.allocations()
+    }
+}
+
+/// The compatibility adapter: run a [`ChunkedAllReduce`] as a classic
+/// one-shot all-reduce by moving each whole shard through a single
+/// chunk (zero-copy — the shard `Vec`s are lent to the chunks and moved
+/// back). `AllReduce` is blanket-implemented on top of this in
+/// `collectives::mod`.
+pub fn all_reduce_via_chunks<C: ChunkedAllReduce + ?Sized>(
+    collective: &mut C,
+    shards: &mut [Vec<f32>],
+) -> CollectiveStats {
+    assert!(!shards.is_empty(), "all-reduce needs at least one shard");
+    let len = shards[0].len();
+    assert!(
+        shards.iter().all(|s| s.len() == len),
+        "all shards must be the same length"
+    );
+    collective.begin(shards.len(), len);
+    let mut chunks: Vec<ShardChunk> = shards
+        .iter_mut()
+        .enumerate()
+        .map(|(w, s)| ShardChunk {
+            worker: w,
+            offset: 0,
+            data: std::mem::take(s),
+        })
+        .collect();
+    collective.reduce_chunk(&mut chunks);
+    for ch in chunks {
+        shards[ch.worker] = ch.data;
+    }
+    collective.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffer_pool_recycles() {
+        let mut pool = BufferPool::<f32>::new();
+        let a = pool.take(16);
+        assert_eq!(a.len(), 16);
+        pool.put(a);
+        let b = pool.take(8);
+        assert_eq!(b.len(), 8);
+        assert_eq!(pool.allocations(), 1, "second take must reuse");
+        assert_eq!(pool.reuses(), 1);
+    }
+
+    #[test]
+    fn session_aggregates_chunks() {
+        let mut s = Session::default();
+        s.begin(4, 10);
+        s.chunk_done(6, 100, 5, 3);
+        s.chunk_done(4, 60, 5, 3);
+        let st = s.finish();
+        assert_eq!(st.bytes_sent_per_server, 160);
+        assert_eq!(st.sync_bytes_per_server, 10);
+        assert_eq!(st.rounds, 3, "rounds pipeline: max, not sum");
+        assert_eq!(st.chunks, 2);
+        assert!((st.overlap_fraction - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn session_monolithic_has_no_overlap() {
+        let mut s = Session::default();
+        s.begin(2, 7);
+        s.chunk_done(7, 28, 0, 2);
+        let st = s.finish();
+        assert_eq!(st.chunks, 1);
+        assert_eq!(st.overlap_fraction, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "of 10 elements reduced")]
+    fn session_catches_short_streams() {
+        let mut s = Session::default();
+        s.begin(2, 10);
+        s.chunk_done(6, 0, 0, 1);
+        let _ = s.finish();
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one worker")]
+    fn session_rejects_zero_workers() {
+        Session::default().begin(0, 10);
+    }
+
+    #[test]
+    fn check_aligned_accepts_matching_chunks() {
+        let chunks = vec![
+            ShardChunk { worker: 0, offset: 8, data: vec![0.0; 4] },
+            ShardChunk { worker: 1, offset: 8, data: vec![1.0; 4] },
+        ];
+        assert_eq!(check_aligned(&chunks), (8, 4));
+    }
+
+    #[test]
+    #[should_panic(expected = "share one offset")]
+    fn check_aligned_rejects_skew() {
+        let chunks = vec![
+            ShardChunk { worker: 0, offset: 0, data: vec![0.0; 4] },
+            ShardChunk { worker: 1, offset: 4, data: vec![1.0; 4] },
+        ];
+        check_aligned(&chunks);
+    }
+}

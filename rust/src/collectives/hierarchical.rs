@@ -1,22 +1,29 @@
 //! Hierarchical OptINC collective: the §III-C cascade for up to N²
-//! servers, built from `level1_fan_in`-port switches.
+//! servers, built from `level1_fan_in`-port switches, streamed chunk by
+//! chunk through the chunked engine.
 //!
 //! Each group of N servers transmits into its level-1 OptINC; level-1
 //! outputs (exact means with the decimal remainder on the last symbol,
 //! eq. 10) feed the level-2 OptINC which emits the final quantized
 //! average, broadcast back down through the level-1 splitters. The whole
-//! aggregation remains a single network traversal per server.
+//! aggregation remains a single network traversal per server, and chunk
+//! traversals pipeline back-to-back. Word/float scratch is recycled
+//! through [`BufferPool`]s.
 
 use crate::config::Scenario;
 use crate::optinc::cascade::{Cascade, CascadeMode};
 use crate::quant::GlobalQuantizer;
 
-use super::{AllReduce, CollectiveStats};
+use super::engine::{check_aligned, BufferPool, ChunkedAllReduce, Session, ShardChunk};
+use super::CollectiveStats;
 
 pub struct HierarchicalOptInc {
     pub scenario: Scenario,
     pub cascade: Cascade,
     pub quantizer: GlobalQuantizer,
+    session: Session,
+    word_pool: BufferPool<u32>,
+    float_pool: BufferPool<f32>,
 }
 
 impl HierarchicalOptInc {
@@ -27,6 +34,9 @@ impl HierarchicalOptInc {
             scenario: sc,
             cascade,
             quantizer: GlobalQuantizer::new(bits),
+            session: Session::default(),
+            word_pool: BufferPool::new(),
+            float_pool: BufferPool::new(),
         }
     }
 
@@ -35,7 +45,7 @@ impl HierarchicalOptInc {
     }
 }
 
-impl AllReduce for HierarchicalOptInc {
+impl ChunkedAllReduce for HierarchicalOptInc {
     fn name(&self) -> &'static str {
         match self.cascade.mode {
             CascadeMode::Basic => "optinc-cascade-basic",
@@ -43,44 +53,70 @@ impl AllReduce for HierarchicalOptInc {
         }
     }
 
-    fn all_reduce(&mut self, shards: &mut [Vec<f32>]) -> CollectiveStats {
-        let n_servers = shards.len();
+    fn begin(&mut self, workers: usize, elements: usize) {
         assert!(
-            n_servers % self.cascade.level1_fan_in == 0 && n_servers <= self.capacity(),
+            workers % self.cascade.level1_fan_in == 0 && workers <= self.capacity(),
             "cascade of fan-in {} supports multiples up to {} servers",
             self.cascade.level1_fan_in,
             self.capacity()
         );
-        let len = shards[0].len();
-        let views: Vec<&[f32]> = shards.iter().map(|s| s.as_slice()).collect();
-        let scale = GlobalQuantizer::global_scale(&views);
-        let words: Vec<Vec<u32>> = shards
-            .iter()
-            .map(|s| self.quantizer.quantize_vec(s, scale))
-            .collect();
+        self.session.begin(workers, elements);
+    }
 
-        let mut avg = vec![0.0f32; len];
-        let mut word_buf = vec![0u32; n_servers];
+    fn reduce_chunk(&mut self, chunks: &mut [ShardChunk]) {
+        let n_servers = self.session.workers();
+        assert_eq!(chunks.len(), n_servers, "cascade wired for {n_servers} servers");
+        let (_, len) = check_aligned(chunks);
+
+        // Per-chunk block scale (see `collectives::optinc` — block scales
+        // only tighten the global quantization bound).
+        let views: Vec<&[f32]> = chunks.iter().map(|c| c.data.as_slice()).collect();
+        let scale = GlobalQuantizer::global_scale(&views);
+        let mut words: Vec<Vec<u32>> = Vec::with_capacity(n_servers);
+        for c in chunks.iter() {
+            let mut buf = self.word_pool.take(len);
+            for (o, &g) in buf.iter_mut().zip(c.data.iter()) {
+                *o = self.quantizer.quantize(g, scale);
+            }
+            words.push(buf);
+        }
+
+        let mut avg = self.float_pool.take(len);
+        let mut word_buf = self.word_pool.take(n_servers);
         for i in 0..len {
             for (w, shard) in word_buf.iter_mut().zip(&words) {
                 *w = shard[i];
             }
-            avg[i] = self.quantizer.dequantize(self.cascade.aggregate(&word_buf), scale);
+            avg[i] = self
+                .quantizer
+                .dequantize(self.cascade.aggregate(&word_buf), scale);
         }
-        for s in shards.iter_mut() {
-            s.copy_from_slice(&avg);
+        for c in chunks.iter_mut() {
+            c.data.copy_from_slice(&avg);
         }
-        CollectiveStats {
-            bytes_sent_per_server: (len as u64 * self.scenario.bits as u64).div_ceil(8),
-            rounds: 1,
-            sync_bytes_per_server: 4 + (self.scenario.bits as u64).div_ceil(8),
-            elements: len,
+
+        self.word_pool.put(word_buf);
+        self.float_pool.put(avg);
+        for buf in words {
+            self.word_pool.put(buf);
         }
+
+        self.session.chunk_done(
+            len,
+            (len as u64 * self.scenario.bits as u64).div_ceil(8),
+            4 + (self.scenario.bits as u64).div_ceil(8),
+            1,
+        );
+    }
+
+    fn finish(&mut self) -> CollectiveStats {
+        self.session.finish()
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::engine::ChunkedDriver;
     use super::super::test_support::{max_diff, random_shards};
     use super::super::{exact_mean, AllReduce};
     use super::*;
@@ -154,5 +190,25 @@ mod tests {
         let tol = c.quantizer.max_abs_error(scale) * 2.0 + 1e-6;
         c.all_reduce(&mut shards);
         assert!(max_diff(&shards[0], &want) <= tol * 2.0);
+    }
+
+    #[test]
+    fn chunked_stream_stays_within_tolerance() {
+        let sc = Scenario::table1(1).unwrap();
+        let base = random_shards(8, 513, 31);
+        let want = exact_mean(&base);
+        let views: Vec<&[f32]> = base.iter().map(|s| s.as_slice()).collect();
+        let scale = GlobalQuantizer::global_scale(&views);
+
+        let mut c = HierarchicalOptInc::new(sc, CascadeMode::Remainder);
+        let mut streamed = base.clone();
+        let mut driver = ChunkedDriver::new(100);
+        let stats = driver.all_reduce(&mut c, &mut streamed);
+        let tol = c.quantizer.max_abs_error(scale) * 2.0 + 1e-6;
+        for s in &streamed {
+            assert!(max_diff(s, &want) <= tol * 2.0);
+        }
+        assert_eq!(stats.chunks, 6);
+        assert_eq!(stats.bytes_sent_per_server, 513);
     }
 }

@@ -1,4 +1,14 @@
-//! All-reduce collectives over per-server gradient shards.
+//! Collectives over per-server gradient shards, built on a **chunked
+//! streaming engine** ([`engine`]).
+//!
+//! Every collective implements [`engine::ChunkedAllReduce`]: the payload
+//! streams through it as aligned chunks (`begin → reduce_chunk* →
+//! finish`), which lets drivers overlap communication with reduction —
+//! `cluster::Cluster::run` double-buffers so workers upload chunk k+1
+//! while the leader reduces chunk k. The classic one-shot [`AllReduce`]
+//! trait is kept as a thin adapter that moves each whole shard through a
+//! single chunk, so existing callers (experiments, training drivers) are
+//! unchanged.
 //!
 //! The paper's comparison (Fig. 6 / Fig. 7) is between:
 //! - [`ring`] — the standard chunked ring all-reduce baseline
@@ -11,8 +21,11 @@
 //! - [`hierarchical`] — the §III-C cascade for N² servers.
 //!
 //! Every implementation returns [`CollectiveStats`] with the byte/round
-//! accounting the figures are built from.
+//! accounting the figures are built from, now including the streaming
+//! pipeline's `chunks` / `overlap_fraction` so modeled step time
+//! reflects compute/communication overlap.
 
+pub mod engine;
 pub mod hierarchical;
 pub mod optinc;
 pub mod ring;
@@ -21,16 +34,36 @@ pub mod two_tree;
 use crate::config::HardwareModel;
 
 /// Accounting for one all-reduce invocation.
-#[derive(Clone, Copy, Debug, Default, PartialEq)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct CollectiveStats {
     /// Bytes each server transmitted (max across servers).
     pub bytes_sent_per_server: u64,
-    /// Synchronous communication rounds.
+    /// Synchronous communication rounds (pipeline depth: rounds of
+    /// different chunks overlap, so this is the max across chunks).
     pub rounds: u32,
     /// Extra synchronization payload (e.g. quantizer scale exchange).
     pub sync_bytes_per_server: u64,
     /// Number of gradient elements reduced.
     pub elements: usize,
+    /// Chunks the payload was streamed in (1 = monolithic one-shot).
+    pub chunks: u32,
+    /// Fraction of the averaged-result return leg that the streaming
+    /// schedule hid behind later chunk uploads (`(C−1)/C` for a
+    /// double-buffered stream of C chunks, 0 for the monolithic path).
+    pub overlap_fraction: f64,
+}
+
+impl Default for CollectiveStats {
+    fn default() -> CollectiveStats {
+        CollectiveStats {
+            bytes_sent_per_server: 0,
+            rounds: 0,
+            sync_bytes_per_server: 0,
+            elements: 0,
+            chunks: 1,
+            overlap_fraction: 0.0,
+        }
+    }
 }
 
 impl CollectiveStats {
@@ -41,17 +74,40 @@ impl CollectiveStats {
         (self.bytes_sent_per_server + self.sync_bytes_per_server) as f64 / payload
     }
 
-    /// Modeled wall time on the paper's hardware (per-server full-duplex
-    /// bandwidth; per-round link latency).
+    /// Modeled steady-state wall time of the collective itself on the
+    /// paper's hardware (per-server full-duplex bandwidth; per-round
+    /// link latency). This is the C → ∞ ideal the paper plots: one
+    /// payload crossing, independent of chunking.
     pub fn modeled_time_s(&self, hw: &HardwareModel) -> f64 {
         let bw = hw.server_bandwidth_bytes();
         (self.bytes_sent_per_server + self.sync_bytes_per_server) as f64 / bw
             + self.rounds as f64 * hw.link_latency_s
     }
+
+    /// Modeled end-to-end time of one synchronous step's collective as
+    /// the cluster driver experiences it: the gradient upload leg, plus
+    /// whatever part of the averaged-result return leg the schedule
+    /// could **not** hide behind later chunk uploads (links are full
+    /// duplex), plus per-round latency.
+    ///
+    /// Monolithic (`chunks = 1`, `overlap_fraction = 0`): the data
+    /// dependency serializes upload and return — 2× the wire time. As
+    /// `chunks → ∞` this approaches [`Self::modeled_time_s`], the
+    /// paper's "communication overhead eliminated" ideal.
+    pub fn modeled_step_time_s(&self, hw: &HardwareModel) -> f64 {
+        let bw = hw.server_bandwidth_bytes();
+        let wire =
+            (self.bytes_sent_per_server + self.sync_bytes_per_server) as f64 / bw;
+        wire + wire * (1.0 - self.overlap_fraction) + self.rounds as f64 * hw.link_latency_s
+    }
 }
 
 /// An all-reduce collective: averages the shards in place (every worker
 /// ends with the same averaged gradient).
+///
+/// Blanket-implemented for every [`engine::ChunkedAllReduce`] by moving
+/// each whole shard through a single chunk, so the one-shot and the
+/// streaming interfaces are always in agreement.
 pub trait AllReduce {
     fn name(&self) -> &'static str;
 
@@ -60,13 +116,25 @@ pub trait AllReduce {
     fn all_reduce(&mut self, shards: &mut [Vec<f32>]) -> CollectiveStats;
 }
 
+impl<T: engine::ChunkedAllReduce + ?Sized> AllReduce for T {
+    fn name(&self) -> &'static str {
+        engine::ChunkedAllReduce::name(self)
+    }
+
+    fn all_reduce(&mut self, shards: &mut [Vec<f32>]) -> CollectiveStats {
+        engine::all_reduce_via_chunks(self, shards)
+    }
+}
+
 /// Exact float mean across shards (test oracle shared by implementations).
+/// Panics with a clear message on an empty shard list or ragged lengths.
 pub fn exact_mean(shards: &[Vec<f32>]) -> Vec<f32> {
+    assert!(!shards.is_empty(), "exact_mean needs at least one shard");
     let n = shards.len();
     let len = shards[0].len();
     let mut out = vec![0.0f32; len];
     for s in shards {
-        assert_eq!(s.len(), len);
+        assert_eq!(s.len(), len, "exact_mean shards must be the same length");
         for (o, &v) in out.iter_mut().zip(s.iter()) {
             *o += v;
         }
@@ -109,12 +177,19 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "at least one shard")]
+    fn exact_mean_rejects_empty_shard_list() {
+        exact_mean(&[]);
+    }
+
+    #[test]
     fn normalized_comm_math() {
         let st = CollectiveStats {
             bytes_sent_per_server: 1500,
             rounds: 6,
             sync_bytes_per_server: 0,
             elements: 1000,
+            ..CollectiveStats::default()
         };
         assert!((st.normalized_comm(1.0) - 1.5).abs() < 1e-12);
     }
@@ -126,9 +201,37 @@ mod tests {
             rounds: 2,
             sync_bytes_per_server: 0,
             elements: 1,
+            ..CollectiveStats::default()
         };
         let hw = HardwareModel::default();
         let t = st.modeled_time_s(&hw);
         assert!((t - (1.0 + 2.0 * hw.link_latency_s)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn modeled_step_time_rewards_overlap() {
+        let hw = HardwareModel::default();
+        let mono = CollectiveStats {
+            bytes_sent_per_server: 800_000_000_000,
+            rounds: 1,
+            sync_bytes_per_server: 0,
+            elements: 1,
+            ..CollectiveStats::default()
+        };
+        // Monolithic: upload + return serialize -> 2x wire.
+        let t_mono = mono.modeled_step_time_s(&hw);
+        assert!((t_mono - (2.0 + hw.link_latency_s)).abs() < 1e-9);
+
+        // Streamed in 8 chunks: 7/8 of the return leg is hidden.
+        let piped = CollectiveStats {
+            chunks: 8,
+            overlap_fraction: 7.0 / 8.0,
+            ..mono
+        };
+        let t_piped = piped.modeled_step_time_s(&hw);
+        assert!(t_piped < t_mono);
+        assert!((t_piped - (1.0 + 1.0 / 8.0 + hw.link_latency_s)).abs() < 1e-9);
+        // ...and approaches the steady-state ideal from above.
+        assert!(t_piped > piped.modeled_time_s(&hw));
     }
 }

@@ -1,15 +1,21 @@
-//! The OptINC collective: quantize → one switch traversal → dequantize.
+//! The OptINC collective: quantize → one switch traversal → dequantize,
+//! streamed chunk by chunk through the chunked engine.
 //!
-//! Per all-reduce:
-//! 1. workers agree on the global quantization scale (a one-float
-//!    exchange — the paper's <0.4% sync cost);
-//! 2. each worker quantizes its shard to B-bit offset-binary words and
+//! Per streamed chunk:
+//! 1. workers agree on the chunk's quantization scale (a one-float
+//!    exchange — the paper's <0.4% sync cost; streaming makes the scale
+//!    a *per-chunk* block scale, which only tightens the quantization
+//!    error bound because each block scale is ≤ the global max);
+//! 2. each worker quantizes its chunk to B-bit offset-binary words and
 //!    transmits the PAM4 frames into the switch **once** (full duplex:
 //!    the averaged frames stream back simultaneously);
-//! 3. the switch's ONN computes Q(mean) in flight; receivers snap/decode
-//!    and dequantize.
+//! 3. the switch's ONN computes Q(mean) in flight as one batched frame
+//!    set (per-traversal setup amortized across the whole chunk);
+//!    receivers snap/decode and dequantize.
 //!
-//! Optional residual-error injection models a <100%-accurate ONN
+//! All word/float scratch comes from recycled [`BufferPool`]s, so the
+//! steady-state pipeline performs no per-step allocation. Optional
+//! residual-error injection models a <100%-accurate ONN
 //! (Table II → Fig. 7a).
 
 use crate::config::Scenario;
@@ -18,7 +24,8 @@ use crate::optinc::switch::OptIncSwitch;
 use crate::quant::GlobalQuantizer;
 use crate::util::rng::Pcg32;
 
-use super::{AllReduce, CollectiveStats};
+use super::engine::{check_aligned, BufferPool, ChunkedAllReduce, Session, ShardChunk};
+use super::CollectiveStats;
 
 /// OptINC-backed all-reduce.
 pub struct OptIncAllReduce {
@@ -28,6 +35,9 @@ pub struct OptIncAllReduce {
     rng: Pcg32,
     /// Running count of injected word errors (observability).
     pub injected_errors: u64,
+    session: Session,
+    word_pool: BufferPool<u32>,
+    float_pool: BufferPool<f32>,
 }
 
 impl OptIncAllReduce {
@@ -39,6 +49,9 @@ impl OptIncAllReduce {
             error_model,
             rng: Pcg32::seeded(seed),
             injected_errors: 0,
+            session: Session::default(),
+            word_pool: BufferPool::new(),
+            float_pool: BufferPool::new(),
         }
     }
 
@@ -46,36 +59,54 @@ impl OptIncAllReduce {
     pub fn exact(sc: Scenario, seed: u64) -> OptIncAllReduce {
         OptIncAllReduce::new(OptIncSwitch::exact(sc), ErrorModel::perfect(), seed)
     }
+
+    /// Per-chunk sync payload: the block scale broadcast + ack (matches
+    /// `GlobalQuantizer::sync_cost`).
+    fn sync_bytes_per_chunk(&self) -> u64 {
+        4 + (self.switch.scenario.bits as u64).div_ceil(8)
+    }
 }
 
-impl AllReduce for OptIncAllReduce {
+impl ChunkedAllReduce for OptIncAllReduce {
     fn name(&self) -> &'static str {
         "optinc"
     }
 
-    fn all_reduce(&mut self, shards: &mut [Vec<f32>]) -> CollectiveStats {
-        let n = shards.len();
+    fn begin(&mut self, workers: usize, elements: usize) {
         assert_eq!(
-            n,
+            workers,
             self.switch.scenario.servers,
             "collective wired for {} servers",
             self.switch.scenario.servers
         );
-        let len = shards[0].len();
+        self.session.begin(workers, elements);
+    }
 
-        // 1. Global scale exchange (the sync cost).
-        let views: Vec<&[f32]> = shards.iter().map(|s| s.as_slice()).collect();
+    fn reduce_chunk(&mut self, chunks: &mut [ShardChunk]) {
+        let n = self.session.workers();
+        assert_eq!(chunks.len(), n, "switch wired for {n} servers");
+        let (_, len) = check_aligned(chunks);
+
+        // 1. Block scale exchange for this chunk (the sync cost).
+        let views: Vec<&[f32]> = chunks.iter().map(|c| c.data.as_slice()).collect();
         let scale = GlobalQuantizer::global_scale(&views);
 
-        // 2. Quantize each shard to words.
-        let words: Vec<Vec<u32>> = shards
-            .iter()
-            .map(|s| self.quantizer.quantize_vec(s, scale))
-            .collect();
-        let word_views: Vec<&[u32]> = words.iter().map(|w| w.as_slice()).collect();
+        // 2. Quantize each chunk into recycled word buffers.
+        let mut words: Vec<Vec<u32>> = Vec::with_capacity(n);
+        for c in chunks.iter() {
+            let mut buf = self.word_pool.take(len);
+            for (o, &g) in buf.iter_mut().zip(c.data.iter()) {
+                *o = self.quantizer.quantize(g, scale);
+            }
+            words.push(buf);
+        }
 
-        // 3. One traversal of the switch.
-        let mut avg_words = self.switch.average_words(&word_views);
+        // 3. One traversal of the switch, the whole chunk as one batched
+        //    frame set.
+        let word_views: Vec<&[u32]> = words.iter().map(|w| w.as_slice()).collect();
+        let mut avg_words = self.word_pool.take(len);
+        self.switch.average_words_into(&word_views, &mut avg_words);
+        drop(word_views);
 
         // 3b. Residual ONN error injection (Fig. 7a with-errors runs).
         self.injected_errors += self.error_model.inject(
@@ -84,24 +115,37 @@ impl AllReduce for OptIncAllReduce {
             &mut self.rng,
         ) as u64;
 
-        // 4. Broadcast (splitter) + dequantize into every shard.
-        let avg = self.quantizer.dequantize_vec(&avg_words, scale);
-        for s in shards.iter_mut() {
-            s.copy_from_slice(&avg);
+        // 4. Broadcast (splitter) + dequantize into every chunk.
+        let mut avg = self.float_pool.take(len);
+        for (o, &w) in avg.iter_mut().zip(avg_words.iter()) {
+            *o = self.quantizer.dequantize(w, scale);
+        }
+        for c in chunks.iter_mut() {
+            c.data.copy_from_slice(&avg);
         }
 
-        CollectiveStats {
-            bytes_sent_per_server: self.switch.bytes_per_server(len),
-            rounds: 1,
-            // scale broadcast + ack (matches GlobalQuantizer::sync_cost).
-            sync_bytes_per_server: 4 + (self.switch.scenario.bits as u64).div_ceil(8),
-            elements: len,
+        self.float_pool.put(avg);
+        self.word_pool.put(avg_words);
+        for buf in words {
+            self.word_pool.put(buf);
         }
+
+        self.session.chunk_done(
+            len,
+            self.switch.bytes_per_server(len),
+            self.sync_bytes_per_chunk(),
+            1,
+        );
+    }
+
+    fn finish(&mut self) -> CollectiveStats {
+        self.session.finish()
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::engine::ChunkedDriver;
     use super::super::test_support::{max_diff, random_shards};
     use super::super::{exact_mean, AllReduce};
     use super::*;
@@ -130,6 +174,7 @@ mod tests {
         // Single round; payload sent once.
         assert_eq!(stats.rounds, 1);
         assert_eq!(stats.bytes_sent_per_server, 2000);
+        assert_eq!(stats.chunks, 1);
     }
 
     #[test]
@@ -180,5 +225,31 @@ mod tests {
         coll.all_reduce(&mut shards);
         assert!(coll.injected_errors > 1000, "injected {}", coll.injected_errors);
         assert!(max_diff(&shards[0], &clean[0]) > 0.0);
+    }
+
+    #[test]
+    fn chunked_stream_stays_within_global_tolerance() {
+        // Per-chunk block scales are ≤ the global scale, so the chunked
+        // stream must stay within the monolithic error bound.
+        let sc = Scenario::table1(1).unwrap();
+        let base = random_shards(4, 2000, 29);
+        let want = exact_mean(&base);
+        let views: Vec<&[f32]> = base.iter().map(|s| s.as_slice()).collect();
+        let scale = GlobalQuantizer::global_scale(&views);
+
+        let mut coll = OptIncAllReduce::exact(sc, 1);
+        let mut streamed = base.clone();
+        let mut driver = ChunkedDriver::new(300); // non-divisible
+        let stats = driver.all_reduce(&mut coll, &mut streamed);
+
+        let tol = coll.quantizer.max_abs_error(scale) * 2.0 + 1e-6;
+        for s in &streamed {
+            assert!(max_diff(s, &want) <= tol);
+        }
+        assert_eq!(stats.chunks, 7);
+        assert_eq!(stats.bytes_sent_per_server, 2000, "payload still crosses once");
+        // One scale exchange per chunk.
+        assert_eq!(stats.sync_bytes_per_server, 7 * 5);
+        assert_eq!(stats.rounds, 1, "chunk traversals pipeline");
     }
 }

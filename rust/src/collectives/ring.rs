@@ -1,25 +1,38 @@
-//! Chunked ring all-reduce (the paper's baseline, Fig. 1).
+//! Chunked ring all-reduce (the paper's baseline, Fig. 1), ported onto
+//! the streaming engine: each engine chunk runs the full
+//! reduce-scatter + all-gather schedule, and chunks of the stream
+//! pipeline through the ring back-to-back.
 //!
-//! N servers form a logical ring; gradients are partitioned into N
-//! chunks. **Reduce-scatter**: N−1 rounds in which each server sends one
-//! chunk to its successor and accumulates the chunk arriving from its
-//! predecessor; afterwards server n holds the fully-reduced chunk
-//! `(n+1) mod N`. **All-gather**: N−1 more rounds circulating the reduced
-//! chunks. Total `2(N−1)` rounds, each server transmitting
-//! `2(N−1)/N · S` bytes — the `(N−2)/N ≈ 100%` relative overhead the
-//! paper opens with (counting the extra traffic beyond one payload).
+//! N servers form a logical ring; a chunk is partitioned into N
+//! ring-segments. **Reduce-scatter**: N−1 rounds in which each server
+//! sends one segment to its successor and accumulates the segment
+//! arriving from its predecessor; afterwards server n holds the
+//! fully-reduced segment `(n+1) mod N`. **All-gather**: N−1 more rounds
+//! circulating the reduced segments. Total `2(N−1)` rounds, each server
+//! transmitting `2(N−1)/N · S` bytes — the `(N−2)/N ≈ 100%` relative
+//! overhead the paper opens with (counting the extra traffic beyond one
+//! payload).
 //!
 //! The averaging here is *exact* f32 (performed in the servers), which is
 //! what the paper's "baseline: accurate gradient averaging in servers"
 //! means for Fig. 7a.
 
-use super::{AllReduce, CollectiveStats};
+use super::engine::{check_aligned, BufferPool, ChunkedAllReduce, Session, ShardChunk};
+use super::CollectiveStats;
 
 /// Ring all-reduce over f32 gradients.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct RingAllReduce;
+#[derive(Clone, Debug, Default)]
+pub struct RingAllReduce {
+    session: Session,
+    /// Recycled round-snapshot buffers (no per-step allocation).
+    scratch: BufferPool<f32>,
+}
 
 impl RingAllReduce {
+    pub fn new() -> RingAllReduce {
+        RingAllReduce::default()
+    }
+
     /// Analytic bytes-per-server for a payload of `bytes` (the Fig. 6
     /// line): `2(N−1)/N · bytes`.
     pub fn bytes_per_server(n: usize, bytes: u64) -> u64 {
@@ -32,86 +45,97 @@ impl RingAllReduce {
     }
 }
 
-impl AllReduce for RingAllReduce {
+impl ChunkedAllReduce for RingAllReduce {
     fn name(&self) -> &'static str {
         "ring"
     }
 
-    fn all_reduce(&mut self, shards: &mut [Vec<f32>]) -> CollectiveStats {
-        let n = shards.len();
-        assert!(n >= 2, "ring needs at least two workers");
-        let len = shards[0].len();
-        assert!(shards.iter().all(|s| s.len() == len));
+    fn begin(&mut self, workers: usize, elements: usize) {
+        assert!(workers >= 2, "ring needs at least two workers");
+        self.session.begin(workers, elements);
+    }
 
-        // Chunk boundaries (last chunk absorbs the remainder).
+    fn reduce_chunk(&mut self, chunks: &mut [ShardChunk]) {
+        let n = self.session.workers();
+        assert_eq!(chunks.len(), n, "ring wired for {n} workers");
+        let (_, len) = check_aligned(chunks);
+
+        // Ring-segment boundaries (last segment absorbs the remainder).
         let bounds: Vec<(usize, usize)> = (0..n)
-            .map(|c| {
-                let lo = c * len / n;
-                let hi = (c + 1) * len / n;
-                (lo, hi)
-            })
+            .map(|c| (c * len / n, (c + 1) * len / n))
             .collect();
         let mut bytes_sent = vec![0u64; n];
 
-        // Reduce-scatter: in round r, server s sends chunk (s − r) mod n
+        // Reduce-scatter: in round r, server s sends segment (s − r) mod n
         // to (s+1) mod n, which accumulates into its copy.
         for r in 0..n - 1 {
-            // Snapshot the outgoing chunks first (simultaneous exchange).
-            let outgoing: Vec<Vec<f32>> = (0..n)
-                .map(|s| {
-                    let c = (s + n - r) % n;
-                    let (lo, hi) = bounds[c];
-                    bytes_sent[s] += ((hi - lo) * 4) as u64;
-                    shards[s][lo..hi].to_vec()
-                })
-                .collect();
+            // Snapshot the outgoing segments first (simultaneous exchange);
+            // buffers come from the pool, not fresh allocations.
+            let mut outgoing: Vec<Vec<f32>> = Vec::with_capacity(n);
+            for (s, sent) in bytes_sent.iter_mut().enumerate() {
+                let c = (s + n - r) % n;
+                let (lo, hi) = bounds[c];
+                *sent += ((hi - lo) * 4) as u64;
+                let mut buf = self.scratch.take(hi - lo);
+                buf.copy_from_slice(&chunks[s].data[lo..hi]);
+                outgoing.push(buf);
+            }
             for s in 0..n {
                 let src = (s + n - 1) % n;
                 let c = (src + n - r) % n;
                 let (lo, hi) = bounds[c];
-                for (dst, &v) in shards[s][lo..hi].iter_mut().zip(&outgoing[src]) {
+                for (dst, &v) in chunks[s].data[lo..hi].iter_mut().zip(&outgoing[src]) {
                     *dst += v;
                 }
             }
+            for buf in outgoing {
+                self.scratch.put(buf);
+            }
         }
-        // Server s now holds the fully-reduced chunk (s+1) mod n; divide.
-        for (s, shard) in shards.iter_mut().enumerate() {
+        // Server s now holds the fully-reduced segment (s+1) mod n; divide.
+        let inv = 1.0 / n as f32;
+        for (s, chunk) in chunks.iter_mut().enumerate() {
             let c = (s + 1) % n;
             let (lo, hi) = bounds[c];
-            let inv = 1.0 / n as f32;
-            for v in &mut shard[lo..hi] {
+            for v in &mut chunk.data[lo..hi] {
                 *v *= inv;
             }
         }
-        // All-gather: circulate the reduced chunks N−1 rounds.
+        // All-gather: circulate the reduced segments N−1 rounds.
         for r in 0..n - 1 {
-            let outgoing: Vec<Vec<f32>> = (0..n)
-                .map(|s| {
-                    let c = (s + 1 + n - r) % n;
-                    let (lo, hi) = bounds[c];
-                    bytes_sent[s] += ((hi - lo) * 4) as u64;
-                    shards[s][lo..hi].to_vec()
-                })
-                .collect();
+            let mut outgoing: Vec<Vec<f32>> = Vec::with_capacity(n);
+            for (s, sent) in bytes_sent.iter_mut().enumerate() {
+                let c = (s + 1 + n - r) % n;
+                let (lo, hi) = bounds[c];
+                *sent += ((hi - lo) * 4) as u64;
+                let mut buf = self.scratch.take(hi - lo);
+                buf.copy_from_slice(&chunks[s].data[lo..hi]);
+                outgoing.push(buf);
+            }
             for s in 0..n {
                 let src = (s + n - 1) % n;
                 let c = (src + 1 + n - r) % n;
                 let (lo, hi) = bounds[c];
-                shards[s][lo..hi].copy_from_slice(&outgoing[src]);
+                chunks[s].data[lo..hi].copy_from_slice(&outgoing[src]);
+            }
+            for buf in outgoing {
+                self.scratch.put(buf);
             }
         }
 
-        CollectiveStats {
-            bytes_sent_per_server: bytes_sent.iter().copied().max().unwrap_or(0),
-            rounds: Self::rounds(n),
-            sync_bytes_per_server: 0,
-            elements: len,
-        }
+        let max_bytes = bytes_sent.iter().copied().max().unwrap_or(0);
+        self.session
+            .chunk_done(len, max_bytes, 0, Self::rounds(n));
+    }
+
+    fn finish(&mut self) -> CollectiveStats {
+        self.session.finish()
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::engine::ChunkedDriver;
     use super::super::test_support::{max_diff, random_shards};
     use super::super::{exact_mean, AllReduce};
     use super::*;
@@ -121,13 +145,15 @@ mod tests {
         for n in [2, 3, 4, 8, 16] {
             let mut shards = random_shards(n, 1037, n as u64);
             let want = exact_mean(&shards);
-            let mut ring = RingAllReduce;
+            let mut ring = RingAllReduce::new();
             let stats = ring.all_reduce(&mut shards);
             for s in &shards {
                 assert!(max_diff(s, &want) < 1e-5, "n={n}");
             }
             assert_eq!(stats.rounds, 2 * (n as u32 - 1));
             assert_eq!(stats.elements, 1037);
+            assert_eq!(stats.chunks, 1, "one-shot adapter is one chunk");
+            assert_eq!(stats.overlap_fraction, 0.0);
         }
     }
 
@@ -136,7 +162,7 @@ mod tests {
         let n = 4;
         let len = 4000; // divisible by n ⇒ exact formula
         let mut shards = random_shards(n, len, 3);
-        let mut ring = RingAllReduce;
+        let mut ring = RingAllReduce::new();
         let stats = ring.all_reduce(&mut shards);
         let payload = (len * 4) as u64;
         assert_eq!(
@@ -149,10 +175,10 @@ mod tests {
 
     #[test]
     fn uneven_lengths_still_average() {
-        // len not divisible by n exercises the remainder chunk.
+        // len not divisible by n exercises the remainder segment.
         let mut shards = random_shards(8, 1001, 5);
         let want = exact_mean(&shards);
-        let mut ring = RingAllReduce;
+        let mut ring = RingAllReduce::new();
         ring.all_reduce(&mut shards);
         for s in &shards {
             assert!(max_diff(s, &want) < 1e-5);
@@ -162,9 +188,41 @@ mod tests {
     #[test]
     fn all_workers_agree() {
         let mut shards = random_shards(4, 513, 7);
-        RingAllReduce.all_reduce(&mut shards);
+        RingAllReduce::new().all_reduce(&mut shards);
         for s in &shards[1..] {
             assert_eq!(s, &shards[0]);
         }
+    }
+
+    #[test]
+    fn chunked_stream_matches_monolithic() {
+        // Streaming the same payload in odd-sized chunks must give the
+        // same average and total byte volume on divisible segments.
+        let base = random_shards(4, 4096, 11);
+        let want = exact_mean(&base);
+
+        let mut mono = base.clone();
+        let mono_stats = RingAllReduce::new().all_reduce(&mut mono);
+
+        let mut streamed = base.clone();
+        let mut driver = ChunkedDriver::new(512);
+        let mut ring = RingAllReduce::new();
+        let stats = driver.all_reduce(&mut ring, &mut streamed);
+
+        for s in &streamed {
+            assert!(max_diff(s, &want) < 1e-5);
+        }
+        assert_eq!(stats.chunks, 8);
+        assert!((stats.overlap_fraction - 7.0 / 8.0).abs() < 1e-12);
+        assert_eq!(stats.bytes_sent_per_server, mono_stats.bytes_sent_per_server);
+        // Rounds pipeline across chunks: depth stays 2(N−1).
+        assert_eq!(stats.rounds, mono_stats.rounds);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least two workers")]
+    fn single_worker_rejected() {
+        let mut shards = vec![vec![1.0f32; 8]];
+        RingAllReduce::new().all_reduce(&mut shards);
     }
 }

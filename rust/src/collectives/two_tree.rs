@@ -1,4 +1,5 @@
-//! Two-tree (double binary tree) all-reduce — Sanders, Speck & Träff [9].
+//! Two-tree (double binary tree) all-reduce — Sanders, Speck & Träff [9]
+//! — on the streaming engine.
 //!
 //! The intro's "alternative logical topologies" comparator: two
 //! complementary binary trees each reduce+broadcast half the payload, so
@@ -8,18 +9,25 @@
 //! each element is sent up once and down once per tree ⇒ per-server
 //! transmit volume ≈ `2 × payload/2 + 2 × payload/2 = 2·payload` worst
 //! case for internal nodes, ~payload for leaves) and perform the exact
-//! average functionally.
+//! average functionally, chunk by chunk.
 //!
 //! The point reproduced: *every* electrical topology still moves ≥ ~2×
 //! the payload through server NICs and takes O(log N) rounds, while
 //! OptINC moves it once in one traversal.
 
-use super::{exact_mean, AllReduce, CollectiveStats};
+use super::engine::{check_aligned, ChunkedAllReduce, Session, ShardChunk};
+use super::CollectiveStats;
 
-#[derive(Clone, Copy, Debug, Default)]
-pub struct TwoTreeAllReduce;
+#[derive(Clone, Debug, Default)]
+pub struct TwoTreeAllReduce {
+    session: Session,
+}
 
 impl TwoTreeAllReduce {
+    pub fn new() -> TwoTreeAllReduce {
+        TwoTreeAllReduce::default()
+    }
+
     /// Rounds: up + down each tree, pipelined ⇒ ~2·(⌈log2 N⌉ + 1).
     pub fn rounds(n: usize) -> u32 {
         let log = (usize::BITS - (n - 1).leading_zeros()) as u32;
@@ -37,40 +45,63 @@ impl TwoTreeAllReduce {
     }
 }
 
-impl AllReduce for TwoTreeAllReduce {
+impl ChunkedAllReduce for TwoTreeAllReduce {
     fn name(&self) -> &'static str {
         "two-tree"
     }
 
-    fn all_reduce(&mut self, shards: &mut [Vec<f32>]) -> CollectiveStats {
-        let n = shards.len();
-        assert!(n >= 2);
-        let len = shards[0].len();
+    fn begin(&mut self, workers: usize, elements: usize) {
+        assert!(workers >= 2, "two-tree needs at least two workers");
+        self.session.begin(workers, elements);
+    }
+
+    fn reduce_chunk(&mut self, chunks: &mut [ShardChunk]) {
+        let n = self.session.workers();
+        assert_eq!(chunks.len(), n, "two-tree wired for {n} workers");
+        let (_, len) = check_aligned(chunks);
+
         // Functional result: exact mean everywhere (the topology changes
-        // scheduling, not arithmetic).
-        let mean = exact_mean(shards);
-        for s in shards.iter_mut() {
-            s.copy_from_slice(&mean);
+        // scheduling, not arithmetic). Accumulate into the first chunk,
+        // scale, fan back out.
+        let (first, rest) = chunks.split_first_mut().expect("checked non-empty");
+        for c in rest.iter() {
+            for (acc, &v) in first.data.iter_mut().zip(c.data.iter()) {
+                *acc += v;
+            }
         }
-        CollectiveStats {
-            bytes_sent_per_server: Self::bytes_per_server((len * 4) as u64),
-            rounds: Self::rounds(n),
-            sync_bytes_per_server: 0,
-            elements: len,
+        let inv = 1.0 / n as f32;
+        for v in first.data.iter_mut() {
+            *v *= inv;
         }
+        for c in rest.iter_mut() {
+            c.data.copy_from_slice(&first.data);
+        }
+
+        self.session.chunk_done(
+            len,
+            Self::bytes_per_server((len * 4) as u64),
+            0,
+            Self::rounds(n),
+        );
+    }
+
+    fn finish(&mut self) -> CollectiveStats {
+        self.session.finish()
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::engine::ChunkedDriver;
     use super::super::test_support::{max_diff, random_shards};
+    use super::super::{exact_mean, AllReduce};
     use super::*;
 
     #[test]
     fn averages_exactly() {
         let mut shards = random_shards(8, 500, 1);
         let want = exact_mean(&shards);
-        TwoTreeAllReduce.all_reduce(&mut shards);
+        TwoTreeAllReduce::new().all_reduce(&mut shards);
         for s in &shards {
             assert!(max_diff(s, &want) < 1e-6);
         }
@@ -86,7 +117,24 @@ mod tests {
     #[test]
     fn still_moves_twice_the_payload() {
         let mut shards = random_shards(4, 1000, 2);
-        let stats = TwoTreeAllReduce.all_reduce(&mut shards);
+        let stats = TwoTreeAllReduce::new().all_reduce(&mut shards);
         assert!(stats.normalized_comm(4.0) >= 1.9);
+    }
+
+    #[test]
+    fn chunked_stream_matches_monolithic_bytes() {
+        let base = random_shards(4, 1000, 9);
+        let want = exact_mean(&base);
+
+        let mut streamed = base.clone();
+        let mut driver = ChunkedDriver::new(123); // non-divisible chunk
+        let mut tt = TwoTreeAllReduce::new();
+        let stats = driver.all_reduce(&mut tt, &mut streamed);
+        for s in &streamed {
+            assert!(max_diff(s, &want) < 1e-6);
+        }
+        // 2 × payload regardless of chunking.
+        assert_eq!(stats.bytes_sent_per_server, 2 * 1000 * 4);
+        assert_eq!(stats.chunks, 9);
     }
 }

@@ -3,10 +3,14 @@
 //!
 //! Unlike the paper (which plots the closed form), we *measure* the bytes
 //! from the simulator's counters and cross-check the analytic
-//! `2(N−1)/N` / `1.0` values — the bench asserts they agree.
+//! `2(N−1)/N` / `1.0` values — the bench asserts they agree. The chunked
+//! streaming engine is measured alongside the monolithic path: streaming
+//! changes the schedule (overlap), not the byte volume, so its
+//! normalized communication must match.
 
 use anyhow::Result;
 
+use crate::collectives::engine::ChunkedDriver;
 use crate::collectives::optinc::OptIncAllReduce;
 use crate::collectives::ring::RingAllReduce;
 use crate::collectives::two_tree::TwoTreeAllReduce;
@@ -20,7 +24,13 @@ pub struct Fig6Row {
     pub ring_measured: f64,
     pub ring_analytic: f64,
     pub optinc_measured: f64,
+    /// OptINC through the chunked streaming engine (must match the
+    /// monolithic byte volume up to the per-chunk scale syncs).
+    pub optinc_chunked: f64,
     pub two_tree_measured: f64,
+    /// The streaming schedule's overlap (return leg hidden behind
+    /// uploads), reported for the EXPERIMENTS.md pipelining notes.
+    pub chunked_overlap: f64,
 }
 
 /// Normalized communication measured over a synthetic gradient of
@@ -39,12 +49,12 @@ pub fn rows(elements: usize) -> Result<Vec<Fig6Row>> {
 
         // Ring on fp32: element on the wire = 4 bytes.
         let mut shards = make(&mut rng);
-        let ring_stats = RingAllReduce.all_reduce(&mut shards);
+        let ring_stats = RingAllReduce::new().all_reduce(&mut shards);
         let ring_measured = ring_stats.normalized_comm(4.0);
 
         // Two-tree on fp32.
         let mut shards = make(&mut rng);
-        let tt = TwoTreeAllReduce.all_reduce(&mut shards);
+        let tt = TwoTreeAllReduce::new().all_reduce(&mut shards);
         let two_tree_measured = tt.normalized_comm(4.0);
 
         // OptINC: B-bit words on the wire.
@@ -53,12 +63,21 @@ pub fn rows(elements: usize) -> Result<Vec<Fig6Row>> {
         let st = coll.all_reduce(&mut shards);
         let optinc_measured = st.normalized_comm(sc.bits as f64 / 8.0);
 
+        // OptINC streamed in 8 chunks through the engine: same bytes,
+        // plus one per-chunk scale sync.
+        let mut driver = ChunkedDriver::new(elements.div_ceil(8).max(1));
+        let mut shards = make(&mut rng);
+        let st_chunked = driver.all_reduce(&mut coll, &mut shards);
+        let optinc_chunked = st_chunked.normalized_comm(sc.bits as f64 / 8.0);
+
         out.push(Fig6Row {
             servers: n,
             ring_measured,
             ring_analytic: 2.0 * (n as f64 - 1.0) / n as f64,
             optinc_measured,
+            optinc_chunked,
             two_tree_measured,
+            chunked_overlap: st_chunked.overlap_fraction,
         });
     }
     Ok(out)
@@ -67,21 +86,25 @@ pub fn rows(elements: usize) -> Result<Vec<Fig6Row>> {
 pub fn print(elements: usize) -> Result<()> {
     println!("\nFig. 6 — normalized communication data (payload = 1.0)");
     println!(
-        "{:>8} {:>12} {:>12} {:>12} {:>12} {:>14}",
-        "servers", "ring(meas)", "ring(2(N-1)/N)", "overhead", "optinc", "two-tree(ext)"
+        "{:>8} {:>12} {:>12} {:>12} {:>12} {:>12} {:>14}",
+        "servers", "ring(meas)", "ring(2(N-1)/N)", "overhead", "optinc", "opt(chunked)", "two-tree(ext)"
     );
     for r in rows(elements)? {
         println!(
-            "{:>8} {:>12.4} {:>12.4} {:>11.1}% {:>12.4} {:>14.4}",
+            "{:>8} {:>12.4} {:>12.4} {:>11.1}% {:>12.4} {:>12.4} {:>14.4}",
             r.servers,
             r.ring_measured,
             r.ring_analytic,
             (r.ring_analytic - 1.0) * 100.0,
             r.optinc_measured,
+            r.optinc_chunked,
             r.two_tree_measured
         );
     }
-    println!("(paper: ring overhead (N-2)/N = 50%–87.5%; OptINC eliminates it)");
+    println!(
+        "(paper: ring overhead (N-2)/N = 50%–87.5%; OptINC eliminates it; \
+         chunked streaming keeps the byte volume while overlapping the schedule)"
+    );
     Ok(())
 }
 
@@ -111,5 +134,19 @@ mod tests {
         assert!((overhead[0] - 0.5).abs() < 0.01);
         assert!((overhead[1] - 0.75).abs() < 0.01);
         assert!((overhead[2] - 0.875).abs() < 0.01);
+    }
+
+    #[test]
+    fn chunking_preserves_byte_volume() {
+        for r in rows(4000).unwrap() {
+            assert!(
+                (r.optinc_chunked - r.optinc_measured).abs() < 0.01,
+                "N={}: chunked {} vs monolithic {}",
+                r.servers,
+                r.optinc_chunked,
+                r.optinc_measured
+            );
+            assert!(r.chunked_overlap > 0.8, "8-deep stream overlaps 7/8");
+        }
     }
 }

@@ -82,7 +82,7 @@ pub fn run(
     };
 
     // Baseline: exact fp32 ring averaging.
-    let mut ring = RingAllReduce;
+    let mut ring = RingAllReduce::new();
     let mut t = DpTrainer::new(rt.clone(), kind)?;
     let baseline = t.run(workers, steps, &mut ring, seed, log_every)?;
 

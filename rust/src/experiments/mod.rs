@@ -4,6 +4,7 @@
 
 pub mod cascade;
 pub mod fig6;
+#[cfg(feature = "pjrt")]
 pub mod fig7a;
 pub mod fig7b;
 pub mod table1;

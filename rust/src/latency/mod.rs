@@ -131,6 +131,25 @@ impl LatencyBreakdown {
         1.0 - self.optinc_total() / self.ring_total()
     }
 
+    /// Step time with the chunked streaming engine: the gradient streams
+    /// through the switch in `chunks` chunks, so all but the
+    /// pipeline-fill fraction `1/C` of the OptINC communication can hide
+    /// behind the step's compute (compute/communication overlap — the
+    /// SWOT-style win the engine exists for). Communication can never
+    /// hide more than the compute that is available to hide behind.
+    pub fn pipelined_total(&self, chunks: u32) -> f64 {
+        if chunks <= 1 {
+            return self.optinc_total();
+        }
+        let hideable = self.optinc_comm_s * (chunks - 1) as f64 / chunks as f64;
+        self.optinc_total() - hideable.min(self.compute_s)
+    }
+
+    /// Latency reduction of the pipelined engine vs the ring baseline.
+    pub fn pipelined_reduction(&self, chunks: u32) -> f64 {
+        1.0 - self.pipelined_total(chunks) / self.ring_total()
+    }
+
     /// Normalized components (ring total = 1.0), as printed by the bench.
     pub fn normalized(&self) -> [(String, f64); 4] {
         let t = self.ring_total();
@@ -193,6 +212,22 @@ mod tests {
         let r8 = LatencyBreakdown::new(&w, &hw, 8).reduction();
         let r16 = LatencyBreakdown::new(&w, &hw, 16).reduction();
         assert!(r4 < r8 && r8 < r16, "{r4} {r8} {r16}");
+    }
+
+    #[test]
+    fn pipelining_hides_comm_behind_compute() {
+        let hw = HardwareModel::default();
+        for w in [WorkloadModel::resnet50_default(), WorkloadModel::llama_default()] {
+            let b = LatencyBreakdown::new(&w, &hw, 4);
+            let piped = b.pipelined_total(8);
+            assert!(piped < b.optinc_total(), "streaming must help: {piped}");
+            assert!(
+                piped >= b.compute_s - 1e-12,
+                "cannot hide more comm than there is compute"
+            );
+            assert_eq!(b.pipelined_total(1), b.optinc_total(), "C=1 is monolithic");
+            assert!(b.pipelined_reduction(8) > b.reduction());
+        }
     }
 
     #[test]

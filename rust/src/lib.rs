@@ -14,7 +14,11 @@
 //!   ONN forward hot spot, lowered inside the L2 graphs.
 //!
 //! The `runtime` module loads the HLO artifacts through PJRT (the `xla`
-//! crate); python is never on the request path.
+//! crate, behind the non-default `pjrt` feature so the simulator builds
+//! without the vendored XLA toolchain); python is never on the request
+//! path. Gradient traffic flows through the chunked streaming collective
+//! engine (`collectives::engine`): payloads stream as chunks that the
+//! cluster pipeline reduces while later chunks are still uploading.
 //!
 //! See `DESIGN.md` for the paper-to-module map and `EXPERIMENTS.md` for the
 //! reproduced tables/figures.
@@ -31,7 +35,9 @@ pub mod optinc;
 pub mod pam4;
 pub mod photonics;
 pub mod quant;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
+#[cfg(feature = "pjrt")]
 pub mod train;
 pub mod util;
 

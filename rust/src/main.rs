@@ -5,9 +5,15 @@
 
 use anyhow::Result;
 use optinc::cli::{print_usage, Args, Command};
+#[cfg(feature = "pjrt")]
 use optinc::train::WorkloadKind;
 
 const COMMANDS: &[Command] = &[
+    Command {
+        name: "pipeline",
+        about: "Streaming engine demo: pipelined vs monolithic modeled step time",
+        run: cmd_pipeline,
+    },
     Command {
         name: "table1",
         about: "Table I: area ratios + ONN accuracy per scenario",
@@ -87,6 +93,7 @@ fn cmd_fig6(args: &Args) -> Result<()> {
     optinc::experiments::fig6::print(elements)
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_fig7a(args: &Args) -> Result<()> {
     let steps = args.usize_or("steps", 120)?;
     let workers = args.usize_or("workers", 4)?;
@@ -112,6 +119,99 @@ fn cmd_fig7a(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_fig7a(_args: &Args) -> Result<()> {
+    anyhow::bail!("fig7a needs the PJRT path — rebuild with `--features pjrt`")
+}
+
+/// Streaming-engine demo: run the same synthetic data-parallel step
+/// through the monolithic one-shot path and the chunked double-buffered
+/// pipeline, and report the modeled step times.
+fn cmd_pipeline(args: &Args) -> Result<()> {
+    use optinc::cluster::{Cluster, ClusterMetrics, Workload};
+    use optinc::collectives::engine::ChunkedAllReduce;
+    use optinc::collectives::optinc::OptIncAllReduce;
+    use optinc::collectives::ring::RingAllReduce;
+    use optinc::config::Scenario;
+    use optinc::util::rng::Pcg32;
+
+    let workers = args.usize_or("workers", 4)?;
+    let elements = args.usize_or("elements", 1_000_000)?;
+    let steps = args.usize_or("steps", 3)?;
+    let chunk = match args.usize_opt("chunk")? {
+        Some(c) => c.max(1),
+        None => (elements / 16).max(1),
+    };
+    let which = args.str_or("collective", "ring");
+
+    struct Synth {
+        dim: usize,
+    }
+    impl Workload for Synth {
+        fn grad(&mut self, step: usize, worker: usize) -> (Vec<f32>, f64) {
+            let mut rng = Pcg32::seeded((step * 1000 + worker) as u64);
+            let g = (0..self.dim).map(|_| rng.normal() as f32 * 0.1).collect();
+            (g, 0.0)
+        }
+        fn apply(&mut self, _step: usize, _worker: usize, _avg: &[f32]) {}
+    }
+
+    let mut collective: Box<dyn ChunkedAllReduce> = match which.as_str() {
+        "ring" => Box::new(RingAllReduce::new()),
+        "optinc" => {
+            let id = match workers {
+                4 => 1,
+                8 => 2,
+                16 => 3,
+                _ => anyhow::bail!("optinc collective supports 4, 8 or 16 workers"),
+            };
+            Box::new(OptIncAllReduce::exact(Scenario::table1(id)?, 11))
+        }
+        other => anyhow::bail!("unknown collective '{other}' (ring|optinc)"),
+    };
+
+    let cluster = Cluster::new(workers).with_chunk_elems(chunk);
+    let mut piped_metrics = ClusterMetrics::new("pipelined");
+    let piped = cluster.run(
+        steps,
+        |_| Synth { dim: elements },
+        collective.as_mut(),
+        &mut piped_metrics,
+    )?;
+    let mut mono_metrics = ClusterMetrics::new("monolithic");
+    let mono = cluster.run_monolithic(
+        steps,
+        |_| Synth { dim: elements },
+        collective.as_mut(),
+        &mut mono_metrics,
+    )?;
+
+    let p = &piped[0].stats;
+    let m = &mono[0].stats;
+    println!(
+        "\nstreaming engine — {which}, N={workers}, {elements} elements, chunk {chunk}"
+    );
+    println!(
+        "  pipelined : {} chunks, overlap {:.3}, modeled step {:.3} ms",
+        p.chunks,
+        p.overlap_fraction,
+        piped[0].modeled_comm_s * 1e3
+    );
+    println!(
+        "  monolithic: {} chunk,  overlap {:.3}, modeled step {:.3} ms",
+        m.chunks,
+        m.overlap_fraction,
+        mono[0].modeled_comm_s * 1e3
+    );
+    println!(
+        "  speedup   : {:.2}x (bytes identical: {} vs {})",
+        mono[0].modeled_comm_s / piped[0].modeled_comm_s,
+        p.bytes_sent_per_server + p.sync_bytes_per_server,
+        m.bytes_sent_per_server + m.sync_bytes_per_server
+    );
+    Ok(())
+}
+
 fn cmd_fig7b(args: &Args) -> Result<()> {
     let servers = args.usize_or("servers", 4)?;
     optinc::experiments::fig7b::print(servers)
@@ -125,6 +225,12 @@ fn cmd_cascade(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_selftest(_args: &Args) -> Result<()> {
+    anyhow::bail!("selftest needs the PJRT path — rebuild with `--features pjrt`")
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_selftest(args: &Args) -> Result<()> {
     use optinc::config::Scenario;
     use optinc::onn::OnnNetwork;
@@ -228,10 +334,13 @@ fn cmd_info(_args: &Args) -> Result<()> {
     } else {
         println!("  (missing — run `make artifacts`)");
     }
+    #[cfg(feature = "pjrt")]
     match optinc::runtime::Runtime::new() {
         Ok(rt) => println!("PJRT platform : {}", rt.platform()),
         Err(e) => println!("PJRT platform : unavailable ({e})"),
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("PJRT platform : disabled (built without the `pjrt` feature)");
     println!("\nscenarios:");
     for id in 1..=4 {
         let sc = Scenario::table1(id)?;

@@ -208,6 +208,26 @@ impl OnnScratch {
     pub fn output(&self) -> &[f32] {
         &self.a
     }
+
+    /// Pre-size both ping-pong buffers for a `batch`-sample forward
+    /// through `net`, so subsequent [`OnnNetwork::forward_into`] calls at
+    /// that batch size perform no allocation (the streaming switch calls
+    /// this once per chunk size).
+    pub fn reserve_for(&mut self, net: &OnnNetwork, batch: usize) {
+        let widest = net
+            .layers
+            .iter()
+            .map(|l| l.n_in.max(l.n_out))
+            .max()
+            .unwrap_or(0);
+        let cap = batch * widest;
+        if self.a.capacity() < cap {
+            self.a.reserve(cap - self.a.len());
+        }
+        if self.b.capacity() < cap {
+            self.b.reserve(cap - self.b.len());
+        }
+    }
 }
 
 /// Build a small deterministic random network (tests/benches without
@@ -304,5 +324,19 @@ mod tests {
     fn macs_count() {
         let net = random_network(&[4, 8, 2], 0);
         assert_eq!(net.macs_per_sample(), 4 * 8 + 8 * 2);
+    }
+
+    #[test]
+    fn reserve_for_presizes_scratch() {
+        let net = random_network(&[4, 32, 4], 1);
+        let mut scratch = OnnScratch::default();
+        scratch.reserve_for(&net, 5);
+        assert!(scratch.a.capacity() >= 5 * 32);
+        assert!(scratch.b.capacity() >= 5 * 32);
+        // forward_into still agrees with forward after pre-sizing.
+        let x: Vec<f32> = (0..4 * 5).map(|i| (i % 4) as f32).collect();
+        let expect = net.forward(&x, 5);
+        let n = net.forward_into(&x, 5, &mut scratch);
+        assert_eq!(&scratch.output()[..n], &expect[..]);
     }
 }

@@ -57,10 +57,19 @@ impl Preprocess {
 
     /// Batched: `planes` is batch × N × M row-major; returns batch × K.
     pub fn apply_batch(&self, planes: &[f32], batch: usize) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.apply_batch_into(planes, batch, &mut out);
+        out
+    }
+
+    /// Batched into a caller-owned buffer (resized to batch × K) — the
+    /// streaming switch path reuses one buffer across chunks.
+    pub fn apply_batch_into(&self, planes: &[f32], batch: usize, out: &mut Vec<f32>) {
         let m = self.symbols();
         let frame = self.servers * m;
         debug_assert_eq!(planes.len(), batch * frame);
-        let mut out = vec![0.0f32; batch * self.groups];
+        out.clear();
+        out.resize(batch * self.groups, 0.0f32);
         for b in 0..batch {
             let (src, dst) = (
                 &planes[b * frame..(b + 1) * frame],
@@ -68,7 +77,6 @@ impl Preprocess {
             );
             self.apply_frame(src, dst);
         }
-        out
     }
 }
 

@@ -37,6 +37,13 @@ pub struct OptIncSwitch {
     pub splitter: Splitter,
     codec: Pam4Codec,
     scratch: OnnScratch,
+    // Reusable batch-frame buffers: the streaming engine calls
+    // `average_words_into` once per chunk, and after warmup none of
+    // these reallocate.
+    plane_buf: Vec<f32>,
+    input_buf: Vec<f32>,
+    sym_buf: Vec<u8>,
+    sums_buf: Vec<u64>,
 }
 
 impl OptIncSwitch {
@@ -54,6 +61,10 @@ impl OptIncSwitch {
             splitter,
             codec,
             scratch: OnnScratch::default(),
+            plane_buf: Vec::new(),
+            input_buf: Vec::new(),
+            sym_buf: Vec::new(),
+            sums_buf: Vec::new(),
         })
     }
 
@@ -69,9 +80,23 @@ impl OptIncSwitch {
     /// Returns the quantized average word per element — what every server
     /// receives back through the splitter.
     ///
-    /// This is the network traversal: each server transmits its symbols
-    /// exactly once; the averaging happens "in flight".
+    /// Convenience wrapper over [`Self::average_words_into`] (allocates
+    /// the output; the streaming engine uses the `_into` form with
+    /// pooled buffers).
     pub fn average_words(&mut self, shards: &[&[u32]]) -> Vec<u32> {
+        let mut out = Vec::new();
+        self.average_words_into(shards, &mut out);
+        out
+    }
+
+    /// Average a batch of words into `out` (resized to the word count).
+    ///
+    /// This is the network traversal: each server transmits its symbols
+    /// exactly once; the averaging happens "in flight". The whole batch
+    /// moves through the ONN as one frame set, amortizing the
+    /// per-traversal setup; all scratch lives in reusable buffers so a
+    /// steady-state chunk stream performs no allocation.
+    pub fn average_words_into(&mut self, shards: &[&[u32]], out: &mut Vec<u32>) {
         let n = self.scenario.servers;
         assert_eq!(shards.len(), n, "switch wired for {n} servers");
         let count = shards[0].len();
@@ -81,59 +106,65 @@ impl OptIncSwitch {
                 // Q(mean) arithmetically (eq. 3). Accumulate shard-major
                 // (sequential reads per shard) instead of element-major —
                 // ~8× faster on large batches (EXPERIMENTS.md §Perf).
-                let mut sums = vec![0u64; count];
+                self.sums_buf.clear();
+                self.sums_buf.resize(count, 0u64);
                 for s in shards {
-                    for (acc, &w) in sums.iter_mut().zip(s.iter()) {
+                    for (acc, &w) in self.sums_buf.iter_mut().zip(s.iter()) {
                         *acc += w as u64;
                     }
                 }
                 let n64 = n as u64;
-                sums.iter()
-                    .map(|&s| ((s * 2 + n64) / (2 * n64)) as u32)
-                    .collect()
+                out.clear();
+                out.extend(
+                    self.sums_buf
+                        .iter()
+                        .map(|&s| ((s * 2 + n64) / (2 * n64)) as u32),
+                );
             }
-            OnnMode::Native(_) => self.average_words_onn(shards, count),
+            OnnMode::Native(_) => self.average_words_onn(shards, count, out),
         }
     }
 
-    fn average_words_onn(&mut self, shards: &[&[u32]], count: usize) -> Vec<u32> {
+    fn average_words_onn(&mut self, shards: &[&[u32]], count: usize, out: &mut Vec<u32>) {
         let n = self.scenario.servers;
         let m = self.scenario.symbols();
         let k = self.scenario.onn_inputs();
         // Build batch × N × M symbol planes (PAM4 encode per server).
-        let mut planes = vec![0.0f32; count * n * m];
-        let mut sym = vec![0u8; m];
+        self.plane_buf.clear();
+        self.plane_buf.resize(count * n * m, 0.0f32);
+        self.sym_buf.clear();
+        self.sym_buf.resize(m, 0u8);
         for (s, shard) in shards.iter().enumerate() {
             for (i, &w) in shard.iter().enumerate() {
-                self.codec.encode_word_into(w, &mut sym);
+                self.codec.encode_word_into(w, &mut self.sym_buf);
                 let base = i * n * m + s * m;
-                for (j, &v) in sym.iter().enumerate() {
-                    planes[base + j] = v as f32;
+                for (j, &v) in self.sym_buf.iter().enumerate() {
+                    self.plane_buf[base + j] = v as f32;
                 }
             }
         }
         // P: batch × K inputs.
-        let inputs = self.preprocess.apply_batch(&planes, count);
-        debug_assert_eq!(inputs.len(), count * k);
-        // ONN forward.
+        self.preprocess
+            .apply_batch_into(&self.plane_buf, count, &mut self.input_buf);
+        debug_assert_eq!(self.input_buf.len(), count * k);
+        // ONN forward (scratch ping-pong buffers pre-sized once).
         let net = match &self.mode {
             OnnMode::Native(net) => net,
             _ => unreachable!(),
         };
-        let out_len = net.forward_into(&inputs, count, &mut self.scratch);
+        self.scratch.reserve_for(net, count);
+        let out_len = net.forward_into(&self.input_buf, count, &mut self.scratch);
         let outputs = &self.scratch.output()[..out_len];
         // Receiver transceivers snap to PAM4 and decode.
         let m_out = net.output_dim();
-        outputs
-            .chunks_exact(m_out)
-            .map(|frame| {
-                let mut word = 0u32;
-                for &a in frame {
-                    word = (word << 2) | snap_pam4(a) as u32;
-                }
-                word
-            })
-            .collect()
+        out.clear();
+        out.extend(outputs.chunks_exact(m_out).map(|frame| {
+            let mut word = 0u32;
+            for &a in frame {
+                word = (word << 2) | snap_pam4(a) as u32;
+            }
+            word
+        }));
     }
 
     /// Bytes each server transmits to move `count` words through the

@@ -1,7 +1,10 @@
 //! Property-based tests on collective invariants (the proptest-lite
 //! harness in util::proptest): agreement, permutation-invariance,
-//! idempotence on identical shards, byte-accounting closed forms.
+//! idempotence on identical shards, byte-accounting closed forms, and
+//! chunked-streaming equivalence with the exact-mean oracle for chunk
+//! sizes that do not divide the element count.
 
+use optinc::collectives::engine::ChunkedDriver;
 use optinc::collectives::hierarchical::HierarchicalOptInc;
 use optinc::collectives::optinc::OptIncAllReduce;
 use optinc::collectives::ring::RingAllReduce;
@@ -31,8 +34,8 @@ fn prop_all_workers_agree_after_any_collective() {
         |rng| gen_shards(rng, 4, 512),
         |shards| {
             let collectives: Vec<Box<dyn AllReduce>> = vec![
-                Box::new(RingAllReduce),
-                Box::new(TwoTreeAllReduce),
+                Box::new(RingAllReduce::new()),
+                Box::new(TwoTreeAllReduce::new()),
                 Box::new(OptIncAllReduce::exact(Scenario::table1(1).unwrap(), 1)),
             ];
             for mut c in collectives {
@@ -88,7 +91,7 @@ fn prop_identical_shards_are_fixed_points() {
         },
         |shard| {
             let mut shards: Vec<Vec<f32>> = (0..4).map(|_| shard.clone()).collect();
-            RingAllReduce.all_reduce(&mut shards);
+            RingAllReduce::new().all_reduce(&mut shards);
             for (a, b) in shards[0].iter().zip(shard) {
                 if (a - b).abs() > 1e-6 {
                     return Err(format!("ring moved a fixed point: {a} vs {b}"));
@@ -168,6 +171,125 @@ fn prop_cascade_remainder_equals_flat_for_any_group_count() {
     );
 }
 
+/// The ISSUE-2 satellite matrix: every chunked collective must match
+/// `exact_mean` (exactly for ring/two-tree, within quantization
+/// tolerance for the OptINC paths) for chunk sizes that do not divide
+/// the element count — 1, 7, len−1, len, len+1 — across 2–16 workers.
+#[test]
+fn prop_chunked_collectives_match_exact_mean() {
+    forall(
+        Config { cases: 12, seed: 7 },
+        |rng| {
+            let len = 10 + rng.gen_range(120) as usize;
+            (len, rng.next_u64())
+        },
+        |&(len, seed)| {
+            let chunk_sizes = [1usize, 7, len - 1, len, len + 1];
+            let mut data_rng = Pcg32::seeded(seed);
+            let mut gen = |n: usize| -> Vec<Vec<f32>> {
+                (0..n)
+                    .map(|_| {
+                        (0..len)
+                            .map(|_| (data_rng.normal() * 0.2) as f32)
+                            .collect()
+                    })
+                    .collect()
+            };
+
+            // Exact collectives: ring (2–16 workers) and two-tree.
+            for n in [2usize, 3, 5, 8, 13, 16] {
+                let base = gen(n);
+                let want = exact_mean(&base);
+                for &cs in &chunk_sizes {
+                    for flavor in ["ring", "two-tree"] {
+                        let mut work = base.clone();
+                        let mut driver = ChunkedDriver::new(cs);
+                        let stats = match flavor {
+                            "ring" => {
+                                driver.all_reduce(&mut RingAllReduce::new(), &mut work)
+                            }
+                            _ => driver
+                                .all_reduce(&mut TwoTreeAllReduce::new(), &mut work),
+                        };
+                        if stats.elements != len {
+                            return Err(format!("{flavor}: wrong element count"));
+                        }
+                        if stats.chunks as usize != len.div_ceil(cs) {
+                            return Err(format!("{flavor}: wrong chunk count"));
+                        }
+                        for (w, s) in work.iter().enumerate() {
+                            for (i, (a, b)) in s.iter().zip(&want).enumerate() {
+                                if (a - b).abs() > 1e-5 {
+                                    return Err(format!(
+                                        "{flavor} n={n} chunk={cs} worker={w} \
+                                         elem {i}: {a} vs {b}"
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+
+            // Quantized collectives: OptINC flat (N = scenario servers)
+            // and the hierarchical cascade (multiples of the fan-in).
+            for (sid, n) in [(1usize, 4usize), (2, 8), (3, 16)] {
+                let base = gen(n);
+                let want = exact_mean(&base);
+                let views: Vec<&[f32]> = base.iter().map(|s| s.as_slice()).collect();
+                let scale = GlobalQuantizer::global_scale(&views);
+                let q = GlobalQuantizer::new(8);
+                let tol = q.max_abs_error(scale) * 2.0 + 1e-6;
+                for &cs in &chunk_sizes {
+                    let mut work = base.clone();
+                    let mut driver = ChunkedDriver::new(cs);
+                    let mut coll = OptIncAllReduce::exact(Scenario::table1(sid).unwrap(), 1);
+                    driver.all_reduce(&mut coll, &mut work);
+                    for s in &work[1..] {
+                        if s != &work[0] {
+                            return Err(format!("optinc n={n} chunk={cs}: disagreement"));
+                        }
+                    }
+                    for (a, b) in work[0].iter().zip(&want) {
+                        if (a - b).abs() > tol {
+                            return Err(format!(
+                                "optinc n={n} chunk={cs}: err {} > tol {tol}",
+                                (a - b).abs()
+                            ));
+                        }
+                    }
+                }
+            }
+            for n in [8usize, 16] {
+                let base = gen(n);
+                let want = exact_mean(&base);
+                let views: Vec<&[f32]> = base.iter().map(|s| s.as_slice()).collect();
+                let scale = GlobalQuantizer::global_scale(&views);
+                let q = GlobalQuantizer::new(8);
+                let tol = q.max_abs_error(scale) * 4.0 + 1e-6; // two quantized hops
+                for &cs in &chunk_sizes {
+                    let mut work = base.clone();
+                    let mut driver = ChunkedDriver::new(cs);
+                    let mut coll = HierarchicalOptInc::new(
+                        Scenario::table1(1).unwrap(),
+                        CascadeMode::Remainder,
+                    );
+                    driver.all_reduce(&mut coll, &mut work);
+                    for (a, b) in work[0].iter().zip(&want) {
+                        if (a - b).abs() > tol {
+                            return Err(format!(
+                                "cascade n={n} chunk={cs}: err {} > tol {tol}",
+                                (a - b).abs()
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_ring_byte_accounting_matches_closed_form() {
     forall(
@@ -179,7 +301,7 @@ fn prop_ring_byte_accounting_matches_closed_form() {
         },
         |&(n, len)| {
             let mut shards: Vec<Vec<f32>> = (0..n).map(|_| vec![1.0; len]).collect();
-            let stats = RingAllReduce.all_reduce(&mut shards);
+            let stats = RingAllReduce::new().all_reduce(&mut shards);
             let want = RingAllReduce::bytes_per_server(n, (len * 4) as u64);
             if stats.bytes_sent_per_server == want {
                 Ok(())

@@ -4,6 +4,7 @@
 //! with the OptINC collective.
 
 use optinc::cluster::{Cluster, ClusterMetrics, Workload};
+use optinc::collectives::engine::ChunkedAllReduce;
 use optinc::collectives::hierarchical::HierarchicalOptInc;
 use optinc::collectives::optinc::OptIncAllReduce;
 use optinc::collectives::ring::RingAllReduce;
@@ -35,7 +36,7 @@ fn optinc_collective_tracks_ring_within_quantization_floor() {
         let scale = GlobalQuantizer::global_scale(&views);
 
         let mut ring_shards = base.clone();
-        RingAllReduce.all_reduce(&mut ring_shards);
+        RingAllReduce::new().all_reduce(&mut ring_shards);
         let mut oi_shards = base.clone();
         let mut oi = OptIncAllReduce::exact(sc, 1);
         oi.all_reduce(&mut oi_shards);
@@ -117,8 +118,10 @@ fn cluster_training_converges_with_optinc_collective() {
         }
     }
 
-    let run = |coll: &mut dyn AllReduce| -> (f64, f64) {
-        let cluster = Cluster::new(4);
+    let run = |coll: &mut dyn ChunkedAllReduce| -> (f64, f64) {
+        // Stream in small chunks so the pipelined path is exercised on a
+        // real convergence run (dim 32 → 8 chunks of 4).
+        let cluster = Cluster::new(4).with_chunk_elems(4);
         let mut metrics = ClusterMetrics::new("linreg");
         let records = cluster
             .run(
@@ -134,7 +137,7 @@ fn cluster_training_converges_with_optinc_collective() {
         (records[0].mean_loss, records.last().unwrap().mean_loss)
     };
 
-    let (ring_first, ring_last) = run(&mut RingAllReduce);
+    let (ring_first, ring_last) = run(&mut RingAllReduce::new());
     let sc = Scenario::table1(4).unwrap(); // 16-bit for a tight floor
     let (oi_first, oi_last) = run(&mut OptIncAllReduce::exact(sc, 3));
 

@@ -4,6 +4,8 @@
 //! message) when `make artifacts` has not run — the handwritten-HLO test
 //! always runs.
 
+#![cfg(feature = "pjrt")]
+
 use optinc::config::{artifacts_dir, Scenario};
 use optinc::onn::OnnNetwork;
 use optinc::optinc::switch::{OnnMode, OptIncSwitch};
@@ -105,7 +107,7 @@ fn lm_grad_artifact_runs_and_adam_applies() {
     let rt = Arc::new(rt);
     let mut trainer = DpTrainer::new(rt.clone(), WorkloadKind::Lm).unwrap();
     let p0 = trainer.params.clone();
-    let mut ring = optinc::collectives::ring::RingAllReduce;
+    let mut ring = optinc::collectives::ring::RingAllReduce::new();
     let logs = trainer.run(2, 3, &mut ring, 42, 0).unwrap();
     assert_eq!(logs.len(), 3);
     // Loss should be near ln(vocab) at init and finite.
