@@ -1,0 +1,95 @@
+//! Native ONN training throughput — the hardware-aware trainer's hot
+//! loop (`onn::train`). Measures optimizer steps/s and training
+//! samples/s for unconstrained vs hardware-aware (projected) training,
+//! isolates the reprojection overhead, and records the final held-out
+//! relative error of a short hardware-aware run as a quality scalar.
+
+use optinc::config::Scenario;
+use optinc::onn::random_network;
+use optinc::onn::train::{
+    evaluate, train_for_scenario, AveragingDataset, HardwareMode, Optimizer, TrainConfig, Trainer,
+};
+use optinc::photonics::approx::project_weights_f32;
+use optinc::photonics::noise::NoiseModel;
+use optinc::util::bench::{black_box, BenchSuite};
+
+fn bench_scenario() -> Scenario {
+    // Reduced structure: big enough to exercise every code path
+    // (multi-block projection, ReLU chain), small enough that the bench
+    // finishes quickly even in quick mode.
+    Scenario {
+        id: 0,
+        bits: 8,
+        servers: 4,
+        layers: vec![4, 32, 32, 4],
+        approx_layers: vec![1, 2, 3],
+    }
+}
+
+fn cfg(hardware: HardwareMode) -> TrainConfig {
+    TrainConfig {
+        steps: 0, // stepped manually below
+        batch: 64,
+        lr: 0.01,
+        optimizer: Optimizer::adam(),
+        hardware,
+        seed: 1,
+    }
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("train_onn");
+    let sc = bench_scenario();
+
+    // Optimizer-step throughput, unconstrained vs hardware-aware.
+    for (name, hardware) in [
+        ("plain", HardwareMode::Unconstrained),
+        (
+            "aware",
+            HardwareMode::Aware {
+                reproject_every: 1,
+                noise: NoiseModel::new(0.01, 0.0, 0),
+                approx_layers: vec![1, 2, 3],
+            },
+        ),
+    ] {
+        let c = cfg(hardware);
+        let mut trainer = Trainer::new(random_network(&sc.layers, 3), c.clone()).unwrap();
+        let mut data = AveragingDataset::new(&sc, 7);
+        let (mut x, mut t) = (Vec::new(), Vec::new());
+        data.sample_batch(c.batch, &mut x, &mut t);
+        suite.bench_throughput(
+            &format!("train_step/{name}/b{}", c.batch),
+            c.batch as f64,
+            "sample",
+            || {
+                black_box(trainer.train_step(&x, &t, c.batch));
+            },
+        );
+    }
+
+    // The projection operator alone (the hardware-aware overhead).
+    for n in [16usize, 32, 64] {
+        let net = random_network(&[n, n], 5);
+        let mut w = net.layers[0].weight.clone();
+        suite.bench(&format!("reproject/{n}x{n}"), || {
+            project_weights_f32(&mut w, n, n);
+            black_box(&w);
+        });
+    }
+
+    // Quality scalar: held-out relative error after a short aware run
+    // (tracks regressions in the training math, not just its speed).
+    let quick = std::env::var("OPTINC_BENCH_QUICK").is_ok_and(|v| v == "1");
+    let steps = if quick { 60 } else { 300 };
+    let tcfg = TrainConfig {
+        steps,
+        ..cfg(HardwareMode::aware_default())
+    };
+    let (net, report) = train_for_scenario(&sc, &tcfg);
+    let mut held = AveragingDataset::new(&sc, 99);
+    suite.record_scalar("aware/tail_loss", report.tail_loss(20), "mse");
+    suite.record_scalar("aware/heldout_rel_err", evaluate(&net, &mut held, 2048), "rel");
+
+    suite.finish();
+}

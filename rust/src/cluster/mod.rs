@@ -28,6 +28,13 @@
 //! keeps the collective itself single-threaded (the paper's switch is
 //! one physical device) while gradient *computation* runs genuinely
 //! parallel.
+//!
+//! The collective handed to [`Cluster::run`] can carry a freshly
+//! hardware-aware-trained switch ONN
+//! ([`OptIncAllReduce::trained`](crate::collectives::optinc::OptIncAllReduce::trained)
+//! — no `.otsr` artifact needed): `optinc-repro pipeline --collective
+//! optinc-trained` streams real gradients through a network produced by
+//! `onn::train` seconds earlier.
 
 pub mod metrics;
 

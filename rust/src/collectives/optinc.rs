@@ -60,6 +60,20 @@ impl OptIncAllReduce {
         OptIncAllReduce::new(OptIncSwitch::exact(sc), ErrorModel::perfect(), seed)
     }
 
+    /// Variant whose switch ONN is hardware-aware trained natively at
+    /// construction ([`OptIncSwitch::trained`]): the full paper datapath
+    /// with a *real* (imperfect) network instead of the oracle, and no
+    /// `.otsr` artifact required. Residual errors come from the network
+    /// itself, so no synthetic [`ErrorModel`] is layered on top.
+    pub fn trained(
+        sc: Scenario,
+        cfg: &crate::onn::train::TrainConfig,
+        seed: u64,
+    ) -> anyhow::Result<OptIncAllReduce> {
+        let switch = OptIncSwitch::trained(sc, cfg)?;
+        Ok(OptIncAllReduce::new(switch, ErrorModel::perfect(), seed))
+    }
+
     /// Per-chunk sync payload: the block scale broadcast + ack (matches
     /// `GlobalQuantizer::sync_cost`).
     fn sync_bytes_per_chunk(&self) -> u64 {

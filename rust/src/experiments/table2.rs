@@ -1,5 +1,11 @@
 //! Table II: scenario-4 approximated-layer sweep — accuracy, error
 //! values with relative ratios, normalized area.
+//!
+//! Two measured-accuracy sources per row, both optional:
+//! - the python training path (`onn_t2_{i}.metrics.json`);
+//! - the native hardware-aware trainer (`onn_t2_native_{i}.metrics.json`,
+//!   written by `optinc-repro train-onn --table2-row <i+1>`), reported as
+//!   the trained-vs-exact "native" column.
 
 use anyhow::Result;
 
@@ -15,6 +21,9 @@ pub struct Table2Row {
     pub paper_accuracy: f64,
     /// Measured (accuracy, error histogram) when trained.
     pub measured: Option<(f64, Vec<(i64, f64)>)>,
+    /// Native hardware-aware trainer result: (word accuracy vs the exact
+    /// oracle, relative word error) when `train-onn` has run for this row.
+    pub native: Option<(f64, f64)>,
 }
 
 pub const PAPER: [(&str, f64, f64); 5] = [
@@ -47,12 +56,27 @@ pub fn rows() -> Result<Vec<Table2Row>> {
                 }
                 (acc, hist)
             });
+        let native_path = dir.join(format!("onn_t2_native_{i}.metrics.json"));
+        let native = std::fs::read_to_string(&native_path)
+            .ok()
+            .and_then(|s| Json::parse(&s).ok())
+            // Only hardware-aware runs count here: a `train-onn --mode
+            // plain` run writes the same stem but must not masquerade as
+            // the paper's hardware-aware trained-vs-exact number.
+            .filter(|j| j.get("mode").as_str() == Some("aware"))
+            .and_then(|j| {
+                Some((
+                    j.get("accuracy").as_f64()?,
+                    j.get("rel_word_err").as_f64().unwrap_or(f64::NAN),
+                ))
+            });
         out.push(Table2Row {
             layers_label: label,
             area_ratio: area::area_ratio(&sc),
             paper_area_ratio: PAPER[i].2,
             paper_accuracy: PAPER[i].1,
             measured,
+            native,
         });
     }
     Ok(out)
@@ -61,24 +85,33 @@ pub fn rows() -> Result<Vec<Table2Row>> {
 pub fn print() -> Result<()> {
     println!("\nTable II — scenario 4 approximated-layer sweep");
     println!(
-        "{:<16} {:>9} {:>9} {:>12} {:>12}  top error values (ratio)",
-        "layers", "area", "paper", "paper acc", "measured acc"
+        "{:<16} {:>9} {:>9} {:>12} {:>12} {:>14}  top error values (ratio)",
+        "layers", "area", "paper", "paper acc", "measured acc", "native acc"
     );
     for r in rows()? {
         let (acc, hist) = match &r.measured {
             Some((a, h)) => (format!("{:.5}%", a * 100.0), summarize_hist(h)),
             None => ("not trained".to_string(), String::new()),
         };
+        let native = match r.native {
+            Some((a, rel)) => format!("{:.3}% (e{:.4})", a * 100.0, rel),
+            None => "run train-onn".to_string(),
+        };
         println!(
-            "{:<16} {:>8.1}% {:>8.1}% {:>11.5}% {:>12}  {}",
+            "{:<16} {:>8.1}% {:>8.1}% {:>11.5}% {:>12} {:>14}  {}",
             r.layers_label,
             r.area_ratio * 100.0,
             r.paper_area_ratio * 100.0,
             r.paper_accuracy * 100.0,
             acc,
+            native,
             hist
         );
     }
+    println!(
+        "(native acc = trained-vs-exact word accuracy from \
+         `optinc-repro train-onn --table2-row <n>`; e = relative word error)"
+    );
     Ok(())
 }
 

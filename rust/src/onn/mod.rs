@@ -1,5 +1,5 @@
-//! Native ONN executor: runs a trained MLP (loaded from `.otsr`) on the
-//! CPU without PJRT.
+//! Native ONN executor **and trainer**: runs (and now produces) switch
+//! MLPs on the CPU without PJRT.
 //!
 //! Two execution paths exist for the switch ONN:
 //! - **PJRT** (`runtime::` + `artifacts/switch_*.hlo.txt`) — the production
@@ -8,15 +8,24 @@
 //!   cross-validation against the python oracle, and benches that must run
 //!   before artifacts exist.
 //!
+//! Weights come from three sources, all interchangeable:
+//! - `.otsr` files exported by the python build path ([`OnnNetwork::load`]),
+//! - [`random_network`] (deterministic, for tests/benches),
+//! - the native **hardware-aware trainer** ([`train`]), which produces
+//!   `Σ·U`-realizable weights from scratch — no python, no artifacts —
+//!   and round-trips through the same `.otsr` format.
+//!
 //! Weights are stored exactly as python exports them: `w{i}` of shape
 //! `(n_in, n_out)` row-major, `b{i}` of shape `(n_out,)`.
+
+pub mod train;
 
 use std::path::Path;
 
 use anyhow::{bail, ensure, Result};
 
 use crate::config::Scenario;
-use crate::util::tensorfile::TensorFile;
+use crate::util::tensorfile::{Tensor, TensorFile};
 
 /// One dense layer, weights in (n_in, n_out) row-major layout.
 #[derive(Clone, Debug)]
@@ -29,13 +38,29 @@ pub struct Layer {
 }
 
 impl Layer {
-    /// y[b] = act(x[b] @ W + bias) for a row-major batch.
+    /// y[b] = act(x[b] @ W + bias) for a row-major batch:
+    /// [`Self::forward_linear`] followed by the layer's activation.
+    pub fn forward(&self, x: &[f32], batch: usize, out: &mut Vec<f32>) {
+        self.forward_linear(x, batch, out);
+        if self.relu {
+            for o in out.iter_mut() {
+                if *o < 0.0 {
+                    *o = 0.0;
+                }
+            }
+        }
+    }
+
+    /// The affine part only: z[b] = x[b] @ W + bias (no activation).
     ///
     /// Hot path of the native switch: register-blocked over 4 batch rows
     /// so each weight row is loaded once per 4 samples (the weight matrix
     /// is the dominant memory traffic at these shapes). ~1.8× over the
-    /// row-at-a-time version — see EXPERIMENTS.md §Perf.
-    pub fn forward(&self, x: &[f32], batch: usize, out: &mut Vec<f32>) {
+    /// row-at-a-time version — see EXPERIMENTS.md §Perf. Exposed
+    /// separately so the trainer (`onn::train`) can inject optical noise
+    /// between the optical matmul and the (electronic) activation without
+    /// duplicating this kernel.
+    pub fn forward_linear(&self, x: &[f32], batch: usize, out: &mut Vec<f32>) {
         debug_assert_eq!(x.len(), batch * self.n_in);
         out.clear();
         out.resize(batch * self.n_out, 0.0);
@@ -81,13 +106,6 @@ impl Layer {
                 let wrow = &self.weight[i * n_out..(i + 1) * n_out];
                 for (o, &w) in orow.iter_mut().zip(wrow.iter()) {
                     *o += xi * w;
-                }
-            }
-        }
-        if self.relu {
-            for o in out.iter_mut() {
-                if *o < 0.0 {
-                    *o = 0.0;
                 }
             }
         }
@@ -194,6 +212,43 @@ impl OnnNetwork {
     /// Total multiply-accumulates per sample.
     pub fn macs_per_sample(&self) -> usize {
         self.layers.iter().map(|l| l.n_in * l.n_out).sum()
+    }
+
+    /// Export in the python `w{i}`/`b{i}` layout (the exact shape
+    /// [`Self::from_tensorfile`] reads back).
+    pub fn to_tensorfile(&self) -> TensorFile {
+        let mut tf = TensorFile::new();
+        for (i, l) in self.layers.iter().enumerate() {
+            tf.push(Tensor::f32(
+                &format!("w{}", i + 1),
+                vec![l.n_in, l.n_out],
+                l.weight.clone(),
+            ));
+            tf.push(Tensor::f32(&format!("b{}", i + 1), vec![l.n_out], l.bias.clone()));
+        }
+        tf
+    }
+
+    /// Save as `.otsr` so [`OnnNetwork::load`] round-trips — natively
+    /// trained networks (`onn::train`, `optinc-repro train-onn`) ship
+    /// through the same artifact format as python-trained ones.
+    ///
+    /// The format encodes activations *implicitly* (ReLU on every layer
+    /// but the last), so a network with any other pattern is rejected
+    /// here rather than silently loading back as a different function.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let last = self.layers.len().saturating_sub(1);
+        for (i, l) in self.layers.iter().enumerate() {
+            ensure!(
+                l.relu == (i != last),
+                "`.otsr` cannot encode this activation pattern: layer {} has \
+                 relu={} but the format implies ReLU on all layers except the \
+                 last — it would not round-trip through load()",
+                i + 1,
+                l.relu
+            );
+        }
+        self.to_tensorfile().save(path)
     }
 }
 
@@ -318,6 +373,31 @@ mod tests {
         net.check_scenario(&sc).unwrap();
         let sc2 = crate::config::Scenario::table1(2).unwrap();
         assert!(net.check_scenario(&sc2).is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let net = random_network(&[4, 16, 4], 77);
+        let dir = std::env::temp_dir().join("optinc_onn_roundtrip");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("native.otsr");
+        net.save(&p).unwrap();
+        let back = OnnNetwork::load(&p).unwrap();
+        assert_eq!(back.layers.len(), net.layers.len());
+        for (a, b) in net.layers.iter().zip(&back.layers) {
+            assert_eq!(a.weight, b.weight);
+            assert_eq!(a.bias, b.bias);
+            assert_eq!(a.relu, b.relu);
+        }
+    }
+
+    #[test]
+    fn save_rejects_unencodable_activation_pattern() {
+        let mut net = random_network(&[4, 8, 4], 1);
+        net.layers[1].relu = true; // ReLU head — not representable in .otsr
+        let p = std::env::temp_dir().join("optinc_onn_badrelu.otsr");
+        let err = net.save(&p).unwrap_err();
+        assert!(err.to_string().contains("activation pattern"));
     }
 
     #[test]

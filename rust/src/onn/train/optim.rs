@@ -1,0 +1,132 @@
+//! First-order optimizers for the native trainer.
+//!
+//! Plain SGD with optional momentum, and Adam (Kingma & Ba) with bias
+//! correction. Both operate on flat `f32` parameter tensors — one state
+//! buffer per tensor (a layer's weight or bias), allocated lazily at the
+//! tensor's size on first use.
+
+/// Optimizer selection + hyperparameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Optimizer {
+    /// SGD; `momentum = 0.0` disables the velocity buffer semantics
+    /// (the buffer still exists but reduces to the raw gradient).
+    Sgd { momentum: f32 },
+    Adam { beta1: f32, beta2: f32, eps: f32 },
+}
+
+impl Optimizer {
+    /// Common default: Adam(0.9, 0.999, 1e-8).
+    pub fn adam() -> Optimizer {
+        Optimizer::Adam {
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+        }
+    }
+
+    pub fn sgd(momentum: f32) -> Optimizer {
+        Optimizer::Sgd { momentum }
+    }
+}
+
+/// Per-tensor optimizer state (velocity for SGD; first/second moments for
+/// Adam — `v` doubles as the SGD velocity so switching costs nothing).
+#[derive(Clone, Debug, Default)]
+pub struct TensorState {
+    m: Vec<f32>,
+    v: Vec<f32>,
+    /// Step count for Adam bias correction.
+    t: u32,
+}
+
+impl TensorState {
+    fn ensure(&mut self, n: usize, adam: bool) {
+        if self.v.len() != n {
+            self.v = vec![0.0; n];
+        }
+        if adam && self.m.len() != n {
+            self.m = vec![0.0; n];
+        }
+    }
+
+    /// In-place update `params -= lr * step(grad)` for one tensor.
+    pub fn apply(&mut self, opt: &Optimizer, lr: f32, params: &mut [f32], grad: &[f32]) {
+        debug_assert_eq!(params.len(), grad.len());
+        match *opt {
+            Optimizer::Sgd { momentum } => {
+                self.ensure(params.len(), false);
+                if momentum == 0.0 {
+                    for (p, &g) in params.iter_mut().zip(grad) {
+                        *p -= lr * g;
+                    }
+                } else {
+                    for ((p, vel), &g) in params.iter_mut().zip(self.v.iter_mut()).zip(grad) {
+                        *vel = momentum * *vel + g;
+                        *p -= lr * *vel;
+                    }
+                }
+            }
+            Optimizer::Adam { beta1, beta2, eps } => {
+                self.ensure(params.len(), true);
+                self.t += 1;
+                let bc1 = 1.0 - beta1.powi(self.t as i32);
+                let bc2 = 1.0 - beta2.powi(self.t as i32);
+                for i in 0..params.len() {
+                    let g = grad[i];
+                    self.m[i] = beta1 * self.m[i] + (1.0 - beta1) * g;
+                    self.v[i] = beta2 * self.v[i] + (1.0 - beta2) * g * g;
+                    let mhat = self.m[i] / bc1;
+                    let vhat = self.v[i] / bc2;
+                    params[i] -= lr * mhat / (vhat.sqrt() + eps);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_plain_is_exact_step() {
+        let mut st = TensorState::default();
+        let mut p = vec![1.0f32, -2.0];
+        st.apply(&Optimizer::sgd(0.0), 0.1, &mut p, &[0.5, -1.0]);
+        assert!((p[0] - 0.95).abs() < 1e-7);
+        assert!((p[1] + 1.9).abs() < 1e-7);
+    }
+
+    #[test]
+    fn sgd_momentum_accumulates() {
+        let mut st = TensorState::default();
+        let mut p = vec![0.0f32];
+        st.apply(&Optimizer::sgd(0.9), 1.0, &mut p, &[1.0]); // v=1, p=-1
+        st.apply(&Optimizer::sgd(0.9), 1.0, &mut p, &[1.0]); // v=1.9, p=-2.9
+        assert!((p[0] + 2.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        // With bias correction, |Δp| of the first Adam step ≈ lr
+        // regardless of gradient scale.
+        for g in [1e-3f32, 1.0, 1e3] {
+            let mut st = TensorState::default();
+            let mut p = vec![0.0f32];
+            st.apply(&Optimizer::adam(), 0.01, &mut p, &[g]);
+            assert!((p[0].abs() - 0.01).abs() < 1e-4, "g={g}: step {}", p[0]);
+        }
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        // Minimize (p - 3)^2: gradient 2(p-3).
+        let mut st = TensorState::default();
+        let mut p = vec![0.0f32];
+        for _ in 0..2000 {
+            let g = 2.0 * (p[0] - 3.0);
+            st.apply(&Optimizer::adam(), 0.05, &mut p, &[g]);
+        }
+        assert!((p[0] - 3.0).abs() < 0.05, "ended at {}", p[0]);
+    }
+}

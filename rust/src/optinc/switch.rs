@@ -72,6 +72,30 @@ impl OptIncSwitch {
         Self::new(scenario, OnnMode::Exact).expect("exact mode cannot fail")
     }
 
+    /// Train a hardware-aware ONN for this scenario natively (no `.otsr`
+    /// artifact, no python) and wire it in as the switch's executor —
+    /// the end-to-end path for the paper's central claim: an ONN trained
+    /// with the `Σ·U` constraint and optical noise *in the loop* keeps
+    /// the in-flight average close to the exact oracle.
+    ///
+    /// Callers that need the loss curve or a persistable network should
+    /// use [`crate::onn::train::train_for_scenario`] directly (the
+    /// `train-onn` CLI subcommand does) and pass the result through
+    /// [`OnnMode::Native`].
+    pub fn trained(
+        scenario: Scenario,
+        cfg: &crate::onn::train::TrainConfig,
+    ) -> Result<OptIncSwitch> {
+        let (net, report) = crate::onn::train::train_for_scenario(&scenario, cfg);
+        crate::log_info!(
+            "trained switch ONN for scenario {} ({} steps): tail loss {:.5}",
+            scenario.id,
+            cfg.steps,
+            report.tail_loss(20)
+        );
+        Self::new(scenario, OnnMode::Native(net))
+    }
+
     pub fn codec(&self) -> &Pam4Codec {
         &self.codec
     }
@@ -226,6 +250,42 @@ mod tests {
         let avg = sw.average_words(&refs);
         assert_eq!(avg.len(), 32);
         assert!(avg.iter().all(|&w| w < 256));
+    }
+
+    #[test]
+    fn trained_switch_runs_end_to_end() {
+        // A reduced scenario keeps the in-test training cheap; the full
+        // scenario structures are exercised by `optinc-repro train-onn`
+        // and the train_onn bench.
+        let sc = Scenario {
+            id: 0,
+            bits: 8,
+            servers: 4,
+            layers: vec![4, 16, 16, 4],
+            approx_layers: vec![1, 2, 3],
+        };
+        let cfg = crate::onn::train::TrainConfig {
+            steps: 150,
+            batch: 32,
+            seed: 5,
+            ..Default::default()
+        };
+        let mut sw = OptIncSwitch::trained(sc.clone(), &cfg).unwrap();
+        assert!(matches!(sw.mode, OnnMode::Native(_)));
+        let mut oracle = OptIncSwitch::exact(sc);
+        let shards = random_shards(4, 200, 8, 3);
+        let refs: Vec<&[u32]> = shards.iter().map(|s| s.as_slice()).collect();
+        let got = sw.average_words(&refs);
+        let want = oracle.average_words(&refs);
+        let mean_err = got
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| (*a as i64 - *b as i64).abs() as f64)
+            .sum::<f64>()
+            / 200.0;
+        // Uniform-random words sit ~85 apart in a 0..255 range; a trained
+        // switch must be far closer to the oracle than chance.
+        assert!(mean_err < 60.0, "mean word err {mean_err}");
     }
 
     #[test]

@@ -11,7 +11,26 @@
 //! `U_a` rows are unit-norm, so `d_i = ⟨W_sⁱ, U_aⁱ⟩`. The python training
 //! path (`python/compile/optinc/approx.py`) implements the same math; this
 //! rust version serves the photonics compile path (programming meshes from
-//! trained weights) and is cross-checked against python in tests.
+//! trained weights), is cross-checked against python in tests, and is the
+//! projection operator the hardware-aware trainer
+//! ([`crate::onn::train`]) applies after every optimizer step
+//! ([`project_weights_f32`]).
+//!
+//! A matrix of the form `diag(d)·Q` (with `Q` orthogonal) is exactly
+//! representable, so `from_dense → to_matrix` round-trips it:
+//!
+//! ```
+//! use optinc::linalg::Mat;
+//! use optinc::photonics::approx::ApproxMatrix;
+//!
+//! let mut w = Mat::identity(4); // I is orthogonal…
+//! for (i, d) in [2.0, -0.5, 1.5, 3.0].into_iter().enumerate() {
+//!     w[(i, i)] = d; // …so diag(d)·I lies on the Σ·U set.
+//! }
+//! let a = ApproxMatrix::from_dense(&w);
+//! assert!(a.to_matrix().max_abs_diff(&w) < 1e-9);
+//! assert!(a.relative_error(&w) < 1e-9);
+//! ```
 
 use crate::linalg::{svd, Mat};
 
@@ -140,6 +159,22 @@ impl ApproxMatrix {
     }
 }
 
+/// Project a dense row-major `f32` weight matrix onto the realizable
+/// `Σ·U` set in place (`from_dense → to_matrix`, round-tripped through
+/// f64). This is the hardware-aware training hook
+/// ([`crate::onn::train`]): applying it after every optimizer step keeps
+/// the weights inside the set the photonic mesh can implement (projected
+/// SGD), which is what preserves accuracy versus projecting once after
+/// training. Idempotent up to floating-point rounding.
+pub fn project_weights_f32(weight: &mut [f32], rows: usize, cols: usize) {
+    assert_eq!(weight.len(), rows * cols);
+    let dense = Mat::from_f32(rows, cols, weight);
+    let projected = ApproxMatrix::from_dense(&dense).to_matrix();
+    for (dst, &src) in weight.iter_mut().zip(projected.data.iter()) {
+        *dst = src as f32;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -225,6 +260,25 @@ mod tests {
         assert!(!aw.vertical);
         assert_eq!(aw.blocks.len(), 16);
         assert_eq!(aw.to_matrix().cols, 64);
+    }
+
+    #[test]
+    fn f32_projection_matches_dense_path_and_is_idempotent() {
+        let mut rng = Pcg32::seeded(27);
+        let w = random_mat(&mut rng, 12, 20);
+        let mut weights = w.to_f32();
+        project_weights_f32(&mut weights, 12, 20);
+        // Matches the f64 reference projection.
+        let want = ApproxMatrix::from_dense(&w).to_matrix().to_f32();
+        for (a, b) in weights.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        // Projecting a projected matrix is a no-op up to rounding.
+        let once = weights.clone();
+        project_weights_f32(&mut weights, 12, 20);
+        for (a, b) in weights.iter().zip(&once) {
+            assert!((a - b).abs() < 1e-5);
+        }
     }
 
     #[test]

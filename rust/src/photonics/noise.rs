@@ -65,6 +65,40 @@ impl NoiseModel {
         let (noisy, _) = self.apply(mesh);
         noisy.to_matrix().max_abs_diff(&mesh.to_matrix())
     }
+
+    /// First-order effect of this noise model on a *dense* layer output,
+    /// without programming a mesh: for each `width`-wide frame in `out`,
+    /// every element picks up a Gaussian perturbation with std
+    /// `phase_sigma · rms(frame)` (a phase error of σ radians moves a
+    /// programmed mesh's output by `O(σ)` of the signal magnitude — cf.
+    /// [`Self::matrix_deviation`]), and the whole batch is attenuated by
+    /// the insertion-loss amplitude factor of a `width`-stage mesh.
+    ///
+    /// This is what the hardware-aware trainer ([`crate::onn::train`])
+    /// injects into training forward passes: optical non-idealities at
+    /// MLP speed. The caller owns the RNG so training noise is a fresh
+    /// stream per step while staying replayable; the mesh-level
+    /// [`Self::apply`] remains the ground truth this model abbreviates.
+    pub fn perturb_dense_outputs(&self, out: &mut [f32], width: usize, rng: &mut Pcg32) {
+        assert!(width > 0 && out.len() % width == 0);
+        if self.phase_sigma > 0.0 {
+            for frame in out.chunks_exact_mut(width) {
+                let rms = (frame.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+                    / width as f64)
+                    .sqrt();
+                let sigma = self.phase_sigma * rms;
+                for v in frame.iter_mut() {
+                    *v += (sigma * rng.normal()) as f32;
+                }
+            }
+        }
+        if self.insertion_loss_db != 0.0 {
+            let amp = 10f64.powf(-self.insertion_loss_db / 20.0 * width as f64) as f32;
+            for v in out.iter_mut() {
+                *v *= amp;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -103,6 +137,44 @@ mod tests {
         let (_, amp) = NoiseModel::new(0.0, 0.1, 7).apply(&m);
         // 0.1 dB per MZI over 4 stages: 10^(-0.1*4/20) ≈ 0.955.
         assert!((amp - 10f64.powf(-0.02)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dense_perturbation_scales_with_sigma_and_signal() {
+        let nm = NoiseModel::new(0.05, 0.0, 0);
+        let mut rng = Pcg32::seeded(31);
+        let clean: Vec<f32> = (0..16 * 64).map(|i| (i % 7) as f32 - 3.0).collect();
+        let mut noisy = clean.clone();
+        nm.perturb_dense_outputs(&mut noisy, 16, &mut rng);
+        let dev = noisy
+            .iter()
+            .zip(&clean)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / clean.len() as f64;
+        let rms = (clean.iter().map(|&v| (v as f64).powi(2)).sum::<f64>()
+            / clean.len() as f64)
+            .sqrt();
+        // Empirical std should be ~ sigma·rms (loose 2× bounds).
+        let want = 0.05 * rms;
+        assert!(dev.sqrt() > want * 0.5 && dev.sqrt() < want * 2.0, "{}", dev.sqrt());
+        // Zero-noise model is the identity.
+        let mut same = clean.clone();
+        NoiseModel::default().perturb_dense_outputs(&mut same, 16, &mut rng);
+        assert_eq!(same, clean);
+    }
+
+    #[test]
+    fn dense_insertion_loss_attenuates() {
+        let nm = NoiseModel::new(0.0, 0.1, 0);
+        let mut rng = Pcg32::seeded(32);
+        let mut out = vec![1.0f32; 8];
+        nm.perturb_dense_outputs(&mut out, 4, &mut rng);
+        // 0.1 dB × 4 stages → 10^(-0.02) amplitude.
+        let want = 10f64.powf(-0.02) as f32;
+        for v in out {
+            assert!((v - want).abs() < 1e-6);
+        }
     }
 
     #[test]

@@ -8,6 +8,20 @@
 //! binary. Offset binary commutes with averaging:
 //! `mean(q_n) = offset + mean(signed_n)`, so the in-network average of the
 //! quantized words decodes to the quantized average of the gradients.
+//!
+//! The round trip is bounded by half a quantization step
+//! ([`GlobalQuantizer::max_abs_error`]):
+//!
+//! ```
+//! use optinc::quant::GlobalQuantizer;
+//!
+//! let q = GlobalQuantizer::new(8);
+//! let scale = GlobalQuantizer::global_scale(&[&[0.5, -1.0, 0.73][..]]);
+//! for g in [0.73f32, -0.99, 0.0, 1.0] {
+//!     let back = q.dequantize(q.quantize(g, scale), scale);
+//!     assert!((back - g).abs() <= q.max_abs_error(scale));
+//! }
+//! ```
 
 use crate::pam4::Pam4Codec;
 
@@ -32,18 +46,31 @@ impl GlobalQuantizer {
         self.bits
     }
 
+    /// Scale returned by [`Self::global_scale`] when no usable magnitude
+    /// exists (all-zero shards, or shards whose only nonzero entries are
+    /// NaN/∞/subnormal). Small enough that decoded averages of a
+    /// degenerate block stay ≈ 0, large enough that `g / scale` cannot
+    /// overflow for the zeros that produced it.
+    pub const SAFE_EPS_SCALE: f32 = 1e-12;
+
     /// The scale all workers must share: max |g| over every shard.
-    /// Returns a strictly positive value (1.0 for an all-zero gradient so
-    /// quantization stays well-defined).
+    ///
+    /// Always returns a strictly positive, normal float. Non-finite
+    /// gradients (a diverged worker) are excluded so one NaN cannot
+    /// poison every shard's quantization, and the all-zero /
+    /// degenerate case returns [`Self::SAFE_EPS_SCALE`] instead of 0 —
+    /// a zero scale would turn `g / scale` into NaN/∞ and propagate it
+    /// through dequantize into every worker's averaged gradient.
     pub fn global_scale(shards: &[&[f32]]) -> f32 {
         let m = shards
             .iter()
             .flat_map(|s| s.iter())
+            .filter(|g| g.is_finite())
             .fold(0f32, |acc, &g| acc.max(g.abs()));
-        if m > 0.0 {
+        if m.is_normal() {
             m
         } else {
-            1.0
+            Self::SAFE_EPS_SCALE
         }
     }
 
@@ -155,7 +182,42 @@ mod tests {
     #[test]
     fn zero_gradient_scale_is_positive() {
         let z = vec![0f32; 8];
-        assert_eq!(GlobalQuantizer::global_scale(&[&z]), 1.0);
+        let scale = GlobalQuantizer::global_scale(&[&z]);
+        assert_eq!(scale, GlobalQuantizer::SAFE_EPS_SCALE);
+        assert!(scale > 0.0 && scale.is_normal());
+    }
+
+    #[test]
+    fn all_zero_shards_round_trip_without_nan() {
+        // Regression: an all-zero gradient block must quantize → average
+        // → dequantize to exactly 0.0, never NaN/∞ (a zero scale would
+        // make g/scale NaN and poison every worker's average).
+        let q = GlobalQuantizer::new(8);
+        let shards = [vec![0f32; 16], vec![0f32; 16]];
+        let views: Vec<&[f32]> = shards.iter().map(|s| s.as_slice()).collect();
+        let scale = GlobalQuantizer::global_scale(&views);
+        let words: Vec<Vec<u32>> = shards.iter().map(|s| q.quantize_vec(s, scale)).collect();
+        for i in 0..16 {
+            let avg = quantized_mean(&[words[0][i], words[1][i]]);
+            let back = q.dequantize(avg, scale);
+            assert!(back.is_finite(), "dequantize produced {back}");
+            assert_eq!(back, 0.0);
+        }
+    }
+
+    #[test]
+    fn non_finite_gradients_do_not_poison_scale() {
+        // A diverged worker (NaN/∞ entries) must not drive the shared
+        // scale to ∞ (which would quantize every finite gradient to the
+        // midpoint) — non-finite entries are excluded from the max.
+        let bad = vec![f32::NAN, f32::INFINITY, 0.25, -0.5];
+        let good = vec![0.125f32, -0.25];
+        let scale = GlobalQuantizer::global_scale(&[&bad, &good]);
+        assert_eq!(scale, 0.5);
+        // All-NaN shards degrade to the safe epsilon, not 0 or NaN.
+        let all_bad = vec![f32::NAN; 4];
+        let scale = GlobalQuantizer::global_scale(&[&all_bad]);
+        assert_eq!(scale, GlobalQuantizer::SAFE_EPS_SCALE);
     }
 
     #[test]

@@ -6,6 +6,13 @@
 //! gradients through the configured collective (ring baseline or the
 //! OptINC switch with quantization + error injection); apply the averaged
 //! gradient with the AOT `*_adam` artifact. Python never runs.
+//!
+//! The collective is pluggable: pass an
+//! [`OptIncAllReduce::trained`](crate::collectives::optinc::OptIncAllReduce::trained)
+//! to run the comparison against a switch ONN that was hardware-aware
+//! trained natively at construction (`onn::train`) instead of the exact
+//! oracle or a synthetic error model — no switch `.otsr` artifact
+//! required.
 
 pub mod data;
 

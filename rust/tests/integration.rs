@@ -206,3 +206,121 @@ fn json_metrics_cross_language_contract() {
     let mat = Mat::identity(2);
     assert_eq!(mat.rows, 2); // keep linalg linked in this test crate
 }
+
+#[test]
+fn hardware_aware_training_beats_post_hoc_projection() {
+    // The paper's Fig.-accuracy claim in miniature: a network trained
+    // with the Σ·U constraint and optical noise *in the loop* must
+    // average better than the same architecture trained plainly and
+    // projected onto Σ·U after the fact. Property-tested over
+    // independently seeded (init, data, noise) training runs.
+    use optinc::onn::train::{
+        evaluate, project_post_hoc, train_for_scenario, AveragingDataset, HardwareMode,
+        TrainConfig,
+    };
+    use optinc::util::proptest::{forall, Config};
+
+    let sc = Scenario {
+        id: 0,
+        bits: 8,
+        servers: 4,
+        layers: vec![4, 16, 16, 4],
+        approx_layers: vec![1, 2, 3],
+    };
+    forall(
+        Config {
+            cases: 3,
+            seed: 0xA11E_6E,
+        },
+        |rng| rng.next_u64() >> 1,
+        |&seed| {
+            let base = TrainConfig {
+                steps: 400,
+                batch: 32,
+                seed,
+                ..Default::default()
+            };
+            // Hardware-aware: projected every step, noisy forwards.
+            let (aware, report) = train_for_scenario(&sc, &base);
+            // Post-hoc baseline: identical budget, unconstrained, then
+            // one projection of the scenario's approximated layers.
+            let mut plain_cfg = base.clone();
+            plain_cfg.hardware = HardwareMode::Unconstrained;
+            let (mut plain, _) = train_for_scenario(&sc, &plain_cfg);
+            project_post_hoc(&mut plain, &sc.approx_layers);
+
+            let mut held = AveragingDataset::new(&sc, seed ^ 0x0FF5E7);
+            let aware_err = evaluate(&aware, &mut held, 1024);
+            let mut held = AveragingDataset::new(&sc, seed ^ 0x0FF5E7);
+            let post_err = evaluate(&plain, &mut held, 1024);
+            if !aware_err.is_finite() || !post_err.is_finite() {
+                return Err(format!("non-finite errors: {aware_err} vs {post_err}"));
+            }
+            if !report.final_loss().is_finite() {
+                return Err("aware training diverged".to_string());
+            }
+            if aware_err < post_err {
+                Ok(())
+            } else {
+                Err(format!(
+                    "hardware-aware rel err {aware_err} !< post-hoc {post_err}"
+                ))
+            }
+        },
+    );
+}
+
+#[test]
+fn trained_collective_tracks_exact_oracle() {
+    // End-to-end: a natively trained switch inside the full collective
+    // (quantize → encode → P → trained ONN → snap → decode → dequantize)
+    // must land near the exact-oracle collective on real float shards.
+    use optinc::onn::train::TrainConfig;
+
+    let sc = Scenario {
+        id: 0,
+        bits: 8,
+        servers: 4,
+        layers: vec![4, 16, 16, 4],
+        approx_layers: vec![1, 2, 3],
+    };
+    let cfg = TrainConfig {
+        steps: 300,
+        batch: 32,
+        seed: 21,
+        ..Default::default()
+    };
+    let mut trained = OptIncAllReduce::trained(sc.clone(), &cfg, 9).unwrap();
+    let mut exact = OptIncAllReduce::exact(sc, 9);
+
+    let base = random_shards(4, 512, 33);
+    let want = exact_mean(&base);
+    let mut got_t = base.clone();
+    trained.all_reduce(&mut got_t);
+    let mut got_e = base.clone();
+    exact.all_reduce(&mut got_e);
+
+    // Workers agree with each other in both modes.
+    for s in &got_t[1..] {
+        assert_eq!(s, &got_t[0]);
+    }
+    // The trained network is imperfect but must stay well inside the
+    // random-output regime: a random decoder would sit at a mean abs
+    // deviation of ~0.67× the block scale; a trained one must do better.
+    let mad = |xs: &[f32]| -> f64 {
+        xs.iter()
+            .zip(&want)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .sum::<f64>()
+            / xs.len() as f64
+    };
+    let err_t = mad(&got_t[0]);
+    let err_e = mad(&got_e[0]);
+    assert!(err_e <= err_t, "oracle can't be worse than a trained net");
+    let views: Vec<&[f32]> = base.iter().map(|s| s.as_slice()).collect();
+    let scale = optinc::quant::GlobalQuantizer::global_scale(&views) as f64;
+    assert!(
+        err_t < scale * 0.5,
+        "trained collective mad {err_t} vs scale {scale}"
+    );
+}
