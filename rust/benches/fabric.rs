@@ -1,0 +1,100 @@
+//! Fabric collective bench: wall-clock throughput of the streamed
+//! multi-level cascade across a depth × fan-in sweep, plus the modeled
+//! step-time scalars (hop latency + SWOT-style reconfiguration overlap)
+//! and a cheap bit-exactness self-check against the flat quantized mean
+//! on every swept configuration.
+
+use optinc::collectives::engine::ChunkedDriver;
+use optinc::collectives::fabric::{FabricAllReduce, FabricMode, FabricTopology};
+use optinc::config::HardwareModel;
+use optinc::quant::chunked_reference_mean;
+use optinc::util::bench::{black_box, BenchSuite};
+use optinc::util::rng::Pcg32;
+
+fn shards(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..n)
+        .map(|_| (0..len).map(|_| rng.normal() as f32 * 0.1).collect())
+        .collect()
+}
+
+/// Flat reference on the whole-shard block scale (single chunk).
+fn flat_reference(base: &[Vec<f32>]) -> Vec<f32> {
+    chunked_reference_mean(base, usize::MAX, 8)
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("fabric");
+    let hw = HardwareModel::default();
+
+    // Depth × fan-in sweep. Worker counts are capped so the deepest
+    // trees stay laptop-sized; capacity is reported alongside.
+    for &fan_in in &[2usize, 4, 16] {
+        for depth in 1..=3usize {
+            let topo = FabricTopology::uniform(fan_in, depth).unwrap();
+            let workers = topo.capacity().min(64);
+            let len = 20_000usize;
+            let base = shards(workers, len, (fan_in * 10 + depth) as u64);
+
+            // Bit-exactness self-check (small payload, one chunk).
+            {
+                let mut fabric =
+                    FabricAllReduce::exact(8, &topo, FabricMode::Remainder).unwrap();
+                let small: Vec<Vec<f32>> =
+                    base.iter().map(|s| s[..256].to_vec()).collect();
+                let want = flat_reference(&small);
+                let mut work = small.clone();
+                let mut driver = ChunkedDriver::new(usize::MAX);
+                driver.all_reduce(&mut fabric, &mut work);
+                assert_eq!(
+                    work[0], want,
+                    "f{fan_in} d{depth}: remainder fabric must match the flat mean"
+                );
+            }
+
+            let mut fabric = FabricAllReduce::exact(8, &topo, FabricMode::Remainder).unwrap();
+            let mut driver = ChunkedDriver::new(len / 16);
+            let mut work = base.clone();
+            suite.bench_throughput(
+                &format!("fabric/f{fan_in}/d{depth}/{workers}x{len}"),
+                (workers * len) as f64,
+                "elem",
+                || {
+                    work.clone_from(&base);
+                    black_box(driver.all_reduce(&mut fabric, &mut work));
+                },
+            );
+
+            // Modeled step time: monolithic vs streamed — the streamed
+            // schedule hides both the return leg and the per-level OCS
+            // reconfiguration (SWOT overlap).
+            let mut mono = base.clone();
+            let mono_stats = ChunkedDriver::new(usize::MAX).all_reduce(&mut fabric, &mut mono);
+            let mut piped = base.clone();
+            let piped_stats = driver.all_reduce(&mut fabric, &mut piped);
+            let t_mono = mono_stats.modeled_step_time_s(&hw);
+            let t_piped = piped_stats.modeled_step_time_s(&hw);
+            suite.record_scalar(
+                &format!("modeled_step/f{fan_in}/d{depth}/monolithic"),
+                t_mono * 1e6,
+                "us",
+            );
+            suite.record_scalar(
+                &format!("modeled_step/f{fan_in}/d{depth}/pipelined"),
+                t_piped * 1e6,
+                "us",
+            );
+            suite.record_scalar(
+                &format!("modeled_step/f{fan_in}/d{depth}/reconfig_exposed"),
+                piped_stats.exposed_reconfig_s(&hw) * 1e6,
+                "us",
+            );
+            assert!(
+                t_piped < t_mono,
+                "f{fan_in} d{depth}: pipelined {t_piped} must beat monolithic {t_mono}"
+            );
+        }
+    }
+
+    suite.finish();
+}

@@ -66,12 +66,31 @@ impl ClusterMetrics {
     }
 
     /// Mean per-step `overlap_fraction` — 0.0 monolithic, approaching 1
-    /// as the stream deepens.
+    /// as the stream deepens. 0.0 (never NaN) on a zero-step run, like
+    /// every per-step mean here — a failed or empty `Cluster::run` must
+    /// not poison downstream JSON with NaN.
     pub fn mean_overlap_fraction(&self) -> f64 {
         if self.steps == 0 {
             return 0.0;
         }
         self.overlap_sum / self.steps as f64
+    }
+
+    /// Mean modeled collective time per step (0.0 on zero-step runs).
+    pub fn mean_modeled_comm_s(&self) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        self.modeled_comm_s / self.steps as f64
+    }
+
+    /// Mean chunks streamed per step (0.0 on zero-step runs; 1.0 on the
+    /// monolithic path).
+    pub fn mean_chunks_per_step(&self) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        self.chunks as f64 / self.steps as f64
     }
 
     /// Mean normalized communication per step (Fig. 6 metric), given the
@@ -98,6 +117,10 @@ impl ClusterMetrics {
             (
                 "mean_overlap_fraction",
                 Json::Num(self.mean_overlap_fraction()),
+            ),
+            (
+                "mean_modeled_comm_s",
+                Json::Num(self.mean_modeled_comm_s()),
             ),
         ])
     }
@@ -129,6 +152,24 @@ mod tests {
     }
 
     #[test]
+    fn zero_step_run_means_are_zero_not_nan() {
+        // Regression (ISSUE 4 satellite): a zero-step run — e.g. a
+        // cluster run that fails before its first step completes — must
+        // report 0.0 for every per-step mean, never NaN, so metrics JSON
+        // stays parseable and comparisons stay ordered.
+        let m = ClusterMetrics::new("empty");
+        assert_eq!(m.steps(), 0);
+        assert_eq!(m.mean_overlap_fraction(), 0.0);
+        assert_eq!(m.mean_modeled_comm_s(), 0.0);
+        assert_eq!(m.mean_chunks_per_step(), 0.0);
+        assert_eq!(m.normalized_comm(1.0), 0.0);
+        let j = m.to_json();
+        let overlap = j.get("mean_overlap_fraction").as_f64().unwrap();
+        let comm = j.get("mean_modeled_comm_s").as_f64().unwrap();
+        assert!(overlap == 0.0 && comm == 0.0, "JSON must carry 0.0, not NaN");
+    }
+
+    #[test]
     fn tracks_streaming_overlap() {
         let mut m = ClusterMetrics::new("piped");
         let st = CollectiveStats {
@@ -138,6 +179,7 @@ mod tests {
             elements: 100,
             chunks: 4,
             overlap_fraction: 0.75,
+            levels: 1,
         };
         m.record(&st, 0.1);
         m.record(&st, 0.1);

@@ -29,6 +29,16 @@
 //! one physical device) while gradient *computation* runs genuinely
 //! parallel.
 //!
+//! **Fault containment.** The leader receives with a watchdog timeout
+//! ([`Cluster::watchdog`]): a worker that panics, stalls, or drops its
+//! channel mid-step surfaces as a clean `Err` — never a deadlock — and
+//! the shutdown path closes the leader→worker channels so surviving
+//! threads exit on their own. The collective handed in stays reusable
+//! after a failed run (its next `begin` resets the aborted session), so
+//! no [`BufferPool`] state is poisoned. The fault-injection suite in
+//! `rust/tests/integration.rs` exercises both fault shapes against the
+//! ring and fabric collectives.
+//!
 //! The collective handed to [`Cluster::run`] can carry a freshly
 //! hardware-aware-trained switch ONN
 //! ([`OptIncAllReduce::trained`](crate::collectives::optinc::OptIncAllReduce::trained)
@@ -38,9 +48,10 @@
 
 pub mod metrics;
 
-use std::sync::mpsc;
+use std::sync::mpsc::{self, RecvTimeoutError};
 use std::sync::Arc;
 use std::thread;
+use std::time::Duration;
 
 use anyhow::Result;
 
@@ -53,6 +64,12 @@ pub use metrics::ClusterMetrics;
 /// gradients tens of chunks deep, large enough to keep per-chunk
 /// overhead negligible.
 pub const DEFAULT_CHUNK_ELEMS: usize = 65_536;
+
+/// Default leader watchdog: the longest the leader waits for any single
+/// worker message before declaring the step dead. Generous enough for
+/// real workloads; fault-injection tests shrink it via
+/// [`Cluster::with_watchdog`].
+pub const DEFAULT_WATCHDOG: Duration = Duration::from_secs(60);
 
 /// A gradient-producing workload executed by each worker per step.
 /// `step` is the global step index; `worker` the worker id. Returns the
@@ -106,6 +123,10 @@ pub struct Cluster {
     pub hw: HardwareModel,
     /// Elements per streamed chunk (the pipeline grain).
     pub chunk_elems: usize,
+    /// Leader watchdog: a worker that panics, stalls, or drops its
+    /// channel mid-step surfaces as a clean `Err` within this bound
+    /// instead of deadlocking the pipeline.
+    pub watchdog: Duration,
 }
 
 /// Chunks a `total`-element gradient splits into at grain `chunk`
@@ -124,6 +145,7 @@ impl Cluster {
             workers,
             hw: HardwareModel::default(),
             chunk_elems: DEFAULT_CHUNK_ELEMS,
+            watchdog: DEFAULT_WATCHDOG,
         }
     }
 
@@ -131,6 +153,13 @@ impl Cluster {
     pub fn with_chunk_elems(mut self, chunk_elems: usize) -> Cluster {
         assert!(chunk_elems >= 1, "chunk size must be at least one element");
         self.chunk_elems = chunk_elems;
+        self
+    }
+
+    /// Builder: override the leader watchdog (fault-injection tests use
+    /// a short one so dead workers surface in milliseconds).
+    pub fn with_watchdog(mut self, watchdog: Duration) -> Cluster {
+        self.watchdog = watchdog;
         self
     }
 
@@ -218,7 +247,8 @@ impl Cluster {
         drop(to_leader_tx);
 
         let mut records = Vec::with_capacity(steps);
-        for step in 0..steps {
+        let mut failure: Option<anyhow::Error> = None;
+        'steps: for step in 0..steps {
             let mut losses = 0.0;
             let mut total: Option<usize> = None;
             let mut nchunks = 0usize;
@@ -226,7 +256,25 @@ impl Cluster {
             // chunk index -> worker chunks gathered so far
             let mut pending: Vec<Vec<ShardChunk>> = Vec::new();
             while total.is_none() || reduced < nchunks {
-                match to_leader_rx.recv()? {
+                let msg = match to_leader_rx.recv_timeout(self.watchdog) {
+                    Ok(m) => m,
+                    Err(RecvTimeoutError::Timeout) => {
+                        failure = Some(anyhow::anyhow!(
+                            "step {step}: no worker message within the {:?} watchdog \
+                             (a worker stalled, panicked, or deadlocked)",
+                            self.watchdog
+                        ));
+                        break 'steps;
+                    }
+                    Err(RecvTimeoutError::Disconnected) => {
+                        failure = Some(anyhow::anyhow!(
+                            "step {step}: every worker channel dropped mid-step \
+                             (worker threads died)"
+                        ));
+                        break 'steps;
+                    }
+                };
+                match msg {
                     ToLeader::Chunk {
                         worker,
                         offset,
@@ -276,13 +324,37 @@ impl Cluster {
                 modeled_comm_s: comm_s,
             });
         }
+        // Shutdown path shared by success and failure: closing the
+        // leader→worker channels unblocks any worker still waiting on an
+        // averaged chunk, so surviving threads exit instead of
+        // deadlocking. The collective stays reusable either way — its
+        // next `begin` resets the open session, so no pooled buffer or
+        // session state is poisoned by an aborted step.
         for tx in &to_worker_txs {
             let _ = tx.send(ToWorker::Stop);
         }
+        drop(to_worker_txs);
+        let mut panicked = 0usize;
         for h in handles {
-            let _ = h.join();
+            // After a failure, join only threads that already exited
+            // (harvesting their panics); a thread still sitting in a long
+            // stall is detached — it exits on its own once it observes
+            // the closed channels, and joining it here could outwait the
+            // watchdog guarantee.
+            if (failure.is_none() || h.is_finished()) && h.join().is_err() {
+                panicked += 1;
+            }
         }
-        Ok(records)
+        match failure {
+            Some(e) if panicked > 0 => {
+                Err(e.context(format!("{panicked} worker thread(s) panicked")))
+            }
+            Some(e) => Err(e),
+            None if panicked > 0 => Err(anyhow::anyhow!(
+                "{panicked} worker thread(s) panicked during shutdown"
+            )),
+            None => Ok(records),
+        }
     }
 
     /// The pre-engine behavior for comparison: one monolithic chunk per
@@ -303,6 +375,7 @@ impl Cluster {
             workers: self.workers,
             hw: self.hw,
             chunk_elems: usize::MAX,
+            watchdog: self.watchdog,
         };
         mono.run(steps, make_workload, collective, metrics)
     }

@@ -146,6 +146,7 @@ impl Session {
             elements: self.elements,
             chunks,
             overlap_fraction,
+            levels: 1,
         }
     }
 }

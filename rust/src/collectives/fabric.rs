@@ -1,0 +1,605 @@
+//! Multi-level OptINC fabric collective (§III-C, Fig. 5, generalized):
+//! stream gradient chunks through an arbitrary-depth cascade of OptINC
+//! switches, serving worker counts far beyond one switch's port count
+//! (fan-in `f` per level, depth `L` → up to `f^L` workers).
+//!
+//! Each level is a real [`OptIncSwitch`] — exact oracle, `.otsr`-loaded,
+//! or natively hardware-aware trained per level
+//! ([`FabricAllReduce::trained`], the fabric analogue of
+//! [`OptIncAllReduce::trained`](super::optinc::OptIncAllReduce::trained)).
+//! Two aggregation modes generalize the two-level cascade of
+//! [`optinc::cascade`](crate::optinc::cascade):
+//!
+//! - [`FabricMode::Basic`] (eq. 9 at every level): each switch quantizes
+//!   its group mean, so quantization error accumulates with depth; group
+//!   frames route through the level's ONN (the mode that exercises real
+//!   networks level by level).
+//! - [`FabricMode::Remainder`] (eq. 10 generalized): every forwarding
+//!   level merges the decimal fraction it would discard into its
+//!   outgoing frame — physically the last PAM4 symbol at `1/N`
+//!   resolution, realized by the remainder-expanded ONN
+//!   ([`Scenario::with_remainder_expansion`]) which the simulator models
+//!   at its trained fixed point, i.e. exactly — so each node forwards
+//!   the exact partial sum and only the root quantizes (over the
+//!   worker count). The fabric output is **bit-exact** against the flat
+//!   single-switch quantized mean for *every* worker count, ragged last
+//!   switches included (the `collective_props` oracle-conformance matrix
+//!   asserts this).
+//!
+//! The payload still crosses each server's access link exactly once
+//! (full duplex); a chunk traverses `L` switch hops each way, so
+//! [`CollectiveStats::rounds`] = `L` and `CollectiveStats::levels` = `L`,
+//! which charges the per-level OCS reconfiguration that the chunk stream
+//! overlaps SWOT-style (see
+//! [`CollectiveStats::exposed_reconfig_s`](super::CollectiveStats::exposed_reconfig_s)).
+//! All word/sum/float scratch recycles through [`BufferPool`]s, so the
+//! steady-state stream performs no per-chunk allocation.
+
+use anyhow::{ensure, Result};
+
+use crate::config::Scenario;
+use crate::onn::OnnNetwork;
+use crate::optinc::switch::{OnnMode, OptIncSwitch};
+use crate::quant::GlobalQuantizer;
+
+use super::engine::{check_aligned, BufferPool, ChunkedAllReduce, Session, ShardChunk};
+use super::CollectiveStats;
+
+/// Per-level aggregation scheme (the eq. 9 / eq. 10 dichotomy of
+/// [`CascadeMode`](crate::optinc::cascade::CascadeMode), applied at every
+/// level of the cascade).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FabricMode {
+    /// Quantize at every level (error accumulates with depth).
+    Basic,
+    /// Forward exact fractions level to level; quantize once at the root
+    /// (bit-exact vs the flat quantized mean).
+    Remainder,
+}
+
+/// Shape of the switch cascade: fan-in per level, leaf level first.
+/// Capacity is the product of the fan-ins; ragged population (worker
+/// counts below capacity, including counts that are not multiples of any
+/// fan-in) is supported — tail switches simply run with unused ports.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FabricTopology {
+    fan_ins: Vec<usize>,
+}
+
+impl FabricTopology {
+    /// A cascade with the given per-level fan-ins (leaf level first).
+    pub fn new(fan_ins: Vec<usize>) -> Result<FabricTopology> {
+        ensure!(!fan_ins.is_empty(), "fabric needs at least one level");
+        ensure!(
+            fan_ins.iter().all(|&f| f >= 2),
+            "every fabric level needs a fan-in of at least 2, got {fan_ins:?}"
+        );
+        Ok(FabricTopology { fan_ins })
+    }
+
+    /// `depth` levels of identical `fan_in`-port switches.
+    pub fn uniform(fan_in: usize, depth: usize) -> Result<FabricTopology> {
+        ensure!(depth >= 1, "fabric needs at least one level");
+        FabricTopology::new(vec![fan_in; depth])
+    }
+
+    /// The shallowest uniform `fan_in` cascade that serves `workers`.
+    pub fn for_workers(fan_in: usize, workers: usize) -> Result<FabricTopology> {
+        ensure!(workers >= 1, "fabric needs at least one worker");
+        ensure!(fan_in >= 2, "fabric fan-in must be at least 2, got {fan_in}");
+        let mut depth = 1usize;
+        let mut cap = fan_in;
+        while cap < workers {
+            depth += 1;
+            cap = cap.saturating_mul(fan_in);
+        }
+        FabricTopology::uniform(fan_in, depth)
+    }
+
+    pub fn depth(&self) -> usize {
+        self.fan_ins.len()
+    }
+
+    pub fn fan_ins(&self) -> &[usize] {
+        &self.fan_ins
+    }
+
+    /// Maximum workers the cascade serves (product of fan-ins).
+    pub fn capacity(&self) -> usize {
+        self.fan_ins
+            .iter()
+            .fold(1usize, |acc, &f| acc.saturating_mul(f))
+    }
+
+    /// Switches instantiated per level for a `workers`-leaf population
+    /// (ragged tails round up; feeds the `photonics::area` fabric model).
+    pub fn switch_counts(&self, workers: usize) -> Vec<usize> {
+        let mut nodes = workers;
+        self.fan_ins
+            .iter()
+            .map(|&f| {
+                nodes = nodes.div_ceil(f);
+                nodes
+            })
+            .collect()
+    }
+}
+
+/// One cascade level: a fan-in-port switch shared (in simulation) by all
+/// of the level's groups — every physical switch at a level is an
+/// identical device, so one instance models them all.
+struct Level {
+    fan_in: usize,
+    switch: OptIncSwitch,
+}
+
+/// The fabric collective. Implements [`ChunkedAllReduce`], so it plugs
+/// into [`ChunkedDriver`](super::engine::ChunkedDriver) and the threaded
+/// [`Cluster::run`](crate::cluster::Cluster::run) pipeline unchanged —
+/// the scale-out path for worker counts beyond one switch's ports.
+pub struct FabricAllReduce {
+    pub mode: FabricMode,
+    pub quantizer: GlobalQuantizer,
+    bits: u32,
+    levels: Vec<Level>,
+    session: Session,
+    word_pool: BufferPool<u32>,
+    sum_pool: BufferPool<u64>,
+    float_pool: BufferPool<f32>,
+}
+
+impl FabricAllReduce {
+    /// Build a fabric from per-level switches (leaf level first). Every
+    /// switch must share one gradient bit width; in remainder mode the
+    /// levels must be exact ([`OnnMode::Exact`]) — eq. 10 forwarding is
+    /// realized by the remainder-expanded ONN, which the simulator
+    /// models at its trained fixed point (native per-level networks
+    /// exercise [`FabricMode::Basic`]).
+    pub fn new(mode: FabricMode, switches: Vec<OptIncSwitch>) -> Result<FabricAllReduce> {
+        ensure!(!switches.is_empty(), "fabric needs at least one level");
+        let bits = switches[0].scenario.bits;
+        for (l, sw) in switches.iter().enumerate() {
+            ensure!(
+                sw.scenario.bits == bits,
+                "fabric level {l} runs {} bits but level 0 runs {bits}",
+                sw.scenario.bits
+            );
+            ensure!(
+                sw.scenario.servers >= 2,
+                "fabric level {l} needs a fan-in of at least 2"
+            );
+            if mode == FabricMode::Remainder {
+                ensure!(
+                    matches!(sw.mode, OnnMode::Exact),
+                    "remainder forwarding is realized by the remainder-expanded ONN \
+                     (modeled exact); native per-level networks require FabricMode::Basic"
+                );
+            }
+        }
+        let levels = switches
+            .into_iter()
+            .map(|switch| Level {
+                fan_in: switch.scenario.servers,
+                switch,
+            })
+            .collect();
+        Ok(FabricAllReduce {
+            mode,
+            quantizer: GlobalQuantizer::new(bits),
+            bits,
+            levels,
+            session: Session::default(),
+            word_pool: BufferPool::new(),
+            sum_pool: BufferPool::new(),
+            float_pool: BufferPool::new(),
+        })
+    }
+
+    /// Exact-oracle switches at every level ([`Scenario::fabric_level`]
+    /// shapes) — the configuration the oracle-conformance matrix runs.
+    pub fn exact(
+        bits: u32,
+        topology: &FabricTopology,
+        mode: FabricMode,
+    ) -> Result<FabricAllReduce> {
+        let switches = topology
+            .fan_ins()
+            .iter()
+            .map(|&f| Ok(OptIncSwitch::exact(Scenario::fabric_level(bits, f)?)))
+            .collect::<Result<Vec<_>>>()?;
+        FabricAllReduce::new(mode, switches)
+    }
+
+    /// The shallowest exact remainder-mode fabric of `fan_in`-port
+    /// switches serving `workers` — what `pipeline --collective fabric`
+    /// constructs when `--levels` is not given.
+    pub fn for_workers(bits: u32, fan_in: usize, workers: usize) -> Result<FabricAllReduce> {
+        let topo = FabricTopology::for_workers(fan_in, workers)?;
+        FabricAllReduce::exact(bits, &topo, FabricMode::Remainder)
+    }
+
+    /// Hardware-aware train one ONN per level at construction (the
+    /// fabric analogue of
+    /// [`OptIncAllReduce::trained`](super::optinc::OptIncAllReduce::trained)):
+    /// every level's group frames route through its freshly trained
+    /// network. Per-level training means basic mode (see
+    /// [`FabricAllReduce::new`]).
+    pub fn trained(
+        bits: u32,
+        topology: &FabricTopology,
+        cfg: &crate::onn::train::TrainConfig,
+    ) -> Result<FabricAllReduce> {
+        let switches = topology
+            .fan_ins()
+            .iter()
+            .map(|&f| OptIncSwitch::trained(Scenario::fabric_level(bits, f)?, cfg))
+            .collect::<Result<Vec<_>>>()?;
+        FabricAllReduce::new(FabricMode::Basic, switches)
+    }
+
+    /// Wire pre-trained (`.otsr`-loaded) networks in, one per level.
+    pub fn from_networks(
+        bits: u32,
+        topology: &FabricTopology,
+        nets: Vec<OnnNetwork>,
+    ) -> Result<FabricAllReduce> {
+        ensure!(
+            nets.len() == topology.depth(),
+            "fabric of depth {} got {} level networks",
+            topology.depth(),
+            nets.len()
+        );
+        let switches = topology
+            .fan_ins()
+            .iter()
+            .zip(nets)
+            .map(|(&f, net)| {
+                OptIncSwitch::new(Scenario::fabric_level(bits, f)?, OnnMode::Native(net))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        FabricAllReduce::new(FabricMode::Basic, switches)
+    }
+
+    pub fn depth(&self) -> usize {
+        self.levels.len()
+    }
+
+    pub fn fan_ins(&self) -> Vec<usize> {
+        self.levels.iter().map(|l| l.fan_in).collect()
+    }
+
+    /// Maximum workers the cascade serves.
+    pub fn capacity(&self) -> usize {
+        self.levels
+            .iter()
+            .fold(1usize, |acc, l| acc.saturating_mul(l.fan_in))
+    }
+
+    pub fn topology(&self) -> FabricTopology {
+        FabricTopology {
+            fan_ins: self.fan_ins(),
+        }
+    }
+
+    /// Eq. 9 at every level: each group's frames traverse the level's
+    /// switch (real ONN for native levels), which emits the quantized
+    /// group mean. Ragged tail groups (fewer members than the fan-in)
+    /// run with unused ports zero-wired and receiver AGC rescaling by
+    /// the populated count — modeled as the exact quantized mean over
+    /// the members (a native net is wired for the full fan-in).
+    fn route_basic(&mut self, mut nodes: Vec<Vec<u32>>, len: usize) -> Vec<u32> {
+        for li in 0..self.levels.len() {
+            let fan_in = self.levels[li].fan_in;
+            let mut next: Vec<Vec<u32>> = Vec::with_capacity(nodes.len().div_ceil(fan_in));
+            let mut start = 0usize;
+            while start < nodes.len() {
+                let end = (start + fan_in).min(nodes.len());
+                let mut out = self.word_pool.take(len);
+                if end - start == fan_in {
+                    let views: Vec<&[u32]> =
+                        nodes[start..end].iter().map(|v| v.as_slice()).collect();
+                    self.levels[li].switch.average_words_into(&views, &mut out);
+                } else {
+                    let g = (end - start) as u64;
+                    for (i, o) in out.iter_mut().enumerate() {
+                        let sum: u64 = nodes[start..end].iter().map(|v| v[i] as u64).sum();
+                        *o = ((sum * 2 + g) / (2 * g)) as u32;
+                    }
+                }
+                next.push(out);
+                start = end;
+            }
+            for buf in nodes.drain(..) {
+                self.word_pool.put(buf);
+            }
+            nodes = next;
+        }
+        assert_eq!(nodes.len(), 1, "fabric did not reduce to a single root output");
+        nodes.pop().unwrap()
+    }
+
+    /// Eq. 10 generalized across levels: each node forwards the exact
+    /// partial sum (the physical frame whose last PAM4 symbol carries
+    /// the fraction at 1/N resolution); only the root quantizes, with
+    /// round-half-up over the grand total divided by the leaf count —
+    /// the levels only partition the leaves, so the root's divisor is
+    /// exactly the worker count `n`, and the formula is identical to
+    /// [`quantized_mean`](crate::quant::quantized_mean) over all leaf
+    /// words: bit-exact for any worker count and any grouping.
+    fn route_remainder(&mut self, nodes: Vec<Vec<u32>>, len: usize) -> Vec<u32> {
+        let n = nodes.len();
+        let mut sums: Vec<Vec<u64>> = Vec::with_capacity(n);
+        for node in &nodes {
+            let mut s = self.sum_pool.take(len);
+            for (o, &w) in s.iter_mut().zip(node.iter()) {
+                *o = w as u64;
+            }
+            sums.push(s);
+        }
+        for buf in nodes {
+            self.word_pool.put(buf);
+        }
+        for li in 0..self.levels.len() {
+            let fan_in = self.levels[li].fan_in;
+            let mut next_sums: Vec<Vec<u64>> = Vec::with_capacity(sums.len().div_ceil(fan_in));
+            let mut start = 0usize;
+            while start < sums.len() {
+                let end = (start + fan_in).min(sums.len());
+                let mut acc = self.sum_pool.take(len);
+                for member in &sums[start..end] {
+                    for (o, &v) in acc.iter_mut().zip(member.iter()) {
+                        *o += v;
+                    }
+                }
+                next_sums.push(acc);
+                start = end;
+            }
+            for buf in sums.drain(..) {
+                self.sum_pool.put(buf);
+            }
+            sums = next_sums;
+        }
+        assert_eq!(sums.len(), 1, "fabric did not reduce to a single root output");
+        let total = sums.pop().unwrap();
+        let w = n as u64;
+        let mut out = self.word_pool.take(len);
+        for (o, &s) in out.iter_mut().zip(total.iter()) {
+            *o = ((s * 2 + w) / (2 * w)) as u32;
+        }
+        self.sum_pool.put(total);
+        out
+    }
+}
+
+impl ChunkedAllReduce for FabricAllReduce {
+    fn name(&self) -> &'static str {
+        match self.mode {
+            FabricMode::Basic => "fabric-basic",
+            FabricMode::Remainder => "fabric",
+        }
+    }
+
+    fn begin(&mut self, workers: usize, elements: usize) {
+        assert!(
+            workers <= self.capacity(),
+            "fabric with fan-ins {:?} supports at most {} workers, got {workers}",
+            self.fan_ins(),
+            self.capacity()
+        );
+        self.session.begin(workers, elements);
+    }
+
+    fn reduce_chunk(&mut self, chunks: &mut [ShardChunk]) {
+        let n = self.session.workers();
+        assert_eq!(chunks.len(), n, "fabric opened for {n} workers");
+        let (_, len) = check_aligned(chunks);
+
+        // 1. Per-chunk block scale exchange (the sync cost, as in the
+        //    flat OptINC collective).
+        let views: Vec<&[f32]> = chunks.iter().map(|c| c.data.as_slice()).collect();
+        let scale = GlobalQuantizer::global_scale(&views);
+
+        // 2. Leaf transmitters: quantize every worker chunk into
+        //    recycled word buffers.
+        let mut nodes: Vec<Vec<u32>> = Vec::with_capacity(n);
+        for c in chunks.iter() {
+            let mut buf = self.word_pool.take(len);
+            for (o, &g) in buf.iter_mut().zip(c.data.iter()) {
+                *o = self.quantizer.quantize(g, scale);
+            }
+            nodes.push(buf);
+        }
+
+        // 3. One traversal up the cascade.
+        let root = match self.mode {
+            FabricMode::Basic => self.route_basic(nodes, len),
+            FabricMode::Remainder => self.route_remainder(nodes, len),
+        };
+
+        // 4. Broadcast back down the splitter tree + dequantize.
+        let mut avg = self.float_pool.take(len);
+        for (o, &w) in avg.iter_mut().zip(root.iter()) {
+            *o = self.quantizer.dequantize(w, scale);
+        }
+        for c in chunks.iter_mut() {
+            c.data.copy_from_slice(&avg);
+        }
+        self.float_pool.put(avg);
+        self.word_pool.put(root);
+
+        // Each server transmits its payload once (full duplex); a chunk
+        // traverses one switch hop per level.
+        self.session.chunk_done(
+            len,
+            (len as u64 * self.bits as u64).div_ceil(8),
+            4 + (self.bits as u64).div_ceil(8),
+            self.depth() as u32,
+        );
+    }
+
+    fn finish(&mut self) -> CollectiveStats {
+        let mut st = self.session.finish();
+        st.levels = self.depth() as u32;
+        st
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::engine::ChunkedDriver;
+    use super::super::optinc::OptIncAllReduce;
+    use super::super::test_support::random_shards;
+    use super::super::AllReduce;
+    use super::*;
+    use crate::quant::chunked_reference_mean;
+
+    /// Flat single-switch reference on the same per-chunk block scales
+    /// the streamed fabric uses (chunk size = whole shard here).
+    fn flat_reference(shards: &[Vec<f32>], bits: u32) -> Vec<f32> {
+        chunked_reference_mean(shards, usize::MAX, bits)
+    }
+
+    #[test]
+    fn topology_shapes() {
+        let t = FabricTopology::uniform(4, 3).unwrap();
+        assert_eq!(t.depth(), 3);
+        assert_eq!(t.capacity(), 64);
+        assert_eq!(t.switch_counts(64), vec![16, 4, 1]);
+        // Ragged population rounds tail switches up.
+        assert_eq!(t.switch_counts(22), vec![6, 2, 1]);
+        let d = FabricTopology::for_workers(4, 17).unwrap();
+        assert_eq!(d.depth(), 3, "17 workers need 3 levels of 4-port switches");
+        assert_eq!(FabricTopology::for_workers(16, 16).unwrap().depth(), 1);
+        assert!(FabricTopology::uniform(1, 2).is_err());
+        assert!(FabricTopology::new(vec![]).is_err());
+    }
+
+    #[test]
+    fn remainder_fabric_equals_flat_sixteen_port_switch() {
+        // Fan-in 4 × depth 2 serving 16 workers must equal the flat
+        // 16-port switch bit for bit (the §IV cascade claim, streamed).
+        let topo = FabricTopology::uniform(4, 2).unwrap();
+        let mut fabric = FabricAllReduce::exact(8, &topo, FabricMode::Remainder).unwrap();
+        let mut flat = OptIncAllReduce::exact(Scenario::table1(3).unwrap(), 0);
+        let base = random_shards(16, 700, 41);
+        let mut a = base.clone();
+        fabric.all_reduce(&mut a);
+        let mut b = base.clone();
+        flat.all_reduce(&mut b);
+        assert_eq!(a, b, "fabric must be bit-exact vs the flat switch");
+    }
+
+    #[test]
+    fn ragged_worker_counts_stay_bit_exact() {
+        // Counts that are not powers of the fan-in leave the last switch
+        // of each level partially populated; eq. 10 forwarding with leaf
+        // counts must still reproduce the flat quantized mean exactly.
+        let topo = FabricTopology::uniform(4, 2).unwrap();
+        for workers in [2usize, 5, 9, 11, 13, 15] {
+            let mut fabric = FabricAllReduce::exact(8, &topo, FabricMode::Remainder).unwrap();
+            let base = random_shards(workers, 257, 50 + workers as u64);
+            let want = flat_reference(&base, 8);
+            let mut work = base.clone();
+            fabric.all_reduce(&mut work);
+            for (w, s) in work.iter().enumerate() {
+                assert_eq!(s, &want, "worker {w} of {workers} diverged from flat");
+            }
+        }
+    }
+
+    #[test]
+    fn deep_fabric_streams_chunks_bit_exactly() {
+        // Depth 3, 64 workers, chunked stream with a non-dividing grain:
+        // per-chunk block scales match between fabric and the reference,
+        // so equality is exact chunk by chunk.
+        let topo = FabricTopology::uniform(4, 3).unwrap();
+        let mut fabric = FabricAllReduce::exact(8, &topo, FabricMode::Remainder).unwrap();
+        let base = random_shards(64, 500, 61);
+        let mut work = base.clone();
+        let mut driver = ChunkedDriver::new(77);
+        let stats = driver.all_reduce(&mut fabric, &mut work);
+
+        // Reference mirrors the chunk boundaries.
+        let want = chunked_reference_mean(&base, 77, 8);
+        for s in &work {
+            assert_eq!(s, &want);
+        }
+        assert_eq!(stats.chunks, 7);
+        assert_eq!(stats.levels, 3);
+        assert_eq!(stats.rounds, 3, "one switch hop per level");
+        assert_eq!(stats.bytes_sent_per_server, 500, "payload crosses once");
+    }
+
+    #[test]
+    fn basic_mode_accumulates_depth_error_remainder_does_not() {
+        let topo = FabricTopology::uniform(4, 2).unwrap();
+        let base = random_shards(16, 4000, 71);
+        let want = flat_reference(&base, 8);
+        let run = |mode: FabricMode| -> usize {
+            let mut fabric = FabricAllReduce::exact(8, &topo, mode).unwrap();
+            let mut work = base.clone();
+            fabric.all_reduce(&mut work);
+            work[0]
+                .iter()
+                .zip(&want)
+                .filter(|(a, b)| a != b)
+                .count()
+        };
+        assert_eq!(run(FabricMode::Remainder), 0);
+        assert!(
+            run(FabricMode::Basic) > 0,
+            "two-level quantization must show error on 4000 random elements"
+        );
+    }
+
+    #[test]
+    fn native_level_networks_run_real_frames() {
+        // Random (untrained) per-level nets exercise the full per-level
+        // encode → P → ONN → snap path in basic mode: output words stay
+        // in range and every worker agrees.
+        let topo = FabricTopology::uniform(4, 2).unwrap();
+        let nets = vec![
+            crate::onn::random_network(&[4, 64, 128, 256, 128, 64, 4], 3),
+            crate::onn::random_network(&[4, 64, 128, 256, 128, 64, 4], 4),
+        ];
+        let mut fabric = FabricAllReduce::from_networks(8, &topo, nets).unwrap();
+        assert_eq!(fabric.name(), "fabric-basic");
+        let mut work = random_shards(16, 64, 81);
+        fabric.all_reduce(&mut work);
+        for s in &work[1..] {
+            assert_eq!(s, &work[0]);
+        }
+        assert!(work[0].iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn remainder_mode_rejects_native_levels() {
+        let net = crate::onn::random_network(&[4, 64, 128, 256, 128, 64, 4], 5);
+        let sw = OptIncSwitch::new(Scenario::fabric_level(8, 4).unwrap(), OnnMode::Native(net))
+            .unwrap();
+        let err = FabricAllReduce::new(FabricMode::Remainder, vec![sw]).unwrap_err();
+        assert!(err.to_string().contains("FabricMode::Basic"), "{err}");
+    }
+
+    #[test]
+    #[should_panic(expected = "supports at most 16 workers")]
+    fn over_capacity_panics_with_a_clear_message() {
+        let topo = FabricTopology::uniform(4, 2).unwrap();
+        let mut fabric = FabricAllReduce::exact(8, &topo, FabricMode::Remainder).unwrap();
+        let mut work = random_shards(17, 8, 91);
+        fabric.all_reduce(&mut work);
+    }
+
+    #[test]
+    fn mixed_fan_ins_per_level() {
+        // 8-port leaves feeding a 4-port root: capacity 32, still exact.
+        let topo = FabricTopology::new(vec![8, 4]).unwrap();
+        let mut fabric = FabricAllReduce::exact(8, &topo, FabricMode::Remainder).unwrap();
+        assert_eq!(fabric.capacity(), 32);
+        let base = random_shards(27, 123, 101);
+        let want = flat_reference(&base, 8);
+        let mut work = base.clone();
+        fabric.all_reduce(&mut work);
+        assert_eq!(work[0], want);
+    }
+}

@@ -26,6 +26,7 @@
 //! reflects compute/communication overlap.
 
 pub mod engine;
+pub mod fabric;
 pub mod hierarchical;
 pub mod optinc;
 pub mod ring;
@@ -51,6 +52,10 @@ pub struct CollectiveStats {
     /// schedule hid behind later chunk uploads (`(C−1)/C` for a
     /// double-buffered stream of C chunks, 0 for the monolithic path).
     pub overlap_fraction: f64,
+    /// Switch levels the payload traverses (1 = flat single switch or a
+    /// server-side collective; >1 = a cascaded fabric, which charges
+    /// per-level OCS reconfiguration in [`Self::modeled_step_time_s`]).
+    pub levels: u32,
 }
 
 impl Default for CollectiveStats {
@@ -62,6 +67,7 @@ impl Default for CollectiveStats {
             elements: 0,
             chunks: 1,
             overlap_fraction: 0.0,
+            levels: 1,
         }
     }
 }
@@ -98,7 +104,21 @@ impl CollectiveStats {
         let bw = hw.server_bandwidth_bytes();
         let wire =
             (self.bytes_sent_per_server + self.sync_bytes_per_server) as f64 / bw;
-        wire + wire * (1.0 - self.overlap_fraction) + self.rounds as f64 * hw.link_latency_s
+        wire + wire * (1.0 - self.overlap_fraction)
+            + self.rounds as f64 * hw.link_latency_s
+            + self.exposed_reconfig_s(hw)
+    }
+
+    /// SWOT-style reconfiguration overlap (arXiv 2510.19322): a cascaded
+    /// fabric reprograms one OCS pattern per level per step, but the
+    /// chunk stream hides the deeper levels' reconfiguration behind
+    /// earlier chunk uploads, so only the non-overlapped fraction of the
+    /// `levels − 1` forwarding-level reconfigurations reaches the
+    /// critical path. Flat topologies (`levels ≤ 1`) keep a static
+    /// pattern and pay nothing.
+    pub fn exposed_reconfig_s(&self, hw: &HardwareModel) -> f64 {
+        let extra = self.levels.saturating_sub(1) as f64;
+        extra * hw.ocs_reconfig_s * (1.0 - self.overlap_fraction)
     }
 }
 
@@ -233,5 +253,39 @@ mod tests {
         assert!((t_piped - (1.0 + 1.0 / 8.0 + hw.link_latency_s)).abs() < 1e-9);
         // ...and approaches the steady-state ideal from above.
         assert!(t_piped > piped.modeled_time_s(&hw));
+    }
+
+    #[test]
+    fn fabric_levels_charge_overlappable_reconfiguration() {
+        let hw = HardwareModel::default();
+        let flat = CollectiveStats {
+            bytes_sent_per_server: 800_000_000_000,
+            rounds: 1,
+            elements: 1,
+            ..CollectiveStats::default()
+        };
+        // Flat topologies pay no reconfiguration (static pattern).
+        assert_eq!(flat.exposed_reconfig_s(&hw), 0.0);
+
+        // A 3-level monolithic fabric pays (levels − 1) reconfigurations
+        // serially; a deep chunk stream hides (C−1)/C of them.
+        let mono = CollectiveStats { levels: 3, rounds: 3, ..flat };
+        assert!((mono.exposed_reconfig_s(&hw) - 2.0 * hw.ocs_reconfig_s).abs() < 1e-15);
+        let piped = CollectiveStats {
+            chunks: 8,
+            overlap_fraction: 7.0 / 8.0,
+            ..mono
+        };
+        assert!(
+            (piped.exposed_reconfig_s(&hw) - 2.0 * hw.ocs_reconfig_s / 8.0).abs() < 1e-15
+        );
+        // ...and the step model orders accordingly.
+        assert!(piped.modeled_step_time_s(&hw) < mono.modeled_step_time_s(&hw));
+        assert!(
+            (mono.modeled_step_time_s(&hw)
+                - (2.0 + 3.0 * hw.link_latency_s + 2.0 * hw.ocs_reconfig_s))
+                .abs()
+                < 1e-9
+        );
     }
 }

@@ -128,13 +128,79 @@ impl Scenario {
     /// extra 64×64 approximated matrices after the first layer and before
     /// the last layer.
     pub fn cascade_expanded() -> Scenario {
+        let mut s = Scenario::table1(1)
+            .expect("scenario 1 exists")
+            .with_remainder_expansion();
+        s.id = 5;
+        s
+    }
+
+    /// Expanded-ONN variant realizing eq. 10 remainder forwarding: one
+    /// extra `layers[1]`-wide approximated matrix after the first layer
+    /// and one before the last, so a forwarding (non-root) fabric level
+    /// can merge the level fraction into its last PAM4 symbol at 1/N
+    /// resolution. Generalizes [`Self::cascade_expanded`] (which is this
+    /// applied to scenario 1) to any per-level scenario.
+    pub fn with_remainder_expansion(&self) -> Scenario {
+        let mut layers = self.layers.clone();
+        let w = layers[1];
+        layers.insert(1, w);
+        let tail = layers.len() - 1;
+        layers.insert(tail, w);
+        let num_weights = layers.len() - 1;
         Scenario {
-            id: 5,
-            bits: 8,
-            servers: 4,
-            layers: vec![4, 64, 64, 128, 256, 128, 64, 64, 4],
-            // original "all layers" + the two inserted 64×64 matrices
-            approx_layers: (1..=8).collect(),
+            id: self.id,
+            bits: self.bits,
+            servers: self.servers,
+            layers,
+            // the inserted square matrices are approximated along with
+            // everything the base scenario approximated; the paper's
+            // expanded-ONN overhead claim counts all matrices on Σ·U
+            approx_layers: (1..=num_weights).collect(),
+        }
+    }
+
+    /// Scenario for one fabric level: a `fan_in`-port switch at gradient
+    /// width `bits`. Fan-in/bit pairs that match a Table I row return
+    /// that row; other fan-ins follow the table's doubling ladder (peak
+    /// width `64·N·(B/8)`, K = 4 inputs, `M = B/2` outputs) with every
+    /// matrix approximated.
+    pub fn fabric_level(bits: u32, fan_in: usize) -> Result<Scenario> {
+        if bits < 2 || bits > 32 || bits % 2 != 0 {
+            bail!("fabric level needs an even bit width in 2..=32, got {bits}");
+        }
+        if fan_in < 2 {
+            bail!("fabric level needs a fan-in of at least 2, got {fan_in}");
+        }
+        match (bits, fan_in) {
+            (8, 4) => Scenario::table1(1),
+            (8, 8) => Scenario::table1(2),
+            (8, 16) => Scenario::table1(3),
+            (16, 4) => Scenario::table1(4),
+            _ => {
+                let peak = 64 * fan_in * (bits as usize / 8).max(1);
+                let mut layers = vec![4usize];
+                let mut w = 64;
+                while w < peak {
+                    layers.push(w);
+                    w *= 2;
+                }
+                // The ladder always tops out at exactly `peak` (a
+                // non-power-of-2 fan-in lands between rungs).
+                layers.push(peak);
+                let mut down = layers[1..layers.len() - 1].to_vec();
+                down.reverse();
+                layers.extend(down);
+                layers.push((bits as usize / 2).max(2));
+                let num_weights = layers.len() - 1;
+                Ok(Scenario {
+                    id: 0,
+                    bits,
+                    servers: fan_in,
+                    layers,
+                    approx_layers: (1..=num_weights).collect(),
+                })
+            }
         }
     }
 
@@ -306,5 +372,33 @@ mod tests {
     fn cascade_expansion_inserts_two_64s() {
         let c = Scenario::cascade_expanded();
         assert_eq!(c.layers, vec![4, 64, 64, 128, 256, 128, 64, 64, 4]);
+        assert_eq!(c.approx_layers, (1..=8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fabric_level_matches_table1_where_defined() {
+        assert_eq!(Scenario::fabric_level(8, 4).unwrap(), Scenario::table1(1).unwrap());
+        assert_eq!(Scenario::fabric_level(8, 8).unwrap(), Scenario::table1(2).unwrap());
+        assert_eq!(Scenario::fabric_level(8, 16).unwrap(), Scenario::table1(3).unwrap());
+        assert_eq!(Scenario::fabric_level(16, 4).unwrap(), Scenario::table1(4).unwrap());
+    }
+
+    #[test]
+    fn fabric_level_synthesizes_the_table_ladder() {
+        // Fan-in 2 at 8 bits: peak 128, K = 4 in, M = 4 out.
+        let s = Scenario::fabric_level(8, 2).unwrap();
+        assert_eq!(s.layers, vec![4, 64, 128, 64, 4]);
+        assert_eq!(s.servers, 2);
+        assert_eq!(s.approx_layers, (1..=4).collect::<Vec<_>>());
+        // Fan-in 2 at 16 bits: peak doubles, M = 8 out.
+        let s16 = Scenario::fabric_level(16, 2).unwrap();
+        assert_eq!(s16.layers, vec![4, 64, 128, 256, 128, 64, 8]);
+        // Non-power-of-2 fan-in still reaches the documented peak 64·N.
+        let s3 = Scenario::fabric_level(8, 3).unwrap();
+        assert_eq!(s3.layers, vec![4, 64, 128, 192, 128, 64, 4]);
+        assert_eq!(s3.servers, 3);
+        // Invalid shapes are clear errors.
+        assert!(Scenario::fabric_level(7, 4).is_err());
+        assert!(Scenario::fabric_level(8, 1).is_err());
     }
 }

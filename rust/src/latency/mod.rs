@@ -95,6 +95,15 @@ impl WorkloadModel {
         let payload = self.params as f64 * self.grad_bytes_optinc + 8.0;
         payload / Self::link_bytes_per_s(hw) + hw.link_latency_s
     }
+
+    /// Fabric communication time (§III-C at scale): the payload still
+    /// crosses each server's access link exactly once (full duplex), but
+    /// traverses `levels` switch hops, each adding one link latency.
+    /// Depth-1 degenerates to [`Self::optinc_comm_s`].
+    pub fn fabric_comm_s(&self, hw: &HardwareModel, levels: usize) -> f64 {
+        let payload = self.params as f64 * self.grad_bytes_optinc + 8.0;
+        payload / Self::link_bytes_per_s(hw) + levels.max(1) as f64 * hw.link_latency_s
+    }
 }
 
 /// One Fig. 7b bar pair, normalized to the ring total.
@@ -148,6 +157,33 @@ impl LatencyBreakdown {
     /// Latency reduction of the pipelined engine vs the ring baseline.
     pub fn pipelined_reduction(&self, chunks: u32) -> f64 {
         1.0 - self.pipelined_total(chunks) / self.ring_total()
+    }
+
+    /// Step time through a `levels`-deep fabric streamed in `chunks`
+    /// chunks: the flat pipelined total plus one extra link latency per
+    /// forwarding level, plus the fraction of the per-level OCS
+    /// reconfiguration the stream could **not** hide. SWOT-style
+    /// scheduling (arXiv 2510.19322) overlaps the deeper levels'
+    /// reconfiguration with the chunk stream, so a `C`-chunk stream
+    /// exposes only `1/C` of the `(levels − 1)` reconfigurations; a
+    /// monolithic step pays them serially. Depth 1 keeps a static
+    /// pattern and degenerates to [`Self::pipelined_total`].
+    pub fn fabric_total(&self, hw: &HardwareModel, levels: usize, chunks: u32) -> f64 {
+        let extra = levels.saturating_sub(1) as f64;
+        let overlap = if chunks <= 1 {
+            0.0
+        } else {
+            (chunks - 1) as f64 / chunks as f64
+        };
+        self.pipelined_total(chunks)
+            + extra * hw.link_latency_s
+            + extra * hw.ocs_reconfig_s * (1.0 - overlap)
+    }
+
+    /// Latency reduction of the streamed fabric vs the ring baseline —
+    /// what scale-out costs relative to the flat switch's win.
+    pub fn fabric_reduction(&self, hw: &HardwareModel, levels: usize, chunks: u32) -> f64 {
+        1.0 - self.fabric_total(hw, levels, chunks) / self.ring_total()
     }
 
     /// Normalized components (ring total = 1.0), as printed by the bench.
@@ -228,6 +264,39 @@ mod tests {
             assert_eq!(b.pipelined_total(1), b.optinc_total(), "C=1 is monolithic");
             assert!(b.pipelined_reduction(8) > b.reduction());
         }
+    }
+
+    #[test]
+    fn fabric_latency_scales_with_depth_and_overlaps_reconfiguration() {
+        let hw = HardwareModel::default();
+        let w = WorkloadModel::resnet50_default();
+        let b = LatencyBreakdown::new(&w, &hw, 64);
+
+        // Depth 1 is the flat switch.
+        assert_eq!(b.fabric_total(&hw, 1, 8), b.pipelined_total(8));
+        assert!((w.fabric_comm_s(&hw, 1) - b.optinc_comm_s).abs() < 1e-15);
+        assert!(w.fabric_comm_s(&hw, 3) > w.fabric_comm_s(&hw, 1));
+
+        // Depth costs hop latency + reconfiguration…
+        let d1 = b.fabric_total(&hw, 1, 8);
+        let d2 = b.fabric_total(&hw, 2, 8);
+        let d3 = b.fabric_total(&hw, 3, 8);
+        assert!(d1 < d2 && d2 < d3, "{d1} {d2} {d3}");
+
+        // …but streaming hides the reconfiguration SWOT-style: a 64-chunk
+        // stream exposes 1/64 of it, a monolithic step all of it.
+        let mono = b.fabric_total(&hw, 3, 1);
+        let deep = b.fabric_total(&hw, 3, 64);
+        assert!(deep < mono);
+        let hidden = mono - deep;
+        assert!(
+            hidden > 2.0 * hw.ocs_reconfig_s * 0.9,
+            "most of the 2-level reconfiguration should be hidden (got {hidden})"
+        );
+
+        // Scale-out keeps the paper's win: a 3-level fabric at 64 servers
+        // still beats the ring baseline handily for the comm-bound model.
+        assert!(b.fabric_reduction(&hw, 3, 16) > 0.25);
     }
 
     #[test]

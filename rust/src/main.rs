@@ -16,7 +16,7 @@ const COMMANDS: &[Command] = &[
     },
     Command {
         name: "pipeline",
-        about: "Streaming engine demo: pipelined vs monolithic modeled step time",
+        about: "Streaming engine demo: pipelined vs monolithic (ring|optinc|fabric --fan-in --levels)",
         run: cmd_pipeline,
     },
     Command {
@@ -46,7 +46,7 @@ const COMMANDS: &[Command] = &[
     },
     Command {
         name: "cascade",
-        about: "§III-C cascade validation (eq. 9 vs eq. 10, HW overhead)",
+        about: "§III-C cascade validation (eq. 9 vs eq. 10, streamed fabric, HW overhead)",
         run: cmd_cascade,
     },
     Command {
@@ -135,6 +135,7 @@ fn cmd_fig7a(_args: &Args) -> Result<()> {
 fn cmd_pipeline(args: &Args) -> Result<()> {
     use optinc::cluster::{Cluster, ClusterMetrics, Workload};
     use optinc::collectives::engine::ChunkedAllReduce;
+    use optinc::collectives::fabric::{FabricAllReduce, FabricMode, FabricTopology};
     use optinc::collectives::optinc::OptIncAllReduce;
     use optinc::collectives::ring::RingAllReduce;
     use optinc::config::Scenario;
@@ -190,7 +191,52 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
                 Box::new(OptIncAllReduce::exact(Scenario::table1(id)?, 11))
             }
         }
-        other => anyhow::bail!("unknown collective '{other}' (ring|optinc|optinc-trained)"),
+        "fabric" | "fabric-basic" | "fabric-trained" => {
+            // Multi-level switch cascade: serves worker counts beyond one
+            // switch's ports (fan-in^levels). `--levels` defaults to the
+            // shallowest cascade covering `--workers`.
+            let bits = args.usize_or("bits", 8)? as u32;
+            let fan_in = args.usize_or("fan-in", 4)?;
+            let topo = match args.usize_opt("levels")? {
+                Some(l) => FabricTopology::uniform(fan_in, l)?,
+                None => FabricTopology::for_workers(fan_in, workers)?,
+            };
+            anyhow::ensure!(
+                workers <= topo.capacity(),
+                "{workers} workers exceed the fabric capacity {} (fan-in {fan_in}, {} levels)",
+                topo.capacity(),
+                topo.depth()
+            );
+            let fabric = match which.as_str() {
+                "fabric" => FabricAllReduce::exact(bits, &topo, FabricMode::Remainder)?,
+                "fabric-basic" => FabricAllReduce::exact(bits, &topo, FabricMode::Basic)?,
+                _ => {
+                    // One hardware-aware ONN trained natively per level.
+                    let tcfg = optinc::onn::train::TrainConfig {
+                        steps: args.usize_or("train-steps", 200)?,
+                        ..Default::default()
+                    };
+                    println!(
+                        "training {} level ONNs natively ({} steps each)…",
+                        topo.depth(),
+                        tcfg.steps
+                    );
+                    FabricAllReduce::trained(bits, &topo, &tcfg)?
+                }
+            };
+            println!(
+                "fabric: {} workers through {} levels of {fan_in}-port switches \
+                 (capacity {}, switches per level {:?})",
+                workers,
+                topo.depth(),
+                topo.capacity(),
+                topo.switch_counts(workers)
+            );
+            Box::new(fabric)
+        }
+        other => anyhow::bail!(
+            "unknown collective '{other}' (ring|optinc|optinc-trained|fabric|fabric-basic|fabric-trained)"
+        ),
     };
 
     let cluster = Cluster::new(workers).with_chunk_elems(chunk);

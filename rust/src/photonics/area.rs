@@ -66,6 +66,44 @@ pub fn area_ratio(sc: &Scenario) -> f64 {
     scenario_mzis(sc, true) as f64 / scenario_mzis(sc, false) as f64
 }
 
+/// Total MZIs of a multi-level fabric serving `workers` leaves:
+/// `levels[l]` is the per-switch scenario of level `l` (leaf first, its
+/// `servers` = the level fan-in), switch counts round ragged tails up,
+/// and every **forwarding** (non-root) level pays for the
+/// remainder-expanded ONN ([`Scenario::with_remainder_expansion`]) that
+/// realizes eq. 10 fraction forwarding — the generalized "~10.5% per
+/// forwarding level" overhead of §IV.
+pub fn fabric_mzis(levels: &[Scenario], workers: usize) -> usize {
+    let mut nodes = workers;
+    let mut total = 0usize;
+    for (l, sc) in levels.iter().enumerate() {
+        let switches = nodes.div_ceil(sc.servers);
+        let per_switch = if l + 1 < levels.len() {
+            scenario_mzis(&sc.with_remainder_expansion(), true)
+        } else {
+            scenario_mzis(sc, true)
+        };
+        total += switches * per_switch;
+        nodes = switches;
+    }
+    total
+}
+
+/// Hardware overhead of remainder forwarding: [`fabric_mzis`] vs the
+/// same switch population with un-expanded ONNs (eq. 9 basic cascading).
+/// 0 for a depth-1 fabric; approaches the single-switch expansion
+/// overhead (~10.5% for scenario 1) as the leaf levels dominate.
+pub fn fabric_overhead(levels: &[Scenario], workers: usize) -> f64 {
+    let mut nodes = workers;
+    let mut base = 0usize;
+    for sc in levels {
+        let switches = nodes.div_ceil(sc.servers);
+        base += switches * scenario_mzis(sc, true);
+        nodes = switches;
+    }
+    fabric_mzis(levels, workers) as f64 / base as f64 - 1.0
+}
+
 /// Per-layer cost breakdown for reporting.
 pub fn layer_breakdown(sc: &Scenario) -> Vec<(usize, usize, usize, bool, usize)> {
     (1..sc.layers.len())
@@ -144,6 +182,33 @@ mod tests {
             (0.08..0.13).contains(&overhead),
             "overhead {overhead:.4} not ~10.5%"
         );
+    }
+
+    #[test]
+    fn fabric_mzis_count_per_level_switches_and_expansion() {
+        let sc = Scenario::table1(1).unwrap();
+        let base = scenario_mzis(&sc, true);
+        let expanded = scenario_mzis(&sc.with_remainder_expansion(), true);
+
+        // Depth 1: one flat switch, no expansion, zero overhead.
+        assert_eq!(fabric_mzis(&[sc.clone()], 4), base);
+        assert_eq!(fabric_overhead(&[sc.clone()], 4), 0.0);
+
+        // 16 workers over fan-in 4 × depth 2: 4 expanded leaves + 1 root.
+        let levels = [sc.clone(), sc.clone()];
+        assert_eq!(fabric_mzis(&levels, 16), 4 * expanded + base);
+        let overhead = fabric_overhead(&levels, 16);
+        // 4 of 5 switches carry the ~10.5% expansion → ~8.4%.
+        assert!((0.06..0.11).contains(&overhead), "overhead {overhead}");
+
+        // Ragged population rounds the tail switch up: 13 workers still
+        // need 4 leaf switches.
+        assert_eq!(fabric_mzis(&levels, 13), 4 * expanded + base);
+
+        // Deeper trees cost more hardware but serve exponentially more
+        // workers.
+        let three = [sc.clone(), sc.clone(), sc];
+        assert!(fabric_mzis(&three, 64) > fabric_mzis(&levels, 16));
     }
 
     #[test]

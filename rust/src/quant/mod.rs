@@ -133,6 +133,34 @@ pub fn quantized_mean(words: &[u32]) -> u32 {
     ((sum * 2 + n) / (2 * n)) as u32
 }
 
+/// Flat single-switch reference for float shards streamed at grain
+/// `chunk`: per-chunk block scale ([`GlobalQuantizer::global_scale`],
+/// exactly as every chunked collective computes it) → quantize →
+/// [`quantized_mean`] → dequantize. This is the bit-exactness oracle the
+/// fabric cascade, its property matrix, and the cascade experiment all
+/// compare against — one implementation so the oracle cannot drift from
+/// the framing it checks. Pass `chunk >= len` for a single whole-shard
+/// block.
+pub fn chunked_reference_mean(shards: &[Vec<f32>], chunk: usize, bits: u32) -> Vec<f32> {
+    assert!(!shards.is_empty(), "reference mean needs at least one shard");
+    assert!(chunk >= 1, "chunk size must be at least one element");
+    let q = GlobalQuantizer::new(bits);
+    let len = shards[0].len();
+    let mut out = vec![0.0f32; len];
+    let mut off = 0usize;
+    while off < len {
+        let hi = off.saturating_add(chunk).min(len);
+        let views: Vec<&[f32]> = shards.iter().map(|s| &s[off..hi]).collect();
+        let scale = GlobalQuantizer::global_scale(&views);
+        for (i, o) in out.iter_mut().enumerate().take(hi).skip(off) {
+            let words: Vec<u32> = shards.iter().map(|s| q.quantize(s[i], scale)).collect();
+            *o = q.dequantize(quantized_mean(&words), scale);
+        }
+        off = hi;
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -5,6 +5,7 @@
 //! sizes that do not divide the element count.
 
 use optinc::collectives::engine::ChunkedDriver;
+use optinc::collectives::fabric::{FabricAllReduce, FabricMode, FabricTopology};
 use optinc::collectives::hierarchical::HierarchicalOptInc;
 use optinc::collectives::optinc::OptIncAllReduce;
 use optinc::collectives::ring::RingAllReduce;
@@ -12,7 +13,7 @@ use optinc::collectives::two_tree::TwoTreeAllReduce;
 use optinc::collectives::{exact_mean, AllReduce};
 use optinc::config::Scenario;
 use optinc::optinc::cascade::CascadeMode;
-use optinc::quant::{quantized_mean, GlobalQuantizer};
+use optinc::quant::{chunked_reference_mean, quantized_mean, GlobalQuantizer};
 use optinc::util::proptest::{forall, Config};
 use optinc::util::rng::Pcg32;
 
@@ -288,6 +289,80 @@ fn prop_chunked_collectives_match_exact_mean() {
             Ok(())
         },
     );
+}
+
+/// The ISSUE-4 oracle-conformance matrix: the remainder-mode fabric must
+/// be **bit-exact** against the flat single-switch quantized mean for
+/// fan-ins {2, 4, 16} × depths {1, 2, 3} × worker counts that are not
+/// powers of the fan-in (ragged last switches at every level) × chunk
+/// sizes {1, 7, len−1, len, len+1}.
+#[test]
+fn prop_fabric_remainder_bit_exact_vs_flat_quantized_mean() {
+    let len = 61usize; // prime, so no chunk size divides it
+    let chunk_sizes = [1usize, 7, len - 1, len, len + 1];
+    let mut data_rng = Pcg32::seeded(0xFAB);
+
+    for &fan_in in &[2usize, 4, 16] {
+        for depth in 1..=3usize {
+            let topo = FabricTopology::uniform(fan_in, depth).unwrap();
+            let cap = topo.capacity();
+            // Ragged and aligned populations: full capacity, one short
+            // of capacity, a bit more than half, and small odd counts.
+            let mut worker_counts = vec![cap, cap - 1, cap / 2 + 1, 3, 5];
+            worker_counts.retain(|&w| w >= 2 && w <= cap);
+            worker_counts.dedup();
+            // Keep the 16^3 = 4096-leaf tree CI-sized.
+            worker_counts.retain(|&w| w <= 300);
+            if worker_counts.is_empty() {
+                worker_counts.push(cap.min(300));
+            }
+
+            for &workers in &worker_counts {
+                let shards: Vec<Vec<f32>> = (0..workers)
+                    .map(|_| {
+                        (0..len)
+                            .map(|_| (data_rng.normal() * 0.3) as f32)
+                            .collect()
+                    })
+                    .collect();
+                for &cs in &chunk_sizes {
+                    let want = chunked_reference_mean(&shards, cs, 8);
+                    let mut fabric =
+                        FabricAllReduce::exact(8, &topo, FabricMode::Remainder).unwrap();
+                    let mut work = shards.clone();
+                    let mut driver = ChunkedDriver::new(cs);
+                    let stats = driver.all_reduce(&mut fabric, &mut work);
+                    assert_eq!(stats.chunks as usize, len.div_ceil(cs));
+                    assert_eq!(stats.levels as usize, depth);
+                    for (w, s) in work.iter().enumerate() {
+                        assert_eq!(
+                            s, &want,
+                            "fan-in {fan_in} depth {depth} workers {workers} \
+                             chunk {cs} worker {w}: fabric is not bit-exact"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Sanity companion to the matrix: basic (eq. 9 per level) fabrics with
+/// depth ≥ 2 must NOT be bit-exact in general — if they were, the
+/// remainder machinery would be untestable dead weight.
+#[test]
+fn prop_fabric_basic_mode_errs_at_depth() {
+    let topo = FabricTopology::uniform(4, 2).unwrap();
+    let mut rng = Pcg32::seeded(0xBA51C);
+    let shards: Vec<Vec<f32>> = (0..16)
+        .map(|_| (0..2000).map(|_| (rng.normal() * 0.3) as f32).collect())
+        .collect();
+    let want = chunked_reference_mean(&shards, 2000, 8);
+    let mut fabric = FabricAllReduce::exact(8, &topo, FabricMode::Basic).unwrap();
+    let mut work = shards.clone();
+    fabric.all_reduce(&mut work);
+    let diffs = work[0].iter().zip(&want).filter(|(a, b)| a != b).count();
+    assert!(diffs > 0, "two-level quantization should err on 2000 elements");
 }
 
 #[test]

@@ -3,8 +3,11 @@
 //! photonics compile path on real ONN shapes, and the cluster driver
 //! with the OptINC collective.
 
+use std::time::{Duration, Instant};
+
 use optinc::cluster::{Cluster, ClusterMetrics, Workload};
 use optinc::collectives::engine::ChunkedAllReduce;
+use optinc::collectives::fabric::FabricAllReduce;
 use optinc::collectives::hierarchical::HierarchicalOptInc;
 use optinc::collectives::optinc::OptIncAllReduce;
 use optinc::collectives::ring::RingAllReduce;
@@ -158,6 +161,197 @@ fn cascade_collective_equals_flat_switch_on_cluster_gradients() {
     let mut b = base.clone();
     OptIncAllReduce::exact(sc16, 1).all_reduce(&mut b);
     assert_eq!(a[0], b[0]);
+}
+
+#[test]
+fn fabric_collective_runs_beyond_port_count_on_the_cluster() {
+    // The scale-out path end to end: 16 workers (4× one switch's ports)
+    // of real threaded gradient streams through a depth-2 fabric, and
+    // the result is bit-identical to what the flat quantized mean gives.
+    struct Probe {
+        dim: usize,
+        tx: std::sync::mpsc::Sender<(usize, Vec<f32>)>,
+    }
+    impl Workload for Probe {
+        fn grad(&mut self, step: usize, worker: usize) -> (Vec<f32>, f64) {
+            let mut rng = Pcg32::seeded((step * 100 + worker) as u64);
+            let g = (0..self.dim).map(|_| rng.normal() as f32 * 0.1).collect();
+            (g, 0.0)
+        }
+        fn apply(&mut self, _step: usize, worker: usize, avg: &[f32]) {
+            self.tx.send((worker, avg.to_vec())).ok();
+        }
+    }
+
+    let workers = 16usize;
+    let (tx, rx) = std::sync::mpsc::channel();
+    let cluster = Cluster::new(workers).with_chunk_elems(23);
+    let mut fabric = FabricAllReduce::for_workers(8, 4, workers).unwrap();
+    assert_eq!(fabric.depth(), 2);
+    let mut metrics = ClusterMetrics::new("fabric");
+    let records = cluster
+        .run(
+            1,
+            move |_| Probe {
+                dim: 100,
+                tx: tx.clone(),
+            },
+            &mut fabric,
+            &mut metrics,
+        )
+        .unwrap();
+    assert_eq!(records[0].stats.levels, 2);
+    assert_eq!(records[0].stats.rounds, 2);
+
+    // Every worker applied one identical average.
+    let mut applied: Vec<(usize, Vec<f32>)> = rx.try_iter().collect();
+    applied.sort_by_key(|(w, _)| *w);
+    assert_eq!(applied.len(), workers);
+    for (_, avg) in &applied[1..] {
+        assert_eq!(avg, &applied[0].1);
+    }
+    // …equal to the flat quantized mean over the same chunk boundaries.
+    let shards: Vec<Vec<f32>> = (0..workers)
+        .map(|w| {
+            let mut rng = Pcg32::seeded(w as u64);
+            (0..100).map(|_| rng.normal() as f32 * 0.1).collect()
+        })
+        .collect();
+    let want = optinc::quant::chunked_reference_mean(&shards, 23, 8);
+    assert_eq!(applied[0].1, want, "threaded fabric must match the flat oracle");
+}
+
+/// Fault injection (ISSUE 4 satellite): a worker that panics mid-run
+/// must surface as a clean `Err` within the leader watchdog — no
+/// deadlock — for both the ring and the fabric collective, and the
+/// collective must stay usable afterwards (no poisoned pool/session).
+#[test]
+fn panicking_worker_surfaces_clean_err_without_deadlock() {
+    struct PanicAt {
+        dim: usize,
+        victim: usize,
+        at_step: usize,
+    }
+    impl Workload for PanicAt {
+        fn grad(&mut self, step: usize, worker: usize) -> (Vec<f32>, f64) {
+            if worker == self.victim && step == self.at_step {
+                panic!("injected worker fault (test)");
+            }
+            (vec![1.0; self.dim], 0.0)
+        }
+        fn apply(&mut self, _step: usize, _worker: usize, _avg: &[f32]) {}
+    }
+    struct Clean {
+        dim: usize,
+    }
+    impl Workload for Clean {
+        fn grad(&mut self, _step: usize, _worker: usize) -> (Vec<f32>, f64) {
+            (vec![1.0; self.dim], 0.0)
+        }
+        fn apply(&mut self, _step: usize, _worker: usize, _avg: &[f32]) {}
+    }
+
+    let workers = 8usize;
+    let collectives: Vec<Box<dyn ChunkedAllReduce>> = vec![
+        Box::new(RingAllReduce::new()),
+        Box::new(FabricAllReduce::for_workers(8, 4, workers).unwrap()),
+    ];
+    for mut coll in collectives {
+        let name = coll.name();
+        let cluster = Cluster::new(workers)
+            .with_chunk_elems(8)
+            .with_watchdog(Duration::from_millis(300));
+        let mut metrics = ClusterMetrics::new("fault");
+        let t0 = Instant::now();
+        let res = cluster.run(
+            3,
+            |_| PanicAt {
+                dim: 32,
+                victim: 2,
+                at_step: 1,
+            },
+            coll.as_mut(),
+            &mut metrics,
+        );
+        let elapsed = t0.elapsed();
+        let err = res.expect_err("a dead worker must fail the run, not deadlock");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("watchdog") || msg.contains("dropped") || msg.contains("panicked"),
+            "{name}: unexpected error shape: {msg}"
+        );
+        assert!(
+            elapsed < Duration::from_secs(20),
+            "{name}: Err took {elapsed:?} — watchdog did not bound the failure"
+        );
+
+        // No poisoned BufferPool/session: the same collective object runs
+        // a clean workload to completion immediately afterwards (fresh
+        // cluster with the default, generous watchdog so a loaded CI box
+        // cannot flake the recovery leg).
+        let recovery = Cluster::new(workers).with_chunk_elems(8);
+        let mut metrics = ClusterMetrics::new("recovery");
+        let records = recovery
+            .run(2, |_| Clean { dim: 32 }, coll.as_mut(), &mut metrics)
+            .unwrap_or_else(|e| panic!("{name}: post-fault run must succeed: {e:#}"));
+        assert_eq!(records.len(), 2);
+        assert_eq!(metrics.steps(), 2);
+    }
+}
+
+/// Fault injection, second shape: every worker's leader channel drops
+/// mid-step (all threads die) — the leader must observe the
+/// disconnection and return a clean `Err` promptly, for both ring and
+/// fabric collectives.
+#[test]
+fn dropped_leader_channels_surface_clean_err() {
+    struct DieAt {
+        dim: usize,
+        at_step: usize,
+    }
+    impl Workload for DieAt {
+        fn grad(&mut self, step: usize, _worker: usize) -> (Vec<f32>, f64) {
+            if step == self.at_step {
+                panic!("injected mass worker death (test)");
+            }
+            (vec![0.5; self.dim], 0.0)
+        }
+        fn apply(&mut self, _step: usize, _worker: usize, _avg: &[f32]) {}
+    }
+
+    let workers = 8usize;
+    let collectives: Vec<Box<dyn ChunkedAllReduce>> = vec![
+        Box::new(RingAllReduce::new()),
+        Box::new(FabricAllReduce::for_workers(8, 4, workers).unwrap()),
+    ];
+    for mut coll in collectives {
+        let name = coll.name();
+        let cluster = Cluster::new(workers)
+            .with_chunk_elems(16)
+            .with_watchdog(Duration::from_secs(5));
+        let mut metrics = ClusterMetrics::new("mass-fault");
+        let t0 = Instant::now();
+        let res = cluster.run(
+            3,
+            |_| DieAt { dim: 64, at_step: 1 },
+            coll.as_mut(),
+            &mut metrics,
+        );
+        let elapsed = t0.elapsed();
+        let err = res.expect_err("dropped leader channels must fail the run");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("dropped") || msg.contains("panicked") || msg.contains("watchdog"),
+            "{name}: unexpected error shape: {msg}"
+        );
+        // All senders disconnect, so this resolves well inside the
+        // watchdog — the leader must not sit out the full timeout per
+        // missing chunk.
+        assert!(
+            elapsed < Duration::from_secs(20),
+            "{name}: Err took {elapsed:?}"
+        );
+    }
 }
 
 #[test]
