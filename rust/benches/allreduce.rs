@@ -10,10 +10,12 @@ use optinc::collectives::hierarchical::HierarchicalOptInc;
 use optinc::collectives::optinc::OptIncAllReduce;
 use optinc::collectives::ring::RingAllReduce;
 use optinc::collectives::two_tree::TwoTreeAllReduce;
+use optinc::collectives::wire::{pack_words_into, packed_len, unpack_words_into};
 use optinc::collectives::AllReduce;
 use optinc::config::{HardwareModel, Scenario};
 use optinc::optinc::cascade::CascadeMode;
-use optinc::util::bench::{black_box, BenchSuite};
+use optinc::quant::GlobalQuantizer;
+use optinc::util::bench::{arg_flag, black_box, BenchSuite};
 use optinc::util::rng::Pcg32;
 
 fn shards(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
@@ -23,7 +25,94 @@ fn shards(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
         .collect()
 }
 
+/// The packed-wire perf section: codec throughput, packed-vs-f32 wire
+/// volume and end-to-end driver throughput, and the pool's steady-state
+/// allocation scalars on a ragged chunk stream. Runs inside the full
+/// suite and as the `--json` quick artifact (`BENCH_wire.json`).
+fn wire_section(suite: &mut BenchSuite) {
+    let len = 1_000_000usize;
+    let mut rng = Pcg32::seeded(0x11AE);
+    let q = GlobalQuantizer::new(8);
+    let gs: Vec<f32> = (0..len).map(|_| (rng.normal() * 0.1) as f32).collect();
+    let scale = GlobalQuantizer::global_scale(&[&gs]);
+    let words: Vec<u32> = gs.iter().map(|&g| q.quantize(g, scale)).collect();
+
+    // Codec throughput: what the edge pays to put packed words on the
+    // wire (and take them back off).
+    let mut packed = Vec::with_capacity(len);
+    suite.bench_throughput("wire/pack_8bit/1M", len as f64, "word", || {
+        pack_words_into(&words, 8, &mut packed);
+        black_box(packed.len());
+    });
+    let mut unpacked = vec![0u32; len];
+    suite.bench_throughput("wire/unpack_8bit/1M", len as f64, "word", || {
+        unpack_words_into(&packed, 8, &mut unpacked);
+        black_box(unpacked.len());
+    });
+    // The f32 wire's per-chunk work for the same payload (a memcpy).
+    let mut f32_buf = vec![0.0f32; len];
+    suite.bench_throughput("wire/f32_copy/1M", len as f64, "elem", || {
+        f32_buf.copy_from_slice(&gs);
+        black_box(f32_buf.len());
+    });
+
+    // Wire volume scalars: the 4x the packed transport closes at 8 bits.
+    let packed_bytes = packed_len(len, 8) as f64;
+    suite.record_scalar("wire/bytes_per_server/packed8", packed_bytes, "B");
+    suite.record_scalar("wire/bytes_per_server/f32", (len * 4) as f64, "B");
+    suite.record_scalar("wire/reduction", (len * 4) as f64 / packed_bytes, "x");
+
+    // End-to-end packed pipeline (the float adapter runs the word-domain
+    // path) vs the f32 ring baseline at a matched payload.
+    let n = 4usize;
+    let elen = 100_000usize;
+    let base = shards(n, elen, 0xE2E);
+    let mut work = base.clone();
+    let sc = Scenario::table1(1).unwrap();
+    let mut driver = ChunkedDriver::new(elen / 16);
+    let mut coll = OptIncAllReduce::exact(sc, 1);
+    suite.bench_throughput("wire/e2e/optinc_packed/4x100k", elen as f64, "elem", || {
+        work.clone_from(&base);
+        black_box(driver.all_reduce(&mut coll, &mut work));
+    });
+    let mut ring = RingAllReduce::new();
+    suite.bench_throughput("wire/e2e/ring_f32/4x100k", elen as f64, "elem", || {
+        work.clone_from(&base);
+        black_box(driver.all_reduce(&mut ring, &mut work));
+    });
+
+    // Pool steady state on a ragged stream (chunk grain does not divide
+    // the payload, so every step ends with a short chunk): after warmup
+    // the driver must stop allocating.
+    let ragged = shards(n, 10_000, 0xBAD);
+    let mut work = ragged.clone();
+    let mut driver = ChunkedDriver::new(1 + 10_000 / 7);
+    let mut coll = OptIncAllReduce::exact(Scenario::table1(1).unwrap(), 1);
+    for _ in 0..3 {
+        work.clone_from(&ragged);
+        driver.all_reduce(&mut coll, &mut work);
+    }
+    let warm = driver.pool_allocations();
+    for _ in 0..10 {
+        work.clone_from(&ragged);
+        driver.all_reduce(&mut coll, &mut work);
+    }
+    let steady = driver.pool_allocations() - warm;
+    suite.record_scalar("wire/pool_allocations/warmup", warm as f64, "allocs");
+    suite.record_scalar("wire/pool_allocations/steady10", steady as f64, "allocs");
+    assert_eq!(steady, 0, "ragged chunk stream must not allocate once warm");
+}
+
 fn main() {
+    // Artifact mode: `cargo bench --bench allreduce -- --json` runs only
+    // the wire section at the quick config and pins the output file for
+    // the CI perf-trajectory upload.
+    if arg_flag("--json") {
+        let mut suite = BenchSuite::quick("wire");
+        wire_section(&mut suite);
+        suite.finish_named("BENCH_wire");
+        return;
+    }
     let mut suite = BenchSuite::new("allreduce");
     let sc = Scenario::table1(1).unwrap();
 
@@ -126,6 +215,8 @@ fn main() {
         work.clone_from(&base);
         black_box(casc.all_reduce(&mut work));
     });
+
+    wire_section(&mut suite);
 
     suite.finish();
 }

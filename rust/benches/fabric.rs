@@ -6,9 +6,10 @@
 
 use optinc::collectives::engine::ChunkedDriver;
 use optinc::collectives::fabric::{FabricAllReduce, FabricMode, FabricTopology};
+use optinc::collectives::wire::packed_len;
 use optinc::config::HardwareModel;
 use optinc::quant::chunked_reference_mean;
-use optinc::util::bench::{black_box, BenchSuite};
+use optinc::util::bench::{arg_flag, black_box, BenchSuite};
 use optinc::util::rng::Pcg32;
 
 fn shards(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
@@ -24,13 +25,24 @@ fn flat_reference(base: &[Vec<f32>]) -> Vec<f32> {
 }
 
 fn main() {
-    let mut suite = BenchSuite::new("fabric");
+    // Artifact mode (`-- --json`): a reduced sweep at the quick config,
+    // written to a pinned file for the CI perf-trajectory upload
+    // alongside the allreduce bench's BENCH_wire.json.
+    let json_mode = arg_flag("--json");
+    let mut suite = if json_mode {
+        BenchSuite::quick("fabric-wire")
+    } else {
+        BenchSuite::new("fabric")
+    };
     let hw = HardwareModel::default();
 
     // Depth × fan-in sweep. Worker counts are capped so the deepest
-    // trees stay laptop-sized; capacity is reported alongside.
-    for &fan_in in &[2usize, 4, 16] {
-        for depth in 1..=3usize {
+    // trees stay laptop-sized; capacity is reported alongside. The
+    // artifact mode trims the sweep to one fan-in, two depths.
+    let fan_ins: &[usize] = if json_mode { &[4] } else { &[2, 4, 16] };
+    let max_depth: usize = if json_mode { 2 } else { 3 };
+    for &fan_in in fan_ins {
+        for depth in 1..=max_depth {
             let topo = FabricTopology::uniform(fan_in, depth).unwrap();
             let workers = topo.capacity().min(64);
             let len = 20_000usize;
@@ -93,8 +105,25 @@ fn main() {
                 t_piped < t_mono,
                 "f{fan_in} d{depth}: pipelined {t_piped} must beat monolithic {t_mono}"
             );
+
+            // Packed wire volume: the fabric's access links carry
+            // B-bit words, not f32 — the scalar CI tracks.
+            suite.record_scalar(
+                &format!("wire/f{fan_in}/d{depth}/packed_bytes_per_server"),
+                packed_len(len, 8) as f64,
+                "B",
+            );
+            suite.record_scalar(
+                &format!("wire/f{fan_in}/d{depth}/f32_bytes_per_server"),
+                (len * 4) as f64,
+                "B",
+            );
         }
     }
 
-    suite.finish();
+    if json_mode {
+        suite.finish_named("BENCH_wire_fabric");
+    } else {
+        suite.finish();
+    }
 }

@@ -15,6 +15,7 @@ pub struct ClusterMetrics {
     modeled_comm_s: f64,
     chunks: u64,
     overlap_sum: f64,
+    observed_wire_bytes: u64,
 }
 
 impl ClusterMetrics {
@@ -29,6 +30,7 @@ impl ClusterMetrics {
             modeled_comm_s: 0.0,
             chunks: 0,
             overlap_sum: 0.0,
+            observed_wire_bytes: 0,
         }
     }
 
@@ -41,6 +43,20 @@ impl ClusterMetrics {
         self.modeled_comm_s += comm_s;
         self.chunks += stats.chunks as u64;
         self.overlap_sum += stats.overlap_fraction;
+    }
+
+    /// Record the bytes the leader actually observed crossing one
+    /// server's channels this step (max across servers) — the measured
+    /// side of the measured-vs-modeled wire comparison.
+    pub fn record_observed_wire(&mut self, bytes: u64) {
+        self.observed_wire_bytes += bytes;
+    }
+
+    /// Total observed wire bytes per server across all steps. On the
+    /// packed wire this equals [`Self::total_bytes_per_server`]; on the
+    /// legacy f32 wire it exposes the 4 B/element mismatch.
+    pub fn total_observed_wire_bytes(&self) -> u64 {
+        self.observed_wire_bytes
     }
 
     pub fn steps(&self) -> usize {
@@ -122,6 +138,10 @@ impl ClusterMetrics {
                 "mean_modeled_comm_s",
                 Json::Num(self.mean_modeled_comm_s()),
             ),
+            (
+                "observed_wire_bytes_per_server",
+                Json::Num(self.observed_wire_bytes as f64),
+            ),
         ])
     }
 }
@@ -167,6 +187,29 @@ mod tests {
         let overlap = j.get("mean_overlap_fraction").as_f64().unwrap();
         let comm = j.get("mean_modeled_comm_s").as_f64().unwrap();
         assert!(overlap == 0.0 && comm == 0.0, "JSON must carry 0.0, not NaN");
+    }
+
+    #[test]
+    fn observed_wire_bytes_accumulate_independently() {
+        let mut m = ClusterMetrics::new("wire");
+        let st = CollectiveStats {
+            bytes_sent_per_server: 1000,
+            rounds: 1,
+            sync_bytes_per_server: 20,
+            elements: 1000,
+            ..CollectiveStats::default()
+        };
+        m.record(&st, 0.1);
+        m.record_observed_wire(1020); // packed: observed == accounted
+        m.record(&st, 0.1);
+        m.record_observed_wire(4000); // legacy f32: the 4x mismatch
+        assert_eq!(m.total_observed_wire_bytes(), 5020);
+        assert_eq!(m.total_bytes_per_server(), 2040);
+        let j = m.to_json();
+        assert_eq!(
+            j.get("observed_wire_bytes_per_server").as_usize(),
+            Some(5020)
+        );
     }
 
     #[test]

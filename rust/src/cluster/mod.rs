@@ -24,6 +24,24 @@
 //! [`CollectiveStats::modeled_step_time_s`] turns that into the modeled
 //! pipelined step time.
 //!
+//! **Packed wire transport.** When the collective is wire-native
+//! ([`ChunkedAllReduce::wire_format`] returns
+//! [`WireFormat::Packed`](crate::collectives::wire::WireFormat::Packed),
+//! i.e. the OptINC family), the channels carry the paper's actual wire
+//! format instead of raw f32: per chunk, every worker sends a 4-byte
+//! scale probe (its local max |g|), the leader combines the probes and
+//! acks the agreed block scale, the worker quantizes **at the edge**,
+//! bit-packs the B-bit words, and uploads the packed chunk; the leader
+//! reduces purely in the word domain and broadcasts the packed average
+//! as one shared `Arc<[u8]>` + scale, which workers unpack and
+//! dequantize. At 8 bits this moves 1 B/element across the channels —
+//! matching `CollectiveStats::bytes_sent_per_server` — where the old
+//! float wire physically moved 4×. The leader counts the bytes it
+//! actually sees per worker ([`StepRecord::observed_wire_bytes_per_server`])
+//! so tests can assert observed == accounted. [`Cluster::with_f32_wire`]
+//! forces the legacy float streaming for comparison
+//! (`pipeline --wire f32`).
+//!
 //! Threads communicate over std mpsc channels; the design intentionally
 //! keeps the collective itself single-threaded (the paper's switch is
 //! one physical device) while gradient *computation* runs genuinely
@@ -56,8 +74,12 @@ use std::time::Duration;
 use anyhow::Result;
 
 use crate::collectives::engine::{BufferPool, ChunkedAllReduce, ShardChunk};
+use crate::collectives::wire::{
+    pack_quantized_into, packed_len, unpack_dequantize_into, WireAvg, WireChunk, WireFormat,
+};
 use crate::collectives::CollectiveStats;
 use crate::config::HardwareModel;
+use crate::quant::GlobalQuantizer;
 pub use metrics::ClusterMetrics;
 
 /// Default streaming grain: small enough to pipeline ResNet-scale
@@ -80,9 +102,10 @@ pub trait Workload: Send + 'static {
     fn apply(&mut self, step: usize, worker: usize, avg: &[f32]);
 }
 
-/// Messages workers send the leader. Gradients travel as chunks; the
-/// first chunk of a step carries the worker's loss and the gradient's
-/// total length.
+/// Messages workers send the leader. Gradients travel as f32 chunks on
+/// the legacy float wire, or as scale probes + packed wire chunks on
+/// the packed wire; the first message of a worker's step carries its
+/// loss and the gradient's total length.
 enum ToLeader {
     Chunk {
         worker: usize,
@@ -93,28 +116,63 @@ enum ToLeader {
         /// Present on the first chunk of a worker's step only.
         loss: Option<f64>,
     },
+    /// Packed wire: one chunk's local max |g| — the 4-byte upload half
+    /// of the block-scale exchange.
+    Scale {
+        worker: usize,
+        offset: usize,
+        total: usize,
+        local_max: f32,
+        /// Present on the first probe of a worker's step only.
+        loss: Option<f64>,
+    },
+    /// Packed wire: one quantized, bit-packed chunk (sent after the
+    /// scale ack for its offset arrives).
+    Wire {
+        total: usize,
+        /// Present only on the empty-step protocol's lone chunk (the
+        /// loss otherwise rides the first scale probe).
+        loss: Option<f64>,
+        payload: WireChunk,
+    },
     Done,
 }
 
-/// Messages the leader sends each worker. The averaged chunk is shared:
-/// one `Arc<[f32]>` allocation serves all workers. `recycle` returns a
-/// spent upload buffer to one worker's pool.
+/// Messages the leader sends each worker. Averages are shared: one
+/// `Arc` allocation serves all workers. `recycle` returns a spent
+/// upload buffer to one worker's pool.
 enum ToWorker {
     Avg {
         offset: usize,
         data: Arc<[f32]>,
         recycle: Option<Vec<f32>>,
     },
+    /// Packed wire: the agreed block scale for the chunk at `offset`
+    /// (the B-bit ack leg of the exchange).
+    Scale { offset: usize, scale: f32 },
+    /// Packed wire: the packed average + scale for one chunk.
+    WireAvg {
+        offset: usize,
+        avg: WireAvg,
+        recycle: Option<Vec<u8>>,
+    },
     Stop,
 }
 
-/// Step record: losses + collective stats + modeled time.
+/// Step record: losses + collective stats + modeled time + the bytes
+/// the leader actually observed on the channels.
 #[derive(Clone, Debug)]
 pub struct StepRecord {
     pub step: usize,
     pub mean_loss: f64,
     pub stats: CollectiveStats,
     pub modeled_comm_s: f64,
+    /// Bytes the leader observed crossing one server's channels this
+    /// step (max across servers): uplink payload plus both sync legs.
+    /// On the packed wire this equals `stats.bytes_sent_per_server +
+    /// stats.sync_bytes_per_server`; on the legacy f32 wire it exposes
+    /// the 4 B/element mismatch the packed transport closes.
+    pub observed_wire_bytes_per_server: u64,
 }
 
 /// The cluster driver.
@@ -127,6 +185,9 @@ pub struct Cluster {
     /// channel mid-step surfaces as a clean `Err` within this bound
     /// instead of deadlocking the pipeline.
     pub watchdog: Duration,
+    /// Force the legacy f32 wire even for packed-native collectives
+    /// (`pipeline --wire f32` — the before/after comparison).
+    pub force_f32_wire: bool,
 }
 
 /// Chunks a `total`-element gradient splits into at grain `chunk`
@@ -146,6 +207,7 @@ impl Cluster {
             hw: HardwareModel::default(),
             chunk_elems: DEFAULT_CHUNK_ELEMS,
             watchdog: DEFAULT_WATCHDOG,
+            force_f32_wire: false,
         }
     }
 
@@ -160,6 +222,15 @@ impl Cluster {
     /// a short one so dead workers surface in milliseconds).
     pub fn with_watchdog(mut self, watchdog: Duration) -> Cluster {
         self.watchdog = watchdog;
+        self
+    }
+
+    /// Builder: force the legacy f32 wire even when the collective is
+    /// packed-native. Workers then stream raw `Vec<f32>` chunks and the
+    /// leader quantizes internally — the pre-fix behavior, kept for the
+    /// `--wire f32` before/after comparison.
+    pub fn with_f32_wire(mut self, force: bool) -> Cluster {
+        self.force_f32_wire = force;
         self
     }
 
@@ -183,6 +254,20 @@ impl Cluster {
         anyhow::ensure!(n > 0, "cluster needs at least one worker");
         let chunk = self.chunk_elems.max(1);
 
+        // The wire the channels will carry: the collective's native
+        // format, unless the driver forces the legacy float streaming.
+        let wire = if self.force_f32_wire {
+            WireFormat::F32
+        } else {
+            collective.wire_format()
+        };
+        // Modeled sync-ack size on the packed wire: the B-bit scale ack
+        // (the probe itself is one f32 = 4 bytes).
+        let ack_bytes = match wire {
+            WireFormat::Packed { bits } => (bits as u64).div_ceil(8),
+            WireFormat::F32 => 0,
+        };
+
         let (to_leader_tx, to_leader_rx) = mpsc::channel::<ToLeader>();
         let mut to_worker_txs = Vec::with_capacity(n);
         let mut handles = Vec::with_capacity(n);
@@ -192,56 +277,13 @@ impl Cluster {
             let (tx, rx) = mpsc::channel::<ToWorker>();
             to_worker_txs.push(tx);
             let mut workload = make_workload(w);
-            handles.push(thread::spawn(move || {
-                let mut pool = BufferPool::<f32>::new();
-                let mut avg = Vec::<f32>::new();
-                for step in 0..steps {
-                    let (grad, loss) = workload.grad(step, w);
-                    let total = grad.len();
-                    let nchunks = chunk_count(total, chunk);
-                    // Stream the gradient: chunk k+1 departs while the
-                    // leader is still reducing chunk k (the overlap).
-                    let mut sent = 0usize;
-                    for k in 0..nchunks {
-                        let hi = sent.saturating_add(chunk).min(total);
-                        let mut data = pool.take(hi - sent);
-                        data.copy_from_slice(&grad[sent..hi]);
-                        let msg = ToLeader::Chunk {
-                            worker: w,
-                            offset: sent,
-                            total,
-                            data,
-                            loss: (k == 0).then_some(loss),
-                        };
-                        if leader_tx.send(msg).is_err() {
-                            return;
-                        }
-                        sent = hi;
-                    }
-                    // Drain averaged chunks (they start arriving while
-                    // later chunks may still be uploading elsewhere).
-                    avg.clear();
-                    avg.resize(total, 0.0);
-                    let mut got = 0usize;
-                    while got < nchunks {
-                        match rx.recv() {
-                            Ok(ToWorker::Avg {
-                                offset,
-                                data,
-                                recycle,
-                            }) => {
-                                avg[offset..offset + data.len()].copy_from_slice(&data);
-                                if let Some(buf) = recycle {
-                                    pool.put(buf);
-                                }
-                                got += 1;
-                            }
-                            _ => return,
-                        }
-                    }
-                    workload.apply(step, w, &avg);
+            handles.push(thread::spawn(move || match wire {
+                WireFormat::F32 => {
+                    worker_loop_f32(steps, w, chunk, &mut workload, &leader_tx, &rx)
                 }
-                let _ = leader_tx.send(ToLeader::Done);
+                WireFormat::Packed { bits } => {
+                    worker_loop_packed(steps, w, chunk, bits, &mut workload, &leader_tx, &rx)
+                }
             }));
         }
         drop(to_leader_tx);
@@ -255,6 +297,13 @@ impl Cluster {
             let mut reduced = 0usize;
             // chunk index -> worker chunks gathered so far
             let mut pending: Vec<Vec<ShardChunk>> = Vec::new();
+            // Packed wire: per-chunk scale probes and packed chunks.
+            let mut probes: Vec<Vec<f32>> = Vec::new();
+            let mut wire_pending: Vec<Vec<WireChunk>> = Vec::new();
+            // Bytes the leader observes crossing each worker's channels
+            // this step (payload and sync legs separately).
+            let mut observed_payload = vec![0u64; n];
+            let mut observed_sync = vec![0u64; n];
             while total.is_none() || reduced < nchunks {
                 let msg = match to_leader_rx.recv_timeout(self.watchdog) {
                     Ok(m) => m,
@@ -274,28 +323,51 @@ impl Cluster {
                         break 'steps;
                     }
                 };
+                // Open the step's collective on the first sized message
+                // and fold its loss in, whichever wire it rides.
+                let (t, loss) = match &msg {
+                    ToLeader::Chunk { total, loss, .. } => (Some(*total), *loss),
+                    ToLeader::Scale { total, loss, .. } => (Some(*total), *loss),
+                    ToLeader::Wire { total, loss, .. } => (Some(*total), *loss),
+                    ToLeader::Done => (None, None),
+                };
+                if let Some(t) = t {
+                    if total.is_none() {
+                        total = Some(t);
+                        nchunks = chunk_count(t, chunk);
+                        // Only the active wire's gather lanes are
+                        // allocated (workers never mix formats).
+                        match wire {
+                            WireFormat::F32 => {
+                                pending =
+                                    (0..nchunks).map(|_| Vec::with_capacity(n)).collect();
+                            }
+                            WireFormat::Packed { .. } => {
+                                probes =
+                                    (0..nchunks).map(|_| Vec::with_capacity(n)).collect();
+                                wire_pending =
+                                    (0..nchunks).map(|_| Vec::with_capacity(n)).collect();
+                            }
+                        }
+                        collective.begin(n, t);
+                    }
+                    assert_eq!(
+                        total,
+                        Some(t),
+                        "workers disagree on the gradient size this step"
+                    );
+                    if let Some(l) = loss {
+                        losses += l;
+                    }
+                }
                 match msg {
                     ToLeader::Chunk {
                         worker,
                         offset,
-                        total: t,
                         data,
-                        loss,
+                        ..
                     } => {
-                        if total.is_none() {
-                            total = Some(t);
-                            nchunks = chunk_count(t, chunk);
-                            pending = (0..nchunks).map(|_| Vec::with_capacity(n)).collect();
-                            collective.begin(n, t);
-                        }
-                        assert_eq!(
-                            total,
-                            Some(t),
-                            "workers disagree on the gradient size this step"
-                        );
-                        if let Some(l) = loss {
-                            losses += l;
-                        }
+                        observed_payload[worker] += data.len() as u64 * 4;
                         let idx = offset / chunk;
                         let slot = &mut pending[idx];
                         slot.push(ShardChunk {
@@ -306,8 +378,60 @@ impl Cluster {
                         if slot.len() == n {
                             // All N copies of this chunk are in: reduce it
                             // now, while later chunks are still uploading.
-                            collective.reduce_chunk(slot);
+                            // Slots fill in mpsc arrival order, so restore
+                            // worker order first — order-sensitive
+                            // collectives (per-level grouping in basic
+                            // fabrics, trained ONNs) must see the same
+                            // worker→port assignment as the in-memory
+                            // driver, run to run.
+                            slot.sort_by_key(|c| c.worker);
+                            // (Empty gradients complete the step protocol
+                            // without a reduce — no sync, no traversal.)
+                            if total != Some(0) {
+                                collective.reduce_chunk(slot);
+                            }
                             broadcast_avg(&to_worker_txs, offset, slot);
+                            reduced += 1;
+                        }
+                    }
+                    ToLeader::Scale {
+                        worker,
+                        offset,
+                        local_max,
+                        ..
+                    } => {
+                        observed_sync[worker] += 4;
+                        let idx = offset / chunk;
+                        let slot = &mut probes[idx];
+                        slot.push(local_max);
+                        if slot.len() == n {
+                            // The combine half of the one-float exchange:
+                            // ack the agreed block scale to every worker.
+                            let scale = GlobalQuantizer::combine_scale_probes(slot.drain(..));
+                            for (wk, tx) in to_worker_txs.iter().enumerate() {
+                                observed_sync[wk] += ack_bytes;
+                                let _ = tx.send(ToWorker::Scale { offset, scale });
+                            }
+                        }
+                    }
+                    ToLeader::Wire { payload, .. } => {
+                        observed_payload[payload.worker] += payload.words.len() as u64;
+                        let idx = payload.offset / chunk;
+                        let slot = &mut wire_pending[idx];
+                        slot.push(payload);
+                        if slot.len() == n {
+                            // Restore worker order (see the f32 arm) so
+                            // order-sensitive collectives stay
+                            // deterministic and match the driver.
+                            slot.sort_by_key(|c| c.worker);
+                            // Word-domain reduce: the leader never
+                            // round-trips the payload through floats.
+                            let avg = if slot[0].elements == 0 {
+                                WireAvg::empty()
+                            } else {
+                                collective.reduce_wire_chunk(slot)
+                            };
+                            broadcast_wire_avg(&to_worker_txs, avg, slot);
                             reduced += 1;
                         }
                     }
@@ -316,12 +440,20 @@ impl Cluster {
             }
             let stats = collective.finish();
             let comm_s = stats.modeled_step_time_s(&self.hw);
+            let observed = observed_payload
+                .iter()
+                .zip(&observed_sync)
+                .map(|(p, s)| p + s)
+                .max()
+                .unwrap_or(0);
             metrics.record(&stats, comm_s);
+            metrics.record_observed_wire(observed);
             records.push(StepRecord {
                 step,
                 mean_loss: losses / n as f64,
                 stats,
                 modeled_comm_s: comm_s,
+                observed_wire_bytes_per_server: observed,
             });
         }
         // Shutdown path shared by success and failure: closing the
@@ -376,9 +508,189 @@ impl Cluster {
             hw: self.hw,
             chunk_elems: usize::MAX,
             watchdog: self.watchdog,
+            force_f32_wire: self.force_f32_wire,
         };
         mono.run(steps, make_workload, collective, metrics)
     }
+}
+
+/// The legacy float wire: stream raw f32 chunks, receive shared f32
+/// averages. This is the worker half of the original pipeline, still
+/// used by f32-native collectives (ring, two-tree) and by the
+/// `--wire f32` override.
+fn worker_loop_f32<W: Workload>(
+    steps: usize,
+    w: usize,
+    chunk: usize,
+    workload: &mut W,
+    leader_tx: &mpsc::Sender<ToLeader>,
+    rx: &mpsc::Receiver<ToWorker>,
+) {
+    let mut pool = BufferPool::<f32>::new();
+    let mut avg = Vec::<f32>::new();
+    for step in 0..steps {
+        let (grad, loss) = workload.grad(step, w);
+        let total = grad.len();
+        let nchunks = chunk_count(total, chunk);
+        // Stream the gradient: chunk k+1 departs while the
+        // leader is still reducing chunk k (the overlap).
+        let mut sent = 0usize;
+        for k in 0..nchunks {
+            let hi = sent.saturating_add(chunk).min(total);
+            let mut data = pool.take(hi - sent);
+            data.copy_from_slice(&grad[sent..hi]);
+            let msg = ToLeader::Chunk {
+                worker: w,
+                offset: sent,
+                total,
+                data,
+                loss: (k == 0).then_some(loss),
+            };
+            if leader_tx.send(msg).is_err() {
+                return;
+            }
+            sent = hi;
+        }
+        // Drain averaged chunks (they start arriving while
+        // later chunks may still be uploading elsewhere).
+        avg.clear();
+        avg.resize(total, 0.0);
+        let mut got = 0usize;
+        while got < nchunks {
+            match rx.recv() {
+                Ok(ToWorker::Avg {
+                    offset,
+                    data,
+                    recycle,
+                }) => {
+                    avg[offset..offset + data.len()].copy_from_slice(&data);
+                    if let Some(buf) = recycle {
+                        pool.put(buf);
+                    }
+                    got += 1;
+                }
+                _ => return,
+            }
+        }
+        workload.apply(step, w, &avg);
+    }
+    let _ = leader_tx.send(ToLeader::Done);
+}
+
+/// The packed wire: per chunk, probe the block scale, quantize at the
+/// edge on the agreed scale, bit-pack, upload packed bytes; unpack and
+/// dequantize the shared packed broadcast. The worker is the paper's
+/// transmitter — nothing but B-bit words (plus the one-float exchange)
+/// ever touches the channel.
+fn worker_loop_packed<W: Workload>(
+    steps: usize,
+    w: usize,
+    chunk: usize,
+    bits: u32,
+    workload: &mut W,
+    leader_tx: &mpsc::Sender<ToLeader>,
+    rx: &mpsc::Receiver<ToWorker>,
+) {
+    let quantizer = GlobalQuantizer::new(bits);
+    let mut byte_pool = BufferPool::<u8>::new();
+    let mut avg = Vec::<f32>::new();
+    for step in 0..steps {
+        let (grad, loss) = workload.grad(step, w);
+        let total = grad.len();
+        if total == 0 {
+            // Empty-step protocol: one empty wire chunk completes the
+            // step — nothing to quantize, no scale exchange.
+            let msg = ToLeader::Wire {
+                total,
+                loss: Some(loss),
+                payload: WireChunk {
+                    worker: w,
+                    offset: 0,
+                    words: byte_pool.take_empty(0),
+                    scale: 0.0,
+                    elements: 0,
+                },
+            };
+            if leader_tx.send(msg).is_err() {
+                return;
+            }
+            match rx.recv() {
+                Ok(ToWorker::WireAvg { recycle, .. }) => {
+                    if let Some(buf) = recycle {
+                        byte_pool.put(buf);
+                    }
+                }
+                _ => return,
+            }
+            workload.apply(step, w, &[]);
+            continue;
+        }
+        let nchunks = chunk_count(total, chunk);
+        // 1. Ship every chunk's 4-byte scale probe up front (the upload
+        //    half of the one-float exchange); probes pipeline freely.
+        for k in 0..nchunks {
+            let lo = k.saturating_mul(chunk).min(total);
+            let hi = lo.saturating_add(chunk).min(total);
+            let msg = ToLeader::Scale {
+                worker: w,
+                offset: lo,
+                total,
+                local_max: GlobalQuantizer::local_abs_max(&grad[lo..hi]),
+                loss: (k == 0).then_some(loss),
+            };
+            if leader_tx.send(msg).is_err() {
+                return;
+            }
+        }
+        // 2. Quantize+pack+upload each chunk the moment its agreed
+        //    scale ack arrives; assemble the averaged gradient from
+        //    each packed broadcast. Replies interleave in any order.
+        avg.clear();
+        avg.resize(total, 0.0);
+        let mut got = 0usize;
+        while got < nchunks {
+            match rx.recv() {
+                Ok(ToWorker::Scale { offset, scale }) => {
+                    let hi = offset.saturating_add(chunk).min(total);
+                    let mut words = byte_pool.take_empty(packed_len(hi - offset, bits));
+                    pack_quantized_into(&grad[offset..hi], &quantizer, scale, &mut words);
+                    let msg = ToLeader::Wire {
+                        total,
+                        loss: None,
+                        payload: WireChunk {
+                            worker: w,
+                            offset,
+                            words,
+                            scale,
+                            elements: hi - offset,
+                        },
+                    };
+                    if leader_tx.send(msg).is_err() {
+                        return;
+                    }
+                }
+                Ok(ToWorker::WireAvg {
+                    offset,
+                    avg: wavg,
+                    recycle,
+                }) => {
+                    unpack_dequantize_into(
+                        &wavg.words,
+                        &quantizer,
+                        wavg.scale,
+                        &mut avg[offset..offset + wavg.elements],
+                    );
+                    if let Some(buf) = recycle {
+                        byte_pool.put(buf);
+                    }
+                    got += 1;
+                }
+                _ => return,
+            }
+        }
+        workload.apply(step, w, &avg);
+    }
+    let _ = leader_tx.send(ToLeader::Done);
 }
 
 /// Broadcast one reduced chunk: all entries of `slot` hold the average,
@@ -393,6 +705,21 @@ fn broadcast_avg(txs: &[mpsc::Sender<ToWorker>], offset: usize, slot: &mut Vec<S
             offset,
             data: avg.clone(),
             recycle: Some(ch.data),
+        })
+        .ok();
+    }
+}
+
+/// Packed-wire broadcast: one shared `Arc<[u8]>` (inside [`WireAvg`])
+/// serves every worker, and each spent packed upload buffer rides a
+/// message back to a worker's byte pool.
+fn broadcast_wire_avg(txs: &[mpsc::Sender<ToWorker>], avg: WireAvg, slot: &mut Vec<WireChunk>) {
+    assert!(!slot.is_empty(), "broadcast of an empty wire chunk set");
+    for (tx, wc) in txs.iter().zip(slot.drain(..)) {
+        tx.send(ToWorker::WireAvg {
+            offset: wc.offset,
+            avg: avg.clone(),
+            recycle: Some(wc.words),
         })
         .ok();
     }
@@ -541,6 +868,91 @@ mod tests {
         assert_eq!(&a[..], &[2.5f32; 4]);
         // Every worker gets one spent upload buffer back (pool stays warm).
         assert!(ra.is_some() && rb.is_some());
+    }
+
+    #[test]
+    fn packed_wire_observed_bytes_close_the_accounting_gap() {
+        use crate::collectives::optinc::OptIncAllReduce;
+        use crate::config::Scenario;
+
+        // 1000 elements at chunk 300 -> 4 chunks (300/300/300/100).
+        let make = |_| Toy { state: 0.0, dim: 1000 };
+        let mut coll = OptIncAllReduce::exact(Scenario::table1(1).unwrap(), 7);
+        let mut metrics = ClusterMetrics::new("packed");
+        let records = Cluster::new(4)
+            .with_chunk_elems(300)
+            .run(2, make, &mut coll, &mut metrics)
+            .unwrap();
+        for r in &records {
+            // The fix: bytes on the channels == bytes accounted.
+            assert_eq!(
+                r.observed_wire_bytes_per_server,
+                r.stats.bytes_sent_per_server + r.stats.sync_bytes_per_server,
+                "step {}",
+                r.step
+            );
+            // 8-bit words: 1 B/element + (4+1) sync bytes x 4 chunks.
+            assert_eq!(r.stats.bytes_sent_per_server, 1000);
+            assert_eq!(r.stats.sync_bytes_per_server, 20);
+            assert_eq!(r.observed_wire_bytes_per_server, 1020);
+        }
+        assert_eq!(metrics.total_observed_wire_bytes(), 2 * 1020);
+        assert_eq!(
+            metrics.total_observed_wire_bytes(),
+            metrics.total_bytes_per_server()
+        );
+
+        // The legacy f32 wire (the bug, kept behind --wire f32): the
+        // channels move 4 B/element while the accounting still claims
+        // 1 B/element — observed is ~4x what the stats report.
+        let make = |_| Toy { state: 0.0, dim: 1000 };
+        let mut coll = OptIncAllReduce::exact(Scenario::table1(1).unwrap(), 7);
+        let mut metrics = ClusterMetrics::new("legacy");
+        let records = Cluster::new(4)
+            .with_chunk_elems(300)
+            .with_f32_wire(true)
+            .run(1, make, &mut coll, &mut metrics)
+            .unwrap();
+        assert_eq!(records[0].observed_wire_bytes_per_server, 4000);
+        assert_eq!(
+            records[0].stats.bytes_sent_per_server + records[0].stats.sync_bytes_per_server,
+            1020
+        );
+    }
+
+    #[test]
+    fn packed_wire_matches_f32_wire_results_exactly() {
+        use crate::collectives::optinc::OptIncAllReduce;
+        use crate::config::Scenario;
+
+        // Both wires must apply bit-identical averages: the packed
+        // protocol's probe/ack scale equals the leader-side global
+        // scale, and pack/unpack is lossless.
+        let run = |force_f32: bool| -> Vec<(usize, usize, Vec<f32>)> {
+            let (tx, rx) = mpsc::channel();
+            let mut coll = OptIncAllReduce::exact(Scenario::table1(1).unwrap(), 3);
+            let mut metrics = ClusterMetrics::new("cmp");
+            Cluster::new(4)
+                .with_chunk_elems(3)
+                .with_f32_wire(force_f32)
+                .run(
+                    2,
+                    move |_| Probe {
+                        dim: 10,
+                        tx: tx.clone(),
+                    },
+                    &mut coll,
+                    &mut metrics,
+                )
+                .unwrap();
+            let mut out: Vec<(usize, usize, Vec<f32>)> = rx.try_iter().collect();
+            out.sort_by_key(|(s, w, _)| (*s, *w));
+            out
+        };
+        let packed = run(false);
+        let legacy = run(true);
+        assert_eq!(packed.len(), 8, "4 workers x 2 steps");
+        assert_eq!(packed, legacy, "wire format must not change the math");
     }
 
     #[test]

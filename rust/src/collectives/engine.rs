@@ -21,6 +21,7 @@
 //!   property tests) that splits resident shards into chunks and runs
 //!   them through a collective.
 
+use super::wire::{WireAvg, WireChunk, WireFormat};
 use super::CollectiveStats;
 
 /// One worker's slice of the gradient at a given offset, owned so it can
@@ -54,10 +55,35 @@ pub trait ChunkedAllReduce {
     /// Average one aligned chunk across all workers: `chunks[i]` is
     /// worker i's data at a common offset/length; on return every chunk
     /// holds the (possibly quantized) average.
+    ///
+    /// For [`WireFormat::Packed`] collectives this entry is an adapter
+    /// over [`Self::reduce_wire_chunk`] (quantize+pack at the edge,
+    /// reduce words, unpack+dequantize), so the float and packed paths
+    /// are bit-identical by construction.
     fn reduce_chunk(&mut self, chunks: &mut [ShardChunk]);
 
     /// Close the collective and return stats aggregated over all chunks.
     fn finish(&mut self) -> CollectiveStats;
+
+    /// The collective's native wire format — what one gradient element
+    /// costs on the worker↔leader channels. Defaults to raw f32; the
+    /// OptINC family overrides with [`WireFormat::Packed`] and
+    /// implements [`Self::reduce_wire_chunk`].
+    fn wire_format(&self) -> WireFormat {
+        WireFormat::F32
+    }
+
+    /// Word-domain reduce: average one aligned set of packed chunks and
+    /// return the packed average (one shared allocation — the broadcast
+    /// payload) plus its block scale. The leader never round-trips
+    /// through floats. Only [`WireFormat::Packed`] collectives
+    /// implement this; the default panics.
+    fn reduce_wire_chunk(&mut self, _chunks: &[WireChunk]) -> WireAvg {
+        panic!(
+            "{} has no packed wire path (wire_format() is F32)",
+            self.name()
+        );
+    }
 }
 
 /// Validate that a chunk set is aligned (same offset and length for
@@ -160,6 +186,7 @@ pub struct BufferPool<T: Copy + Default> {
     free: Vec<Vec<T>>,
     allocations: u64,
     reuses: u64,
+    grows: u64,
 }
 
 impl<T: Copy + Default> BufferPool<T> {
@@ -168,21 +195,53 @@ impl<T: Copy + Default> BufferPool<T> {
             free: Vec::new(),
             allocations: 0,
             reuses: 0,
+            grows: 0,
         }
     }
 
     /// A buffer of exactly `len` elements (contents zeroed/defaulted).
+    ///
+    /// Prefers a retired buffer whose capacity already covers `len`:
+    /// popping an arbitrary one made every mixed-size stream (each
+    /// ragged last chunk) reallocate in steady state, defeating the
+    /// pool. When no retired buffer is big enough, the largest one is
+    /// grown (counted in [`Self::grows`]) so it covers from then on.
     pub fn take(&mut self, len: usize) -> Vec<T> {
-        match self.free.pop() {
-            Some(mut buf) => {
+        let mut buf = self.take_empty(len);
+        buf.resize(len, T::default());
+        buf
+    }
+
+    /// An **empty** buffer with capacity for at least `len` elements —
+    /// for write-only consumers (the wire packers clear and refill),
+    /// which would otherwise pay [`Self::take`]'s zero-fill only to
+    /// discard it. Same reuse policy and counters as `take`.
+    pub fn take_empty(&mut self, len: usize) -> Vec<T> {
+        let idx = self
+            .free
+            .iter()
+            .position(|b| b.capacity() >= len)
+            .or_else(|| {
+                self.free
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|(_, b)| b.capacity())
+                    .map(|(i, _)| i)
+            });
+        match idx {
+            Some(i) => {
+                let mut buf = self.free.swap_remove(i);
                 self.reuses += 1;
                 buf.clear();
-                buf.resize(len, T::default());
+                if buf.capacity() < len {
+                    self.grows += 1;
+                    buf.reserve(len);
+                }
                 buf
             }
             None => {
                 self.allocations += 1;
-                vec![T::default(); len]
+                Vec::with_capacity(len)
             }
         }
     }
@@ -202,6 +261,14 @@ impl<T: Copy + Default> BufferPool<T> {
 
     pub fn reuses(&self) -> u64 {
         self.reuses
+    }
+
+    /// Reused buffers that still had to grow (capacity below the
+    /// requested length). A warm mixed-size stream should hold this at
+    /// a small constant — once every retired buffer has seen the
+    /// largest chunk, it never grows again.
+    pub fn grows(&self) -> u64 {
+        self.grows
     }
 }
 
@@ -240,6 +307,13 @@ impl ChunkedDriver {
             "all shards must be the same length"
         );
         collective.begin(n, len);
+        if len == 0 {
+            // Zero-length shards complete the collective without issuing
+            // a zero-length reduce_chunk: no scale-sync exchange, no
+            // switch traversal for an empty gradient — the driver-side
+            // mirror of `cluster::chunk_count`'s empty-step protocol.
+            return collective.finish();
+        }
         let mut chunks: Vec<ShardChunk> = Vec::with_capacity(n);
         let mut offset = 0usize;
         loop {
@@ -290,6 +364,10 @@ pub fn all_reduce_via_chunks<C: ChunkedAllReduce + ?Sized>(
         "all shards must be the same length"
     );
     collective.begin(shards.len(), len);
+    if len == 0 {
+        // Same empty-shard short-circuit as `ChunkedDriver::all_reduce`.
+        return collective.finish();
+    }
     let mut chunks: Vec<ShardChunk> = shards
         .iter_mut()
         .enumerate()
@@ -320,6 +398,121 @@ mod tests {
         assert_eq!(b.len(), 8);
         assert_eq!(pool.allocations(), 1, "second take must reuse");
         assert_eq!(pool.reuses(), 1);
+    }
+
+    #[test]
+    fn buffer_pool_prefers_sufficient_capacity() {
+        // Regression: `take` used to pop an arbitrary retired buffer and
+        // resize it, so a mixed-size stream (every ragged last chunk)
+        // reallocated in steady state. The pool must hand back a buffer
+        // whose capacity already covers the request when one exists.
+        let mut pool = BufferPool::<f32>::new();
+        let big = pool.take(100);
+        let small = pool.take(10);
+        assert_eq!(pool.allocations(), 2);
+        // Retire big first so the old pop-the-top policy would hand the
+        // small buffer to the next big request.
+        pool.put(big);
+        pool.put(small);
+        let b = pool.take(100);
+        assert!(b.capacity() >= 100, "must pick the big retiree");
+        assert_eq!(pool.grows(), 0, "no reallocation for the big request");
+        let s = pool.take(10);
+        pool.put(b);
+        pool.put(s);
+
+        // Ragged-chunk steady state: alternate big/small takes for many
+        // "steps" — allocations and grows must stay frozen.
+        for _ in 0..50 {
+            let b = pool.take(100);
+            let s = pool.take(10);
+            pool.put(b);
+            pool.put(s);
+        }
+        assert_eq!(pool.allocations(), 2, "steady state must not allocate");
+        assert_eq!(pool.grows(), 0, "steady state must not grow");
+    }
+
+    #[test]
+    fn take_empty_skips_the_zero_fill_but_keeps_the_policy() {
+        let mut pool = BufferPool::<u8>::new();
+        let b = pool.take_empty(64);
+        assert!(b.is_empty() && b.capacity() >= 64);
+        assert_eq!(pool.allocations(), 1);
+        pool.put({
+            let mut b = b;
+            b.extend_from_slice(&[7; 64]);
+            b
+        });
+        // Reuse hands back an empty buffer with the old capacity.
+        let again = pool.take_empty(10);
+        assert!(again.is_empty() && again.capacity() >= 64);
+        assert_eq!(pool.reuses(), 1);
+        assert_eq!(pool.grows(), 0);
+    }
+
+    #[test]
+    fn buffer_pool_grows_largest_when_nothing_covers() {
+        let mut pool = BufferPool::<u8>::new();
+        let a = pool.take(4);
+        let b = pool.take(16);
+        pool.put(a);
+        pool.put(b);
+        // Nothing covers 64: the largest retiree (16) grows once…
+        let big = pool.take(64);
+        assert!(big.capacity() >= 64);
+        assert_eq!(pool.grows(), 1);
+        pool.put(big);
+        // …and covers from then on.
+        let again = pool.take(64);
+        assert_eq!(pool.grows(), 1);
+        assert_eq!(pool.allocations(), 2);
+        drop(again);
+    }
+
+    /// Spy collective counting reduce calls (zero-length regression).
+    struct Spy {
+        session: Session,
+        reduces: usize,
+    }
+
+    impl ChunkedAllReduce for Spy {
+        fn name(&self) -> &'static str {
+            "spy"
+        }
+        fn begin(&mut self, workers: usize, elements: usize) {
+            self.session.begin(workers, elements);
+        }
+        fn reduce_chunk(&mut self, chunks: &mut [ShardChunk]) {
+            let (_, len) = check_aligned(chunks);
+            self.reduces += 1;
+            self.session.chunk_done(len, (len * 4) as u64, 5, 1);
+        }
+        fn finish(&mut self) -> CollectiveStats {
+            self.session.finish()
+        }
+    }
+
+    #[test]
+    fn zero_length_shards_short_circuit_the_driver() {
+        // Regression: the driver used to issue one zero-length
+        // reduce_chunk for empty shards, charging a scale-sync exchange
+        // and a switch traversal for an empty gradient.
+        let mut spy = Spy { session: Session::default(), reduces: 0 };
+        let mut driver = ChunkedDriver::new(4);
+        let mut shards: Vec<Vec<f32>> = vec![Vec::new(), Vec::new()];
+        let stats = driver.all_reduce(&mut spy, &mut shards);
+        assert_eq!(spy.reduces, 0, "no reduce call for an empty gradient");
+        assert_eq!(stats.chunks, 1, "the documented empty-collective floor");
+        assert_eq!(stats.sync_bytes_per_server, 0, "no sync charged");
+        assert_eq!(stats.bytes_sent_per_server, 0);
+        assert_eq!(stats.elements, 0);
+
+        // Same protocol through the one-shot adapter.
+        let mut spy = Spy { session: Session::default(), reduces: 0 };
+        let stats = all_reduce_via_chunks(&mut spy, &mut shards);
+        assert_eq!(spy.reduces, 0);
+        assert_eq!(stats.sync_bytes_per_server, 0);
     }
 
     #[test]

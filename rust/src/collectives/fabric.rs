@@ -32,8 +32,9 @@
 //! which charges the per-level OCS reconfiguration that the chunk stream
 //! overlaps SWOT-style (see
 //! [`CollectiveStats::exposed_reconfig_s`](super::CollectiveStats::exposed_reconfig_s)).
-//! All word/sum/float scratch recycles through [`BufferPool`]s, so the
-//! steady-state stream performs no per-chunk allocation.
+//! All word/sum/byte/float scratch recycles through [`BufferPool`]s;
+//! the only steady-state allocation is the one shared packed-average
+//! `Arc` per chunk (the broadcast payload).
 
 use anyhow::{ensure, Result};
 
@@ -42,7 +43,11 @@ use crate::onn::OnnNetwork;
 use crate::optinc::switch::{OnnMode, OptIncSwitch};
 use crate::quant::GlobalQuantizer;
 
-use super::engine::{check_aligned, BufferPool, ChunkedAllReduce, Session, ShardChunk};
+use super::engine::{BufferPool, ChunkedAllReduce, Session, ShardChunk};
+use super::wire::{
+    apply_wire_avg, check_wire_aligned, pack_chunks_at_edge, pack_words_into, packed_len,
+    recycle_wire, unpack_words_into, WireAvg, WireChunk, WireFormat,
+};
 use super::CollectiveStats;
 
 /// Per-level aggregation scheme (the eq. 9 / eq. 10 dichotomy of
@@ -145,6 +150,7 @@ pub struct FabricAllReduce {
     session: Session,
     word_pool: BufferPool<u32>,
     sum_pool: BufferPool<u64>,
+    byte_pool: BufferPool<u8>,
     float_pool: BufferPool<f32>,
 }
 
@@ -191,6 +197,7 @@ impl FabricAllReduce {
             session: Session::default(),
             word_pool: BufferPool::new(),
             sum_pool: BufferPool::new(),
+            byte_pool: BufferPool::new(),
             float_pool: BufferPool::new(),
         })
     }
@@ -390,57 +397,68 @@ impl ChunkedAllReduce for FabricAllReduce {
     }
 
     fn reduce_chunk(&mut self, chunks: &mut [ShardChunk]) {
+        // Float adapter over the packed wire path (shared protocol in
+        // `wire::pack_chunks_at_edge`/`apply_wire_avg`): leaf
+        // transmitters quantize+pack at the edge, the cascade reduces
+        // in the word domain, the root average dequantizes once.
         let n = self.session.workers();
         assert_eq!(chunks.len(), n, "fabric opened for {n} workers");
-        let (_, len) = check_aligned(chunks);
-
-        // 1. Per-chunk block scale exchange (the sync cost, as in the
-        //    flat OptINC collective).
-        let views: Vec<&[f32]> = chunks.iter().map(|c| c.data.as_slice()).collect();
-        let scale = GlobalQuantizer::global_scale(&views);
-
-        // 2. Leaf transmitters: quantize every worker chunk into
-        //    recycled word buffers.
-        let mut nodes: Vec<Vec<u32>> = Vec::with_capacity(n);
-        for c in chunks.iter() {
-            let mut buf = self.word_pool.take(len);
-            for (o, &g) in buf.iter_mut().zip(c.data.iter()) {
-                *o = self.quantizer.quantize(g, scale);
-            }
-            nodes.push(buf);
-        }
-
-        // 3. One traversal up the cascade.
-        let root = match self.mode {
-            FabricMode::Basic => self.route_basic(nodes, len),
-            FabricMode::Remainder => self.route_remainder(nodes, len),
-        };
-
-        // 4. Broadcast back down the splitter tree + dequantize.
-        let mut avg = self.float_pool.take(len);
-        for (o, &w) in avg.iter_mut().zip(root.iter()) {
-            *o = self.quantizer.dequantize(w, scale);
-        }
-        for c in chunks.iter_mut() {
-            c.data.copy_from_slice(&avg);
-        }
-        self.float_pool.put(avg);
-        self.word_pool.put(root);
-
-        // Each server transmits its payload once (full duplex); a chunk
-        // traverses one switch hop per level.
-        self.session.chunk_done(
-            len,
-            (len as u64 * self.bits as u64).div_ceil(8),
-            4 + (self.bits as u64).div_ceil(8),
-            self.depth() as u32,
-        );
+        let wire = pack_chunks_at_edge(&self.quantizer, &mut self.byte_pool, chunks);
+        let avg = self.reduce_wire_chunk(&wire);
+        apply_wire_avg(&self.quantizer, &mut self.float_pool, &avg, chunks);
+        recycle_wire(&mut self.byte_pool, wire);
     }
 
     fn finish(&mut self) -> CollectiveStats {
         let mut st = self.session.finish();
         st.levels = self.depth() as u32;
         st
+    }
+
+    fn wire_format(&self) -> WireFormat {
+        WireFormat::Packed { bits: self.bits }
+    }
+
+    fn reduce_wire_chunk(&mut self, chunks: &[WireChunk]) -> WireAvg {
+        let n = self.session.workers();
+        assert_eq!(chunks.len(), n, "fabric opened for {n} workers");
+        let (_, elements, scale) = check_wire_aligned(chunks, self.bits);
+
+        // 1. Unpack the leaf transmissions into recycled word buffers.
+        let mut nodes: Vec<Vec<u32>> = Vec::with_capacity(n);
+        for c in chunks {
+            let mut buf = self.word_pool.take(elements);
+            unpack_words_into(&c.words, self.bits, &mut buf);
+            nodes.push(buf);
+        }
+
+        // 2. One traversal up the cascade — word domain only.
+        let root = match self.mode {
+            FabricMode::Basic => self.route_basic(nodes, elements),
+            FabricMode::Remainder => self.route_remainder(nodes, elements),
+        };
+
+        // 3. Pack the root average once; the Arc rides the splitter tree
+        //    back down to every worker.
+        let mut packed = self.byte_pool.take_empty(packed_len(elements, self.bits));
+        pack_words_into(&root, self.bits, &mut packed);
+        let avg = WireAvg {
+            words: packed.as_slice().into(),
+            scale,
+            elements,
+        };
+        self.byte_pool.put(packed);
+        self.word_pool.put(root);
+
+        // Each server transmits its payload once (full duplex); a chunk
+        // traverses one switch hop per level.
+        self.session.chunk_done(
+            elements,
+            packed_len(elements, self.bits) as u64,
+            4 + (self.bits as u64).div_ceil(8),
+            self.depth() as u32,
+        );
+        avg
     }
 }
 
@@ -588,6 +606,15 @@ mod tests {
         let mut fabric = FabricAllReduce::exact(8, &topo, FabricMode::Remainder).unwrap();
         let mut work = random_shards(17, 8, 91);
         fabric.all_reduce(&mut work);
+    }
+
+    #[test]
+    fn fabric_is_wire_native() {
+        let topo = FabricTopology::uniform(4, 2).unwrap();
+        let fabric = FabricAllReduce::exact(8, &topo, FabricMode::Remainder).unwrap();
+        assert_eq!(fabric.wire_format(), WireFormat::Packed { bits: 8 });
+        let fabric16 = FabricAllReduce::exact(16, &topo, FabricMode::Remainder).unwrap();
+        assert_eq!(fabric16.wire_format(), WireFormat::Packed { bits: 16 });
     }
 
     #[test]

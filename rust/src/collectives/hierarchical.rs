@@ -7,14 +7,21 @@
 //! eq. 10) feed the level-2 OptINC which emits the final quantized
 //! average, broadcast back down through the level-1 splitters. The whole
 //! aggregation remains a single network traversal per server, and chunk
-//! traversals pipeline back-to-back. Word/float scratch is recycled
-//! through [`BufferPool`]s.
+//! traversals pipeline back-to-back. Like the rest of the OptINC family
+//! the collective is **wire-native** ([`super::wire`]): packed B-bit
+//! words in, one packed average out, with the float `reduce_chunk`
+//! entry an adapter over the word-domain path. Word/byte/float scratch
+//! is recycled through [`BufferPool`]s.
 
 use crate::config::Scenario;
 use crate::optinc::cascade::{Cascade, CascadeMode};
 use crate::quant::GlobalQuantizer;
 
-use super::engine::{check_aligned, BufferPool, ChunkedAllReduce, Session, ShardChunk};
+use super::engine::{BufferPool, ChunkedAllReduce, Session, ShardChunk};
+use super::wire::{
+    apply_wire_avg, check_wire_aligned, pack_chunks_at_edge, pack_words_into, packed_len,
+    recycle_wire, unpack_words_into, WireAvg, WireChunk, WireFormat,
+};
 use super::CollectiveStats;
 
 pub struct HierarchicalOptInc {
@@ -23,6 +30,7 @@ pub struct HierarchicalOptInc {
     pub quantizer: GlobalQuantizer,
     session: Session,
     word_pool: BufferPool<u32>,
+    byte_pool: BufferPool<u8>,
     float_pool: BufferPool<f32>,
 }
 
@@ -36,6 +44,7 @@ impl HierarchicalOptInc {
             quantizer: GlobalQuantizer::new(bits),
             session: Session::default(),
             word_pool: BufferPool::new(),
+            byte_pool: BufferPool::new(),
             float_pool: BufferPool::new(),
         }
     }
@@ -64,53 +73,74 @@ impl ChunkedAllReduce for HierarchicalOptInc {
     }
 
     fn reduce_chunk(&mut self, chunks: &mut [ShardChunk]) {
+        // Float adapter over the packed wire path (shared protocol in
+        // `wire::pack_chunks_at_edge`/`apply_wire_avg`), as in the flat
+        // and fabric collectives.
         let n_servers = self.session.workers();
         assert_eq!(chunks.len(), n_servers, "cascade wired for {n_servers} servers");
-        let (_, len) = check_aligned(chunks);
+        let wire = pack_chunks_at_edge(&self.quantizer, &mut self.byte_pool, chunks);
+        let avg = self.reduce_wire_chunk(&wire);
+        apply_wire_avg(&self.quantizer, &mut self.float_pool, &avg, chunks);
+        recycle_wire(&mut self.byte_pool, wire);
+    }
 
-        // Per-chunk block scale (see `collectives::optinc` — block scales
-        // only tighten the global quantization bound).
-        let views: Vec<&[f32]> = chunks.iter().map(|c| c.data.as_slice()).collect();
-        let scale = GlobalQuantizer::global_scale(&views);
+    fn finish(&mut self) -> CollectiveStats {
+        self.session.finish()
+    }
+
+    fn wire_format(&self) -> WireFormat {
+        WireFormat::Packed {
+            bits: self.scenario.bits,
+        }
+    }
+
+    fn reduce_wire_chunk(&mut self, chunks: &[WireChunk]) -> WireAvg {
+        let n_servers = self.session.workers();
+        assert_eq!(chunks.len(), n_servers, "cascade wired for {n_servers} servers");
+        let bits = self.scenario.bits;
+        let (_, elements, scale) = check_wire_aligned(chunks, bits);
+
+        // Unpack each server's transmission into recycled word buffers.
         let mut words: Vec<Vec<u32>> = Vec::with_capacity(n_servers);
-        for c in chunks.iter() {
-            let mut buf = self.word_pool.take(len);
-            for (o, &g) in buf.iter_mut().zip(c.data.iter()) {
-                *o = self.quantizer.quantize(g, scale);
-            }
+        for c in chunks {
+            let mut buf = self.word_pool.take(elements);
+            unpack_words_into(&c.words, bits, &mut buf);
             words.push(buf);
         }
 
-        let mut avg = self.float_pool.take(len);
+        // One cascade traversal per element — word domain only.
+        let mut avg_words = self.word_pool.take(elements);
         let mut word_buf = self.word_pool.take(n_servers);
-        for i in 0..len {
+        for i in 0..elements {
             for (w, shard) in word_buf.iter_mut().zip(&words) {
                 *w = shard[i];
             }
-            avg[i] = self
-                .quantizer
-                .dequantize(self.cascade.aggregate(&word_buf), scale);
-        }
-        for c in chunks.iter_mut() {
-            c.data.copy_from_slice(&avg);
+            avg_words[i] = self.cascade.aggregate(&word_buf);
         }
 
+        // Pack the final quantized average once for the splitter
+        // broadcast.
+        let mut packed = self.byte_pool.take_empty(packed_len(elements, bits));
+        pack_words_into(&avg_words, bits, &mut packed);
+        let avg = WireAvg {
+            words: packed.as_slice().into(),
+            scale,
+            elements,
+        };
+        self.byte_pool.put(packed);
         self.word_pool.put(word_buf);
-        self.float_pool.put(avg);
+        self.word_pool.put(avg_words);
         for buf in words {
             self.word_pool.put(buf);
         }
 
         self.session.chunk_done(
-            len,
-            (len as u64 * self.scenario.bits as u64).div_ceil(8),
-            4 + (self.scenario.bits as u64).div_ceil(8),
+            elements,
+            packed_len(elements, bits) as u64,
+            4 + (bits as u64).div_ceil(8),
             1,
         );
-    }
-
-    fn finish(&mut self) -> CollectiveStats {
-        self.session.finish()
+        avg
     }
 }
 
@@ -164,6 +194,12 @@ mod tests {
         };
         assert!(mae(&b) < mae(&a), "remainder {} !< basic {}", mae(&b), mae(&a));
         let _ = max_diff(&a[0], &b[0]);
+    }
+
+    #[test]
+    fn cascade_is_wire_native() {
+        let c = HierarchicalOptInc::new(Scenario::table1(1).unwrap(), CascadeMode::Remainder);
+        assert_eq!(c.wire_format(), WireFormat::Packed { bits: 8 });
     }
 
     #[test]

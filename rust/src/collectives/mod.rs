@@ -24,6 +24,14 @@
 //! accounting the figures are built from, now including the streaming
 //! pipeline's `chunks` / `overlap_fraction` so modeled step time
 //! reflects compute/communication overlap.
+//!
+//! The OptINC family is additionally **wire-native** ([`wire`]): workers
+//! quantize and bit-pack gradients at the edge, the switch averages
+//! packed B-bit words with no float round-trip at the leader, and the
+//! packed average broadcasts as one shared allocation — so the bytes
+//! that cross the channels equal the bytes `CollectiveStats` accounts
+//! for (at 8 bits, 1 B/element instead of the 4 B/element the old f32
+//! wire physically moved).
 
 pub mod engine;
 pub mod fabric;
@@ -31,6 +39,7 @@ pub mod hierarchical;
 pub mod optinc;
 pub mod ring;
 pub mod two_tree;
+pub mod wire;
 
 use crate::config::HardwareModel;
 

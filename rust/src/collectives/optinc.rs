@@ -1,22 +1,31 @@
 //! The OptINC collective: quantize → one switch traversal → dequantize,
-//! streamed chunk by chunk through the chunked engine.
+//! streamed chunk by chunk through the chunked engine — **wire-native**:
+//! the payload format is packed B-bit words end to end.
 //!
 //! Per streamed chunk:
 //! 1. workers agree on the chunk's quantization scale (a one-float
 //!    exchange — the paper's <0.4% sync cost; streaming makes the scale
 //!    a *per-chunk* block scale, which only tightens the quantization
 //!    error bound because each block scale is ≤ the global max);
-//! 2. each worker quantizes its chunk to B-bit offset-binary words and
-//!    transmits the PAM4 frames into the switch **once** (full duplex:
-//!    the averaged frames stream back simultaneously);
+//! 2. each worker quantizes its chunk to B-bit offset-binary words at
+//!    the edge, bit-packs them ([`wire`](super::wire)), and transmits
+//!    the packed frames into the switch **once** (full duplex: the
+//!    averaged frames stream back simultaneously);
 //! 3. the switch's ONN computes Q(mean) in flight as one batched frame
-//!    set (per-traversal setup amortized across the whole chunk);
-//!    receivers snap/decode and dequantize.
+//!    set (per-traversal setup amortized across the whole chunk) — the
+//!    leader works purely in the word domain, no float round-trip;
+//! 4. the packed average broadcasts as one shared `Arc<[u8]>`;
+//!    receivers unpack and dequantize.
 //!
-//! All word/float scratch comes from recycled [`BufferPool`]s, so the
-//! steady-state pipeline performs no per-step allocation. Optional
-//! residual-error injection models a <100%-accurate ONN
-//! (Table II → Fig. 7a).
+//! The float [`ChunkedAllReduce::reduce_chunk`] entry is an adapter over
+//! the word-domain path — it deliberately routes through the real
+//! pack/unpack codec (lossless, two extra linear passes) so every
+//! in-memory driver run exercises the exact wire format the threaded
+//! pipeline ships, keeping the two bit-identical by construction. All
+//! word/byte/float scratch comes from recycled [`BufferPool`]s; the
+//! only steady-state allocation is the one shared packed-average `Arc`
+//! per chunk (the broadcast payload). Optional residual-error injection
+//! models a <100%-accurate ONN (Table II → Fig. 7a).
 
 use crate::config::Scenario;
 use crate::optinc::error_model::ErrorModel;
@@ -24,7 +33,11 @@ use crate::optinc::switch::OptIncSwitch;
 use crate::quant::GlobalQuantizer;
 use crate::util::rng::Pcg32;
 
-use super::engine::{check_aligned, BufferPool, ChunkedAllReduce, Session, ShardChunk};
+use super::engine::{BufferPool, ChunkedAllReduce, Session, ShardChunk};
+use super::wire::{
+    apply_wire_avg, check_wire_aligned, pack_chunks_at_edge, pack_words_into, packed_len,
+    recycle_wire, unpack_words_into, WireAvg, WireChunk, WireFormat,
+};
 use super::CollectiveStats;
 
 /// OptINC-backed all-reduce.
@@ -37,6 +50,7 @@ pub struct OptIncAllReduce {
     pub injected_errors: u64,
     session: Session,
     word_pool: BufferPool<u32>,
+    byte_pool: BufferPool<u8>,
     float_pool: BufferPool<f32>,
 }
 
@@ -51,6 +65,7 @@ impl OptIncAllReduce {
             injected_errors: 0,
             session: Session::default(),
             word_pool: BufferPool::new(),
+            byte_pool: BufferPool::new(),
             float_pool: BufferPool::new(),
         }
     }
@@ -97,63 +112,77 @@ impl ChunkedAllReduce for OptIncAllReduce {
     }
 
     fn reduce_chunk(&mut self, chunks: &mut [ShardChunk]) {
+        // Float adapter over the packed wire path (shared protocol in
+        // `wire::pack_chunks_at_edge`/`apply_wire_avg`): quantize+pack
+        // at the edge exactly as a worker thread would, reduce in the
+        // word domain, dequantize the shared average once. One
+        // reduction implementation serves both wire formats, so they
+        // cannot drift apart.
         let n = self.session.workers();
         assert_eq!(chunks.len(), n, "switch wired for {n} servers");
-        let (_, len) = check_aligned(chunks);
+        let wire = pack_chunks_at_edge(&self.quantizer, &mut self.byte_pool, chunks);
+        let avg = self.reduce_wire_chunk(&wire);
+        apply_wire_avg(&self.quantizer, &mut self.float_pool, &avg, chunks);
+        recycle_wire(&mut self.byte_pool, wire);
+    }
 
-        // 1. Block scale exchange for this chunk (the sync cost).
-        let views: Vec<&[f32]> = chunks.iter().map(|c| c.data.as_slice()).collect();
-        let scale = GlobalQuantizer::global_scale(&views);
+    fn finish(&mut self) -> CollectiveStats {
+        self.session.finish()
+    }
 
-        // 2. Quantize each chunk into recycled word buffers.
+    fn wire_format(&self) -> WireFormat {
+        WireFormat::Packed {
+            bits: self.switch.scenario.bits,
+        }
+    }
+
+    fn reduce_wire_chunk(&mut self, chunks: &[WireChunk]) -> WireAvg {
+        let n = self.session.workers();
+        assert_eq!(chunks.len(), n, "switch wired for {n} servers");
+        let bits = self.switch.scenario.bits;
+        let (_, elements, scale) = check_wire_aligned(chunks, bits);
+
+        // 1. Unpack each worker's packed words into recycled buffers.
         let mut words: Vec<Vec<u32>> = Vec::with_capacity(n);
-        for c in chunks.iter() {
-            let mut buf = self.word_pool.take(len);
-            for (o, &g) in buf.iter_mut().zip(c.data.iter()) {
-                *o = self.quantizer.quantize(g, scale);
-            }
+        for c in chunks {
+            let mut buf = self.word_pool.take(elements);
+            unpack_words_into(&c.words, bits, &mut buf);
             words.push(buf);
         }
 
-        // 3. One traversal of the switch, the whole chunk as one batched
-        //    frame set.
+        // 2. One traversal of the switch, the whole chunk as one batched
+        //    frame set — word domain only, no float round-trip.
         let word_views: Vec<&[u32]> = words.iter().map(|w| w.as_slice()).collect();
-        let mut avg_words = self.word_pool.take(len);
+        let mut avg_words = self.word_pool.take(elements);
         self.switch.average_words_into(&word_views, &mut avg_words);
         drop(word_views);
 
-        // 3b. Residual ONN error injection (Fig. 7a with-errors runs).
-        self.injected_errors += self.error_model.inject(
-            &mut avg_words,
-            self.switch.scenario.bits,
-            &mut self.rng,
-        ) as u64;
+        // 2b. Residual ONN error injection (Fig. 7a with-errors runs).
+        self.injected_errors +=
+            self.error_model.inject(&mut avg_words, bits, &mut self.rng) as u64;
 
-        // 4. Broadcast (splitter) + dequantize into every chunk.
-        let mut avg = self.float_pool.take(len);
-        for (o, &w) in avg.iter_mut().zip(avg_words.iter()) {
-            *o = self.quantizer.dequantize(w, scale);
-        }
-        for c in chunks.iter_mut() {
-            c.data.copy_from_slice(&avg);
-        }
-
-        self.float_pool.put(avg);
+        // 3. Pack the average once; the Arc is the broadcast allocation
+        //    every worker shares.
+        let mut packed = self.byte_pool.take_empty(packed_len(elements, bits));
+        pack_words_into(&avg_words, bits, &mut packed);
+        let avg = WireAvg {
+            words: packed.as_slice().into(),
+            scale,
+            elements,
+        };
+        self.byte_pool.put(packed);
         self.word_pool.put(avg_words);
         for buf in words {
             self.word_pool.put(buf);
         }
 
         self.session.chunk_done(
-            len,
-            self.switch.bytes_per_server(len),
+            elements,
+            self.switch.bytes_per_server(elements),
             self.sync_bytes_per_chunk(),
             1,
         );
-    }
-
-    fn finish(&mut self) -> CollectiveStats {
-        self.session.finish()
+        avg
     }
 }
 
@@ -239,6 +268,70 @@ mod tests {
         coll.all_reduce(&mut shards);
         assert!(coll.injected_errors > 1000, "injected {}", coll.injected_errors);
         assert!(max_diff(&shards[0], &clean[0]) > 0.0);
+    }
+
+    #[test]
+    fn wire_path_is_bit_identical_to_float_adapter() {
+        // reduce_chunk is an adapter over reduce_wire_chunk; a manual
+        // quantize→pack→reduce→unpack→dequantize round through the wire
+        // entry must land on exactly the same floats.
+        use crate::collectives::wire::{
+            pack_quantized_into, packed_len, unpack_dequantize_into, WireChunk,
+        };
+        let sc = Scenario::table1(1).unwrap();
+        let base = random_shards(4, 513, 123);
+        let views: Vec<&[f32]> = base.iter().map(|s| s.as_slice()).collect();
+        let scale = GlobalQuantizer::global_scale(&views);
+
+        // Float path.
+        let mut float_coll = OptIncAllReduce::exact(sc.clone(), 1);
+        let mut float_shards = base.clone();
+        float_coll.all_reduce(&mut float_shards);
+
+        // Manual wire path.
+        let mut wire_coll = OptIncAllReduce::exact(sc, 1);
+        wire_coll.begin(4, 513);
+        let q = wire_coll.quantizer;
+        let wire: Vec<WireChunk> = base
+            .iter()
+            .enumerate()
+            .map(|(w, s)| {
+                let mut words = Vec::with_capacity(packed_len(513, 8));
+                pack_quantized_into(s, &q, scale, &mut words);
+                WireChunk { worker: w, offset: 0, words, scale, elements: 513 }
+            })
+            .collect();
+        let avg = wire_coll.reduce_wire_chunk(&wire);
+        let stats = wire_coll.finish();
+        let mut decoded = vec![0.0f32; 513];
+        unpack_dequantize_into(&avg.words, &q, avg.scale, &mut decoded);
+
+        assert_eq!(decoded, float_shards[0]);
+        assert_eq!(avg.words.len() as u64, stats.bytes_sent_per_server);
+        assert_eq!(stats.bytes_sent_per_server, 513, "1 B/element at 8 bits");
+    }
+
+    #[test]
+    fn advertises_packed_wire_format() {
+        use crate::collectives::wire::WireFormat;
+        let coll = OptIncAllReduce::exact(Scenario::table1(1).unwrap(), 1);
+        assert_eq!(coll.wire_format(), WireFormat::Packed { bits: 8 });
+        let coll16 = OptIncAllReduce::exact(Scenario::table1(4).unwrap(), 1);
+        assert_eq!(coll16.wire_format(), WireFormat::Packed { bits: 16 });
+    }
+
+    #[test]
+    fn empty_shards_charge_no_sync() {
+        // Regression (zero-length satellite): an empty gradient must not
+        // be charged a scale exchange or a switch traversal.
+        let sc = Scenario::table1(1).unwrap();
+        let mut coll = OptIncAllReduce::exact(sc, 1);
+        let mut shards: Vec<Vec<f32>> = vec![Vec::new(); 4];
+        let mut driver = ChunkedDriver::new(64);
+        let stats = driver.all_reduce(&mut coll, &mut shards);
+        assert_eq!(stats.chunks, 1, "the documented empty-collective floor");
+        assert_eq!(stats.sync_bytes_per_server, 0);
+        assert_eq!(stats.bytes_sent_per_server, 0);
     }
 
     #[test]

@@ -1,0 +1,488 @@
+//! The packed wire format: B-bit offset-binary words bit-packed into
+//! bytes, end to end.
+//!
+//! The paper's switch datapath (Fig. 3, §IV) has the *workers* quantize
+//! gradients to B-bit words and PAM4-encode them before they ever touch
+//! the fabric. This module is the byte-level mirror of that wire: a
+//! [`pack_words_into`]/[`unpack_words_into`] codec that lays `B`-bit
+//! words densely into a byte stream (so an 8-bit chunk really is one
+//! byte per element on the channel, not four), the [`WireChunk`]
+//! payload that crosses the worker↔leader channels in the packed
+//! protocol, and the [`WireAvg`] broadcast (one shared `Arc<[u8]>` per
+//! reduced chunk — the packed average plus its block scale).
+//!
+//! Collectives advertise their native format through
+//! [`ChunkedAllReduce::wire_format`](super::engine::ChunkedAllReduce::wire_format):
+//! the OptINC family is [`WireFormat::Packed`] (workers quantize at the
+//! edge, the switch averages words with no float round-trip at the
+//! leader), while the ring baseline stays [`WireFormat::F32`] (exact
+//! f32 averaging in the servers is its whole point). The float
+//! `reduce_chunk` entry of a packed collective is an adapter over its
+//! own word-domain path, so the in-memory driver and the threaded
+//! packed pipeline are bit-identical by construction.
+//!
+//! Packing layout: little-endian bit order — word `i` occupies bits
+//! `[i·B, (i+1)·B)` of the stream, least-significant bit first; the
+//! final byte is zero-padded. For the even widths PAM4 allows
+//! (`validate_bits`), 8/16/32-bit words are byte-aligned and 2/4-bit
+//! words pack 4/2 per byte.
+//!
+//! ```
+//! use optinc::collectives::wire::{pack_words_into, unpack_words_into, packed_len};
+//!
+//! let words = [3u32, 0, 2, 1, 3];
+//! let mut packed = Vec::new();
+//! pack_words_into(&words, 2, &mut packed);
+//! assert_eq!(packed.len(), packed_len(words.len(), 2)); // 10 bits -> 2 bytes
+//! let mut back = vec![0u32; words.len()];
+//! unpack_words_into(&packed, 2, &mut back);
+//! assert_eq!(back, words);
+//! ```
+
+use std::sync::Arc;
+
+use super::engine::{check_aligned, BufferPool, ShardChunk};
+use crate::quant::GlobalQuantizer;
+
+/// Bytes `elements` B-bit words occupy on the wire.
+pub fn packed_len(elements: usize, bits: u32) -> usize {
+    (elements * bits as usize).div_ceil(8)
+}
+
+fn word_mask(bits: u32) -> u64 {
+    debug_assert!((1..=32).contains(&bits));
+    if bits == 32 {
+        u32::MAX as u64
+    } else {
+        (1u64 << bits) - 1
+    }
+}
+
+/// The one packing loop (the wire layout lives here and nowhere else:
+/// LSB-first, zero-padded tail). Every pack entry fuses its word source
+/// into the iterator.
+fn pack_core(words: impl Iterator<Item = u32>, bits: u32, out: &mut Vec<u8>) {
+    assert!(
+        (1..=32).contains(&bits),
+        "packed wire supports 1..=32-bit words, got {bits}"
+    );
+    let mask = word_mask(bits);
+    let mut acc = 0u64;
+    let mut nbits = 0u32;
+    for w in words {
+        debug_assert!(
+            (w as u64) <= mask,
+            "word {w} exceeds the {bits}-bit wire range"
+        );
+        acc |= ((w as u64) & mask) << nbits;
+        nbits += bits;
+        while nbits >= 8 {
+            out.push((acc & 0xFF) as u8);
+            acc >>= 8;
+            nbits -= 8;
+        }
+    }
+    if nbits > 0 {
+        out.push((acc & 0xFF) as u8);
+    }
+}
+
+/// The one unpacking loop (inverse of [`pack_core`]); emits `count`
+/// words to the sink. Callers validate `packed.len()` first.
+fn unpack_core(packed: &[u8], bits: u32, count: usize, mut emit: impl FnMut(u32)) {
+    assert!(
+        (1..=32).contains(&bits),
+        "packed wire supports 1..=32-bit words, got {bits}"
+    );
+    let mask = word_mask(bits);
+    let mut acc = 0u64;
+    let mut nbits = 0u32;
+    let mut bytes = packed.iter();
+    for _ in 0..count {
+        while nbits < bits {
+            acc |= (*bytes.next().expect("length checked by caller") as u64) << nbits;
+            nbits += 8;
+        }
+        emit((acc & mask) as u32);
+        acc >>= bits;
+        nbits -= bits;
+    }
+}
+
+/// Pack `B`-bit words densely into `out` (cleared first; capacity is
+/// reused, so pooled buffers make this allocation-free in steady
+/// state). Words must fit `bits` bits; the tail byte is zero-padded.
+pub fn pack_words_into(words: &[u32], bits: u32, out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(packed_len(words.len(), bits));
+    pack_core(words.iter().copied(), bits, out);
+}
+
+/// Unpack `out.len()` `B`-bit words from a packed byte stream (inverse
+/// of [`pack_words_into`]). Panics if `packed` is not exactly
+/// `packed_len(out.len(), bits)` bytes — a truncated or oversized wire
+/// buffer is a framing bug, never silently tolerated.
+pub fn unpack_words_into(packed: &[u8], bits: u32, out: &mut [u32]) {
+    assert_eq!(
+        packed.len(),
+        packed_len(out.len(), bits),
+        "packed buffer holds {} bytes but {} {bits}-bit words need {}",
+        packed.len(),
+        out.len(),
+        packed_len(out.len(), bits)
+    );
+    let count = out.len();
+    let mut slots = out.iter_mut();
+    unpack_core(packed, bits, count, |w| {
+        *slots.next().expect("one slot per word") = w;
+    });
+}
+
+/// Quantize a float slice and pack it in one pass — what a worker does
+/// at the edge before its chunk touches the channel. `out` is cleared
+/// (capacity reused).
+pub fn pack_quantized_into(
+    gs: &[f32],
+    quantizer: &GlobalQuantizer,
+    scale: f32,
+    out: &mut Vec<u8>,
+) {
+    let bits = quantizer.bits();
+    out.clear();
+    out.reserve(packed_len(gs.len(), bits));
+    pack_core(gs.iter().map(|&g| quantizer.quantize(g, scale)), bits, out);
+}
+
+/// Unpack a packed average and dequantize it into `out` in one pass —
+/// what a worker does with the broadcast. `packed` must hold exactly
+/// `out.len()` words.
+pub fn unpack_dequantize_into(
+    packed: &[u8],
+    quantizer: &GlobalQuantizer,
+    scale: f32,
+    out: &mut [f32],
+) {
+    let bits = quantizer.bits();
+    assert_eq!(
+        packed.len(),
+        packed_len(out.len(), bits),
+        "packed average holds {} bytes but {} {bits}-bit words need {}",
+        packed.len(),
+        out.len(),
+        packed_len(out.len(), bits)
+    );
+    let count = out.len();
+    let mut slots = out.iter_mut();
+    unpack_core(packed, bits, count, |w| {
+        *slots.next().expect("one slot per word") = quantizer.dequantize(w, scale);
+    });
+}
+
+/// A collective's native wire format — what actually crosses the
+/// worker↔leader channels per gradient element.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireFormat {
+    /// Raw `f32` chunks: 4 bytes per element (the ring baseline, and
+    /// the legacy float streaming the `--wire f32` override forces).
+    F32,
+    /// Packed `B`-bit offset-binary words: `B/8` bytes per element plus
+    /// one block-scale exchange per chunk.
+    Packed {
+        /// Gradient word width `B`.
+        bits: u32,
+    },
+}
+
+impl WireFormat {
+    /// Payload bytes one worker puts on the wire for `elements`
+    /// gradient elements in this format.
+    pub fn payload_bytes(&self, elements: usize) -> u64 {
+        match *self {
+            WireFormat::F32 => elements as u64 * 4,
+            WireFormat::Packed { bits } => packed_len(elements, bits) as u64,
+        }
+    }
+}
+
+/// One worker's quantized, bit-packed slice of the gradient — the unit
+/// that crosses the wire in the packed protocol.
+#[derive(Clone, Debug)]
+pub struct WireChunk {
+    /// Worker (server) index this chunk belongs to.
+    pub worker: usize,
+    /// Element offset of this chunk within the full gradient.
+    pub offset: usize,
+    /// Packed B-bit words (`packed_len(elements, bits)` bytes; pooled).
+    pub words: Vec<u8>,
+    /// The per-chunk block scale every worker agreed on before
+    /// quantizing (the one-float sync exchange).
+    pub scale: f32,
+    /// Word count before packing (the tail byte may carry padding).
+    pub elements: usize,
+}
+
+/// The reduced result of one wire chunk: the packed average, broadcast
+/// to every worker as one shared allocation, plus the scale it was
+/// quantized under.
+#[derive(Clone, Debug)]
+pub struct WireAvg {
+    /// Packed averaged words (one `Arc` serves all workers).
+    pub words: Arc<[u8]>,
+    /// Block scale for dequantization (echoed from the chunk set).
+    pub scale: f32,
+    /// Word count before packing.
+    pub elements: usize,
+}
+
+impl WireAvg {
+    /// An empty broadcast (the zero-length-gradient step protocol).
+    pub fn empty() -> WireAvg {
+        WireAvg {
+            words: Vec::new().into(),
+            scale: 0.0,
+            elements: 0,
+        }
+    }
+}
+
+/// Validate that a wire chunk set is aligned: same offset, element
+/// count, and (bit-identical) scale for every worker, with every
+/// payload exactly `packed_len(elements, bits)` bytes. Returns
+/// `(offset, elements, scale)`.
+pub fn check_wire_aligned(chunks: &[WireChunk], bits: u32) -> (usize, usize, f32) {
+    assert!(!chunks.is_empty(), "reduce_wire_chunk needs at least one chunk");
+    let offset = chunks[0].offset;
+    let elements = chunks[0].elements;
+    let scale = chunks[0].scale;
+    for c in chunks {
+        assert_eq!(c.offset, offset, "wire chunks must share one offset");
+        assert_eq!(c.elements, elements, "wire chunks must share one element count");
+        assert_eq!(
+            c.scale.to_bits(),
+            scale.to_bits(),
+            "wire chunks must carry the one agreed block scale"
+        );
+        assert_eq!(
+            c.words.len(),
+            packed_len(elements, bits),
+            "wire chunk payload does not match its declared element count"
+        );
+    }
+    (offset, elements, scale)
+}
+
+/// The edge half of the shared float→wire adapter: agree the per-chunk
+/// block scale ([`GlobalQuantizer::global_scale`] over the chunk set —
+/// what the threaded probe/ack exchange computes distributively), then
+/// quantize+pack every worker chunk into pooled byte buffers. Every
+/// packed-native collective's float `reduce_chunk` is
+/// `pack_chunks_at_edge` → its own `reduce_wire_chunk` →
+/// [`apply_wire_avg`] → [`recycle_wire`], so the protocol lives here
+/// once and the float and packed paths cannot drift apart.
+pub fn pack_chunks_at_edge(
+    quantizer: &GlobalQuantizer,
+    pool: &mut BufferPool<u8>,
+    chunks: &[ShardChunk],
+) -> Vec<WireChunk> {
+    let (offset, len) = check_aligned(chunks);
+    let views: Vec<&[f32]> = chunks.iter().map(|c| c.data.as_slice()).collect();
+    let scale = GlobalQuantizer::global_scale(&views);
+    drop(views);
+    let bits = quantizer.bits();
+    chunks
+        .iter()
+        .map(|c| {
+            let mut words = pool.take_empty(packed_len(len, bits));
+            pack_quantized_into(&c.data, quantizer, scale, &mut words);
+            WireChunk {
+                worker: c.worker,
+                offset,
+                words,
+                scale,
+                elements: len,
+            }
+        })
+        .collect()
+}
+
+/// The receiver half of the shared adapter: dequantize the packed
+/// average **once** into a pooled scratch buffer and copy it into every
+/// chunk (the broadcast fan-out is a memcpy, not N decode passes).
+pub fn apply_wire_avg(
+    quantizer: &GlobalQuantizer,
+    float_pool: &mut BufferPool<f32>,
+    avg: &WireAvg,
+    chunks: &mut [ShardChunk],
+) {
+    let mut avg_f = float_pool.take(avg.elements);
+    unpack_dequantize_into(&avg.words, quantizer, avg.scale, &mut avg_f);
+    for c in chunks.iter_mut() {
+        c.data.copy_from_slice(&avg_f);
+    }
+    float_pool.put(avg_f);
+}
+
+/// Retire a spent edge-packed chunk set back to its byte pool.
+pub fn recycle_wire(pool: &mut BufferPool<u8>, wire: Vec<WireChunk>) {
+    for wc in wire {
+        pool.put(wc.words);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    const WIDTHS: [u32; 5] = [2, 4, 8, 16, 32];
+
+    fn max_word(bits: u32) -> u64 {
+        if bits == 32 {
+            u32::MAX as u64
+        } else {
+            (1u64 << bits) - 1
+        }
+    }
+
+    #[test]
+    fn packed_len_closed_form() {
+        assert_eq!(packed_len(1000, 8), 1000);
+        assert_eq!(packed_len(1000, 16), 2000);
+        assert_eq!(packed_len(1000, 4), 500);
+        assert_eq!(packed_len(5, 2), 2); // 10 bits -> 2 bytes
+        assert_eq!(packed_len(0, 8), 0);
+        assert_eq!(packed_len(3, 32), 12);
+    }
+
+    #[test]
+    fn exhaustive_roundtrip_small_widths() {
+        // Every 2- and 4-bit word value, at every ragged length 0..=17,
+        // in a repeating pattern: pack → unpack must be the identity.
+        for &bits in &[2u32, 4] {
+            let vals = max_word(bits) as u32 + 1;
+            for len in 0..=17usize {
+                let words: Vec<u32> = (0..len).map(|i| (i as u32 * 7 + 3) % vals).collect();
+                let mut packed = Vec::new();
+                pack_words_into(&words, bits, &mut packed);
+                assert_eq!(packed.len(), packed_len(len, bits));
+                let mut back = vec![0u32; len];
+                unpack_words_into(&packed, bits, &mut back);
+                assert_eq!(back, words, "bits={bits} len={len}");
+            }
+        }
+        // Every 8-bit word value, once each.
+        let words: Vec<u32> = (0..=255u32).collect();
+        let mut packed = Vec::new();
+        pack_words_into(&words, 8, &mut packed);
+        let mut back = vec![0u32; words.len()];
+        unpack_words_into(&packed, 8, &mut back);
+        assert_eq!(back, words);
+    }
+
+    #[test]
+    fn random_roundtrip_matrix_all_widths() {
+        // The packed-wire property matrix: random words × bits ∈
+        // {2, 4, 8, 16, 32} × ragged lengths round-trip bit-exactly,
+        // including the all-zeros and all-ones extremes.
+        let mut rng = Pcg32::seeded(0x11AE);
+        for &bits in &WIDTHS {
+            let top = max_word(bits);
+            for len in [1usize, 3, 7, 64, 65, 1000] {
+                let words: Vec<u32> = (0..len)
+                    .map(|_| (rng.next_u64() % (top + 1)) as u32)
+                    .collect();
+                for sample in [
+                    words,
+                    vec![0u32; len],
+                    vec![top as u32; len],
+                ] {
+                    let mut packed = Vec::new();
+                    pack_words_into(&sample, bits, &mut packed);
+                    let mut back = vec![0u32; len];
+                    unpack_words_into(&packed, bits, &mut back);
+                    assert_eq!(back, sample, "bits={bits} len={len}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eight_bit_packing_is_byte_identity() {
+        // At 8 bits the wire really is one byte per element — the whole
+        // point of the fix (the f32 wire carried 4×).
+        let words = [0u32, 1, 127, 128, 255];
+        let mut packed = Vec::new();
+        pack_words_into(&words, 8, &mut packed);
+        assert_eq!(packed, vec![0u8, 1, 127, 128, 255]);
+    }
+
+    #[test]
+    fn two_bit_words_pack_four_per_byte() {
+        // LSB-first: [3, 0, 2, 1] -> 0b01_10_00_11 = 0x63.
+        let mut packed = Vec::new();
+        pack_words_into(&[3, 0, 2, 1], 2, &mut packed);
+        assert_eq!(packed, vec![0x63]);
+    }
+
+    #[test]
+    #[should_panic(expected = "need")]
+    fn truncated_buffer_is_rejected() {
+        let mut out = vec![0u32; 4];
+        unpack_words_into(&[0xFF], 8, &mut out);
+    }
+
+    #[test]
+    fn fused_quantize_pack_equals_two_step() {
+        let q = GlobalQuantizer::new(8);
+        let mut rng = Pcg32::seeded(9);
+        let gs: Vec<f32> = (0..301).map(|_| (rng.normal() * 0.4) as f32).collect();
+        let scale = GlobalQuantizer::global_scale(&[&gs]);
+
+        let words: Vec<u32> = gs.iter().map(|&g| q.quantize(g, scale)).collect();
+        let mut two_step = Vec::new();
+        pack_words_into(&words, 8, &mut two_step);
+        let mut fused = Vec::new();
+        pack_quantized_into(&gs, &q, scale, &mut fused);
+        assert_eq!(fused, two_step);
+
+        // ...and the fused unpack inverts it through dequantize.
+        let mut back = vec![0.0f32; gs.len()];
+        unpack_dequantize_into(&fused, &q, scale, &mut back);
+        for (b, &w) in back.iter().zip(words.iter()) {
+            assert_eq!(*b, q.dequantize(w, scale));
+        }
+    }
+
+    #[test]
+    fn wire_format_payload_accounting() {
+        assert_eq!(WireFormat::F32.payload_bytes(1000), 4000);
+        assert_eq!(WireFormat::Packed { bits: 8 }.payload_bytes(1000), 1000);
+        assert_eq!(WireFormat::Packed { bits: 16 }.payload_bytes(1000), 2000);
+        assert_eq!(WireFormat::Packed { bits: 2 }.payload_bytes(1000), 250);
+        assert_eq!(WireFormat::Packed { bits: 8 }.payload_bytes(0), 0);
+    }
+
+    #[test]
+    fn aligned_wire_chunks_pass_skewed_ones_panic() {
+        let q = GlobalQuantizer::new(8);
+        let gs = [0.5f32, -0.25, 0.125];
+        let scale = 0.5f32;
+        let mut words = Vec::new();
+        pack_quantized_into(&gs, &q, scale, &mut words);
+        let chunks = vec![
+            WireChunk { worker: 0, offset: 8, words: words.clone(), scale, elements: 3 },
+            WireChunk { worker: 1, offset: 8, words, scale, elements: 3 },
+        ];
+        assert_eq!(check_wire_aligned(&chunks, 8), (8, 3, scale));
+    }
+
+    #[test]
+    #[should_panic(expected = "one agreed block scale")]
+    fn disagreeing_scales_panic() {
+        let chunks = vec![
+            WireChunk { worker: 0, offset: 0, words: vec![0], scale: 1.0, elements: 1 },
+            WireChunk { worker: 1, offset: 0, words: vec![0], scale: 2.0, elements: 1 },
+        ];
+        check_wire_aligned(&chunks, 8);
+    }
+}

@@ -166,9 +166,9 @@ impl Scenario {
     /// width `64·N·(B/8)`, K = 4 inputs, `M = B/2` outputs) with every
     /// matrix approximated.
     pub fn fabric_level(bits: u32, fan_in: usize) -> Result<Scenario> {
-        if bits < 2 || bits > 32 || bits % 2 != 0 {
-            bail!("fabric level needs an even bit width in 2..=32, got {bits}");
-        }
+        // The one shared bit-width check (quantizer, PAM4 codec, and CLI
+        // route through the same predicate).
+        crate::pam4::validate_bits(bits).context("fabric level")?;
         if fan_in < 2 {
             bail!("fabric level needs a fan-in of at least 2, got {fan_in}");
         }
@@ -237,9 +237,11 @@ impl Scenario {
         if layers.len() < 2 {
             bail!("scenario needs >= 2 layers");
         }
+        let bits = v.get("bits").as_usize().context("scenario.bits missing")? as u32;
+        crate::pam4::validate_bits(bits).context("scenario.bits")?;
         Ok(Scenario {
             id: v.get("id").as_usize().unwrap_or(0),
-            bits: v.get("bits").as_usize().context("scenario.bits missing")? as u32,
+            bits,
             servers: v
                 .get("servers")
                 .as_usize()
@@ -400,5 +402,21 @@ mod tests {
         // Invalid shapes are clear errors.
         assert!(Scenario::fabric_level(7, 4).is_err());
         assert!(Scenario::fabric_level(8, 1).is_err());
+    }
+
+    #[test]
+    fn odd_bit_widths_fail_cleanly_at_every_config_edge() {
+        // The ISSUE-5 satellite: `--bits 9` must be an anyhow error at
+        // the edge (the shared pam4::validate_bits check), never a raw
+        // assert deep inside Pam4Codec/switch construction.
+        let err = format!("{:#}", Scenario::fabric_level(9, 4).unwrap_err());
+        assert!(err.contains("even") && err.contains("got 9"), "{err}");
+        // A JSON-loaded scenario is validated the same way.
+        let j = Json::parse(
+            r#"{"id": 0, "bits": 9, "servers": 4, "layers": [4, 16, 4]}"#,
+        )
+        .unwrap();
+        let err = Scenario::from_json(&j).unwrap_err();
+        assert!(format!("{err:#}").contains("got 9"), "{err:#}");
     }
 }

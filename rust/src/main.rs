@@ -16,7 +16,7 @@ const COMMANDS: &[Command] = &[
     },
     Command {
         name: "pipeline",
-        about: "Streaming engine demo: pipelined vs monolithic (ring|optinc|fabric --fan-in --levels)",
+        about: "Streaming engine demo: pipelined vs monolithic (ring|optinc|fabric --fan-in --levels --wire packed|f32)",
         run: cmd_pipeline,
     },
     Command {
@@ -149,6 +149,14 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         None => (elements / 16).max(1),
     };
     let which = args.str_or("collective", "ring");
+    // Wire override: packed (the collective's native format, default)
+    // or f32 (the legacy float streaming, kept for the before/after
+    // byte-accounting comparison).
+    let force_f32 = match args.str_or("wire", "packed").as_str() {
+        "packed" => false,
+        "f32" => true,
+        other => anyhow::bail!("unknown --wire '{other}' (packed|f32)"),
+    };
 
     struct Synth {
         dim: usize,
@@ -196,6 +204,10 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
             // switch's ports (fan-in^levels). `--levels` defaults to the
             // shallowest cascade covering `--workers`.
             let bits = args.usize_or("bits", 8)? as u32;
+            // The one shared bit-width check, at the CLI edge: an odd
+            // `--bits 9` is a clear error here, not a panic deep inside
+            // switch construction.
+            optinc::pam4::validate_bits(bits)?;
             let fan_in = args.usize_or("fan-in", 4)?;
             let topo = match args.usize_opt("levels")? {
                 Some(l) => FabricTopology::uniform(fan_in, l)?,
@@ -239,7 +251,9 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         ),
     };
 
-    let cluster = Cluster::new(workers).with_chunk_elems(chunk);
+    let cluster = Cluster::new(workers)
+        .with_chunk_elems(chunk)
+        .with_f32_wire(force_f32);
     let mut piped_metrics = ClusterMetrics::new("pipelined");
     let piped = cluster.run(
         steps,
@@ -260,6 +274,29 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     println!(
         "\nstreaming engine — {which}, N={workers}, {elements} elements, chunk {chunk}"
     );
+    // Measured vs modeled wire bytes: the packed transport makes these
+    // equal for the OptINC family; --wire f32 exposes the old 4x gap.
+    // (The ring baseline is f32-native — its peer-to-peer byte model is
+    // not comparable to the star-observed access link, so no gap line.)
+    if let optinc::collectives::wire::WireFormat::Packed { bits } =
+        collective.wire_format()
+    {
+        let accounted = p.bytes_sent_per_server + p.sync_bytes_per_server;
+        let observed = piped[0].observed_wire_bytes_per_server;
+        println!(
+            "  wire      : {} ({bits}-bit) — observed {observed} B/server/step vs \
+             accounted {accounted} B ({})",
+            if force_f32 { "f32 (legacy)" } else { "packed" },
+            if observed == accounted {
+                "closed".to_string()
+            } else {
+                format!(
+                    "{:.2}x gap",
+                    observed as f64 / accounted.max(1) as f64
+                )
+            }
+        );
+    }
     println!(
         "  pipelined : {} chunks, overlap {:.3}, modeled step {:.3} ms",
         p.chunks,

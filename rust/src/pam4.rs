@@ -12,6 +12,22 @@
 //! (§III-C) extends the last symbol's resolution to carry the level-1
 //! decimal remainder — see [`Pam4Codec::decode_extended`].
 
+/// The one shared gradient bit-width check, used by every edge that
+/// accepts a width: [`crate::quant::GlobalQuantizer::new`],
+/// [`Pam4Codec::new`], `Scenario::fabric_level`, and the CLI. PAM4
+/// packs 2 bits per symbol, so the width must be even; offset-binary
+/// words live in `u32`, so it must be in `2..=32`. Validating once here
+/// means `--bits 9` fails with this error at the edge instead of an
+/// `assert!` deep inside switch construction.
+pub fn validate_bits(bits: u32) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        (2..=32).contains(&bits) && bits % 2 == 0,
+        "gradient bit width must be even and in 2..=32 \
+         (PAM4 carries 2 bits per symbol), got {bits}"
+    );
+    Ok(())
+}
+
 /// Codec for `B`-bit words over `M = B/2` PAM4 symbols.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Pam4Codec {
@@ -20,9 +36,12 @@ pub struct Pam4Codec {
 }
 
 impl Pam4Codec {
-    /// `bits` must be even and ≤ 32 (the paper uses 8 and 16).
+    /// `bits` must pass [`validate_bits`] (even, `2..=32`; the paper
+    /// uses 8 and 16).
     pub fn new(bits: u32) -> Self {
-        assert!(bits > 0 && bits % 2 == 0 && bits <= 32, "bits must be even, 2..=32");
+        if let Err(e) = validate_bits(bits) {
+            panic!("{e}");
+        }
         Pam4Codec {
             bits,
             symbols: (bits / 2) as usize,
@@ -135,6 +154,23 @@ pub fn snap_fractional(a: f32, n: u32, max_level: f32) -> f32 {
 mod tests {
     use super::*;
     use crate::util::proptest::{check, vec_u32};
+
+    #[test]
+    fn validate_bits_is_the_single_edge_check() {
+        for ok in [2u32, 4, 8, 16, 32] {
+            assert!(validate_bits(ok).is_ok());
+        }
+        for bad in [0u32, 1, 3, 9, 33, 64] {
+            let err = validate_bits(bad).unwrap_err().to_string();
+            assert!(err.contains("even") && err.contains(&bad.to_string()), "{err}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "got 9")]
+    fn odd_width_codec_panics_with_the_shared_message() {
+        Pam4Codec::new(9);
+    }
 
     #[test]
     fn eq2_example_matches_paper_definition() {

@@ -24,6 +24,7 @@
 //! ```
 
 use crate::pam4::Pam4Codec;
+pub use crate::pam4::validate_bits;
 
 /// Fixed-point quantizer with a shared global scale.
 #[derive(Clone, Copy, Debug)]
@@ -34,8 +35,14 @@ pub struct GlobalQuantizer {
 }
 
 impl GlobalQuantizer {
+    /// `bits` must pass [`validate_bits`] — the same edge check the PAM4
+    /// codec and `Scenario::fabric_level` apply, so an odd width (e.g.
+    /// `--bits 9`) fails here with a clear message instead of exploding
+    /// later inside `Pam4Codec::new` when `codec()` runs.
     pub fn new(bits: u32) -> Self {
-        assert!(bits >= 2 && bits <= 32);
+        if let Err(e) = validate_bits(bits) {
+            panic!("{e}");
+        }
         GlobalQuantizer {
             bits,
             half: 1i64 << (bits - 1),
@@ -62,11 +69,27 @@ impl GlobalQuantizer {
     /// a zero scale would turn `g / scale` into NaN/∞ and propagate it
     /// through dequantize into every worker's averaged gradient.
     pub fn global_scale(shards: &[&[f32]]) -> f32 {
-        let m = shards
+        Self::combine_scale_probes(shards.iter().map(|s| Self::local_abs_max(s)))
+    }
+
+    /// One shard's contribution to [`Self::global_scale`]: the max
+    /// finite |g| (0 when no finite entry exists). In the packed wire
+    /// protocol each worker computes this locally and sends it as the
+    /// 4-byte scale probe — the upload half of the one-float exchange.
+    pub fn local_abs_max(shard: &[f32]) -> f32 {
+        shard
             .iter()
-            .flat_map(|s| s.iter())
             .filter(|g| g.is_finite())
-            .fold(0f32, |acc, &g| acc.max(g.abs()));
+            .fold(0f32, |acc, &g| acc.max(g.abs()))
+    }
+
+    /// Combine per-worker [`Self::local_abs_max`] probes into the one
+    /// agreed block scale (the leader/ack half of the exchange).
+    /// Composing the two halves is exactly [`Self::global_scale`]: the
+    /// max over shards of per-shard maxima, degenerate blocks landing on
+    /// [`Self::SAFE_EPS_SCALE`].
+    pub fn combine_scale_probes(probes: impl IntoIterator<Item = f32>) -> f32 {
+        let m = probes.into_iter().fold(0f32, f32::max);
         if m.is_normal() {
             m
         } else {
@@ -267,9 +290,88 @@ mod tests {
 
     #[test]
     fn extreme_values_clamp() {
+        // Signed range is [-(half-1), half-1] = [-127, 127] at 8 bits;
+        // offset binary shifts by half = 128, so the word range is
+        // [1, 255] with 128 the exact zero.
         let q = GlobalQuantizer::new(8);
-        assert_eq!(q.quantize(10.0, 1.0), 255 - 1 + 1); // clamped to +127 -> 255? offset 128+127=255
         assert_eq!(q.quantize(10.0, 1.0), 255);
         assert_eq!(q.quantize(-10.0, 1.0), 1);
+        assert_eq!(q.quantize(0.0, 1.0), 128);
+    }
+
+    #[test]
+    fn thirty_two_bit_overflow_edges() {
+        // bits = 32: half = 2^31, words span [1, u32::MAX], and the
+        // f32 multiply can overflow well past i64 — the `as i64` cast
+        // saturates (Rust float casts saturate), then the clamp lands
+        // on the word-range edge. No wraparound, no panic.
+        let q = GlobalQuantizer::new(32);
+        assert_eq!(q.bits(), 32);
+        assert_eq!(q.quantize(1.0, 1.0), u32::MAX);
+        assert_eq!(q.quantize(-1.0, 1.0), 1);
+        assert_eq!(q.quantize(0.0, 1.0), 1u32 << 31);
+        // f32 cast saturation: ±MAX/∞ clamp to the range edges.
+        assert_eq!(q.quantize(f32::MAX, 1.0), u32::MAX);
+        assert_eq!(q.quantize(f32::INFINITY, 1.0), u32::MAX);
+        assert_eq!(q.quantize(f32::NEG_INFINITY, 1.0), 1);
+        // Round trips at the edges stay finite and land back on ±scale.
+        for scale in [1.0f32, 0.125, 3.5] {
+            let hi = q.dequantize(q.quantize(scale, scale), scale);
+            let lo = q.dequantize(q.quantize(-scale, scale), scale);
+            assert!((hi - scale).abs() <= q.max_abs_error(scale) + scale * 1e-6);
+            assert!((lo + scale).abs() <= q.max_abs_error(scale) + scale * 1e-6);
+        }
+        // The midpoint word decodes to exactly zero.
+        assert_eq!(q.dequantize(1u32 << 31, 1.0), 0.0);
+    }
+
+    #[test]
+    fn nan_gradient_quantizes_to_the_zero_word() {
+        // A NaN gradient must become the offset midpoint (NaN as i64
+        // casts to 0), i.e. decode to exactly 0.0 — one diverged entry
+        // contributes nothing to the average instead of poisoning it.
+        for bits in [2u32, 8, 16, 32] {
+            let q = GlobalQuantizer::new(bits);
+            let w = q.quantize(f32::NAN, 1.0);
+            assert_eq!(w as i64, 1i64 << (bits - 1), "bits={bits}");
+            assert_eq!(q.dequantize(w, 1.0), 0.0, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn scale_probe_halves_compose_to_global_scale() {
+        // The packed wire protocol splits global_scale into per-worker
+        // local_abs_max probes + a combine at the leader; the two halves
+        // must reproduce global_scale bit for bit, non-finite entries
+        // and degenerate blocks included.
+        let shards: Vec<Vec<f32>> = vec![
+            vec![0.25, -0.75, f32::NAN],
+            vec![0.5, f32::INFINITY, -0.1],
+            vec![0.0; 4],
+        ];
+        let views: Vec<&[f32]> = shards.iter().map(|s| s.as_slice()).collect();
+        let probes: Vec<f32> = shards
+            .iter()
+            .map(|s| GlobalQuantizer::local_abs_max(s))
+            .collect();
+        assert_eq!(probes, vec![0.75, 0.5, 0.0]);
+        assert_eq!(
+            GlobalQuantizer::combine_scale_probes(probes).to_bits(),
+            GlobalQuantizer::global_scale(&views).to_bits()
+        );
+        // All-degenerate input lands on the safe epsilon in both forms.
+        let z = [vec![0f32; 3], vec![f32::NAN; 2]];
+        let zv: Vec<&[f32]> = z.iter().map(|s| s.as_slice()).collect();
+        assert_eq!(GlobalQuantizer::global_scale(&zv), GlobalQuantizer::SAFE_EPS_SCALE);
+        assert_eq!(
+            GlobalQuantizer::combine_scale_probes(z.iter().map(|s| GlobalQuantizer::local_abs_max(s))),
+            GlobalQuantizer::SAFE_EPS_SCALE
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "got 9")]
+    fn odd_bit_width_fails_at_the_quantizer_edge() {
+        GlobalQuantizer::new(9);
     }
 }

@@ -81,16 +81,29 @@ impl BenchSuite {
     pub fn new(title: &str) -> Self {
         // Honor quick mode for CI-ish runs: OPTINC_BENCH_QUICK=1.
         let quick = std::env::var("OPTINC_BENCH_QUICK").is_ok_and(|v| v == "1");
-        let cfg = if quick {
+        if quick {
+            Self::quick(title)
+        } else {
+            Self::with_config(title, BenchConfig::default())
+        }
+    }
+
+    /// A suite pinned to the quick config regardless of the env — the
+    /// `--json` artifact mode of the allreduce/fabric benches uses this
+    /// so CI gets a fast, deterministic-size run.
+    pub fn quick(title: &str) -> Self {
+        Self::with_config(
+            title,
             BenchConfig {
                 warmup: Duration::from_millis(20),
                 min_time: Duration::from_millis(60),
                 min_samples: 3,
                 max_samples: 50,
-            }
-        } else {
-            BenchConfig::default()
-        };
+            },
+        )
+    }
+
+    fn with_config(title: &str, cfg: BenchConfig) -> Self {
         println!("\n== bench suite: {title} ==");
         BenchSuite {
             cfg,
@@ -163,6 +176,13 @@ impl BenchSuite {
 
     /// Write results JSON next to target/ for provenance.
     pub fn finish(self) {
+        let stem = self.title.replace(['/', ' '], "_");
+        self.finish_named(&stem);
+    }
+
+    /// Write results to `target/bench-results/<stem>.json` — artifact
+    /// modes (`--json`) pin the file name so CI can upload it.
+    pub fn finish_named(self, stem: &str) {
         let arr = Json::Arr(self.results.iter().map(|r| r.to_json()).collect());
         let out = Json::obj(vec![
             ("suite", Json::Str(self.title.clone())),
@@ -170,11 +190,17 @@ impl BenchSuite {
         ]);
         let dir = std::path::Path::new("target/bench-results");
         let _ = std::fs::create_dir_all(dir);
-        let path = dir.join(format!("{}.json", self.title.replace(['/', ' '], "_")));
+        let path = dir.join(format!("{stem}.json"));
         if std::fs::write(&path, out.to_pretty()).is_ok() {
             println!("-- wrote {}", path.display());
         }
     }
+}
+
+/// Was `name` passed on the bench binary's command line? (Benches use
+/// `harness = false`, so `cargo bench --bench x -- --json` lands here.)
+pub fn arg_flag(name: &str) -> bool {
+    std::env::args().any(|a| a == name)
 }
 
 fn print_result(r: &BenchResult) {

@@ -259,6 +259,18 @@ fn prop_chunked_collectives_match_exact_mean() {
                             ));
                         }
                     }
+                    // The packed wire acceptance bar: the pipeline
+                    // (edge quantize → pack → word-domain switch →
+                    // packed broadcast → dequantize) must be BIT-exact
+                    // against the shared flat oracle at every chunk
+                    // grain, not merely within tolerance.
+                    let exact = chunked_reference_mean(&base, cs, 8);
+                    if work[0] != exact {
+                        return Err(format!(
+                            "optinc n={n} chunk={cs}: packed pipeline drifted \
+                             from chunked_reference_mean"
+                        ));
+                    }
                 }
             }
             for n in [8usize, 16] {

@@ -221,6 +221,127 @@ fn fabric_collective_runs_beyond_port_count_on_the_cluster() {
     assert_eq!(applied[0].1, want, "threaded fabric must match the flat oracle");
 }
 
+/// The ISSUE-5 acceptance bar: for the packed-wire OptINC and fabric
+/// paths, the bytes the leader observes crossing the worker↔leader
+/// channels must equal `bytes_sent_per_server + sync_bytes_per_server`
+/// — the wire and the accounting agree — and the applied averages must
+/// be bit-exact against the shared flat oracle.
+#[test]
+fn packed_wire_bytes_observed_equal_accounted_for_optinc_and_fabric() {
+    struct Probe {
+        dim: usize,
+        tx: std::sync::mpsc::Sender<(usize, Vec<f32>)>,
+    }
+    impl Workload for Probe {
+        fn grad(&mut self, step: usize, worker: usize) -> (Vec<f32>, f64) {
+            let mut rng = Pcg32::seeded((step * 1000 + worker) as u64);
+            let g = (0..self.dim).map(|_| rng.normal() as f32 * 0.1).collect();
+            (g, 0.0)
+        }
+        fn apply(&mut self, _step: usize, worker: usize, avg: &[f32]) {
+            self.tx.send((worker, avg.to_vec())).ok();
+        }
+    }
+
+    // (name, collective, workers, bits) — flat 8-bit, flat 16-bit, and
+    // a depth-2 fabric with a ragged chunk grain.
+    let cases: Vec<(&str, Box<dyn ChunkedAllReduce>, usize, u32)> = vec![
+        (
+            "optinc8",
+            Box::new(OptIncAllReduce::exact(Scenario::table1(1).unwrap(), 1)),
+            4,
+            8,
+        ),
+        (
+            "optinc16",
+            Box::new(OptIncAllReduce::exact(Scenario::table1(4).unwrap(), 1)),
+            4,
+            16,
+        ),
+        (
+            "fabric",
+            Box::new(FabricAllReduce::for_workers(8, 4, 16).unwrap()),
+            16,
+            8,
+        ),
+        (
+            "cascade",
+            Box::new(HierarchicalOptInc::new(
+                Scenario::table1(1).unwrap(),
+                CascadeMode::Remainder,
+            )),
+            16,
+            8,
+        ),
+    ];
+    let dim = 1000usize;
+    let chunk = 301usize; // 4 chunks, ragged tail of 97
+    for (name, mut coll, workers, bits) in cases {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let cluster = Cluster::new(workers).with_chunk_elems(chunk);
+        let mut metrics = ClusterMetrics::new(name);
+        let records = cluster
+            .run(
+                2,
+                move |_| Probe {
+                    dim,
+                    tx: tx.clone(),
+                },
+                coll.as_mut(),
+                &mut metrics,
+            )
+            .unwrap();
+
+        let nchunks = dim.div_ceil(chunk) as u64;
+        for r in &records {
+            // Accounted: B/8 per element payload + (4 + B/8) sync per chunk.
+            assert_eq!(
+                r.stats.bytes_sent_per_server,
+                (dim as u64 * bits as u64).div_ceil(8),
+                "{name} step {}",
+                r.step
+            );
+            assert_eq!(
+                r.stats.sync_bytes_per_server,
+                nchunks * (4 + (bits as u64).div_ceil(8)),
+                "{name} step {}",
+                r.step
+            );
+            // Observed == accounted: the wire-format bug is closed.
+            assert_eq!(
+                r.observed_wire_bytes_per_server,
+                r.stats.bytes_sent_per_server + r.stats.sync_bytes_per_server,
+                "{name} step {}: observed channel bytes diverge from accounting",
+                r.step
+            );
+        }
+        assert_eq!(
+            metrics.total_observed_wire_bytes(),
+            metrics.total_bytes_per_server(),
+            "{name}: run-level observed vs accounted"
+        );
+
+        // Bit-exactness of the threaded packed pipeline against the
+        // shared flat oracle, chunk boundaries mirrored.
+        let mut applied: Vec<(usize, Vec<f32>)> = rx.try_iter().collect();
+        applied.retain(|(w, _)| *w == 0);
+        assert_eq!(applied.len(), 2, "{name}: worker 0 applied 2 steps");
+        for (step, (_, avg)) in applied.iter().enumerate() {
+            let shards: Vec<Vec<f32>> = (0..workers)
+                .map(|w| {
+                    let mut rng = Pcg32::seeded((step * 1000 + w) as u64);
+                    (0..dim).map(|_| rng.normal() as f32 * 0.1).collect()
+                })
+                .collect();
+            let want = optinc::quant::chunked_reference_mean(&shards, chunk, bits);
+            assert_eq!(
+                avg, &want,
+                "{name} step {step}: packed pipeline is not bit-exact"
+            );
+        }
+    }
+}
+
 /// Fault injection (ISSUE 4 satellite): a worker that panics mid-run
 /// must surface as a clean `Err` within the leader watchdog — no
 /// deadlock — for both the ring and the fabric collective, and the
