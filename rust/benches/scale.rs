@@ -1,0 +1,101 @@
+//! Scale bench: the event backend simulating 64 → 1024 servers through
+//! a 3-level fabric, in one process. Times the wall-clock cost of the
+//! simulation itself (can this laptop sweep 1024 servers?) and records
+//! the virtual-clock scalars the sweep exists to measure — mean virtual
+//! step time, total OCS reconfiguration-gate wait, and the closed-form
+//! modeled step time it is checked against. `-- --json` writes the
+//! `BENCH_scale.json` trajectory artifact.
+
+use optinc::cluster::{Backend, Cluster, ClusterMetrics, Workload};
+use optinc::collectives::fabric::{FabricAllReduce, FabricMode, FabricTopology};
+use optinc::experiments::scale::{run as run_sweep, SweepConfig};
+use optinc::util::bench::{arg_flag, black_box, BenchSuite};
+use optinc::util::rng::Pcg32;
+
+struct Synth {
+    dim: usize,
+}
+
+impl Workload for Synth {
+    fn grad(&mut self, step: usize, worker: usize) -> (Vec<f32>, f64) {
+        let mut rng = Pcg32::new(0xBE_5C ^ ((step as u64) << 32), worker as u64);
+        let g = (0..self.dim).map(|_| rng.normal() as f32 * 0.1).collect();
+        (g, 0.0)
+    }
+
+    fn apply(&mut self, _step: usize, _worker: usize, _avg: &[f32]) {}
+}
+
+fn main() {
+    let json_mode = arg_flag("--json");
+    let mut suite = if json_mode {
+        BenchSuite::quick("scale-event")
+    } else {
+        BenchSuite::new("scale")
+    };
+
+    // Wall-clock: one event-backend step per server count. The payload
+    // shrinks in json/quick mode so CI stays fast; the server counts do
+    // not — the whole point is the 1024-server row.
+    let elements: usize = if json_mode { 8_192 } else { 65_536 };
+    let chunk = (elements / 8).max(1);
+    let servers: &[usize] = &[64, 256, 1024];
+    for &n in servers {
+        let topo = FabricTopology::for_workers_with_depth(n, 3).unwrap();
+        let cluster = Cluster::new(n)
+            .with_chunk_elems(chunk)
+            .with_backend(Backend::Event)
+            .with_seed(42);
+        let mut fabric = FabricAllReduce::exact(8, &topo, FabricMode::Remainder).unwrap();
+        suite.bench_throughput(
+            &format!("event_step/{n}x{elements}/d3"),
+            (n * elements) as f64,
+            "elem",
+            || {
+                let mut metrics = ClusterMetrics::new("bench");
+                let records = cluster
+                    .run(1, |_| Synth { dim: elements }, &mut fabric, &mut metrics)
+                    .unwrap();
+                black_box(records[0].virtual_time_s);
+            },
+        );
+    }
+
+    // Virtual-clock scalars from the canonical sweep config — the
+    // measured numbers EXPERIMENTS.md §Scale sweep quotes, tracked as
+    // a trajectory in BENCH_scale.json.
+    let cfg = SweepConfig {
+        elements: 8_192,
+        chunk: 1_024,
+        ..SweepConfig::default()
+    };
+    let rows = run_sweep(&cfg).unwrap();
+    for r in &rows {
+        suite.record_scalar(
+            &format!("virtual_step/{}x{}/d{}", r.servers, cfg.elements, cfg.levels),
+            r.mean_virtual_step_s * 1e6,
+            "us",
+        );
+        suite.record_scalar(
+            &format!("modeled_step/{}x{}/d{}", r.servers, cfg.elements, cfg.levels),
+            r.mean_modeled_step_s * 1e6,
+            "us",
+        );
+        suite.record_scalar(
+            &format!("reconfig_wait/{}x{}/d{}", r.servers, cfg.elements, cfg.levels),
+            r.virtual_reconfig_wait_s * 1e6,
+            "us",
+        );
+        suite.record_scalar(
+            &format!("wire_bytes/{}x{}/d{}", r.servers, cfg.elements, cfg.levels),
+            r.wire_bytes_per_server as f64,
+            "B",
+        );
+    }
+
+    if json_mode {
+        suite.finish_named("BENCH_scale");
+    } else {
+        suite.finish();
+    }
+}

@@ -1,0 +1,600 @@
+//! Discrete-event cluster backend: the threaded oracle's exact wire
+//! protocol, replayed sequentially against a **virtual clock**.
+//!
+//! One process, no threads, no channels: per step the backend computes
+//! every worker's gradient, then walks the chunk stream in
+//! deterministic worker order — scale probe, ack, edge quantization,
+//! packed upload, word-domain reduce, shared broadcast — performing the
+//! *identical* arithmetic and byte accounting the threaded backend
+//! performs, while a discrete-event clock advances per chunk hop. That
+//! buys three things the thread-per-worker oracle cannot provide:
+//!
+//! 1. **Scale.** Simulating 1024 servers × a 3-level fabric is one
+//!    process and zero OS threads (`pipeline --backend event --servers
+//!    1024 --levels 3`), far past the regime where spawning a thread
+//!    per server caps the simulation at tens of workers.
+//! 2. **Virtual time.** Each chunk's journey is scheduled on modeled
+//!    resources — per-worker uplink/downlink serialization at
+//!    [`HardwareModel::server_bandwidth_bytes`], one hop of
+//!    [`link_latency_s`](crate::config::HardwareModel::link_latency_s)
+//!    per fabric level ([`ChunkedAllReduce::levels`]), and per-level OCS
+//!    reconfiguration gates that open `level × ocs_reconfig_s` into the
+//!    step — so [`StepRecord::virtual_time_s`] *measures* the pipelined
+//!    step time the closed-form
+//!    [`modeled_step_time_s`](crate::collectives::CollectiveStats::modeled_step_time_s)
+//!    predicts, and
+//!    [`StepRecord::virtual_reconfig_wait_s`] measures how much
+//!    reconfiguration wait the chunk stream actually absorbed.
+//! 3. **Determinism.** Faults and stragglers resolve in virtual time:
+//!    a panicking workload trips the watchdog at an exact virtual
+//!    deadline, and compute jitter streams replay byte-for-byte from
+//!    [`Cluster::seed`] — no `recv_timeout` wall-clock flakiness.
+//!
+//! The conformance harness (`rust/tests/backend_conformance.rs`) pins
+//! this backend bit-exact against the threaded oracle on averaged
+//! gradients, and equal on accounted/observed wire bytes, chunk counts,
+//! and sync bytes, across the full collective × workers × grain × bits
+//! matrix.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use anyhow::Result;
+
+use crate::collectives::engine::{ChunkedAllReduce, ShardChunk};
+use crate::collectives::wire::{
+    pack_quantized_into, unpack_dequantize_into, WireAvg, WireChunk, WireFormat,
+};
+use crate::quant::GlobalQuantizer;
+use crate::util::rng::{Pcg32, SplitMix64};
+
+use super::{chunk_count, Cluster, ClusterMetrics, StepRecord, Workload};
+
+/// Virtual compute-time model for the event backend: how long each
+/// worker's `grad` call takes on the virtual clock. The default is the
+/// all-zero model — compute is instantaneous and every run is pure
+/// communication, which is what the conformance matrix and the scale
+/// sweep use.
+#[derive(Clone, Debug, Default)]
+pub struct ComputeModel {
+    /// Fixed per-step compute floor (virtual seconds).
+    pub base_s: f64,
+    /// Additional virtual seconds per gradient element.
+    pub per_elem_s: f64,
+    /// Log-normal jitter: each worker's compute time is multiplied by
+    /// `exp(sigma · N(0,1))` drawn from a per-(seed, step, worker)
+    /// PCG stream. Zero disables jitter entirely.
+    pub jitter_sigma: f64,
+    /// Deterministic stragglers: `(worker, factor)` pairs whose compute
+    /// time is multiplied by `factor` every step. A factor large enough
+    /// to push one worker past the watchdog turns this into
+    /// deterministic fault injection.
+    pub stragglers: Vec<(usize, f64)>,
+}
+
+impl ComputeModel {
+    /// Builder: fixed per-step compute floor.
+    pub fn with_base_s(mut self, base_s: f64) -> ComputeModel {
+        self.base_s = base_s;
+        self
+    }
+
+    /// Builder: per-element compute cost.
+    pub fn with_per_elem_s(mut self, per_elem_s: f64) -> ComputeModel {
+        self.per_elem_s = per_elem_s;
+        self
+    }
+
+    /// Builder: log-normal jitter sigma.
+    pub fn with_jitter(mut self, sigma: f64) -> ComputeModel {
+        self.jitter_sigma = sigma;
+        self
+    }
+
+    /// Builder: add one deterministic straggler.
+    pub fn with_straggler(mut self, worker: usize, factor: f64) -> ComputeModel {
+        self.stragglers.push((worker, factor));
+        self
+    }
+
+    /// Virtual compute seconds for one worker's `grad` call this step.
+    /// Pure function of `(jitter_seed, step, worker, elements)` — the
+    /// replay guarantee.
+    pub fn sample_s(&self, jitter_seed: u64, step: usize, worker: usize, elements: usize) -> f64 {
+        let mut t = self.base_s + self.per_elem_s * elements as f64;
+        for &(w, factor) in &self.stragglers {
+            if w == worker {
+                t *= factor;
+            }
+        }
+        if self.jitter_sigma > 0.0 && t > 0.0 {
+            // One independent stream per (step, worker): SplitMix the
+            // step into the seed, the worker id selects the PCG stream.
+            let mut salt = SplitMix64::new(jitter_seed ^ (step as u64));
+            let mut rng = Pcg32::new(salt.next_u64(), worker as u64);
+            t *= (self.jitter_sigma * rng.normal()).exp();
+        }
+        t
+    }
+}
+
+/// The discrete-event leader loop. Caller ([`Cluster::run`]) has
+/// already validated `workers > 0`.
+pub(super) fn run<W, F>(
+    cl: &Cluster,
+    steps: usize,
+    make_workload: F,
+    collective: &mut dyn ChunkedAllReduce,
+    metrics: &mut ClusterMetrics,
+) -> Result<Vec<StepRecord>>
+where
+    W: Workload,
+    F: Fn(usize) -> W,
+{
+    let n = cl.workers;
+    let chunk = cl.chunk_elems.max(1);
+    let watchdog_s = cl.watchdog.as_secs_f64();
+
+    // Same wire selection as the threaded backend.
+    let wire = if cl.force_f32_wire {
+        WireFormat::F32
+    } else {
+        collective.wire_format()
+    };
+    let ack_bytes = match wire {
+        WireFormat::Packed { bits } => (bits as u64).div_ceil(8),
+        WireFormat::F32 => 0,
+    };
+    let quantizer = match wire {
+        WireFormat::Packed { bits } => Some(GlobalQuantizer::new(bits)),
+        WireFormat::F32 => None,
+    };
+    // Fabric depth: one switch hop of latency per level, and one OCS
+    // reconfiguration gate per level past the first.
+    let hops = (collective.levels().max(1)) as usize;
+
+    // Hardware terms for the event-latency model — the same terms
+    // `modeled_step_time_s` uses, applied per chunk hop.
+    let bw = cl.hw.server_bandwidth_bytes();
+    let lat = cl.hw.link_latency_s;
+    let reconfig = cl.hw.ocs_reconfig_s;
+
+    // Replay seed → per-(step, worker) jitter streams.
+    let mut seed_mix = SplitMix64::new(cl.seed);
+    let jitter_seed = seed_mix.next_u64();
+
+    let mut workloads: Vec<W> = (0..n).map(&make_workload).collect();
+    let mut records = Vec::with_capacity(steps);
+    let mut clock = 0.0f64; // virtual seconds since the run began
+
+    for step in 0..steps {
+        let t0 = clock;
+
+        // ---- 1. Gradients, in worker order -------------------------
+        // A panicking workload is the deterministic fault model: that
+        // worker goes silent, the step can never complete, and the
+        // leader's watchdog fires at an exact virtual deadline. No
+        // collective session was opened, so the collective stays
+        // reusable after the failure — same contract as the threaded
+        // shutdown path.
+        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(n);
+        let mut losses = 0.0f64;
+        for (w, workload) in workloads.iter_mut().enumerate() {
+            match catch_unwind(AssertUnwindSafe(|| workload.grad(step, w))) {
+                Ok((g, l)) => {
+                    losses += l;
+                    grads.push(g);
+                }
+                Err(_) => {
+                    return Err(anyhow::anyhow!(
+                        "step {step}: no worker message within the {:?} watchdog \
+                         (worker {w} panicked; virtual deadline t = {:.9} s; \
+                         1 worker thread(s) panicked)",
+                        cl.watchdog,
+                        t0 + watchdog_s
+                    ));
+                }
+            }
+        }
+        let total = grads[0].len();
+        for g in &grads {
+            assert_eq!(
+                g.len(),
+                total,
+                "workers disagree on the gradient size this step"
+            );
+        }
+        let nchunks = chunk_count(total, chunk);
+
+        // Per-worker virtual compute completion — the straggler model.
+        // A worker whose compute alone blows the watchdog is a fault:
+        // the leader hears nothing from it before the virtual deadline.
+        let compute_done: Vec<f64> = (0..n)
+            .map(|w| t0 + cl.compute.sample_s(jitter_seed, step, w, total))
+            .collect();
+        if let Some((w, done)) = compute_done
+            .iter()
+            .enumerate()
+            .find(|(_, &done)| done - t0 > watchdog_s)
+        {
+            return Err(anyhow::anyhow!(
+                "step {step}: no worker message within the {:?} watchdog \
+                 (worker {w} stalled: compute ends at virtual t = {done:.9} s, \
+                 past the deadline t = {:.9} s)",
+                cl.watchdog,
+                t0 + watchdog_s
+            ));
+        }
+
+        collective.begin(n, total);
+
+        // ---- 2. Virtual resources ---------------------------------
+        // Each worker serializes its own uplink and downlink at the
+        // server bandwidth; each fabric level is one hop of link
+        // latency behind an OCS gate that opens `level × reconfig`
+        // into the step (patterns reprogram sequentially up the
+        // cascade). Level 0 needs no reconfiguration — it is the
+        // always-on ingress.
+        let mut uplink_free = compute_done.clone();
+        let mut downlink_free = vec![t0; n];
+        let level_gate: Vec<f64> = (0..hops).map(|l| t0 + l as f64 * reconfig).collect();
+        let mut level_free = vec![t0; hops];
+        let mut reconfig_wait = 0.0f64;
+        let mut worker_done = compute_done.clone();
+
+        let mut observed_payload = vec![0u64; n];
+        let mut observed_sync = vec![0u64; n];
+        let mut avg_full = vec![0.0f32; total];
+
+        // The packed wire skips the scale exchange entirely on the
+        // empty-step protocol (one empty wire chunk carries the loss).
+        let do_scale = matches!(wire, WireFormat::Packed { .. }) && total > 0;
+
+        // ---- 3. The chunk stream ----------------------------------
+        for k in 0..nchunks {
+            let lo = k.saturating_mul(chunk).min(total);
+            let hi = lo.saturating_add(chunk).min(total);
+            let elems = hi - lo;
+
+            // Scale exchange: a 4-byte probe up each worker's link,
+            // the combined scale acked back down (ack_bytes each).
+            // `upload_gate[w]` is when worker w may start its payload
+            // upload for this chunk.
+            let mut upload_gate = vec![t0; n];
+            let scale = if do_scale {
+                let mut probe_at_leader = f64::NEG_INFINITY;
+                for w in 0..n {
+                    observed_sync[w] += 4;
+                    uplink_free[w] += 4.0 / bw;
+                    probe_at_leader = probe_at_leader.max(uplink_free[w] + lat);
+                }
+                let s = GlobalQuantizer::combine_scale_probes(
+                    grads.iter().map(|g| GlobalQuantizer::local_abs_max(&g[lo..hi])),
+                );
+                for w in 0..n {
+                    observed_sync[w] += ack_bytes;
+                    downlink_free[w] = downlink_free[w].max(probe_at_leader) + ack_bytes as f64 / bw;
+                    upload_gate[w] = downlink_free[w] + lat;
+                }
+                Some(s)
+            } else {
+                None
+            };
+
+            // Upload + reduce: identical arithmetic to the threaded
+            // leader (worker-ordered slots, word-domain reduce on the
+            // packed wire), plus uplink serialization on the clock.
+            let mut at_root = f64::NEG_INFINITY;
+            let avg_bytes: f64;
+            match wire {
+                WireFormat::Packed { .. } => {
+                    let quantizer = quantizer.as_ref().expect("packed wire has a quantizer");
+                    let mut slot: Vec<WireChunk> = Vec::with_capacity(n);
+                    for (w, grad) in grads.iter().enumerate() {
+                        let mut words = Vec::new();
+                        if total > 0 {
+                            pack_quantized_into(
+                                &grad[lo..hi],
+                                quantizer,
+                                scale.expect("sized packed chunks agreed a scale"),
+                                &mut words,
+                            );
+                        }
+                        observed_payload[w] += words.len() as u64;
+                        uplink_free[w] = uplink_free[w].max(upload_gate[w])
+                            + words.len() as f64 / bw;
+                        at_root = at_root.max(uplink_free[w] + lat);
+                        slot.push(WireChunk {
+                            worker: w,
+                            offset: lo,
+                            words,
+                            scale: scale.unwrap_or(0.0),
+                            elements: elems,
+                        });
+                    }
+                    let wavg = if elems == 0 {
+                        WireAvg::empty()
+                    } else {
+                        collective.reduce_wire_chunk(&slot)
+                    };
+                    avg_bytes = wavg.words.len() as f64;
+                    if elems > 0 {
+                        // One unpack stands in for every worker's — the
+                        // broadcast is one shared allocation, so all N
+                        // dequantize the same bytes to the same floats.
+                        unpack_dequantize_into(
+                            &wavg.words,
+                            quantizer,
+                            wavg.scale,
+                            &mut avg_full[lo..hi],
+                        );
+                    }
+                }
+                WireFormat::F32 => {
+                    let mut slot: Vec<ShardChunk> = grads
+                        .iter()
+                        .enumerate()
+                        .map(|(w, grad)| {
+                            let data = grad[lo..hi].to_vec();
+                            observed_payload[w] += data.len() as u64 * 4;
+                            uplink_free[w] = uplink_free[w].max(upload_gate[w])
+                                + (data.len() * 4) as f64 / bw;
+                            at_root = at_root.max(uplink_free[w] + lat);
+                            ShardChunk {
+                                worker: w,
+                                offset: lo,
+                                data,
+                            }
+                        })
+                        .collect();
+                    // Empty gradients complete the step protocol
+                    // without a reduce — same as the threaded leader.
+                    if total > 0 {
+                        collective.reduce_chunk(&mut slot);
+                    }
+                    avg_full[lo..hi].copy_from_slice(&slot[0].data[..elems]);
+                    avg_bytes = (elems * 4) as f64;
+                }
+            }
+
+            // Switch traversal: one hop per fabric level; a chunk that
+            // beats a level's reconfiguration gate waits for it (the
+            // wait is measured — streaming hides most of it behind
+            // later uploads).
+            let mut t = at_root;
+            for l in 0..hops {
+                let ready = t.max(level_free[l]);
+                reconfig_wait += (level_gate[l] - ready).max(0.0);
+                let entry = ready.max(level_gate[l]);
+                level_free[l] = entry;
+                t = entry + lat;
+            }
+
+            // Broadcast: the averaged chunk serializes down every
+            // worker's downlink (one shared allocation — each worker
+            // still receives its own copy of the bytes on its link).
+            for w in 0..n {
+                downlink_free[w] = downlink_free[w].max(t) + avg_bytes / bw;
+                worker_done[w] = worker_done[w].max(downlink_free[w] + lat);
+            }
+        }
+
+        // ---- 4. Close the step ------------------------------------
+        let stats = collective.finish();
+        let comm_s = stats.modeled_step_time_s(&cl.hw);
+        // Rounds past the per-chunk fabric hops (e.g. ring's 2(N−1)
+        // circulation) are charged once at the step's modeled rate —
+        // the same `rounds × link_latency` term `modeled_step_time_s`
+        // uses; rounds of different chunks pipeline.
+        let extra_rounds = stats.rounds.saturating_sub(hops as u32) as f64;
+        let step_end =
+            worker_done.iter().fold(t0, |acc, &d| acc.max(d)) + extra_rounds * lat;
+        let virtual_s = step_end - t0;
+        clock = step_end;
+
+        let observed = observed_payload
+            .iter()
+            .zip(&observed_sync)
+            .map(|(p, s)| p + s)
+            .max()
+            .unwrap_or(0);
+
+        // Apply the shared average — every worker sees the same bytes,
+        // in worker order (the threaded backend applies concurrently;
+        // the values are identical).
+        for (w, workload) in workloads.iter_mut().enumerate() {
+            workload.apply(step, w, &avg_full);
+        }
+
+        metrics.record(&stats, comm_s);
+        metrics.record_observed_wire(observed);
+        metrics.record_virtual(virtual_s, reconfig_wait);
+        records.push(StepRecord {
+            step,
+            mean_loss: losses / n as f64,
+            stats,
+            modeled_comm_s: comm_s,
+            observed_wire_bytes_per_server: observed,
+            virtual_time_s: Some(virtual_s),
+            virtual_reconfig_wait_s: Some(reconfig_wait),
+        });
+    }
+    Ok(records)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Backend, Cluster};
+    use crate::collectives::fabric::{FabricAllReduce, FabricMode, FabricTopology};
+    use crate::collectives::ring::RingAllReduce;
+    use std::time::Duration;
+
+    struct Toy {
+        dim: usize,
+    }
+
+    impl Workload for Toy {
+        fn grad(&mut self, step: usize, worker: usize) -> (Vec<f32>, f64) {
+            let v = (worker + 1) as f32 + step as f32;
+            (vec![v; self.dim], v as f64)
+        }
+
+        fn apply(&mut self, _step: usize, _worker: usize, _avg: &[f32]) {}
+    }
+
+    fn event_cluster(n: usize) -> Cluster {
+        Cluster::new(n).with_backend(Backend::Event)
+    }
+
+    #[test]
+    fn virtual_clock_advances_every_step() {
+        let mut ring = RingAllReduce::new();
+        let mut metrics = ClusterMetrics::new("clock");
+        let records = event_cluster(4)
+            .with_chunk_elems(16)
+            .run(3, |_| Toy { dim: 64 }, &mut ring, &mut metrics)
+            .unwrap();
+        for r in &records {
+            let v = r.virtual_time_s.expect("event backend keeps a clock");
+            assert!(v.is_finite() && v > 0.0, "step {}: virtual {v}", r.step);
+        }
+        assert!(metrics.total_virtual_time_s() > 0.0);
+        assert_eq!(
+            metrics.total_virtual_time_s(),
+            records.iter().map(|r| r.virtual_time_s.unwrap()).sum::<f64>()
+        );
+    }
+
+    #[test]
+    fn straggler_stretches_the_virtual_step() {
+        let run_with = |compute: ComputeModel| -> f64 {
+            let mut ring = RingAllReduce::new();
+            let mut metrics = ClusterMetrics::new("straggle");
+            event_cluster(4)
+                .with_compute(compute)
+                .run(1, |_| Toy { dim: 64 }, &mut ring, &mut metrics)
+                .unwrap()[0]
+                .virtual_time_s
+                .unwrap()
+        };
+        let base = run_with(ComputeModel::default().with_base_s(1e-6));
+        let straggled = run_with(
+            ComputeModel::default()
+                .with_base_s(1e-6)
+                .with_straggler(2, 50.0),
+        );
+        assert!(
+            straggled > base + 40e-6,
+            "50x straggler must dominate the step: {straggled} vs {base}"
+        );
+    }
+
+    #[test]
+    fn straggler_past_the_watchdog_is_a_deterministic_fault() {
+        let mut ring = RingAllReduce::new();
+        let mut metrics = ClusterMetrics::new("fault");
+        let err = event_cluster(3)
+            .with_watchdog(Duration::from_millis(100))
+            .with_compute(ComputeModel::default().with_base_s(1e-3).with_straggler(1, 1e4))
+            .run(2, |_| Toy { dim: 8 }, &mut ring, &mut metrics)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("watchdog"), "{err}");
+        assert!(err.contains("worker 1 stalled"), "{err}");
+        // Step 0 already fails (10 s compute > 100 ms watchdog), so the
+        // virtual deadline is exactly the watchdog itself.
+        assert!(err.contains("deadline t = 0.100000000 s"), "{err}");
+        // The collective is reusable after the fault: the next begin
+        // resets the aborted session.
+        let records = event_cluster(3)
+            .run(1, |_| Toy { dim: 8 }, &mut ring, &mut metrics)
+            .unwrap();
+        assert_eq!(records.len(), 1);
+    }
+
+    #[test]
+    fn jitter_replays_from_the_seed() {
+        let run_with = |seed: u64| -> Vec<crate::cluster::StepRecord> {
+            let mut ring = RingAllReduce::new();
+            let mut metrics = ClusterMetrics::new("jitter");
+            event_cluster(4)
+                .with_seed(seed)
+                .with_compute(ComputeModel::default().with_base_s(1e-6).with_jitter(0.5))
+                .run(3, |_| Toy { dim: 32 }, &mut ring, &mut metrics)
+                .unwrap()
+        };
+        let a = run_with(7);
+        let b = run_with(7);
+        assert_eq!(a, b, "same seed must replay byte-for-byte");
+        let c = run_with(8);
+        assert_ne!(
+            a.iter().map(|r| r.virtual_time_s.unwrap().to_bits()).collect::<Vec<_>>(),
+            c.iter().map(|r| r.virtual_time_s.unwrap().to_bits()).collect::<Vec<_>>(),
+            "a different seed must draw different jitter"
+        );
+    }
+
+    #[test]
+    fn cascade_reconfig_wait_is_measured_and_bounded() {
+        // 3 levels → 2 reconfiguration gates. A single-chunk step eats
+        // (almost) the whole 2 × ocs_reconfig_s wait; the measured wait
+        // must land in (0, 2 × reconfig].
+        let topo = FabricTopology::for_workers_with_depth(16, 3).unwrap();
+        let mut fabric = FabricAllReduce::exact(8, &topo, FabricMode::Remainder).unwrap();
+        let mut metrics = ClusterMetrics::new("cascade");
+        let cl = event_cluster(16);
+        let records = cl
+            .run(1, |_| Toy { dim: 256 }, &mut fabric, &mut metrics)
+            .unwrap();
+        let wait = records[0].virtual_reconfig_wait_s.unwrap();
+        let ceiling = 2.0 * cl.hw.ocs_reconfig_s;
+        assert!(
+            wait > 0.0 && wait <= ceiling,
+            "reconfig wait {wait} outside (0, {ceiling}]"
+        );
+        assert_eq!(records[0].stats.levels, 3);
+        // Flat collectives never wait on a gate.
+        let mut ring = RingAllReduce::new();
+        let mut metrics = ClusterMetrics::new("flat");
+        let records = event_cluster(4)
+            .run(1, |_| Toy { dim: 256 }, &mut ring, &mut metrics)
+            .unwrap();
+        assert_eq!(records[0].virtual_reconfig_wait_s, Some(0.0));
+    }
+
+    #[test]
+    fn deep_streams_hide_reconfig_behind_uploads() {
+        // With many chunks the gates only stall the stream's head;
+        // virtual step time must grow far slower than chunk count, and
+        // per-chunk measured wait must shrink as the stream deepens.
+        let step_time = |chunk_elems: usize| -> (f64, f64, u64) {
+            let topo = FabricTopology::for_workers_with_depth(8, 3).unwrap();
+            let mut fabric = FabricAllReduce::exact(8, &topo, FabricMode::Remainder).unwrap();
+            let mut metrics = ClusterMetrics::new("deep");
+            let r = event_cluster(8)
+                .with_chunk_elems(chunk_elems)
+                .run(1, |_| Toy { dim: 4096 }, &mut fabric, &mut metrics)
+                .unwrap();
+            (
+                r[0].virtual_time_s.unwrap(),
+                r[0].virtual_reconfig_wait_s.unwrap(),
+                r[0].stats.chunks,
+            )
+        };
+        let (mono_t, mono_wait, mono_chunks) = step_time(4096);
+        let (piped_t, piped_wait, piped_chunks) = step_time(256);
+        assert_eq!(mono_chunks, 1);
+        assert_eq!(piped_chunks, 16);
+        // Only the stream's head pays the reconfiguration wait: 16
+        // chunks wait roughly what 1 chunk waits, not 16x it.
+        assert!(
+            piped_wait < 1.5 * mono_wait,
+            "gate wait must not scale with chunk count: {piped_wait} vs {mono_wait}"
+        );
+        // And 16x more chunks must cost nowhere near 16x the step time.
+        assert!(
+            piped_t < 8.0 * mono_t,
+            "streaming must pipeline hops: {piped_t} vs {mono_t}"
+        );
+    }
+}

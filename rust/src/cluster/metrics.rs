@@ -16,6 +16,9 @@ pub struct ClusterMetrics {
     chunks: u64,
     overlap_sum: f64,
     observed_wire_bytes: u64,
+    virtual_time_s: f64,
+    virtual_reconfig_wait_s: f64,
+    virtual_steps: usize,
 }
 
 impl ClusterMetrics {
@@ -31,6 +34,9 @@ impl ClusterMetrics {
             chunks: 0,
             overlap_sum: 0.0,
             observed_wire_bytes: 0,
+            virtual_time_s: 0.0,
+            virtual_reconfig_wait_s: 0.0,
+            virtual_steps: 0,
         }
     }
 
@@ -57,6 +63,38 @@ impl ClusterMetrics {
     /// legacy f32 wire it exposes the 4 B/element mismatch.
     pub fn total_observed_wire_bytes(&self) -> u64 {
         self.observed_wire_bytes
+    }
+
+    /// Record one step of the event backend's virtual clock: the step's
+    /// end-to-end virtual duration and the reconfiguration-gate wait its
+    /// chunks absorbed. The threaded backend never calls this, so
+    /// [`Self::total_virtual_time_s`] stays 0.0 there.
+    pub fn record_virtual(&mut self, step_s: f64, reconfig_wait_s: f64) {
+        self.virtual_time_s += step_s;
+        self.virtual_reconfig_wait_s += reconfig_wait_s;
+        self.virtual_steps += 1;
+    }
+
+    /// Total virtual seconds the event backend's clock advanced across
+    /// all steps (0.0 on the threaded backend).
+    pub fn total_virtual_time_s(&self) -> f64 {
+        self.virtual_time_s
+    }
+
+    /// Total virtual seconds chunks spent waiting on OCS reconfiguration
+    /// gates (0.0 on the threaded backend and on flat collectives).
+    pub fn total_virtual_reconfig_wait_s(&self) -> f64 {
+        self.virtual_reconfig_wait_s
+    }
+
+    /// Mean virtual step time across the steps the event backend ran
+    /// (0.0 when no virtual step was recorded — zero-step-safe like
+    /// every mean here).
+    pub fn mean_virtual_step_s(&self) -> f64 {
+        if self.virtual_steps == 0 {
+            return 0.0;
+        }
+        self.virtual_time_s / self.virtual_steps as f64
     }
 
     pub fn steps(&self) -> usize {
@@ -142,6 +180,12 @@ impl ClusterMetrics {
                 "observed_wire_bytes_per_server",
                 Json::Num(self.observed_wire_bytes as f64),
             ),
+            ("virtual_time_s", Json::Num(self.virtual_time_s)),
+            (
+                "virtual_reconfig_wait_s",
+                Json::Num(self.virtual_reconfig_wait_s),
+            ),
+            ("mean_virtual_step_s", Json::Num(self.mean_virtual_step_s())),
         ])
     }
 }
@@ -210,6 +254,22 @@ mod tests {
             j.get("observed_wire_bytes_per_server").as_usize(),
             Some(5020)
         );
+    }
+
+    #[test]
+    fn virtual_time_accumulates_and_means_stay_zero_step_safe() {
+        let mut m = ClusterMetrics::new("virtual");
+        // Threaded-style run: no virtual records at all.
+        assert_eq!(m.total_virtual_time_s(), 0.0);
+        assert_eq!(m.mean_virtual_step_s(), 0.0);
+        m.record_virtual(2e-5, 1e-5);
+        m.record_virtual(4e-5, 0.0);
+        assert!((m.total_virtual_time_s() - 6e-5).abs() < 1e-18);
+        assert!((m.total_virtual_reconfig_wait_s() - 1e-5).abs() < 1e-18);
+        assert!((m.mean_virtual_step_s() - 3e-5).abs() < 1e-18);
+        let j = m.to_json();
+        assert!((j.get("virtual_time_s").as_f64().unwrap() - 6e-5).abs() < 1e-18);
+        assert!((j.get("mean_virtual_step_s").as_f64().unwrap() - 3e-5).abs() < 1e-18);
     }
 
     #[test]

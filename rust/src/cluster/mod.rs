@@ -1,5 +1,6 @@
-//! Cluster simulator: N worker threads + a leader, streaming gradients
-//! chunk-by-chunk through a pluggable chunked collective.
+//! Cluster simulator: N workers + a leader, streaming gradients
+//! chunk-by-chunk through a pluggable chunked collective, behind a
+//! pluggable **backend**.
 //!
 //! The workers model the paper's servers: each owns a data shard,
 //! computes local gradients (either synthetic or by executing a PJRT
@@ -7,20 +8,27 @@
 //! all-reduce. The leader owns the collective (ring or OptINC switch),
 //! the metrics, and the modeled-time accounting.
 //!
+//! **Two backends, one protocol.** [`Backend::Threaded`]
+//! ([`threaded`]) is the fidelity oracle: one OS thread per worker,
+//! real mpsc channels, a wall-clock watchdog — gradient *computation*
+//! runs genuinely parallel while the collective itself stays
+//! single-threaded (the paper's switch is one physical device).
+//! [`Backend::Event`] ([`event`]) replays the exact same wire protocol
+//! sequentially against a **virtual clock** that advances per chunk
+//! hop, so one process simulates thousands of servers × multi-level
+//! fabrics, with deterministic straggler/fault injection in virtual
+//! time. The two backends are pinned bit-exact on averaged gradients
+//! and equal on every byte/chunk/sync count by the property matrix in
+//! `rust/tests/backend_conformance.rs`.
+//!
 //! **Double-buffered pipeline.** Per step every worker splits its
 //! gradient into `chunk_elems`-sized chunks and streams them to the
 //! leader; the leader reduces chunk k through the
 //! [`ChunkedAllReduce`](crate::collectives::engine::ChunkedAllReduce)
 //! engine as soon as all N copies have arrived — while chunks k+1, k+2,
 //! … are still in flight — and broadcasts each averaged chunk as a
-//! shared `Arc<[f32]>` (one allocation per chunk, N refcount bumps; the
-//! leader never clones the average per worker). Every spent upload
-//! buffer rides the broadcast back to its worker's
-//! [`BufferPool`](crate::collectives::engine::BufferPool), so after the
-//! first step the upload path allocates nothing — the shared broadcast
-//! Arc is the step's only per-chunk allocation.
-//! `CollectiveStats::overlap_fraction` records how much of the
-//! return leg the schedule hid, and
+//! shared allocation. `CollectiveStats::overlap_fraction` records how
+//! much of the return leg the schedule hid, and
 //! [`CollectiveStats::modeled_step_time_s`] turns that into the modeled
 //! pipelined step time.
 //!
@@ -32,54 +40,35 @@
 //! scale probe (its local max |g|), the leader combines the probes and
 //! acks the agreed block scale, the worker quantizes **at the edge**,
 //! bit-packs the B-bit words, and uploads the packed chunk; the leader
-//! reduces purely in the word domain and broadcasts the packed average
-//! as one shared `Arc<[u8]>` + scale, which workers unpack and
-//! dequantize. At 8 bits this moves 1 B/element across the channels —
-//! matching `CollectiveStats::bytes_sent_per_server` — where the old
-//! float wire physically moved 4×. The leader counts the bytes it
-//! actually sees per worker ([`StepRecord::observed_wire_bytes_per_server`])
-//! so tests can assert observed == accounted. [`Cluster::with_f32_wire`]
-//! forces the legacy float streaming for comparison
-//! (`pipeline --wire f32`).
+//! reduces purely in the word domain and broadcasts the packed average.
+//! The leader counts the bytes it actually sees per worker
+//! ([`StepRecord::observed_wire_bytes_per_server`]) so tests can assert
+//! observed == accounted. [`Cluster::with_f32_wire`] forces the legacy
+//! float streaming for comparison (`pipeline --wire f32`).
 //!
-//! Threads communicate over std mpsc channels; the design intentionally
-//! keeps the collective itself single-threaded (the paper's switch is
-//! one physical device) while gradient *computation* runs genuinely
-//! parallel.
-//!
-//! **Fault containment.** The leader receives with a watchdog timeout
-//! ([`Cluster::watchdog`]): a worker that panics, stalls, or drops its
-//! channel mid-step surfaces as a clean `Err` — never a deadlock — and
-//! the shutdown path closes the leader→worker channels so surviving
-//! threads exit on their own. The collective handed in stays reusable
-//! after a failed run (its next `begin` resets the aborted session), so
-//! no [`BufferPool`] state is poisoned. The fault-injection suite in
-//! `rust/tests/integration.rs` exercises both fault shapes against the
-//! ring and fabric collectives.
-//!
-//! The collective handed to [`Cluster::run`] can carry a freshly
-//! hardware-aware-trained switch ONN
-//! ([`OptIncAllReduce::trained`](crate::collectives::optinc::OptIncAllReduce::trained)
-//! — no `.otsr` artifact needed): `optinc-repro pipeline --collective
-//! optinc-trained` streams real gradients through a network produced by
-//! `onn::train` seconds earlier.
+//! **Fault containment.** On the threaded backend the leader receives
+//! with a watchdog timeout ([`Cluster::watchdog`]): a worker that
+//! panics, stalls, or drops its channel mid-step surfaces as a clean
+//! `Err` — never a deadlock. On the event backend the same watchdog is
+//! reinterpreted as **virtual seconds**: a panicking workload goes
+//! silent, the step can never complete, and the watchdog fires at a
+//! deterministic virtual deadline — no wall-clock timing in the
+//! fault-injection tests. Either way the collective handed in stays
+//! reusable after a failed run (its next `begin` resets the aborted
+//! session).
 
+pub mod event;
 pub mod metrics;
+pub mod threaded;
 
-use std::sync::mpsc::{self, RecvTimeoutError};
-use std::sync::Arc;
-use std::thread;
 use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::collectives::engine::{BufferPool, ChunkedAllReduce, ShardChunk};
-use crate::collectives::wire::{
-    pack_quantized_into, packed_len, unpack_dequantize_into, WireAvg, WireChunk, WireFormat,
-};
+use crate::collectives::engine::ChunkedAllReduce;
 use crate::collectives::CollectiveStats;
 use crate::config::HardwareModel;
-use crate::quant::GlobalQuantizer;
+pub use event::ComputeModel;
 pub use metrics::ClusterMetrics;
 
 /// Default streaming grain: small enough to pipeline ResNet-scale
@@ -90,7 +79,8 @@ pub const DEFAULT_CHUNK_ELEMS: usize = 65_536;
 /// Default leader watchdog: the longest the leader waits for any single
 /// worker message before declaring the step dead. Generous enough for
 /// real workloads; fault-injection tests shrink it via
-/// [`Cluster::with_watchdog`].
+/// [`Cluster::with_watchdog`]. Wall-clock on the threaded backend,
+/// virtual seconds on the event backend.
 pub const DEFAULT_WATCHDOG: Duration = Duration::from_secs(60);
 
 /// A gradient-producing workload executed by each worker per step.
@@ -102,66 +92,37 @@ pub trait Workload: Send + 'static {
     fn apply(&mut self, step: usize, worker: usize, avg: &[f32]);
 }
 
-/// Messages workers send the leader. Gradients travel as f32 chunks on
-/// the legacy float wire, or as scale probes + packed wire chunks on
-/// the packed wire; the first message of a worker's step carries its
-/// loss and the gradient's total length.
-enum ToLeader {
-    Chunk {
-        worker: usize,
-        offset: usize,
-        /// Total gradient length this step (same in every chunk).
-        total: usize,
-        data: Vec<f32>,
-        /// Present on the first chunk of a worker's step only.
-        loss: Option<f64>,
-    },
-    /// Packed wire: one chunk's local max |g| — the 4-byte upload half
-    /// of the block-scale exchange.
-    Scale {
-        worker: usize,
-        offset: usize,
-        total: usize,
-        local_max: f32,
-        /// Present on the first probe of a worker's step only.
-        loss: Option<f64>,
-    },
-    /// Packed wire: one quantized, bit-packed chunk (sent after the
-    /// scale ack for its offset arrives).
-    Wire {
-        total: usize,
-        /// Present only on the empty-step protocol's lone chunk (the
-        /// loss otherwise rides the first scale probe).
-        loss: Option<f64>,
-        payload: WireChunk,
-    },
-    Done,
+/// Which execution engine drives the worker↔leader wire protocol.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Backend {
+    /// One OS thread per worker + a leader loop over real mpsc channels
+    /// with a wall-clock watchdog — the fidelity oracle.
+    #[default]
+    Threaded,
+    /// Single-threaded discrete-event simulation: the identical wire
+    /// protocol replayed against a virtual clock that advances per
+    /// chunk hop (upload serialization, per-level switch hops with OCS
+    /// reconfiguration gating, broadcast serialization). Scales to
+    /// thousands of servers in one process and makes fault/straggler
+    /// injection deterministic.
+    Event,
 }
 
-/// Messages the leader sends each worker. Averages are shared: one
-/// `Arc` allocation serves all workers. `recycle` returns a spent
-/// upload buffer to one worker's pool.
-enum ToWorker {
-    Avg {
-        offset: usize,
-        data: Arc<[f32]>,
-        recycle: Option<Vec<f32>>,
-    },
-    /// Packed wire: the agreed block scale for the chunk at `offset`
-    /// (the B-bit ack leg of the exchange).
-    Scale { offset: usize, scale: f32 },
-    /// Packed wire: the packed average + scale for one chunk.
-    WireAvg {
-        offset: usize,
-        avg: WireAvg,
-        recycle: Option<Vec<u8>>,
-    },
-    Stop,
+impl Backend {
+    /// Parse a `--backend` CLI value.
+    pub fn parse(s: &str) -> Result<Backend> {
+        match s {
+            "threaded" => Ok(Backend::Threaded),
+            "event" => Ok(Backend::Event),
+            other => anyhow::bail!("unknown backend '{other}' (threaded|event)"),
+        }
+    }
 }
 
 /// Step record: losses + collective stats + modeled time + the bytes
-/// the leader actually observed on the channels.
-#[derive(Clone, Debug)]
+/// the leader actually observed on the channels + (event backend only)
+/// the virtual clock's account of the step.
+#[derive(Clone, Debug, PartialEq)]
 pub struct StepRecord {
     pub step: usize,
     pub mean_loss: f64,
@@ -173,9 +134,20 @@ pub struct StepRecord {
     /// stats.sync_bytes_per_server`; on the legacy f32 wire it exposes
     /// the 4 B/element mismatch the packed transport closes.
     pub observed_wire_bytes_per_server: u64,
+    /// Virtual seconds this step took end to end (compute + streamed
+    /// collective) on the event backend; `None` on the threaded
+    /// backend, which has no virtual clock.
+    pub virtual_time_s: Option<f64>,
+    /// Virtual seconds chunks spent waiting on per-level OCS
+    /// reconfiguration gates this step (event backend; `None` on
+    /// threaded). The stream hides most of this wait behind later chunk
+    /// uploads — compare with the modeled
+    /// [`CollectiveStats::exposed_reconfig_s`].
+    pub virtual_reconfig_wait_s: Option<f64>,
 }
 
 /// The cluster driver.
+#[derive(Clone, Debug)]
 pub struct Cluster {
     pub workers: usize,
     pub hw: HardwareModel,
@@ -183,16 +155,28 @@ pub struct Cluster {
     pub chunk_elems: usize,
     /// Leader watchdog: a worker that panics, stalls, or drops its
     /// channel mid-step surfaces as a clean `Err` within this bound
-    /// instead of deadlocking the pipeline.
+    /// instead of deadlocking the pipeline. Wall-clock on the threaded
+    /// backend; **virtual seconds** on the event backend, where the
+    /// deadline is deterministic.
     pub watchdog: Duration,
     /// Force the legacy f32 wire even for packed-native collectives
     /// (`pipeline --wire f32` — the before/after comparison).
     pub force_f32_wire: bool,
+    /// Execution engine (threaded oracle or discrete-event simulation).
+    pub backend: Backend,
+    /// Replay seed: drives the event backend's compute-jitter streams,
+    /// so any run — including a conformance failure — replays
+    /// byte-for-byte from this one value.
+    pub seed: u64,
+    /// Virtual compute-time model (event backend only): per-step
+    /// compute floor, per-element cost, log-normal jitter, and
+    /// deterministic per-worker straggler factors.
+    pub compute: ComputeModel,
 }
 
 /// Chunks a `total`-element gradient splits into at grain `chunk`
 /// (at least one, so empty gradients still complete the step protocol).
-fn chunk_count(total: usize, chunk: usize) -> usize {
+pub(crate) fn chunk_count(total: usize, chunk: usize) -> usize {
     if total == 0 {
         1
     } else {
@@ -208,6 +192,9 @@ impl Cluster {
             chunk_elems: DEFAULT_CHUNK_ELEMS,
             watchdog: DEFAULT_WATCHDOG,
             force_f32_wire: false,
+            backend: Backend::default(),
+            seed: 0,
+            compute: ComputeModel::default(),
         }
     }
 
@@ -219,7 +206,8 @@ impl Cluster {
     }
 
     /// Builder: override the leader watchdog (fault-injection tests use
-    /// a short one so dead workers surface in milliseconds).
+    /// a short one so dead workers surface in milliseconds — wall-clock
+    /// milliseconds on the threaded backend, virtual on the event one).
     pub fn with_watchdog(mut self, watchdog: Duration) -> Cluster {
         self.watchdog = watchdog;
         self
@@ -234,11 +222,35 @@ impl Cluster {
         self
     }
 
+    /// Builder: select the execution backend.
+    pub fn with_backend(mut self, backend: Backend) -> Cluster {
+        self.backend = backend;
+        self
+    }
+
+    /// Builder: set the replay seed (event-backend jitter streams).
+    pub fn with_seed(mut self, seed: u64) -> Cluster {
+        self.seed = seed;
+        self
+    }
+
+    /// Builder: set the virtual compute-time model (event backend).
+    pub fn with_compute(mut self, compute: ComputeModel) -> Cluster {
+        self.compute = compute;
+        self
+    }
+
     /// Run `steps` of synchronous data-parallel training through the
-    /// double-buffered streaming pipeline: each worker computes a
-    /// gradient (in parallel threads) and streams it in chunks, the
+    /// double-buffered streaming pipeline on the selected backend: each
+    /// worker computes a gradient and streams it in chunks, the
     /// collective averages chunk k while chunk k+1 uploads, every worker
     /// applies the assembled average. Returns per-step records.
+    ///
+    /// Both backends run the identical wire protocol, so for the same
+    /// workload they produce bit-identical applied averages, equal
+    /// stats, and equal observed byte counts (pinned by
+    /// `tests/backend_conformance.rs`); the event backend additionally
+    /// fills [`StepRecord::virtual_time_s`].
     pub fn run<W, F>(
         &self,
         steps: usize,
@@ -250,242 +262,10 @@ impl Cluster {
         W: Workload,
         F: Fn(usize) -> W,
     {
-        let n = self.workers;
-        anyhow::ensure!(n > 0, "cluster needs at least one worker");
-        let chunk = self.chunk_elems.max(1);
-
-        // The wire the channels will carry: the collective's native
-        // format, unless the driver forces the legacy float streaming.
-        let wire = if self.force_f32_wire {
-            WireFormat::F32
-        } else {
-            collective.wire_format()
-        };
-        // Modeled sync-ack size on the packed wire: the B-bit scale ack
-        // (the probe itself is one f32 = 4 bytes).
-        let ack_bytes = match wire {
-            WireFormat::Packed { bits } => (bits as u64).div_ceil(8),
-            WireFormat::F32 => 0,
-        };
-
-        let (to_leader_tx, to_leader_rx) = mpsc::channel::<ToLeader>();
-        let mut to_worker_txs = Vec::with_capacity(n);
-        let mut handles = Vec::with_capacity(n);
-
-        for w in 0..n {
-            let leader_tx = to_leader_tx.clone();
-            let (tx, rx) = mpsc::channel::<ToWorker>();
-            to_worker_txs.push(tx);
-            let mut workload = make_workload(w);
-            handles.push(thread::spawn(move || match wire {
-                WireFormat::F32 => {
-                    worker_loop_f32(steps, w, chunk, &mut workload, &leader_tx, &rx)
-                }
-                WireFormat::Packed { bits } => {
-                    worker_loop_packed(steps, w, chunk, bits, &mut workload, &leader_tx, &rx)
-                }
-            }));
-        }
-        drop(to_leader_tx);
-
-        let mut records = Vec::with_capacity(steps);
-        let mut failure: Option<anyhow::Error> = None;
-        'steps: for step in 0..steps {
-            let mut losses = 0.0;
-            let mut total: Option<usize> = None;
-            let mut nchunks = 0usize;
-            let mut reduced = 0usize;
-            // chunk index -> worker chunks gathered so far
-            let mut pending: Vec<Vec<ShardChunk>> = Vec::new();
-            // Packed wire: per-chunk scale probes and packed chunks.
-            let mut probes: Vec<Vec<f32>> = Vec::new();
-            let mut wire_pending: Vec<Vec<WireChunk>> = Vec::new();
-            // Bytes the leader observes crossing each worker's channels
-            // this step (payload and sync legs separately).
-            let mut observed_payload = vec![0u64; n];
-            let mut observed_sync = vec![0u64; n];
-            while total.is_none() || reduced < nchunks {
-                let msg = match to_leader_rx.recv_timeout(self.watchdog) {
-                    Ok(m) => m,
-                    Err(RecvTimeoutError::Timeout) => {
-                        failure = Some(anyhow::anyhow!(
-                            "step {step}: no worker message within the {:?} watchdog \
-                             (a worker stalled, panicked, or deadlocked)",
-                            self.watchdog
-                        ));
-                        break 'steps;
-                    }
-                    Err(RecvTimeoutError::Disconnected) => {
-                        failure = Some(anyhow::anyhow!(
-                            "step {step}: every worker channel dropped mid-step \
-                             (worker threads died)"
-                        ));
-                        break 'steps;
-                    }
-                };
-                // Open the step's collective on the first sized message
-                // and fold its loss in, whichever wire it rides.
-                let (t, loss) = match &msg {
-                    ToLeader::Chunk { total, loss, .. } => (Some(*total), *loss),
-                    ToLeader::Scale { total, loss, .. } => (Some(*total), *loss),
-                    ToLeader::Wire { total, loss, .. } => (Some(*total), *loss),
-                    ToLeader::Done => (None, None),
-                };
-                if let Some(t) = t {
-                    if total.is_none() {
-                        total = Some(t);
-                        nchunks = chunk_count(t, chunk);
-                        // Only the active wire's gather lanes are
-                        // allocated (workers never mix formats).
-                        match wire {
-                            WireFormat::F32 => {
-                                pending =
-                                    (0..nchunks).map(|_| Vec::with_capacity(n)).collect();
-                            }
-                            WireFormat::Packed { .. } => {
-                                probes =
-                                    (0..nchunks).map(|_| Vec::with_capacity(n)).collect();
-                                wire_pending =
-                                    (0..nchunks).map(|_| Vec::with_capacity(n)).collect();
-                            }
-                        }
-                        collective.begin(n, t);
-                    }
-                    assert_eq!(
-                        total,
-                        Some(t),
-                        "workers disagree on the gradient size this step"
-                    );
-                    if let Some(l) = loss {
-                        losses += l;
-                    }
-                }
-                match msg {
-                    ToLeader::Chunk {
-                        worker,
-                        offset,
-                        data,
-                        ..
-                    } => {
-                        observed_payload[worker] += data.len() as u64 * 4;
-                        let idx = offset / chunk;
-                        let slot = &mut pending[idx];
-                        slot.push(ShardChunk {
-                            worker,
-                            offset,
-                            data,
-                        });
-                        if slot.len() == n {
-                            // All N copies of this chunk are in: reduce it
-                            // now, while later chunks are still uploading.
-                            // Slots fill in mpsc arrival order, so restore
-                            // worker order first — order-sensitive
-                            // collectives (per-level grouping in basic
-                            // fabrics, trained ONNs) must see the same
-                            // worker→port assignment as the in-memory
-                            // driver, run to run.
-                            slot.sort_by_key(|c| c.worker);
-                            // (Empty gradients complete the step protocol
-                            // without a reduce — no sync, no traversal.)
-                            if total != Some(0) {
-                                collective.reduce_chunk(slot);
-                            }
-                            broadcast_avg(&to_worker_txs, offset, slot);
-                            reduced += 1;
-                        }
-                    }
-                    ToLeader::Scale {
-                        worker,
-                        offset,
-                        local_max,
-                        ..
-                    } => {
-                        observed_sync[worker] += 4;
-                        let idx = offset / chunk;
-                        let slot = &mut probes[idx];
-                        slot.push(local_max);
-                        if slot.len() == n {
-                            // The combine half of the one-float exchange:
-                            // ack the agreed block scale to every worker.
-                            let scale = GlobalQuantizer::combine_scale_probes(slot.drain(..));
-                            for (wk, tx) in to_worker_txs.iter().enumerate() {
-                                observed_sync[wk] += ack_bytes;
-                                let _ = tx.send(ToWorker::Scale { offset, scale });
-                            }
-                        }
-                    }
-                    ToLeader::Wire { payload, .. } => {
-                        observed_payload[payload.worker] += payload.words.len() as u64;
-                        let idx = payload.offset / chunk;
-                        let slot = &mut wire_pending[idx];
-                        slot.push(payload);
-                        if slot.len() == n {
-                            // Restore worker order (see the f32 arm) so
-                            // order-sensitive collectives stay
-                            // deterministic and match the driver.
-                            slot.sort_by_key(|c| c.worker);
-                            // Word-domain reduce: the leader never
-                            // round-trips the payload through floats.
-                            let avg = if slot[0].elements == 0 {
-                                WireAvg::empty()
-                            } else {
-                                collective.reduce_wire_chunk(slot)
-                            };
-                            broadcast_wire_avg(&to_worker_txs, avg, slot);
-                            reduced += 1;
-                        }
-                    }
-                    ToLeader::Done => {}
-                }
-            }
-            let stats = collective.finish();
-            let comm_s = stats.modeled_step_time_s(&self.hw);
-            let observed = observed_payload
-                .iter()
-                .zip(&observed_sync)
-                .map(|(p, s)| p + s)
-                .max()
-                .unwrap_or(0);
-            metrics.record(&stats, comm_s);
-            metrics.record_observed_wire(observed);
-            records.push(StepRecord {
-                step,
-                mean_loss: losses / n as f64,
-                stats,
-                modeled_comm_s: comm_s,
-                observed_wire_bytes_per_server: observed,
-            });
-        }
-        // Shutdown path shared by success and failure: closing the
-        // leader→worker channels unblocks any worker still waiting on an
-        // averaged chunk, so surviving threads exit instead of
-        // deadlocking. The collective stays reusable either way — its
-        // next `begin` resets the open session, so no pooled buffer or
-        // session state is poisoned by an aborted step.
-        for tx in &to_worker_txs {
-            let _ = tx.send(ToWorker::Stop);
-        }
-        drop(to_worker_txs);
-        let mut panicked = 0usize;
-        for h in handles {
-            // After a failure, join only threads that already exited
-            // (harvesting their panics); a thread still sitting in a long
-            // stall is detached — it exits on its own once it observes
-            // the closed channels, and joining it here could outwait the
-            // watchdog guarantee.
-            if (failure.is_none() || h.is_finished()) && h.join().is_err() {
-                panicked += 1;
-            }
-        }
-        match failure {
-            Some(e) if panicked > 0 => {
-                Err(e.context(format!("{panicked} worker thread(s) panicked")))
-            }
-            Some(e) => Err(e),
-            None if panicked > 0 => Err(anyhow::anyhow!(
-                "{panicked} worker thread(s) panicked during shutdown"
-            )),
-            None => Ok(records),
+        anyhow::ensure!(self.workers > 0, "cluster needs at least one worker");
+        match self.backend {
+            Backend::Threaded => threaded::run(self, steps, make_workload, collective, metrics),
+            Backend::Event => event::run(self, steps, make_workload, collective, metrics),
         }
     }
 
@@ -504,224 +284,10 @@ impl Cluster {
         F: Fn(usize) -> W,
     {
         let mono = Cluster {
-            workers: self.workers,
-            hw: self.hw,
             chunk_elems: usize::MAX,
-            watchdog: self.watchdog,
-            force_f32_wire: self.force_f32_wire,
+            ..self.clone()
         };
         mono.run(steps, make_workload, collective, metrics)
-    }
-}
-
-/// The legacy float wire: stream raw f32 chunks, receive shared f32
-/// averages. This is the worker half of the original pipeline, still
-/// used by f32-native collectives (ring, two-tree) and by the
-/// `--wire f32` override.
-fn worker_loop_f32<W: Workload>(
-    steps: usize,
-    w: usize,
-    chunk: usize,
-    workload: &mut W,
-    leader_tx: &mpsc::Sender<ToLeader>,
-    rx: &mpsc::Receiver<ToWorker>,
-) {
-    let mut pool = BufferPool::<f32>::new();
-    let mut avg = Vec::<f32>::new();
-    for step in 0..steps {
-        let (grad, loss) = workload.grad(step, w);
-        let total = grad.len();
-        let nchunks = chunk_count(total, chunk);
-        // Stream the gradient: chunk k+1 departs while the
-        // leader is still reducing chunk k (the overlap).
-        let mut sent = 0usize;
-        for k in 0..nchunks {
-            let hi = sent.saturating_add(chunk).min(total);
-            let mut data = pool.take(hi - sent);
-            data.copy_from_slice(&grad[sent..hi]);
-            let msg = ToLeader::Chunk {
-                worker: w,
-                offset: sent,
-                total,
-                data,
-                loss: (k == 0).then_some(loss),
-            };
-            if leader_tx.send(msg).is_err() {
-                return;
-            }
-            sent = hi;
-        }
-        // Drain averaged chunks (they start arriving while
-        // later chunks may still be uploading elsewhere).
-        avg.clear();
-        avg.resize(total, 0.0);
-        let mut got = 0usize;
-        while got < nchunks {
-            match rx.recv() {
-                Ok(ToWorker::Avg {
-                    offset,
-                    data,
-                    recycle,
-                }) => {
-                    avg[offset..offset + data.len()].copy_from_slice(&data);
-                    if let Some(buf) = recycle {
-                        pool.put(buf);
-                    }
-                    got += 1;
-                }
-                _ => return,
-            }
-        }
-        workload.apply(step, w, &avg);
-    }
-    let _ = leader_tx.send(ToLeader::Done);
-}
-
-/// The packed wire: per chunk, probe the block scale, quantize at the
-/// edge on the agreed scale, bit-pack, upload packed bytes; unpack and
-/// dequantize the shared packed broadcast. The worker is the paper's
-/// transmitter — nothing but B-bit words (plus the one-float exchange)
-/// ever touches the channel.
-fn worker_loop_packed<W: Workload>(
-    steps: usize,
-    w: usize,
-    chunk: usize,
-    bits: u32,
-    workload: &mut W,
-    leader_tx: &mpsc::Sender<ToLeader>,
-    rx: &mpsc::Receiver<ToWorker>,
-) {
-    let quantizer = GlobalQuantizer::new(bits);
-    let mut byte_pool = BufferPool::<u8>::new();
-    let mut avg = Vec::<f32>::new();
-    for step in 0..steps {
-        let (grad, loss) = workload.grad(step, w);
-        let total = grad.len();
-        if total == 0 {
-            // Empty-step protocol: one empty wire chunk completes the
-            // step — nothing to quantize, no scale exchange.
-            let msg = ToLeader::Wire {
-                total,
-                loss: Some(loss),
-                payload: WireChunk {
-                    worker: w,
-                    offset: 0,
-                    words: byte_pool.take_empty(0),
-                    scale: 0.0,
-                    elements: 0,
-                },
-            };
-            if leader_tx.send(msg).is_err() {
-                return;
-            }
-            match rx.recv() {
-                Ok(ToWorker::WireAvg { recycle, .. }) => {
-                    if let Some(buf) = recycle {
-                        byte_pool.put(buf);
-                    }
-                }
-                _ => return,
-            }
-            workload.apply(step, w, &[]);
-            continue;
-        }
-        let nchunks = chunk_count(total, chunk);
-        // 1. Ship every chunk's 4-byte scale probe up front (the upload
-        //    half of the one-float exchange); probes pipeline freely.
-        for k in 0..nchunks {
-            let lo = k.saturating_mul(chunk).min(total);
-            let hi = lo.saturating_add(chunk).min(total);
-            let msg = ToLeader::Scale {
-                worker: w,
-                offset: lo,
-                total,
-                local_max: GlobalQuantizer::local_abs_max(&grad[lo..hi]),
-                loss: (k == 0).then_some(loss),
-            };
-            if leader_tx.send(msg).is_err() {
-                return;
-            }
-        }
-        // 2. Quantize+pack+upload each chunk the moment its agreed
-        //    scale ack arrives; assemble the averaged gradient from
-        //    each packed broadcast. Replies interleave in any order.
-        avg.clear();
-        avg.resize(total, 0.0);
-        let mut got = 0usize;
-        while got < nchunks {
-            match rx.recv() {
-                Ok(ToWorker::Scale { offset, scale }) => {
-                    let hi = offset.saturating_add(chunk).min(total);
-                    let mut words = byte_pool.take_empty(packed_len(hi - offset, bits));
-                    pack_quantized_into(&grad[offset..hi], &quantizer, scale, &mut words);
-                    let msg = ToLeader::Wire {
-                        total,
-                        loss: None,
-                        payload: WireChunk {
-                            worker: w,
-                            offset,
-                            words,
-                            scale,
-                            elements: hi - offset,
-                        },
-                    };
-                    if leader_tx.send(msg).is_err() {
-                        return;
-                    }
-                }
-                Ok(ToWorker::WireAvg {
-                    offset,
-                    avg: wavg,
-                    recycle,
-                }) => {
-                    unpack_dequantize_into(
-                        &wavg.words,
-                        &quantizer,
-                        wavg.scale,
-                        &mut avg[offset..offset + wavg.elements],
-                    );
-                    if let Some(buf) = recycle {
-                        byte_pool.put(buf);
-                    }
-                    got += 1;
-                }
-                _ => return,
-            }
-        }
-        workload.apply(step, w, &avg);
-    }
-    let _ = leader_tx.send(ToLeader::Done);
-}
-
-/// Broadcast one reduced chunk: all entries of `slot` hold the average,
-/// so one shared `Arc<[f32]>` (the step's single broadcast allocation)
-/// serves every worker, and all N spent upload buffers ride the
-/// messages back — one per worker — so every worker's pool stays warm.
-fn broadcast_avg(txs: &[mpsc::Sender<ToWorker>], offset: usize, slot: &mut Vec<ShardChunk>) {
-    assert!(!slot.is_empty(), "broadcast of an empty chunk set");
-    let avg: Arc<[f32]> = Arc::from(slot[0].data.as_slice());
-    for (tx, ch) in txs.iter().zip(slot.drain(..)) {
-        tx.send(ToWorker::Avg {
-            offset,
-            data: avg.clone(),
-            recycle: Some(ch.data),
-        })
-        .ok();
-    }
-}
-
-/// Packed-wire broadcast: one shared `Arc<[u8]>` (inside [`WireAvg`])
-/// serves every worker, and each spent packed upload buffer rides a
-/// message back to a worker's byte pool.
-fn broadcast_wire_avg(txs: &[mpsc::Sender<ToWorker>], avg: WireAvg, slot: &mut Vec<WireChunk>) {
-    assert!(!slot.is_empty(), "broadcast of an empty wire chunk set");
-    for (tx, wc) in txs.iter().zip(slot.drain(..)) {
-        tx.send(ToWorker::WireAvg {
-            offset: wc.offset,
-            avg: avg.clone(),
-            recycle: Some(wc.words),
-        })
-        .ok();
     }
 }
 
@@ -729,6 +295,7 @@ fn broadcast_wire_avg(txs: &[mpsc::Sender<ToWorker>], avg: WireAvg, slot: &mut V
 mod tests {
     use super::*;
     use crate::collectives::ring::RingAllReduce;
+    use std::sync::mpsc;
 
     /// Toy workload: gradient = worker-specific constant; state tracks the
     /// applied averages so we can verify synchronization.
@@ -750,44 +317,63 @@ mod tests {
 
     #[test]
     fn synchronous_dp_with_ring() {
-        let cluster = Cluster::new(4);
-        let mut ring = RingAllReduce::new();
-        let mut metrics = ClusterMetrics::new("test");
-        let records = cluster
-            .run(
-                3,
-                |_| Toy { state: 0.0, dim: 8 },
-                &mut ring,
-                &mut metrics,
-            )
-            .unwrap();
-        assert_eq!(records.len(), 3);
-        // step 0: grads 1,2,3,4 → mean loss 2.5; avg grad 2.5.
-        assert!((records[0].mean_loss - 2.5).abs() < 1e-9);
-        assert_eq!(records[0].stats.rounds, 6);
-        assert_eq!(metrics.steps(), 3);
-        assert!(metrics.total_bytes_per_server() > 0);
+        for backend in [Backend::Threaded, Backend::Event] {
+            let cluster = Cluster::new(4).with_backend(backend);
+            let mut ring = RingAllReduce::new();
+            let mut metrics = ClusterMetrics::new("test");
+            let records = cluster
+                .run(
+                    3,
+                    |_| Toy { state: 0.0, dim: 8 },
+                    &mut ring,
+                    &mut metrics,
+                )
+                .unwrap();
+            assert_eq!(records.len(), 3);
+            // step 0: grads 1,2,3,4 → mean loss 2.5; avg grad 2.5.
+            assert!((records[0].mean_loss - 2.5).abs() < 1e-9);
+            assert_eq!(records[0].stats.rounds, 6);
+            assert_eq!(metrics.steps(), 3);
+            assert!(metrics.total_bytes_per_server() > 0);
+            // Only the event backend keeps a virtual clock.
+            assert_eq!(
+                records[0].virtual_time_s.is_some(),
+                backend == Backend::Event
+            );
+        }
     }
 
     #[test]
     fn single_element_gradients() {
-        let cluster = Cluster::new(2);
-        let mut ring = RingAllReduce::new();
-        let mut metrics = ClusterMetrics::new("tiny");
-        let records = cluster
-            .run(1, |_| Toy { state: 0.0, dim: 1 }, &mut ring, &mut metrics)
-            .unwrap();
-        assert!((records[0].mean_loss - 1.5).abs() < 1e-9);
+        for backend in [Backend::Threaded, Backend::Event] {
+            let cluster = Cluster::new(2).with_backend(backend);
+            let mut ring = RingAllReduce::new();
+            let mut metrics = ClusterMetrics::new("tiny");
+            let records = cluster
+                .run(1, |_| Toy { state: 0.0, dim: 1 }, &mut ring, &mut metrics)
+                .unwrap();
+            assert!((records[0].mean_loss - 1.5).abs() < 1e-9);
+        }
     }
 
     #[test]
-    fn zero_workers_is_an_error() {
-        let cluster = Cluster::new(0);
-        let mut ring = RingAllReduce::new();
-        let mut metrics = ClusterMetrics::new("none");
-        let res = cluster.run(1, |_| Toy { state: 0.0, dim: 4 }, &mut ring, &mut metrics);
-        assert!(res.is_err(), "zero workers must be a clear Err");
-        assert!(res.unwrap_err().to_string().contains("at least one worker"));
+    fn zero_workers_is_an_error_on_both_backends() {
+        for backend in [Backend::Threaded, Backend::Event] {
+            let cluster = Cluster::new(0).with_backend(backend);
+            let mut ring = RingAllReduce::new();
+            let mut metrics = ClusterMetrics::new("none");
+            let res = cluster.run(1, |_| Toy { state: 0.0, dim: 4 }, &mut ring, &mut metrics);
+            assert!(res.is_err(), "zero workers must be a clear Err");
+            assert!(res.unwrap_err().to_string().contains("at least one worker"));
+        }
+    }
+
+    #[test]
+    fn backend_parses_cli_names() {
+        assert_eq!(Backend::parse("threaded").unwrap(), Backend::Threaded);
+        assert_eq!(Backend::parse("event").unwrap(), Backend::Event);
+        assert!(Backend::parse("gpu").is_err());
+        assert_eq!(Backend::default(), Backend::Threaded);
     }
 
     /// Workload that ships every applied average back to the test thread
@@ -811,63 +397,40 @@ mod tests {
     #[test]
     fn pipelined_chunks_reassemble_exactly() {
         // dim = 10, chunk = 3 → 4 chunks with a remainder; the applied
-        // average must equal the exact mean for every worker and step.
-        let (tx, rx) = mpsc::channel();
-        let cluster = Cluster::new(4).with_chunk_elems(3);
-        let mut ring = RingAllReduce::new();
-        let mut metrics = ClusterMetrics::new("probe");
-        let records = cluster
-            .run(
-                2,
-                move |_| Probe {
-                    dim: 10,
-                    tx: tx.clone(),
-                },
-                &mut ring,
-                &mut metrics,
-            )
-            .unwrap();
-        assert_eq!(records[0].stats.chunks, 4);
-        assert!((records[0].stats.overlap_fraction - 0.75).abs() < 1e-12);
-        let mut seen = 0;
-        while let Ok((step, worker, avg)) = rx.try_recv() {
-            // mean over workers of (w+1) + step + i = 2.5 + step + i.
-            for (i, &a) in avg.iter().enumerate() {
-                let want = 2.5 + step as f32 + i as f32;
-                assert!(
-                    (a - want).abs() < 1e-5,
-                    "step {step} worker {worker} elem {i}: {a} vs {want}"
-                );
+        // average must equal the exact mean for every worker and step,
+        // on both backends.
+        for backend in [Backend::Threaded, Backend::Event] {
+            let (tx, rx) = mpsc::channel();
+            let cluster = Cluster::new(4).with_chunk_elems(3).with_backend(backend);
+            let mut ring = RingAllReduce::new();
+            let mut metrics = ClusterMetrics::new("probe");
+            let records = cluster
+                .run(
+                    2,
+                    move |_| Probe {
+                        dim: 10,
+                        tx: tx.clone(),
+                    },
+                    &mut ring,
+                    &mut metrics,
+                )
+                .unwrap();
+            assert_eq!(records[0].stats.chunks, 4);
+            assert!((records[0].stats.overlap_fraction - 0.75).abs() < 1e-12);
+            let mut seen = 0;
+            while let Ok((step, worker, avg)) = rx.try_recv() {
+                // mean over workers of (w+1) + step + i = 2.5 + step + i.
+                for (i, &a) in avg.iter().enumerate() {
+                    let want = 2.5 + step as f32 + i as f32;
+                    assert!(
+                        (a - want).abs() < 1e-5,
+                        "step {step} worker {worker} elem {i}: {a} vs {want}"
+                    );
+                }
+                seen += 1;
             }
-            seen += 1;
+            assert_eq!(seen, 8, "4 workers × 2 steps applied averages");
         }
-        assert_eq!(seen, 8, "4 workers × 2 steps applied averages");
-    }
-
-    #[test]
-    fn broadcast_shares_one_allocation() {
-        // The satellite fix: the leader must not clone the averaged chunk
-        // once per worker — every Avg message shares one Arc allocation.
-        let (tx1, rx1) = mpsc::channel::<ToWorker>();
-        let (tx2, rx2) = mpsc::channel::<ToWorker>();
-        let mut slot = vec![
-            ShardChunk { worker: 0, offset: 0, data: vec![2.5f32; 4] },
-            ShardChunk { worker: 1, offset: 0, data: vec![2.5f32; 4] },
-        ];
-        broadcast_avg(&[tx1, tx2], 0, &mut slot);
-        let take = |m: ToWorker| match m {
-            ToWorker::Avg { data, recycle, .. } => (data, recycle),
-            _ => panic!("expected Avg"),
-        };
-        let (a, ra) = take(rx1.recv().unwrap());
-        let (b, rb) = take(rx2.recv().unwrap());
-        assert!(
-            Arc::ptr_eq(&a, &b),
-            "broadcast must share one allocation, not copy per worker"
-        );
-        assert_eq!(&a[..], &[2.5f32; 4]);
-        // Every worker gets one spent upload buffer back (pool stays warm).
-        assert!(ra.is_some() && rb.is_some());
     }
 
     #[test]

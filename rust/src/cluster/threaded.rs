@@ -1,0 +1,585 @@
+//! The threaded cluster backend — the fidelity oracle.
+//!
+//! One OS thread per worker plus a leader loop over std mpsc channels:
+//! gradient computation runs genuinely parallel, the collective itself
+//! stays single-threaded (the paper's switch is one physical device),
+//! and a wall-clock watchdog keeps faults from deadlocking the
+//! pipeline. The discrete-event backend ([`super::event`]) replays this
+//! exact wire protocol against a virtual clock; the conformance harness
+//! in `rust/tests/backend_conformance.rs` pins the two bit-exact.
+//!
+//! Memory discipline: the leader broadcasts each averaged chunk as one
+//! shared `Arc` (one allocation per chunk, N refcount bumps — never a
+//! per-worker clone), and every spent upload buffer rides the broadcast
+//! back to its worker's
+//! [`BufferPool`](crate::collectives::engine::BufferPool), so after the
+//! first step the upload path allocates nothing.
+
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::Arc;
+use std::thread;
+
+use anyhow::Result;
+
+use crate::collectives::engine::{BufferPool, ChunkedAllReduce, ShardChunk};
+use crate::collectives::wire::{
+    pack_quantized_into, packed_len, unpack_dequantize_into, WireAvg, WireChunk, WireFormat,
+};
+use crate::quant::GlobalQuantizer;
+
+use super::{chunk_count, Cluster, ClusterMetrics, StepRecord, Workload};
+
+/// Messages workers send the leader. Gradients travel as f32 chunks on
+/// the legacy float wire, or as scale probes + packed wire chunks on
+/// the packed wire; the first message of a worker's step carries its
+/// loss and the gradient's total length.
+enum ToLeader {
+    Chunk {
+        worker: usize,
+        offset: usize,
+        /// Total gradient length this step (same in every chunk).
+        total: usize,
+        data: Vec<f32>,
+        /// Present on the first chunk of a worker's step only.
+        loss: Option<f64>,
+    },
+    /// Packed wire: one chunk's local max |g| — the 4-byte upload half
+    /// of the block-scale exchange.
+    Scale {
+        worker: usize,
+        offset: usize,
+        total: usize,
+        local_max: f32,
+        /// Present on the first probe of a worker's step only.
+        loss: Option<f64>,
+    },
+    /// Packed wire: one quantized, bit-packed chunk (sent after the
+    /// scale ack for its offset arrives).
+    Wire {
+        total: usize,
+        /// Present only on the empty-step protocol's lone chunk (the
+        /// loss otherwise rides the first scale probe).
+        loss: Option<f64>,
+        payload: WireChunk,
+    },
+    Done,
+}
+
+/// Messages the leader sends each worker. Averages are shared: one
+/// `Arc` allocation serves all workers. `recycle` returns a spent
+/// upload buffer to one worker's pool.
+enum ToWorker {
+    Avg {
+        offset: usize,
+        data: Arc<[f32]>,
+        recycle: Option<Vec<f32>>,
+    },
+    /// Packed wire: the agreed block scale for the chunk at `offset`
+    /// (the B-bit ack leg of the exchange).
+    Scale { offset: usize, scale: f32 },
+    /// Packed wire: the packed average + scale for one chunk.
+    WireAvg {
+        offset: usize,
+        avg: WireAvg,
+        recycle: Option<Vec<u8>>,
+    },
+    Stop,
+}
+
+/// The threaded leader loop: spawn one thread per worker, gather and
+/// reduce chunks as they arrive, broadcast shared averages, contain
+/// faults behind the wall-clock watchdog. Caller ([`Cluster::run`])
+/// has already validated `workers > 0`.
+pub(super) fn run<W, F>(
+    cl: &Cluster,
+    steps: usize,
+    make_workload: F,
+    collective: &mut dyn ChunkedAllReduce,
+    metrics: &mut ClusterMetrics,
+) -> Result<Vec<StepRecord>>
+where
+    W: Workload,
+    F: Fn(usize) -> W,
+{
+    let n = cl.workers;
+    let chunk = cl.chunk_elems.max(1);
+
+    // The wire the channels will carry: the collective's native
+    // format, unless the driver forces the legacy float streaming.
+    let wire = if cl.force_f32_wire {
+        WireFormat::F32
+    } else {
+        collective.wire_format()
+    };
+    // Modeled sync-ack size on the packed wire: the B-bit scale ack
+    // (the probe itself is one f32 = 4 bytes).
+    let ack_bytes = match wire {
+        WireFormat::Packed { bits } => (bits as u64).div_ceil(8),
+        WireFormat::F32 => 0,
+    };
+
+    let (to_leader_tx, to_leader_rx) = mpsc::channel::<ToLeader>();
+    let mut to_worker_txs = Vec::with_capacity(n);
+    let mut handles = Vec::with_capacity(n);
+
+    for w in 0..n {
+        let leader_tx = to_leader_tx.clone();
+        let (tx, rx) = mpsc::channel::<ToWorker>();
+        to_worker_txs.push(tx);
+        let mut workload = make_workload(w);
+        handles.push(thread::spawn(move || match wire {
+            WireFormat::F32 => worker_loop_f32(steps, w, chunk, &mut workload, &leader_tx, &rx),
+            WireFormat::Packed { bits } => {
+                worker_loop_packed(steps, w, chunk, bits, &mut workload, &leader_tx, &rx)
+            }
+        }));
+    }
+    drop(to_leader_tx);
+
+    let mut records = Vec::with_capacity(steps);
+    let mut failure: Option<anyhow::Error> = None;
+    'steps: for step in 0..steps {
+        let mut losses = 0.0;
+        let mut total: Option<usize> = None;
+        let mut nchunks = 0usize;
+        let mut reduced = 0usize;
+        // chunk index -> worker chunks gathered so far
+        let mut pending: Vec<Vec<ShardChunk>> = Vec::new();
+        // Packed wire: per-chunk scale probes and packed chunks.
+        let mut probes: Vec<Vec<f32>> = Vec::new();
+        let mut wire_pending: Vec<Vec<WireChunk>> = Vec::new();
+        // Bytes the leader observes crossing each worker's channels
+        // this step (payload and sync legs separately).
+        let mut observed_payload = vec![0u64; n];
+        let mut observed_sync = vec![0u64; n];
+        while total.is_none() || reduced < nchunks {
+            let msg = match to_leader_rx.recv_timeout(cl.watchdog) {
+                Ok(m) => m,
+                Err(RecvTimeoutError::Timeout) => {
+                    failure = Some(anyhow::anyhow!(
+                        "step {step}: no worker message within the {:?} watchdog \
+                         (a worker stalled, panicked, or deadlocked)",
+                        cl.watchdog
+                    ));
+                    break 'steps;
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    failure = Some(anyhow::anyhow!(
+                        "step {step}: every worker channel dropped mid-step \
+                         (worker threads died)"
+                    ));
+                    break 'steps;
+                }
+            };
+            // Open the step's collective on the first sized message
+            // and fold its loss in, whichever wire it rides.
+            let (t, loss) = match &msg {
+                ToLeader::Chunk { total, loss, .. } => (Some(*total), *loss),
+                ToLeader::Scale { total, loss, .. } => (Some(*total), *loss),
+                ToLeader::Wire { total, loss, .. } => (Some(*total), *loss),
+                ToLeader::Done => (None, None),
+            };
+            if let Some(t) = t {
+                if total.is_none() {
+                    total = Some(t);
+                    nchunks = chunk_count(t, chunk);
+                    // Only the active wire's gather lanes are
+                    // allocated (workers never mix formats).
+                    match wire {
+                        WireFormat::F32 => {
+                            pending = (0..nchunks).map(|_| Vec::with_capacity(n)).collect();
+                        }
+                        WireFormat::Packed { .. } => {
+                            probes = (0..nchunks).map(|_| Vec::with_capacity(n)).collect();
+                            wire_pending = (0..nchunks).map(|_| Vec::with_capacity(n)).collect();
+                        }
+                    }
+                    collective.begin(n, t);
+                }
+                assert_eq!(
+                    total,
+                    Some(t),
+                    "workers disagree on the gradient size this step"
+                );
+                if let Some(l) = loss {
+                    losses += l;
+                }
+            }
+            match msg {
+                ToLeader::Chunk {
+                    worker,
+                    offset,
+                    data,
+                    ..
+                } => {
+                    observed_payload[worker] += data.len() as u64 * 4;
+                    let idx = offset / chunk;
+                    let slot = &mut pending[idx];
+                    slot.push(ShardChunk {
+                        worker,
+                        offset,
+                        data,
+                    });
+                    if slot.len() == n {
+                        // All N copies of this chunk are in: reduce it
+                        // now, while later chunks are still uploading.
+                        // Slots fill in mpsc arrival order, so restore
+                        // worker order first — order-sensitive
+                        // collectives (per-level grouping in basic
+                        // fabrics, trained ONNs) must see the same
+                        // worker→port assignment as the in-memory
+                        // driver, run to run.
+                        slot.sort_by_key(|c| c.worker);
+                        // (Empty gradients complete the step protocol
+                        // without a reduce — no sync, no traversal.)
+                        if total != Some(0) {
+                            collective.reduce_chunk(slot);
+                        }
+                        broadcast_avg(&to_worker_txs, offset, slot);
+                        reduced += 1;
+                    }
+                }
+                ToLeader::Scale {
+                    worker,
+                    offset,
+                    local_max,
+                    ..
+                } => {
+                    observed_sync[worker] += 4;
+                    let idx = offset / chunk;
+                    let slot = &mut probes[idx];
+                    slot.push(local_max);
+                    if slot.len() == n {
+                        // The combine half of the one-float exchange:
+                        // ack the agreed block scale to every worker.
+                        let scale = GlobalQuantizer::combine_scale_probes(slot.drain(..));
+                        for (wk, tx) in to_worker_txs.iter().enumerate() {
+                            observed_sync[wk] += ack_bytes;
+                            let _ = tx.send(ToWorker::Scale { offset, scale });
+                        }
+                    }
+                }
+                ToLeader::Wire { payload, .. } => {
+                    observed_payload[payload.worker] += payload.words.len() as u64;
+                    let idx = payload.offset / chunk;
+                    let slot = &mut wire_pending[idx];
+                    slot.push(payload);
+                    if slot.len() == n {
+                        // Restore worker order (see the f32 arm) so
+                        // order-sensitive collectives stay
+                        // deterministic and match the driver.
+                        slot.sort_by_key(|c| c.worker);
+                        // Word-domain reduce: the leader never
+                        // round-trips the payload through floats.
+                        let avg = if slot[0].elements == 0 {
+                            WireAvg::empty()
+                        } else {
+                            collective.reduce_wire_chunk(slot)
+                        };
+                        broadcast_wire_avg(&to_worker_txs, avg, slot);
+                        reduced += 1;
+                    }
+                }
+                ToLeader::Done => {}
+            }
+        }
+        let stats = collective.finish();
+        let comm_s = stats.modeled_step_time_s(&cl.hw);
+        let observed = observed_payload
+            .iter()
+            .zip(&observed_sync)
+            .map(|(p, s)| p + s)
+            .max()
+            .unwrap_or(0);
+        metrics.record(&stats, comm_s);
+        metrics.record_observed_wire(observed);
+        records.push(StepRecord {
+            step,
+            mean_loss: losses / n as f64,
+            stats,
+            modeled_comm_s: comm_s,
+            observed_wire_bytes_per_server: observed,
+            virtual_time_s: None,
+            virtual_reconfig_wait_s: None,
+        });
+    }
+    // Shutdown path shared by success and failure: closing the
+    // leader→worker channels unblocks any worker still waiting on an
+    // averaged chunk, so surviving threads exit instead of
+    // deadlocking. The collective stays reusable either way — its
+    // next `begin` resets the open session, so no pooled buffer or
+    // session state is poisoned by an aborted step.
+    for tx in &to_worker_txs {
+        let _ = tx.send(ToWorker::Stop);
+    }
+    drop(to_worker_txs);
+    let mut panicked = 0usize;
+    for h in handles {
+        // After a failure, join only threads that already exited
+        // (harvesting their panics); a thread still sitting in a long
+        // stall is detached — it exits on its own once it observes
+        // the closed channels, and joining it here could outwait the
+        // watchdog guarantee.
+        if (failure.is_none() || h.is_finished()) && h.join().is_err() {
+            panicked += 1;
+        }
+    }
+    match failure {
+        Some(e) if panicked > 0 => Err(e.context(format!("{panicked} worker thread(s) panicked"))),
+        Some(e) => Err(e),
+        None if panicked > 0 => Err(anyhow::anyhow!(
+            "{panicked} worker thread(s) panicked during shutdown"
+        )),
+        None => Ok(records),
+    }
+}
+
+/// The legacy float wire: stream raw f32 chunks, receive shared f32
+/// averages. This is the worker half of the original pipeline, still
+/// used by f32-native collectives (ring, two-tree) and by the
+/// `--wire f32` override.
+fn worker_loop_f32<W: Workload>(
+    steps: usize,
+    w: usize,
+    chunk: usize,
+    workload: &mut W,
+    leader_tx: &mpsc::Sender<ToLeader>,
+    rx: &mpsc::Receiver<ToWorker>,
+) {
+    let mut pool = BufferPool::<f32>::new();
+    let mut avg = Vec::<f32>::new();
+    for step in 0..steps {
+        let (grad, loss) = workload.grad(step, w);
+        let total = grad.len();
+        let nchunks = chunk_count(total, chunk);
+        // Stream the gradient: chunk k+1 departs while the
+        // leader is still reducing chunk k (the overlap).
+        let mut sent = 0usize;
+        for k in 0..nchunks {
+            let hi = sent.saturating_add(chunk).min(total);
+            let mut data = pool.take(hi - sent);
+            data.copy_from_slice(&grad[sent..hi]);
+            let msg = ToLeader::Chunk {
+                worker: w,
+                offset: sent,
+                total,
+                data,
+                loss: (k == 0).then_some(loss),
+            };
+            if leader_tx.send(msg).is_err() {
+                return;
+            }
+            sent = hi;
+        }
+        // Drain averaged chunks (they start arriving while
+        // later chunks may still be uploading elsewhere).
+        avg.clear();
+        avg.resize(total, 0.0);
+        let mut got = 0usize;
+        while got < nchunks {
+            match rx.recv() {
+                Ok(ToWorker::Avg {
+                    offset,
+                    data,
+                    recycle,
+                }) => {
+                    avg[offset..offset + data.len()].copy_from_slice(&data);
+                    if let Some(buf) = recycle {
+                        pool.put(buf);
+                    }
+                    got += 1;
+                }
+                _ => return,
+            }
+        }
+        workload.apply(step, w, &avg);
+    }
+    let _ = leader_tx.send(ToLeader::Done);
+}
+
+/// The packed wire: per chunk, probe the block scale, quantize at the
+/// edge on the agreed scale, bit-pack, upload packed bytes; unpack and
+/// dequantize the shared packed broadcast. The worker is the paper's
+/// transmitter — nothing but B-bit words (plus the one-float exchange)
+/// ever touches the channel.
+fn worker_loop_packed<W: Workload>(
+    steps: usize,
+    w: usize,
+    chunk: usize,
+    bits: u32,
+    workload: &mut W,
+    leader_tx: &mpsc::Sender<ToLeader>,
+    rx: &mpsc::Receiver<ToWorker>,
+) {
+    let quantizer = GlobalQuantizer::new(bits);
+    let mut byte_pool = BufferPool::<u8>::new();
+    let mut avg = Vec::<f32>::new();
+    for step in 0..steps {
+        let (grad, loss) = workload.grad(step, w);
+        let total = grad.len();
+        if total == 0 {
+            // Empty-step protocol: one empty wire chunk completes the
+            // step — nothing to quantize, no scale exchange.
+            let msg = ToLeader::Wire {
+                total,
+                loss: Some(loss),
+                payload: WireChunk {
+                    worker: w,
+                    offset: 0,
+                    words: byte_pool.take_empty(0),
+                    scale: 0.0,
+                    elements: 0,
+                },
+            };
+            if leader_tx.send(msg).is_err() {
+                return;
+            }
+            match rx.recv() {
+                Ok(ToWorker::WireAvg { recycle, .. }) => {
+                    if let Some(buf) = recycle {
+                        byte_pool.put(buf);
+                    }
+                }
+                _ => return,
+            }
+            workload.apply(step, w, &[]);
+            continue;
+        }
+        let nchunks = chunk_count(total, chunk);
+        // 1. Ship every chunk's 4-byte scale probe up front (the upload
+        //    half of the one-float exchange); probes pipeline freely.
+        for k in 0..nchunks {
+            let lo = k.saturating_mul(chunk).min(total);
+            let hi = lo.saturating_add(chunk).min(total);
+            let msg = ToLeader::Scale {
+                worker: w,
+                offset: lo,
+                total,
+                local_max: GlobalQuantizer::local_abs_max(&grad[lo..hi]),
+                loss: (k == 0).then_some(loss),
+            };
+            if leader_tx.send(msg).is_err() {
+                return;
+            }
+        }
+        // 2. Quantize+pack+upload each chunk the moment its agreed
+        //    scale ack arrives; assemble the averaged gradient from
+        //    each packed broadcast. Replies interleave in any order.
+        avg.clear();
+        avg.resize(total, 0.0);
+        let mut got = 0usize;
+        while got < nchunks {
+            match rx.recv() {
+                Ok(ToWorker::Scale { offset, scale }) => {
+                    let hi = offset.saturating_add(chunk).min(total);
+                    let mut words = byte_pool.take_empty(packed_len(hi - offset, bits));
+                    pack_quantized_into(&grad[offset..hi], &quantizer, scale, &mut words);
+                    let msg = ToLeader::Wire {
+                        total,
+                        loss: None,
+                        payload: WireChunk {
+                            worker: w,
+                            offset,
+                            words,
+                            scale,
+                            elements: hi - offset,
+                        },
+                    };
+                    if leader_tx.send(msg).is_err() {
+                        return;
+                    }
+                }
+                Ok(ToWorker::WireAvg {
+                    offset,
+                    avg: wavg,
+                    recycle,
+                }) => {
+                    unpack_dequantize_into(
+                        &wavg.words,
+                        &quantizer,
+                        wavg.scale,
+                        &mut avg[offset..offset + wavg.elements],
+                    );
+                    if let Some(buf) = recycle {
+                        byte_pool.put(buf);
+                    }
+                    got += 1;
+                }
+                _ => return,
+            }
+        }
+        workload.apply(step, w, &avg);
+    }
+    let _ = leader_tx.send(ToLeader::Done);
+}
+
+/// Broadcast one reduced chunk: all entries of `slot` hold the average,
+/// so one shared `Arc<[f32]>` (the step's single broadcast allocation)
+/// serves every worker, and all N spent upload buffers ride the
+/// messages back — one per worker — so every worker's pool stays warm.
+fn broadcast_avg(txs: &[mpsc::Sender<ToWorker>], offset: usize, slot: &mut Vec<ShardChunk>) {
+    assert!(!slot.is_empty(), "broadcast of an empty chunk set");
+    let avg: Arc<[f32]> = Arc::from(slot[0].data.as_slice());
+    for (tx, ch) in txs.iter().zip(slot.drain(..)) {
+        tx.send(ToWorker::Avg {
+            offset,
+            data: avg.clone(),
+            recycle: Some(ch.data),
+        })
+        .ok();
+    }
+}
+
+/// Packed-wire broadcast: one shared `Arc<[u8]>` (inside [`WireAvg`])
+/// serves every worker, and each spent packed upload buffer rides a
+/// message back to a worker's byte pool.
+fn broadcast_wire_avg(txs: &[mpsc::Sender<ToWorker>], avg: WireAvg, slot: &mut Vec<WireChunk>) {
+    assert!(!slot.is_empty(), "broadcast of an empty wire chunk set");
+    for (tx, wc) in txs.iter().zip(slot.drain(..)) {
+        tx.send(ToWorker::WireAvg {
+            offset: wc.offset,
+            avg: avg.clone(),
+            recycle: Some(wc.words),
+        })
+        .ok();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn broadcast_shares_one_allocation() {
+        // The leader must not clone the averaged chunk once per worker —
+        // every Avg message shares one Arc allocation.
+        let (tx1, rx1) = mpsc::channel::<ToWorker>();
+        let (tx2, rx2) = mpsc::channel::<ToWorker>();
+        let mut slot = vec![
+            ShardChunk {
+                worker: 0,
+                offset: 0,
+                data: vec![2.5f32; 4],
+            },
+            ShardChunk {
+                worker: 1,
+                offset: 0,
+                data: vec![2.5f32; 4],
+            },
+        ];
+        broadcast_avg(&[tx1, tx2], 0, &mut slot);
+        let take = |m: ToWorker| match m {
+            ToWorker::Avg { data, recycle, .. } => (data, recycle),
+            _ => panic!("expected Avg"),
+        };
+        let (a, ra) = take(rx1.recv().unwrap());
+        let (b, rb) = take(rx2.recv().unwrap());
+        assert!(
+            Arc::ptr_eq(&a, &b),
+            "broadcast must share one allocation, not copy per worker"
+        );
+        assert_eq!(&a[..], &[2.5f32; 4]);
+        // Every worker gets one spent upload buffer back (pool stays warm).
+        assert!(ra.is_some() && rb.is_some());
+    }
+}

@@ -73,6 +73,18 @@ pub trait ChunkedAllReduce {
         WireFormat::F32
     }
 
+    /// Switch levels one chunk traverses on its way to the reduced
+    /// result (1 = flat switch or a server-side collective). The
+    /// discrete-event cluster backend reads this **before** `finish`
+    /// (which is only called once the whole step has streamed) to charge
+    /// per-level hop latency and OCS reconfiguration gating per chunk;
+    /// it must agree with the `levels` field of the final
+    /// [`CollectiveStats`]. Cascaded fabrics override it with their
+    /// depth.
+    fn levels(&self) -> u32 {
+        1
+    }
+
     /// Word-domain reduce: average one aligned set of packed chunks and
     /// return the packed average (one shared allocation — the broadcast
     /// payload) plus its block scale. The leader never round-trips

@@ -101,6 +101,25 @@ impl FabricTopology {
         FabricTopology::uniform(fan_in, depth)
     }
 
+    /// The narrowest uniform cascade of exactly `depth` levels that
+    /// serves `workers`: the smallest fan-in `f ≥ 2` with
+    /// `f^depth ≥ workers`. This is the dual of [`Self::for_workers`]
+    /// (fixed fan-in, minimal depth): the scale sweep pins the depth
+    /// (`pipeline --servers 1024 --levels 3`) and lets the port count
+    /// follow.
+    pub fn for_workers_with_depth(workers: usize, depth: usize) -> Result<FabricTopology> {
+        ensure!(workers >= 1, "fabric needs at least one worker");
+        ensure!(depth >= 1, "fabric needs at least one level");
+        let mut fan_in = 2usize;
+        while fan_in
+            .checked_pow(depth as u32)
+            .map_or(true, |cap| cap < workers)
+        {
+            fan_in += 1;
+        }
+        FabricTopology::uniform(fan_in, depth)
+    }
+
     pub fn depth(&self) -> usize {
         self.fan_ins.len()
     }
@@ -419,6 +438,10 @@ impl ChunkedAllReduce for FabricAllReduce {
         WireFormat::Packed { bits: self.bits }
     }
 
+    fn levels(&self) -> u32 {
+        self.depth() as u32
+    }
+
     fn reduce_wire_chunk(&mut self, chunks: &[WireChunk]) -> WireAvg {
         let n = self.session.workers();
         assert_eq!(chunks.len(), n, "fabric opened for {n} workers");
@@ -490,6 +513,29 @@ mod tests {
         assert_eq!(FabricTopology::for_workers(16, 16).unwrap().depth(), 1);
         assert!(FabricTopology::uniform(1, 2).is_err());
         assert!(FabricTopology::new(vec![]).is_err());
+    }
+
+    #[test]
+    fn for_workers_with_depth_picks_minimal_fan_in() {
+        // 10^3 = 1000 < 1024 ≤ 11^3 = 1331: the 1024-server ×
+        // 3-level sweep gets 11-port switches.
+        let t = FabricTopology::for_workers_with_depth(1024, 3).unwrap();
+        assert_eq!(t.fan_ins(), [11, 11, 11]);
+        assert!(t.capacity() >= 1024);
+        assert_eq!(
+            FabricTopology::for_workers_with_depth(16, 2).unwrap().fan_ins(),
+            [4, 4]
+        );
+        assert_eq!(
+            FabricTopology::for_workers_with_depth(2, 1).unwrap().fan_ins(),
+            [2]
+        );
+        // Fan-in never drops below a real switch's 2 ports.
+        assert_eq!(
+            FabricTopology::for_workers_with_depth(1, 2).unwrap().fan_ins(),
+            [2, 2]
+        );
+        assert!(FabricTopology::for_workers_with_depth(0, 3).is_err());
     }
 
     #[test]

@@ -1,0 +1,256 @@
+//! Scale sweep: virtual step time vs server count through a deep
+//! fabric, on the discrete-event cluster backend.
+//!
+//! This is the experiment the thread-per-worker oracle could never run
+//! (ROADMAP open item 1): one process sweeps 64 → 1024 servers through
+//! a pinned-depth switch cascade, measuring each step's end-to-end
+//! virtual time, the OCS reconfiguration wait the chunk stream
+//! absorbed, and the per-server wire bytes — next to the closed-form
+//! `modeled_step_time_s` prediction for the same step. The CLI
+//! (`optinc-repro scale`) prints the table and persists
+//! `target/bench-results/scale_sweep.json`; `benches/scale.rs` times
+//! the same sweep into `BENCH_scale.json`.
+
+use anyhow::Result;
+
+use crate::cluster::{Backend, Cluster, ClusterMetrics, Workload};
+use crate::collectives::fabric::{FabricAllReduce, FabricMode, FabricTopology};
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+
+/// One sweep configuration (the CLI's `--servers/--elements/...`).
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    /// Server counts to sweep (each runs the full step count).
+    pub servers: Vec<usize>,
+    /// Gradient elements per step.
+    pub elements: usize,
+    /// Streaming grain (elements per chunk).
+    pub chunk: usize,
+    /// Steps per server count.
+    pub steps: usize,
+    /// Fabric depth: the cascade is the narrowest uniform fabric of
+    /// exactly this many levels serving the server count.
+    pub levels: usize,
+    /// Gradient word width on the wire.
+    pub bits: u32,
+    /// Replay seed for the event backend.
+    pub seed: u64,
+}
+
+impl Default for SweepConfig {
+    fn default() -> SweepConfig {
+        SweepConfig {
+            servers: vec![64, 256, 1024],
+            elements: 65_536,
+            chunk: 4_096,
+            steps: 3,
+            levels: 3,
+            bits: 8,
+            seed: 42,
+        }
+    }
+}
+
+/// One server count's measured sweep row.
+#[derive(Clone, Debug)]
+pub struct ScaleRow {
+    pub servers: usize,
+    /// Fan-in the pinned-depth cascade settled on.
+    pub fan_in: usize,
+    /// Mean virtual step time over the sweep's steps.
+    pub mean_virtual_step_s: f64,
+    /// Mean closed-form modeled step time — the prediction the virtual
+    /// clock is measuring against.
+    pub mean_modeled_step_s: f64,
+    /// Total virtual OCS reconfiguration-gate wait across all steps.
+    pub virtual_reconfig_wait_s: f64,
+    /// Modeled exposed reconfiguration per step (overlap-discounted).
+    pub modeled_exposed_reconfig_s: f64,
+    /// Per-server wire bytes per step (payload + sync).
+    pub wire_bytes_per_server: u64,
+    /// Chunks streamed per step.
+    pub chunks_per_step: u64,
+}
+
+struct Synth {
+    dim: usize,
+    seed: u64,
+}
+
+impl Workload for Synth {
+    fn grad(&mut self, step: usize, worker: usize) -> (Vec<f32>, f64) {
+        // Deterministic per-(seed, step, worker) gradient stream.
+        let mut rng = Pcg32::new(
+            self.seed ^ ((step as u64) << 32),
+            worker as u64,
+        );
+        let g = (0..self.dim).map(|_| rng.normal() as f32 * 0.1).collect();
+        (g, 0.0)
+    }
+
+    fn apply(&mut self, _step: usize, _worker: usize, _avg: &[f32]) {}
+}
+
+/// Run the sweep: one event-backend cluster per server count, all
+/// streaming through a `levels`-deep remainder-mode fabric.
+pub fn run(cfg: &SweepConfig) -> Result<Vec<ScaleRow>> {
+    anyhow::ensure!(!cfg.servers.is_empty(), "sweep needs at least one server count");
+    let mut rows = Vec::with_capacity(cfg.servers.len());
+    for &n in &cfg.servers {
+        let topo = FabricTopology::for_workers_with_depth(n, cfg.levels)?;
+        let fan_in = topo.fan_ins()[0];
+        let mut fabric = FabricAllReduce::exact(cfg.bits, &topo, FabricMode::Remainder)?;
+        let cluster = Cluster::new(n)
+            .with_chunk_elems(cfg.chunk)
+            .with_backend(Backend::Event)
+            .with_seed(cfg.seed);
+        let mut metrics = ClusterMetrics::new("scale");
+        let dim = cfg.elements;
+        let seed = cfg.seed;
+        let records = cluster.run(
+            cfg.steps,
+            move |_| Synth { dim, seed },
+            &mut fabric,
+            &mut metrics,
+        )?;
+        let exposed = records
+            .first()
+            .map(|r| r.stats.exposed_reconfig_s(&cluster.hw))
+            .unwrap_or(0.0);
+        rows.push(ScaleRow {
+            servers: n,
+            fan_in,
+            mean_virtual_step_s: metrics.mean_virtual_step_s(),
+            mean_modeled_step_s: metrics.mean_modeled_comm_s(),
+            virtual_reconfig_wait_s: metrics.total_virtual_reconfig_wait_s(),
+            modeled_exposed_reconfig_s: exposed,
+            wire_bytes_per_server: metrics.total_bytes_per_server() / cfg.steps.max(1) as u64,
+            chunks_per_step: metrics.total_chunks() / cfg.steps.max(1) as u64,
+        });
+    }
+    Ok(rows)
+}
+
+/// Print the sweep table.
+pub fn print(cfg: &SweepConfig, rows: &[ScaleRow]) {
+    println!(
+        "scale sweep — event backend, {} elements, chunk {}, {} levels, {}-bit wire, \
+         {} steps, seed {}",
+        cfg.elements, cfg.chunk, cfg.levels, cfg.bits, cfg.steps, cfg.seed
+    );
+    println!(
+        "  {:>7}  {:>6}  {:>14}  {:>14}  {:>16}  {:>14}  {:>8}",
+        "servers", "fan-in", "virtual/step", "modeled/step", "reconfig wait", "wire B/server", "chunks"
+    );
+    for r in rows {
+        println!(
+            "  {:>7}  {:>6}  {:>11.4} ms  {:>11.4} ms  {:>13.2} us  {:>14}  {:>8}",
+            r.servers,
+            r.fan_in,
+            r.mean_virtual_step_s * 1e3,
+            r.mean_modeled_step_s * 1e3,
+            r.virtual_reconfig_wait_s * 1e6,
+            r.wire_bytes_per_server,
+            r.chunks_per_step
+        );
+    }
+}
+
+/// The sweep as JSON (the `scale_sweep.json` / `BENCH_scale.json` rows).
+pub fn to_json(cfg: &SweepConfig, rows: &[ScaleRow]) -> Json {
+    Json::obj(vec![
+        ("elements", Json::Num(cfg.elements as f64)),
+        ("chunk", Json::Num(cfg.chunk as f64)),
+        ("steps", Json::Num(cfg.steps as f64)),
+        ("levels", Json::Num(cfg.levels as f64)),
+        ("bits", Json::Num(cfg.bits as f64)),
+        ("seed", Json::Num(cfg.seed as f64)),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("servers", Json::Num(r.servers as f64)),
+                            ("fan_in", Json::Num(r.fan_in as f64)),
+                            ("mean_virtual_step_s", Json::Num(r.mean_virtual_step_s)),
+                            ("mean_modeled_step_s", Json::Num(r.mean_modeled_step_s)),
+                            (
+                                "virtual_reconfig_wait_s",
+                                Json::Num(r.virtual_reconfig_wait_s),
+                            ),
+                            (
+                                "modeled_exposed_reconfig_s",
+                                Json::Num(r.modeled_exposed_reconfig_s),
+                            ),
+                            (
+                                "wire_bytes_per_server",
+                                Json::Num(r.wire_bytes_per_server as f64),
+                            ),
+                            ("chunks_per_step", Json::Num(r.chunks_per_step as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_sweep_produces_sane_rows() {
+        // A miniature sweep (8 and 27 servers, depth 3) keeps the test
+        // fast while exercising the real path end to end.
+        let cfg = SweepConfig {
+            servers: vec![8, 27],
+            elements: 512,
+            chunk: 128,
+            steps: 2,
+            levels: 3,
+            bits: 8,
+            seed: 7,
+        };
+        let rows = run(&cfg).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].fan_in, 2, "2^3 = 8 servers");
+        assert_eq!(rows[1].fan_in, 3, "3^3 = 27 servers");
+        for r in &rows {
+            assert!(r.mean_virtual_step_s > 0.0);
+            assert!(r.mean_modeled_step_s > 0.0);
+            assert!(r.virtual_reconfig_wait_s > 0.0, "3 levels must gate");
+            assert_eq!(r.chunks_per_step, 4);
+            // 8-bit wire: 1 B/element payload + (4 + 1) sync per chunk.
+            assert_eq!(r.wire_bytes_per_server, 512 + 4 * 5);
+        }
+        // More servers through the same fabric shape must not be
+        // cheaper per step (downlink acks/broadcasts serialize).
+        assert!(rows[1].mean_virtual_step_s >= rows[0].mean_virtual_step_s * 0.5);
+        let j = to_json(&cfg, &rows);
+        assert_eq!(j.get("rows").as_arr().map(|a| a.len()), Some(2));
+    }
+
+    #[test]
+    fn sweep_replays_from_its_seed() {
+        let cfg = SweepConfig {
+            servers: vec![16],
+            elements: 256,
+            chunk: 64,
+            steps: 2,
+            levels: 2,
+            bits: 4,
+            seed: 99,
+        };
+        let a = run(&cfg).unwrap();
+        let b = run(&cfg).unwrap();
+        assert_eq!(
+            a[0].mean_virtual_step_s.to_bits(),
+            b[0].mean_virtual_step_s.to_bits(),
+            "same config + seed must replay exactly"
+        );
+        assert_eq!(a[0].wire_bytes_per_server, b[0].wire_bytes_per_server);
+    }
+}

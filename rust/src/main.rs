@@ -16,8 +16,13 @@ const COMMANDS: &[Command] = &[
     },
     Command {
         name: "pipeline",
-        about: "Streaming engine demo: pipelined vs monolithic (ring|optinc|fabric --fan-in --levels --wire packed|f32)",
+        about: "Streaming engine demo: pipelined vs monolithic (ring|optinc|fabric --fan-in --levels --wire packed|f32 --backend threaded|event --servers N)",
         run: cmd_pipeline,
+    },
+    Command {
+        name: "scale",
+        about: "Event-backend scale sweep: virtual step time vs server count through a deep fabric (--servers 64,256,1024 --levels 3)",
+        run: cmd_scale,
     },
     Command {
         name: "table1",
@@ -133,7 +138,7 @@ fn cmd_fig7a(_args: &Args) -> Result<()> {
 /// through the monolithic one-shot path and the chunked double-buffered
 /// pipeline, and report the modeled step times.
 fn cmd_pipeline(args: &Args) -> Result<()> {
-    use optinc::cluster::{Cluster, ClusterMetrics, Workload};
+    use optinc::cluster::{Backend, Cluster, ClusterMetrics, Workload};
     use optinc::collectives::engine::ChunkedAllReduce;
     use optinc::collectives::fabric::{FabricAllReduce, FabricMode, FabricTopology};
     use optinc::collectives::optinc::OptIncAllReduce;
@@ -141,14 +146,35 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     use optinc::config::Scenario;
     use optinc::util::rng::Pcg32;
 
-    let workers = args.usize_or("workers", 4)?;
-    let elements = args.usize_or("elements", 1_000_000)?;
+    // --servers is the scale-sweep spelling of --workers (the paper
+    // counts servers); either selects the worker count.
+    let workers = match args.usize_opt("servers")? {
+        Some(s) => s,
+        None => args.usize_or("workers", 4)?,
+    };
+    let backend = Backend::parse(&args.str_or("backend", "threaded"))?;
+    // At scale-sweep sizes default to a gradient that keeps the sweep
+    // interactive; an explicit --elements always wins.
+    let elements = match args.usize_opt("elements")? {
+        Some(e) => e,
+        None if backend == Backend::Event && workers >= 256 => 65_536,
+        None => 1_000_000,
+    };
     let steps = args.usize_or("steps", 3)?;
     let chunk = match args.usize_opt("chunk")? {
         Some(c) => c.max(1),
         None => (elements / 16).max(1),
     };
-    let which = args.str_or("collective", "ring");
+    // A topology flag without --collective means the fabric: `pipeline
+    // --backend event --servers 1024 --levels 3` is the scale-sweep
+    // reproduction command, no extra spelling needed.
+    let which = match args.get("collective") {
+        Some(c) => c.to_string(),
+        None if args.usize_opt("levels")?.is_some() || args.usize_opt("fan-in")?.is_some() => {
+            "fabric".to_string()
+        }
+        None => "ring".to_string(),
+    };
     // Wire override: packed (the collective's native format, default)
     // or f32 (the legacy float streaming, kept for the before/after
     // byte-accounting comparison).
@@ -208,16 +234,19 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
             // `--bits 9` is a clear error here, not a panic deep inside
             // switch construction.
             optinc::pam4::validate_bits(bits)?;
-            let fan_in = args.usize_or("fan-in", 4)?;
-            let topo = match args.usize_opt("levels")? {
-                Some(l) => FabricTopology::uniform(fan_in, l)?,
-                None => FabricTopology::for_workers(fan_in, workers)?,
+            let topo = match (args.usize_opt("levels")?, args.usize_opt("fan-in")?) {
+                (Some(l), Some(f)) => FabricTopology::uniform(f, l)?,
+                // Depth pinned, fan-in free: the narrowest cascade of
+                // exactly `l` levels that serves every worker (the
+                // `--servers 1024 --levels 3` scale-sweep shape).
+                (Some(l), None) => FabricTopology::for_workers_with_depth(workers, l)?,
+                (None, f) => FabricTopology::for_workers(f.unwrap_or(4), workers)?,
             };
             anyhow::ensure!(
                 workers <= topo.capacity(),
-                "{workers} workers exceed the fabric capacity {} (fan-in {fan_in}, {} levels)",
+                "{workers} workers exceed the fabric capacity {} (fan-ins {:?})",
                 topo.capacity(),
-                topo.depth()
+                topo.fan_ins()
             );
             let fabric = match which.as_str() {
                 "fabric" => FabricAllReduce::exact(bits, &topo, FabricMode::Remainder)?,
@@ -237,10 +266,11 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
                 }
             };
             println!(
-                "fabric: {} workers through {} levels of {fan_in}-port switches \
+                "fabric: {} workers through {} levels with fan-ins {:?} \
                  (capacity {}, switches per level {:?})",
                 workers,
                 topo.depth(),
+                topo.fan_ins(),
                 topo.capacity(),
                 topo.switch_counts(workers)
             );
@@ -253,7 +283,9 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
 
     let cluster = Cluster::new(workers)
         .with_chunk_elems(chunk)
-        .with_f32_wire(force_f32);
+        .with_f32_wire(force_f32)
+        .with_backend(backend)
+        .with_seed(args.u64_or("seed", 0)?);
     let mut piped_metrics = ClusterMetrics::new("pipelined");
     let piped = cluster.run(
         steps,
@@ -272,7 +304,8 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     let p = &piped[0].stats;
     let m = &mono[0].stats;
     println!(
-        "\nstreaming engine — {which}, N={workers}, {elements} elements, chunk {chunk}"
+        "\nstreaming engine — {which}, N={workers}, {elements} elements, chunk {chunk}, \
+         backend {backend:?}"
     );
     // Measured vs modeled wire bytes: the packed transport makes these
     // equal for the OptINC family; --wire f32 exposes the old 4x gap.
@@ -315,6 +348,51 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         p.bytes_sent_per_server + p.sync_bytes_per_server,
         m.bytes_sent_per_server + m.sync_bytes_per_server
     );
+    // The event backend's measured virtual clock, per step, against the
+    // closed-form model — including the OCS reconfiguration exposure.
+    if backend == Backend::Event {
+        println!("  virtual   : (event backend, seed {})", cluster.seed);
+        for r in &piped {
+            println!(
+                "    step {}: virtual {:.4} ms (modeled {:.4} ms), \
+                 reconfig wait {:.2} us (modeled exposed {:.2} us)",
+                r.step,
+                r.virtual_time_s.unwrap_or(0.0) * 1e3,
+                r.modeled_comm_s * 1e3,
+                r.virtual_reconfig_wait_s.unwrap_or(0.0) * 1e6,
+                r.stats.exposed_reconfig_s(&cluster.hw) * 1e6,
+            );
+        }
+        println!(
+            "    mean virtual step {:.4} ms over {} steps",
+            piped_metrics.mean_virtual_step_s() * 1e3,
+            piped_metrics.steps()
+        );
+    }
+    Ok(())
+}
+
+/// Event-backend scale sweep: the `BENCH_scale.json` experiment behind
+/// the paper's at-scale claim (ROADMAP open item 1), runnable as
+/// `optinc-repro scale --servers 64,256,1024 --levels 3`.
+fn cmd_scale(args: &Args) -> Result<()> {
+    let cfg = optinc::experiments::scale::SweepConfig {
+        servers: args.usize_list_or("servers", &[64, 256, 1024])?,
+        elements: args.usize_or("elements", 65_536)?,
+        chunk: args.usize_or("chunk", 4_096)?,
+        steps: args.usize_or("steps", 3)?,
+        levels: args.usize_or("levels", 3)?,
+        bits: args.usize_or("bits", 8)? as u32,
+        seed: args.u64_or("seed", 42)?,
+    };
+    let rows = optinc::experiments::scale::run(&cfg)?;
+    optinc::experiments::scale::print(&cfg, &rows);
+    // Persist for EXPERIMENTS.md provenance.
+    let dir = std::path::Path::new("target/bench-results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join("scale_sweep.json");
+    std::fs::write(&path, optinc::experiments::scale::to_json(&cfg, &rows).to_pretty())?;
+    println!("  rows -> {}", path.display());
     Ok(())
 }
 

@@ -1,0 +1,391 @@
+//! Cross-backend conformance harness (ISSUE 6 tentpole).
+//!
+//! The threaded cluster backend is the fidelity oracle; the
+//! discrete-event backend must replay its exact wire protocol. This
+//! property matrix pins the two **bit-exact on applied averaged
+//! gradients** and **equal on accounted stats, observed wire bytes,
+//! chunk counts, and sync bytes** across:
+//!
+//!   collectives {ring, optinc, fabric}
+//! × workers     {2, 5, 16}
+//! × chunk grain {1, 7, len−1, len, len+1}
+//! × wire bits   {4, 8}            (packed collectives)
+//!
+//! plus the backend-API edge cases (zero workers, empty shard, single
+//! element, post-fault reuse) and the deterministic-seeding regression
+//! (same seed ⇒ identical `StepRecord` streams). Every assertion
+//! message carries the replay seed so a failure reproduces
+//! byte-for-byte.
+
+use std::sync::mpsc;
+
+use optinc::cluster::{Backend, Cluster, ClusterMetrics, ComputeModel, StepRecord, Workload};
+use optinc::collectives::engine::ChunkedAllReduce;
+use optinc::collectives::fabric::FabricAllReduce;
+use optinc::collectives::optinc::OptIncAllReduce;
+use optinc::collectives::ring::RingAllReduce;
+use optinc::config::Scenario;
+use optinc::util::rng::Pcg32;
+
+/// Gradient length for the matrix: prime, so every grain in
+/// {1, 7, len−1, len, len+1} exercises a ragged tail.
+const DIM: usize = 97;
+const STEPS: usize = 2;
+/// The replay seed: gradients, jitter streams, and every assertion
+/// message derive from this one value.
+const SEED: u64 = 0x0C0F_FEE5;
+
+const WORKER_COUNTS: [usize; 3] = [2, 5, 16];
+const GRAINS: [usize; 5] = [1, 7, DIM - 1, DIM, DIM + 1];
+const BITS: [u32; 2] = [4, 8];
+
+/// Deterministic synthetic workload: the gradient stream is a pure
+/// function of (SEED, step, worker), the loss is integer-valued so its
+/// f64 sum is exact in any accumulation order (the two backends fold
+/// worker losses in different orders), and every applied average is
+/// shipped back to the test as raw f32 bit patterns.
+struct Synth {
+    dim: usize,
+    tx: mpsc::Sender<(usize, usize, Vec<u32>)>,
+}
+
+impl Workload for Synth {
+    fn grad(&mut self, step: usize, worker: usize) -> (Vec<f32>, f64) {
+        let mut rng = Pcg32::new(SEED ^ ((step as u64) << 20), worker as u64);
+        let g = (0..self.dim).map(|_| rng.normal() as f32 * 0.1).collect();
+        let loss = (step * 31 + worker + 1) as f64;
+        (g, loss)
+    }
+
+    fn apply(&mut self, step: usize, worker: usize, avg: &[f32]) {
+        let bits = avg.iter().map(|v| v.to_bits()).collect();
+        self.tx.send((step, worker, bits)).ok();
+    }
+}
+
+type Applied = Vec<(usize, usize, Vec<u32>)>;
+
+fn run_one(
+    backend: Backend,
+    workers: usize,
+    grain: usize,
+    dim: usize,
+    collective: &mut dyn ChunkedAllReduce,
+) -> (Vec<StepRecord>, Applied) {
+    let (tx, rx) = mpsc::channel();
+    let cluster = Cluster::new(workers)
+        .with_chunk_elems(grain)
+        .with_backend(backend)
+        .with_seed(SEED);
+    let mut metrics = ClusterMetrics::new("conformance");
+    let records = cluster
+        .run(
+            STEPS,
+            move |_| Synth {
+                dim,
+                tx: tx.clone(),
+            },
+            collective,
+            &mut metrics,
+        )
+        .unwrap();
+    let mut applied: Applied = rx.try_iter().collect();
+    applied.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+    (records, applied)
+}
+
+/// The conformance property: identically constructed collectives, one
+/// per backend, must produce bit-exact applied averages and equal
+/// accounting for the same workload.
+fn assert_conformant<M>(workers: usize, grain: usize, dim: usize, mut make: M, label: &str)
+where
+    M: FnMut() -> Box<dyn ChunkedAllReduce>,
+{
+    let mut oracle = make();
+    let mut event = make();
+    let (tr, ta) = run_one(Backend::Threaded, workers, grain, dim, oracle.as_mut());
+    let (er, ea) = run_one(Backend::Event, workers, grain, dim, event.as_mut());
+    let ctx =
+        format!("{label}: N={workers} grain={grain} dim={dim} — replay with seed {SEED:#x}");
+
+    assert_eq!(
+        ta.len(),
+        workers * STEPS,
+        "{ctx}: every worker applies every step"
+    );
+    assert_eq!(ta, ea, "{ctx}: applied averages must be bit-exact");
+    assert_eq!(tr.len(), er.len(), "{ctx}: step counts");
+    for (t, e) in tr.iter().zip(&er) {
+        let step = t.step;
+        assert_eq!(step, e.step, "{ctx}");
+        // CollectiveStats derives PartialEq: bytes, sync bytes, rounds,
+        // chunks, elements, overlap, levels — all in one comparison.
+        assert_eq!(t.stats, e.stats, "{ctx} step {step}: accounted stats");
+        assert_eq!(
+            t.observed_wire_bytes_per_server, e.observed_wire_bytes_per_server,
+            "{ctx} step {step}: observed wire bytes"
+        );
+        assert_eq!(t.mean_loss, e.mean_loss, "{ctx} step {step}: mean loss");
+        assert_eq!(
+            t.modeled_comm_s, e.modeled_comm_s,
+            "{ctx} step {step}: modeled step time"
+        );
+        // And the one sanctioned difference: only the event backend
+        // carries a virtual clock.
+        assert!(t.virtual_time_s.is_none(), "{ctx}: threaded has no clock");
+        assert!(e.virtual_time_s.is_some(), "{ctx}: event must measure");
+    }
+}
+
+#[test]
+fn matrix_ring() {
+    // Ring is f32-native: the bits axis does not apply.
+    for workers in WORKER_COUNTS {
+        for grain in GRAINS {
+            assert_conformant(workers, grain, DIM, || Box::new(RingAllReduce::new()), "ring");
+        }
+    }
+}
+
+#[test]
+fn matrix_optinc() {
+    // One switch sized exactly to the worker count:
+    // `Scenario::fabric_level` serves any (even bits, fan-in ≥ 2) pair.
+    for workers in WORKER_COUNTS {
+        for grain in GRAINS {
+            for bits in BITS {
+                assert_conformant(
+                    workers,
+                    grain,
+                    DIM,
+                    || {
+                        Box::new(OptIncAllReduce::exact(
+                            Scenario::fabric_level(bits, workers).unwrap(),
+                            5,
+                        ))
+                    },
+                    &format!("optinc b{bits}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn matrix_fabric() {
+    // Multi-level cascade of 4-port switches (depth grows with the
+    // worker count: 1 level at N=2, 2 levels at N=5 and N=16).
+    for workers in WORKER_COUNTS {
+        for grain in GRAINS {
+            for bits in BITS {
+                assert_conformant(
+                    workers,
+                    grain,
+                    DIM,
+                    || Box::new(FabricAllReduce::for_workers(bits, 4, workers).unwrap()),
+                    &format!("fabric b{bits}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn edge_empty_shard_conforms() {
+    // Zero-length gradients run the empty-step protocol (one empty
+    // chunk, no scale exchange, no reduce) identically on both
+    // backends, on both wires.
+    for workers in [2usize, 5] {
+        assert_conformant(workers, 4, 0, || Box::new(RingAllReduce::new()), "ring empty");
+        assert_conformant(
+            workers,
+            4,
+            0,
+            || {
+                Box::new(OptIncAllReduce::exact(
+                    Scenario::fabric_level(8, workers).unwrap(),
+                    5,
+                ))
+            },
+            "optinc empty",
+        );
+    }
+}
+
+#[test]
+fn edge_single_element_single_chunk_conforms() {
+    // The smallest non-empty step: one element, one chunk.
+    for workers in WORKER_COUNTS {
+        assert_conformant(workers, 1, 1, || Box::new(RingAllReduce::new()), "ring 1-elem");
+        assert_conformant(
+            workers,
+            1,
+            1,
+            || {
+                Box::new(OptIncAllReduce::exact(
+                    Scenario::fabric_level(8, workers).unwrap(),
+                    5,
+                ))
+            },
+            "optinc 1-elem",
+        );
+    }
+}
+
+#[test]
+fn edge_zero_workers_same_error_on_both_backends() {
+    for backend in [Backend::Threaded, Backend::Event] {
+        let mut ring = RingAllReduce::new();
+        let mut metrics = ClusterMetrics::new("none");
+        let (tx, _rx) = mpsc::channel();
+        let err = Cluster::new(0)
+            .with_backend(backend)
+            .run(
+                1,
+                move |_| Synth {
+                    dim: 4,
+                    tx: tx.clone(),
+                },
+                &mut ring,
+                &mut metrics,
+            )
+            .unwrap_err()
+            .to_string();
+        assert!(
+            err.contains("at least one worker"),
+            "{backend:?}: {err}"
+        );
+    }
+}
+
+/// Workload that panics on one worker at one step — the deterministic
+/// fault model shared by both backends.
+struct PanicAt {
+    dim: usize,
+    victim: usize,
+    at_step: usize,
+    tx: mpsc::Sender<(usize, usize, Vec<u32>)>,
+}
+
+impl Workload for PanicAt {
+    fn grad(&mut self, step: usize, worker: usize) -> (Vec<f32>, f64) {
+        if step == self.at_step && worker == self.victim {
+            panic!("injected fault: worker {worker} dies at step {step}");
+        }
+        Synth {
+            dim: self.dim,
+            tx: self.tx.clone(),
+        }
+        .grad(step, worker)
+    }
+
+    fn apply(&mut self, step: usize, worker: usize, avg: &[f32]) {
+        let bits = avg.iter().map(|v| v.to_bits()).collect();
+        self.tx.send((step, worker, bits)).ok();
+    }
+}
+
+#[test]
+fn edge_post_fault_reuse_is_identical_on_both_backends() {
+    // A collective that survived a failed run must be fully reusable
+    // (its next `begin` resets the aborted session), and the post-fault
+    // results must still conform across backends.
+    let workers = 4usize;
+    let fault_run = |backend: Backend, collective: &mut dyn ChunkedAllReduce| -> String {
+        let (tx, _rx) = mpsc::channel();
+        let cluster = Cluster::new(workers)
+            .with_chunk_elems(7)
+            .with_backend(backend)
+            .with_seed(SEED)
+            .with_watchdog(std::time::Duration::from_millis(300));
+        let mut metrics = ClusterMetrics::new("fault");
+        cluster
+            .run(
+                3,
+                move |_| PanicAt {
+                    dim: 20,
+                    victim: 2,
+                    at_step: 1,
+                    tx: tx.clone(),
+                },
+                collective,
+                &mut metrics,
+            )
+            .unwrap_err()
+            .to_string()
+    };
+
+    let mut oracle: Box<dyn ChunkedAllReduce> =
+        Box::new(OptIncAllReduce::exact(Scenario::fabric_level(8, workers).unwrap(), 5));
+    let mut event: Box<dyn ChunkedAllReduce> =
+        Box::new(OptIncAllReduce::exact(Scenario::fabric_level(8, workers).unwrap(), 5));
+
+    let te = fault_run(Backend::Threaded, oracle.as_mut());
+    assert!(
+        te.contains("watchdog") || te.contains("dropped") || te.contains("panicked"),
+        "threaded fault must surface cleanly: {te}"
+    );
+    let ee = fault_run(Backend::Event, event.as_mut());
+    assert!(
+        ee.contains("watchdog") && ee.contains("panicked"),
+        "event fault must name the watchdog and the panic: {ee}"
+    );
+    assert!(
+        ee.contains("virtual deadline"),
+        "event fault must carry its deterministic virtual deadline: {ee}"
+    );
+
+    // Reuse both collectives for a clean run and re-check conformance.
+    let (tr, ta) = run_one(Backend::Threaded, workers, 7, 20, oracle.as_mut());
+    let (er, ea) = run_one(Backend::Event, workers, 7, 20, event.as_mut());
+    assert_eq!(ta, ea, "post-fault applied averages (replay seed {SEED:#x})");
+    for (t, e) in tr.iter().zip(&er) {
+        assert_eq!(t.stats, e.stats, "post-fault step {} stats", t.step);
+        assert_eq!(
+            t.observed_wire_bytes_per_server, e.observed_wire_bytes_per_server,
+            "post-fault step {} observed bytes",
+            t.step
+        );
+    }
+}
+
+#[test]
+fn same_seed_event_runs_produce_identical_step_record_streams() {
+    // The deterministic-seeding satellite: with compute jitter switched
+    // on, two event runs from the same seed must yield an identical
+    // `StepRecord` stream (PartialEq covers the virtual clock too), and
+    // a different seed must not.
+    let run_with = |seed: u64| -> Vec<StepRecord> {
+        let (tx, _rx) = mpsc::channel();
+        let mut coll = FabricAllReduce::for_workers(8, 4, 5).unwrap();
+        let mut metrics = ClusterMetrics::new("replay");
+        Cluster::new(5)
+            .with_chunk_elems(7)
+            .with_backend(Backend::Event)
+            .with_seed(seed)
+            .with_compute(ComputeModel::default().with_base_s(1e-6).with_jitter(0.3))
+            .run(
+                3,
+                move |_| Synth {
+                    dim: DIM,
+                    tx: tx.clone(),
+                },
+                &mut coll,
+                &mut metrics,
+            )
+            .unwrap()
+    };
+    let a = run_with(SEED);
+    let b = run_with(SEED);
+    assert_eq!(a, b, "same seed {SEED:#x} must replay byte-for-byte");
+    let c = run_with(SEED ^ 1);
+    assert_ne!(
+        a.iter()
+            .map(|r| r.virtual_time_s.unwrap().to_bits())
+            .collect::<Vec<_>>(),
+        c.iter()
+            .map(|r| r.virtual_time_s.unwrap().to_bits())
+            .collect::<Vec<_>>(),
+        "a different seed must draw different jitter"
+    );
+}
