@@ -5,15 +5,19 @@
 //! overlap win, measured rather than asserted). The L3 hot loop the perf
 //! pass optimizes (EXPERIMENTS.md §Perf, §Pipelined engine).
 
-use optinc::collectives::engine::ChunkedDriver;
+use optinc::collectives::engine::{ChunkedDriver, ReducePlan};
 use optinc::collectives::hierarchical::HierarchicalOptInc;
 use optinc::collectives::optinc::OptIncAllReduce;
 use optinc::collectives::ring::RingAllReduce;
 use optinc::collectives::two_tree::TwoTreeAllReduce;
-use optinc::collectives::wire::{pack_words_into, packed_len, unpack_words_into};
+use optinc::collectives::wire::{
+    pack_quantized_into, pack_words_into, packed_len, reference, unpack_dequantize_into,
+    unpack_words_into,
+};
 use optinc::collectives::AllReduce;
 use optinc::config::{HardwareModel, Scenario};
 use optinc::optinc::cascade::CascadeMode;
+use optinc::optinc::switch::OptIncSwitch;
 use optinc::quant::GlobalQuantizer;
 use optinc::util::bench::{arg_flag, black_box, BenchSuite};
 use optinc::util::rng::Pcg32;
@@ -37,18 +41,107 @@ fn wire_section(suite: &mut BenchSuite) {
     let scale = GlobalQuantizer::global_scale(&[&gs]);
     let words: Vec<u32> = gs.iter().map(|&g| q.quantize(g, scale)).collect();
 
-    // Codec throughput: what the edge pays to put packed words on the
-    // wire (and take them back off).
+    // Codec throughput per bit width: what the edge pays to put packed
+    // words on the wire (and take them back off). 8/16/32 take the
+    // byte-aligned lane fast paths; 4 takes the generic u64-accumulator
+    // path.
     let mut packed = Vec::with_capacity(len);
-    suite.bench_throughput("wire/pack_8bit/1M", len as f64, "word", || {
-        pack_words_into(&words, 8, &mut packed);
-        black_box(packed.len());
+    for bits in [4u32, 8, 16, 32] {
+        let wmask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+        let in_range: Vec<u32> = words.iter().map(|&w| w & wmask).collect();
+        suite.bench_throughput(&format!("wire/pack_{bits}bit/1M"), len as f64, "word", || {
+            pack_words_into(&in_range, bits, &mut packed);
+            black_box(packed.len());
+        });
+        let mut unpacked = vec![0u32; len];
+        suite.bench_throughput(
+            &format!("wire/unpack_{bits}bit/1M"),
+            len as f64,
+            "word",
+            || {
+                unpack_words_into(&packed, bits, &mut unpacked);
+                black_box(unpacked.len());
+            },
+        );
+    }
+    // Re-pin `packed` to the 8-bit payload for the volume scalars below.
+    pack_words_into(&words, 8, &mut packed);
+
+    // The retained per-element scalar codec — the pre-vectorization
+    // baseline the lane codec is measured against (and the property
+    // tests' oracle). The measured ratio is the real-machine companion
+    // to the analytic `codec_model/*` scalars in BENCH_wire.json.
+    let mut ref_packed = Vec::with_capacity(len);
+    let r = suite
+        .bench_throughput("wire/pack_8bit_scalar_ref/1M", len as f64, "word", || {
+            reference::pack_scalar(&words, 8, &mut ref_packed);
+            black_box(ref_packed.len());
+        })
+        .mean_s();
+    let f = suite
+        .bench_throughput("wire/pack_8bit_vector/1M", len as f64, "word", || {
+            pack_words_into(&words, 8, &mut ref_packed);
+            black_box(ref_packed.len());
+        })
+        .mean_s();
+    suite.record_scalar("wire/codec_speedup/pack8_measured", r / f, "x");
+
+    // Fused quantize+pack / unpack+dequantize — the one-pass edge
+    // kernels the cluster backends call per chunk.
+    let mut fused = Vec::with_capacity(len);
+    suite.bench_throughput("wire/fused_quantize_pack_8bit/1M", len as f64, "elem", || {
+        pack_quantized_into(&gs, &q, scale, &mut fused);
+        black_box(fused.len());
     });
-    let mut unpacked = vec![0u32; len];
-    suite.bench_throughput("wire/unpack_8bit/1M", len as f64, "word", || {
-        unpack_words_into(&packed, 8, &mut unpacked);
-        black_box(unpacked.len());
-    });
+    let mut floats = vec![0.0f32; len];
+    suite.bench_throughput(
+        "wire/fused_unpack_dequantize_8bit/1M",
+        len as f64,
+        "elem",
+        || {
+            unpack_dequantize_into(&fused, &q, scale, &mut floats);
+            black_box(floats.len());
+        },
+    );
+
+    // Parallel leader reduce: the 16-port exact switch's word-domain
+    // shard accumulation at 1/2/4/8 range-splitting threads. Speedups
+    // are measured on whatever host runs the bench; the committed
+    // artifact's modeled curve is the Amdahl companion.
+    let rlen = 262_144usize;
+    let rshards: Vec<Vec<u32>> = (0..16)
+        .map(|s| {
+            let mut rng = Pcg32::seeded(0x5CA1E + s as u64);
+            (0..rlen).map(|_| (rng.normal().abs() * 40.0) as u32 & 0xFF).collect()
+        })
+        .collect();
+    let views: Vec<&[u32]> = rshards.iter().map(|v| v.as_slice()).collect();
+    let mut avg = Vec::with_capacity(rlen);
+    let mut t1 = 0.0f64;
+    for threads in [1usize, 2, 4, 8] {
+        let mut sw = OptIncSwitch::exact(Scenario::table1(3).unwrap());
+        sw.set_reduce_plan(ReducePlan::with_threads(threads).with_threshold(1));
+        let t = suite
+            .bench_throughput(
+                &format!("reduce/switch16_words/t{threads}/256k"),
+                rlen as f64,
+                "elem",
+                || {
+                    sw.average_words_into(&views, &mut avg);
+                    black_box(avg.len());
+                },
+            )
+            .mean_s();
+        if threads == 1 {
+            t1 = t;
+        } else {
+            suite.record_scalar(
+                &format!("reduce/speedup_measured/t{threads}"),
+                t1 / t,
+                "x",
+            );
+        }
+    }
     // The f32 wire's per-chunk work for the same payload (a memcpy).
     let mut f32_buf = vec![0.0f32; len];
     suite.bench_throughput("wire/f32_copy/1M", len as f64, "elem", || {

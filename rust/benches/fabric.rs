@@ -4,7 +4,7 @@
 //! and a cheap bit-exactness self-check against the flat quantized mean
 //! on every swept configuration.
 
-use optinc::collectives::engine::ChunkedDriver;
+use optinc::collectives::engine::{ChunkedDriver, ReducePlan};
 use optinc::collectives::fabric::{FabricAllReduce, FabricMode, FabricTopology};
 use optinc::collectives::wire::packed_len;
 use optinc::config::HardwareModel;
@@ -118,6 +118,45 @@ fn main() {
                 (len * 4) as f64,
                 "B",
             );
+        }
+    }
+
+    // Reduce-threads sweep: the depth-2 fabric's end-to-end stream at
+    // 1/2/4/8 range-splitting threads (per-leaf unpack + every level
+    // switch's word accumulation). Threshold forced to 1 so the chosen
+    // thread count is what actually runs; outputs are bit-identical at
+    // every setting, so only wall-clock moves.
+    {
+        let topo = FabricTopology::uniform(4, 2).unwrap();
+        let workers = 16usize;
+        let len = 100_000usize;
+        let base = shards(workers, len, 0x7EADC);
+        let mut t1 = 0.0f64;
+        for threads in [1usize, 2, 4, 8] {
+            let mut fabric = FabricAllReduce::exact(8, &topo, FabricMode::Remainder).unwrap();
+            fabric.set_reduce_plan(ReducePlan::with_threads(threads).with_threshold(1));
+            let mut driver = ChunkedDriver::new(len / 8);
+            let mut work = base.clone();
+            let t = suite
+                .bench_throughput(
+                    &format!("fabric_reduce/t{threads}/{workers}x{len}"),
+                    (workers * len) as f64,
+                    "elem",
+                    || {
+                        work.clone_from(&base);
+                        black_box(driver.all_reduce(&mut fabric, &mut work));
+                    },
+                )
+                .mean_s();
+            if threads == 1 {
+                t1 = t;
+            } else {
+                suite.record_scalar(
+                    &format!("fabric_reduce/speedup_measured/t{threads}"),
+                    t1 / t,
+                    "x",
+                );
+            }
         }
     }
 

@@ -356,11 +356,24 @@ where
                 }
             }
 
+            // Leader reduce time: the word-domain reduce touches
+            // n × elems words; the range-splitting reduce divides that
+            // across `reduce_parallelism` lanes. The default per-word
+            // cost is 0.0, so the clock is unchanged unless a run opts
+            // in via `with_reduce_model` — results and stats never
+            // depend on this term.
+            let reduce_s = if elems > 0 {
+                cl.reduce_per_word_s * (n * elems) as f64
+                    / cl.reduce_parallelism.max(1) as f64
+            } else {
+                0.0
+            };
+
             // Switch traversal: one hop per fabric level; a chunk that
             // beats a level's reconfiguration gate waits for it (the
             // wait is measured — streaming hides most of it behind
             // later uploads).
-            let mut t = at_root;
+            let mut t = at_root + reduce_s;
             for l in 0..hops {
                 let ready = t.max(level_free[l]);
                 reconfig_wait += (level_gate[l] - ready).max(0.0);
@@ -560,6 +573,58 @@ mod tests {
             .run(1, |_| Toy { dim: 256 }, &mut ring, &mut metrics)
             .unwrap();
         assert_eq!(records[0].virtual_reconfig_wait_s, Some(0.0));
+    }
+
+    #[test]
+    fn modeled_reduce_time_scales_with_parallelism() {
+        // The reduce term only moves the virtual clock: more modeled
+        // parallelism → shorter steps, and the free default (cost 0.0)
+        // is fastest of all. Stats, losses, and byte counts must be
+        // bit-identical across every setting.
+        // One chunk per step so the reduce term sits on the critical
+        // path exactly once — the extra-time ratio below is then exact.
+        let run_with = |per_word_s: f64, parallelism: usize| {
+            let mut ring = RingAllReduce::new();
+            let mut metrics = ClusterMetrics::new("reduce-model");
+            event_cluster(4)
+                .with_chunk_elems(512)
+                .with_reduce_model(per_word_s)
+                .with_reduce_parallelism(parallelism)
+                .run(2, |_| Toy { dim: 512 }, &mut ring, &mut metrics)
+                .unwrap()
+        };
+        let free = run_with(0.0, 1);
+        let serial = run_with(1e-7, 1);
+        let eight = run_with(1e-7, 8);
+        let t = |rs: &[crate::cluster::StepRecord]| rs[0].virtual_time_s.unwrap();
+        assert!(
+            t(&serial) > t(&eight) && t(&eight) > t(&free),
+            "expected serial {} > 8-way {} > free {}",
+            t(&serial),
+            t(&eight),
+            t(&free)
+        );
+        // 8-way parallelism shrinks only the reduce term: the extra
+        // time over the free run must drop by exactly 8x per step.
+        let extra_serial = t(&serial) - t(&free);
+        let extra_eight = t(&eight) - t(&free);
+        assert!(
+            (extra_serial / extra_eight - 8.0).abs() < 1e-6,
+            "reduce term must divide by the parallelism: {extra_serial} vs {extra_eight}"
+        );
+        for (a, b) in free.iter().zip(serial.iter()).chain(free.iter().zip(eight.iter())) {
+            assert_eq!(a.stats, b.stats, "time model must not touch stats");
+            assert_eq!(a.mean_loss, b.mean_loss);
+            assert_eq!(
+                a.observed_wire_bytes_per_server,
+                b.observed_wire_bytes_per_server
+            );
+        }
+        // with_reduce_parallelism(0) normalizes to 1.
+        assert_eq!(
+            Cluster::new(2).with_reduce_parallelism(0).reduce_parallelism,
+            1
+        );
     }
 
     #[test]

@@ -172,6 +172,18 @@ pub struct Cluster {
     /// compute floor, per-element cost, log-normal jitter, and
     /// deterministic per-worker straggler factors.
     pub compute: ComputeModel,
+    /// Leader reduce parallelism the event backend's time model divides
+    /// the modeled word-domain reduce cost by (`max(1)`). Mirrors the
+    /// real thread count the threaded backend's collective uses via
+    /// [`ChunkedAllReduce::set_reduce_threads`]; it never changes any
+    /// result or stat — only `virtual_time_s`.
+    pub reduce_parallelism: usize,
+    /// Virtual seconds the leader spends per (worker × element) word in
+    /// the reduce, **before** dividing by `reduce_parallelism`. Default
+    /// 0.0: the reduce is free, which keeps every previously pinned
+    /// virtual-time number (BENCH_scale.json, conformance deadlines)
+    /// unchanged unless a run opts in.
+    pub reduce_per_word_s: f64,
 }
 
 /// Chunks a `total`-element gradient splits into at grain `chunk`
@@ -195,7 +207,29 @@ impl Cluster {
             backend: Backend::default(),
             seed: 0,
             compute: ComputeModel::default(),
+            reduce_parallelism: 1,
+            reduce_per_word_s: 0.0,
         }
+    }
+
+    /// Builder: set the leader reduce parallelism the event backend's
+    /// time model assumes (0 is normalized to 1; callers resolving an
+    /// `--reduce-threads 0 = auto` flag should pass the resolved count).
+    pub fn with_reduce_parallelism(mut self, parallelism: usize) -> Cluster {
+        self.reduce_parallelism = parallelism.max(1);
+        self
+    }
+
+    /// Builder: set the modeled per-word reduce cost (virtual seconds
+    /// per worker × element word). 0.0 — the default — disables the
+    /// term entirely.
+    pub fn with_reduce_model(mut self, per_word_s: f64) -> Cluster {
+        assert!(
+            per_word_s.is_finite() && per_word_s >= 0.0,
+            "per-word reduce cost must be finite and non-negative"
+        );
+        self.reduce_per_word_s = per_word_s;
+        self
     }
 
     /// Builder: override the streaming grain.

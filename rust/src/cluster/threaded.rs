@@ -4,7 +4,13 @@
 //! gradient computation runs genuinely parallel, the collective itself
 //! stays single-threaded (the paper's switch is one physical device),
 //! and a wall-clock watchdog keeps faults from deadlocking the
-//! pipeline. The discrete-event backend ([`super::event`]) replays this
+//! pipeline. The leader's *word-domain reduce* may still fan out across
+//! threads internally when the collective carries a
+//! [`ReducePlan`](crate::collectives::engine::ReducePlan) (`pipeline
+//! --reduce-threads`): that parallelism lives entirely inside
+//! `reduce_wire_chunk`, splits the element range into disjoint
+//! contiguous subranges with identical arithmetic, and therefore never
+//! changes a result, a stat, or a byte count — only wall-clock time. The discrete-event backend ([`super::event`]) replays this
 //! exact wire protocol against a virtual clock; the conformance harness
 //! in `rust/tests/backend_conformance.rs` pins the two bit-exact.
 //!

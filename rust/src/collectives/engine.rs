@@ -19,7 +19,14 @@
 //!   path stops allocating per step;
 //! - [`ChunkedDriver`] — an in-memory streaming driver (benches,
 //!   property tests) that splits resident shards into chunks and runs
-//!   them through a collective.
+//!   them through a collective;
+//! - [`ReducePlan`] + [`par_ranges_mut`]/[`par_for_each_mut`] — the
+//!   range-splitting scoped-thread harness every leader's word-domain
+//!   reduce runs on. Each worker thread owns a disjoint contiguous
+//!   `&mut` subrange and applies the same per-element arithmetic the
+//!   sequential loop would, so the reduced words are bit-exact at any
+//!   thread count by construction; chunks below the plan's element
+//!   threshold run inline and keep their exact sequential cost profile.
 
 use super::wire::{WireAvg, WireChunk, WireFormat};
 use super::CollectiveStats;
@@ -96,6 +103,166 @@ pub trait ChunkedAllReduce {
             self.name()
         );
     }
+
+    /// Set the leader's reduce parallelism: `0` = one thread per core
+    /// ([`ReducePlan::auto`]), `1` = sequential, `n` = exactly `n`
+    /// scoped threads. Bit-exactness is unaffected — the split is over
+    /// disjoint element ranges with identical arithmetic. Default is a
+    /// no-op for collectives with no word-domain reduce (ring,
+    /// two-tree).
+    fn set_reduce_threads(&mut self, _threads: usize) {}
+}
+
+/// Default element-count threshold below which [`par_ranges_mut`] /
+/// [`par_for_each_mut`] skip the thread split and run inline: spawning
+/// scoped threads costs a few microseconds, so small chunks (the
+/// conformance grains, probe steps) keep their exact sequential cost
+/// profile.
+pub const PAR_SEQ_THRESHOLD: usize = 8192;
+
+/// Resolved `std::thread::available_parallelism()` (1 when unknown).
+pub fn auto_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// How a leader splits its word-domain reduce across scoped threads.
+/// The plan is pure policy: `threads` worker threads, except that work
+/// below `threshold` elements runs inline on the calling thread.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReducePlan {
+    /// Scoped worker threads to split element ranges across
+    /// (1 = always sequential).
+    pub threads: usize,
+    /// Element count below which the split is skipped.
+    pub threshold: usize,
+}
+
+impl ReducePlan {
+    /// Always-sequential plan — the pre-parallel leader behavior.
+    pub fn sequential() -> ReducePlan {
+        ReducePlan {
+            threads: 1,
+            threshold: PAR_SEQ_THRESHOLD,
+        }
+    }
+
+    /// One thread per available core.
+    pub fn auto() -> ReducePlan {
+        ReducePlan {
+            threads: auto_threads(),
+            threshold: PAR_SEQ_THRESHOLD,
+        }
+    }
+
+    /// `0` means auto (`available_parallelism`), otherwise exactly
+    /// `threads` — the `--reduce-threads` CLI convention.
+    pub fn with_threads(threads: usize) -> ReducePlan {
+        if threads == 0 {
+            ReducePlan::auto()
+        } else {
+            ReducePlan {
+                threads,
+                threshold: PAR_SEQ_THRESHOLD,
+            }
+        }
+    }
+
+    /// Same plan with a different sequential-fallback threshold
+    /// (tests force `1` so tiny conformance grains exercise the split).
+    pub fn with_threshold(mut self, threshold: usize) -> ReducePlan {
+        self.threshold = threshold;
+        self
+    }
+
+    /// Worker threads actually used for `work` elements (1 = inline).
+    fn workers_for(&self, work: usize) -> usize {
+        if self.threads <= 1 || work < self.threshold {
+            1
+        } else {
+            self.threads.min(work.max(1))
+        }
+    }
+}
+
+impl Default for ReducePlan {
+    fn default() -> ReducePlan {
+        ReducePlan::auto()
+    }
+}
+
+/// Split `out` into near-equal contiguous subranges and run
+/// `f(start, sub)` for each on `std::thread::scope` workers (inline
+/// when the plan resolves to one). Every invocation owns a disjoint
+/// `&mut` subrange starting at element `start` of `out`; callers index
+/// their read-only inputs with the same `start`, so the parallel result
+/// is bit-identical to the sequential one.
+pub fn par_ranges_mut<T, F>(plan: ReducePlan, out: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let workers = plan.workers_for(out.len());
+    if workers <= 1 {
+        f(0, out);
+        return;
+    }
+    let len = out.len();
+    let base = len / workers;
+    let extra = len % workers;
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut rest = out;
+        let mut start = 0usize;
+        for i in 0..workers {
+            let take = base + usize::from(i < extra);
+            let (head, tail) = rest.split_at_mut(take);
+            rest = tail;
+            s.spawn(move || f(start, head));
+            start += take;
+        }
+    });
+}
+
+/// Run `f(index, item)` for every item, splitting the items into
+/// near-equal contiguous groups across scoped threads (inline when the
+/// plan resolves to one worker). `work_per_item` — elements each item
+/// represents — feeds the plan's sequential-fallback threshold, so a
+/// handful of tiny buffers never pays the spawn cost. Used for the
+/// per-leaf unpack loops, where each item is one worker's packed chunk.
+pub fn par_for_each_mut<T, F>(plan: ReducePlan, work_per_item: usize, items: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    let total = items.len().saturating_mul(work_per_item);
+    let workers = plan.workers_for(total).min(items.len().max(1));
+    if workers <= 1 {
+        for (i, item) in items.iter_mut().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    let len = items.len();
+    let base = len / workers;
+    let extra = len % workers;
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut rest = items;
+        let mut start = 0usize;
+        for i in 0..workers {
+            let take = base + usize::from(i < extra);
+            let (head, tail) = rest.split_at_mut(take);
+            rest = tail;
+            s.spawn(move || {
+                for (j, item) in head.iter_mut().enumerate() {
+                    f(start + j, item);
+                }
+            });
+            start += take;
+        }
+    });
 }
 
 /// Validate that a chunk set is aligned (same offset and length for
@@ -564,6 +731,65 @@ mod tests {
     #[should_panic(expected = "at least one worker")]
     fn session_rejects_zero_workers() {
         Session::default().begin(0, 10);
+    }
+
+    #[test]
+    fn par_ranges_cover_every_element_exactly_once() {
+        // Ragged splits (len not divisible by threads) must still tile
+        // the output: each element written once, with the right start.
+        for threads in [1usize, 2, 3, 7] {
+            for len in [0usize, 1, 7, 96, 97, 98, 1000] {
+                let plan = ReducePlan::with_threads(threads).with_threshold(1);
+                let mut out = vec![0u32; len];
+                par_ranges_mut(plan, &mut out, |start, sub| {
+                    for (j, slot) in sub.iter_mut().enumerate() {
+                        *slot += (start + j) as u32 + 1;
+                    }
+                });
+                let expect: Vec<u32> = (0..len as u32).map(|i| i + 1).collect();
+                assert_eq!(out, expect, "threads={threads} len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn par_ranges_fall_back_below_threshold() {
+        // Below the threshold the closure runs inline over the whole
+        // slice in one call (start == 0, full length).
+        let plan = ReducePlan::with_threads(8).with_threshold(1000);
+        let mut out = vec![0u8; 10];
+        let calls = std::sync::atomic::AtomicUsize::new(0);
+        par_ranges_mut(plan, &mut out, |start, sub| {
+            calls.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            assert_eq!(start, 0);
+            assert_eq!(sub.len(), 10);
+        });
+        assert_eq!(calls.load(std::sync::atomic::Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn par_for_each_visits_every_item_with_its_index() {
+        for threads in [1usize, 2, 7] {
+            let plan = ReducePlan::with_threads(threads).with_threshold(1);
+            let mut items: Vec<Vec<u32>> = (0..5).map(|_| vec![0; 3]).collect();
+            par_for_each_mut(plan, 3, &mut items, |i, item| {
+                for slot in item.iter_mut() {
+                    *slot = i as u32;
+                }
+            });
+            for (i, item) in items.iter().enumerate() {
+                assert_eq!(item, &vec![i as u32; 3], "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_plan_zero_means_auto() {
+        let plan = ReducePlan::with_threads(0);
+        assert_eq!(plan.threads, auto_threads());
+        assert!(plan.threads >= 1);
+        assert_eq!(ReducePlan::with_threads(3).threads, 3);
+        assert_eq!(ReducePlan::sequential().threads, 1);
     }
 
     #[test]

@@ -43,10 +43,12 @@ use crate::onn::OnnNetwork;
 use crate::optinc::switch::{OnnMode, OptIncSwitch};
 use crate::quant::GlobalQuantizer;
 
-use super::engine::{BufferPool, ChunkedAllReduce, Session, ShardChunk};
+use super::engine::{
+    par_for_each_mut, BufferPool, ChunkedAllReduce, ReducePlan, Session, ShardChunk,
+};
 use super::wire::{
-    apply_wire_avg, check_wire_aligned, pack_chunks_at_edge, pack_words_into, packed_len,
-    recycle_wire, unpack_words_into, WireAvg, WireChunk, WireFormat,
+    apply_wire_avg, check_wire_aligned, pack_chunks_at_edge, pack_words_checked_into,
+    packed_len, recycle_wire, unpack_words_into, WireAvg, WireChunk, WireFormat,
 };
 use super::CollectiveStats;
 
@@ -167,10 +169,15 @@ pub struct FabricAllReduce {
     bits: u32,
     levels: Vec<Level>,
     session: Session,
+    reduce: ReducePlan,
     word_pool: BufferPool<u32>,
     sum_pool: BufferPool<u64>,
     byte_pool: BufferPool<u8>,
     float_pool: BufferPool<f32>,
+    // Outer per-leaf buffer list, reused across chunks (the inner
+    // buffers cycle through `word_pool`; the routes hand the emptied
+    // outer Vec back so its capacity survives).
+    leaf_bufs: Vec<Vec<u32>>,
 }
 
 impl FabricAllReduce {
@@ -214,11 +221,31 @@ impl FabricAllReduce {
             bits,
             levels,
             session: Session::default(),
+            reduce: ReducePlan::auto(),
             word_pool: BufferPool::new(),
             sum_pool: BufferPool::new(),
             byte_pool: BufferPool::new(),
             float_pool: BufferPool::new(),
+            leaf_bufs: Vec::new(),
         })
+    }
+
+    /// Pin the full reduce plan for the fabric and every level switch
+    /// (tests force a threshold of 1 so tiny chunks exercise the split).
+    pub fn set_reduce_plan(&mut self, plan: ReducePlan) {
+        self.reduce = plan;
+        for l in &mut self.levels {
+            l.switch.set_reduce_plan(plan);
+        }
+    }
+
+    /// Pool-growth observability (steady-state zero-growth tests).
+    pub fn word_pool_grows(&self) -> u64 {
+        self.word_pool.grows()
+    }
+
+    pub fn word_pool_allocations(&self) -> u64 {
+        self.word_pool.allocations()
     }
 
     /// Exact-oracle switches at every level ([`Scenario::fabric_level`]
@@ -313,7 +340,8 @@ impl FabricAllReduce {
     /// run with unused ports zero-wired and receiver AGC rescaling by
     /// the populated count — modeled as the exact quantized mean over
     /// the members (a native net is wired for the full fan-in).
-    fn route_basic(&mut self, mut nodes: Vec<Vec<u32>>, len: usize) -> Vec<u32> {
+    fn route_basic(&mut self, leaves: &mut Vec<Vec<u32>>, len: usize) -> Vec<u32> {
+        let mut nodes = std::mem::take(leaves);
         for li in 0..self.levels.len() {
             let fan_in = self.levels[li].fan_in;
             let mut next: Vec<Vec<u32>> = Vec::with_capacity(nodes.len().div_ceil(fan_in));
@@ -338,7 +366,13 @@ impl FabricAllReduce {
             for buf in nodes.drain(..) {
                 self.word_pool.put(buf);
             }
-            nodes = next;
+            if li == 0 {
+                // Hand the emptied leaf-level outer Vec back to the
+                // caller so its capacity is reused next chunk.
+                *leaves = std::mem::replace(&mut nodes, next);
+            } else {
+                nodes = next;
+            }
         }
         assert_eq!(nodes.len(), 1, "fabric did not reduce to a single root output");
         nodes.pop().unwrap()
@@ -352,17 +386,17 @@ impl FabricAllReduce {
     /// exactly the worker count `n`, and the formula is identical to
     /// [`quantized_mean`](crate::quant::quantized_mean) over all leaf
     /// words: bit-exact for any worker count and any grouping.
-    fn route_remainder(&mut self, nodes: Vec<Vec<u32>>, len: usize) -> Vec<u32> {
+    fn route_remainder(&mut self, nodes: &mut Vec<Vec<u32>>, len: usize) -> Vec<u32> {
         let n = nodes.len();
         let mut sums: Vec<Vec<u64>> = Vec::with_capacity(n);
-        for node in &nodes {
+        for node in nodes.iter() {
             let mut s = self.sum_pool.take(len);
             for (o, &w) in s.iter_mut().zip(node.iter()) {
                 *o = w as u64;
             }
             sums.push(s);
         }
-        for buf in nodes {
+        for buf in nodes.drain(..) {
             self.word_pool.put(buf);
         }
         for li in 0..self.levels.len() {
@@ -442,29 +476,46 @@ impl ChunkedAllReduce for FabricAllReduce {
         self.depth() as u32
     }
 
+    fn set_reduce_threads(&mut self, threads: usize) {
+        self.reduce = ReducePlan::with_threads(threads);
+        for l in &mut self.levels {
+            l.switch.set_reduce_threads(threads);
+        }
+    }
+
     fn reduce_wire_chunk(&mut self, chunks: &[WireChunk]) -> WireAvg {
         let n = self.session.workers();
         assert_eq!(chunks.len(), n, "fabric opened for {n} workers");
         let (_, elements, scale) = check_wire_aligned(chunks, self.bits);
 
-        // 1. Unpack the leaf transmissions into recycled word buffers.
-        let mut nodes: Vec<Vec<u32>> = Vec::with_capacity(n);
-        for c in chunks {
-            let mut buf = self.word_pool.take(elements);
-            unpack_words_into(&c.words, self.bits, &mut buf);
-            nodes.push(buf);
+        // 1. Unpack the leaf transmissions into recycled word buffers —
+        //    the outer Vec is a field so steady-state chunks allocate
+        //    nothing, and the per-leaf decode fans out across the
+        //    reduce plan's threads (each leaf is independent).
+        let mut nodes = std::mem::take(&mut self.leaf_bufs);
+        nodes.clear();
+        for _ in 0..n {
+            nodes.push(self.word_pool.take(elements));
         }
+        let bits = self.bits;
+        par_for_each_mut(self.reduce, elements, &mut nodes, |i, buf| {
+            unpack_words_into(&chunks[i].words, bits, buf);
+        });
 
-        // 2. One traversal up the cascade — word domain only.
+        // 2. One traversal up the cascade — word domain only. The
+        //    routes drain `nodes` and give the emptied outer Vec back.
         let root = match self.mode {
-            FabricMode::Basic => self.route_basic(nodes, elements),
-            FabricMode::Remainder => self.route_remainder(nodes, elements),
+            FabricMode::Basic => self.route_basic(&mut nodes, elements),
+            FabricMode::Remainder => self.route_remainder(&mut nodes, elements),
         };
+        self.leaf_bufs = nodes;
 
         // 3. Pack the root average once; the Arc rides the splitter tree
-        //    back down to every worker.
+        //    back down to every worker. Checked pack: the root words
+        //    come out of level switches, not the clamping quantizer, so
+        //    a range bug upstream must fail loudly in release too.
         let mut packed = self.byte_pool.take_empty(packed_len(elements, self.bits));
-        pack_words_into(&root, self.bits, &mut packed);
+        pack_words_checked_into(&root, self.bits, &mut packed);
         let avg = WireAvg {
             words: packed.as_slice().into(),
             scale,
@@ -674,5 +725,64 @@ mod tests {
         let mut work = base.clone();
         fabric.all_reduce(&mut work);
         assert_eq!(work[0], want);
+    }
+
+    #[test]
+    fn steady_state_chunks_stop_growing_pools() {
+        // After the first chunk primes the pools and the leaf-buffer
+        // list, further chunks must recycle everything: the word pool's
+        // allocation and grow counters freeze.
+        let topo = FabricTopology::uniform(4, 2).unwrap();
+        for mode in [FabricMode::Remainder, FabricMode::Basic] {
+            let mut fabric = FabricAllReduce::exact(8, &topo, mode).unwrap();
+            let base = random_shards(16, 500, 111);
+            let mut work = base.clone();
+            let mut driver = ChunkedDriver::new(64);
+            driver.all_reduce(&mut fabric, &mut work);
+
+            let allocs = fabric.word_pool_allocations();
+            let grows = fabric.word_pool_grows();
+            for step in 0..5 {
+                let mut again = base.clone();
+                driver.all_reduce(&mut fabric, &mut again);
+                assert_eq!(
+                    fabric.word_pool_allocations(),
+                    allocs,
+                    "step {step} allocated new word buffers in steady state"
+                );
+                assert_eq!(
+                    fabric.word_pool_grows(),
+                    grows,
+                    "step {step} grew a pooled word buffer in steady state"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_reduce_is_bit_exact_vs_sequential() {
+        // Range splitting must never change a single word: run the same
+        // stream sequentially and at several thread counts (threshold 1
+        // so even tiny chunks take the parallel path) and demand full
+        // equality of every worker's output.
+        let topo = FabricTopology::uniform(4, 2).unwrap();
+        for mode in [FabricMode::Remainder, FabricMode::Basic] {
+            let base = random_shards(16, 700, 121);
+            let mut seq_fabric = FabricAllReduce::exact(8, &topo, mode).unwrap();
+            seq_fabric.set_reduce_plan(ReducePlan::sequential());
+            let mut seq = base.clone();
+            let mut driver = ChunkedDriver::new(97);
+            driver.all_reduce(&mut seq_fabric, &mut seq);
+
+            for threads in [2usize, 7] {
+                let mut par_fabric = FabricAllReduce::exact(8, &topo, mode).unwrap();
+                par_fabric
+                    .set_reduce_plan(ReducePlan::with_threads(threads).with_threshold(1));
+                let mut par = base.clone();
+                let mut d = ChunkedDriver::new(97);
+                d.all_reduce(&mut par_fabric, &mut par);
+                assert_eq!(par, seq, "threads={threads} mode={mode:?} diverged");
+            }
+        }
     }
 }

@@ -17,10 +17,13 @@ use crate::config::Scenario;
 use crate::optinc::cascade::{Cascade, CascadeMode};
 use crate::quant::GlobalQuantizer;
 
-use super::engine::{BufferPool, ChunkedAllReduce, Session, ShardChunk};
+use super::engine::{
+    par_for_each_mut, par_ranges_mut, BufferPool, ChunkedAllReduce, ReducePlan, Session,
+    ShardChunk,
+};
 use super::wire::{
-    apply_wire_avg, check_wire_aligned, pack_chunks_at_edge, pack_words_into, packed_len,
-    recycle_wire, unpack_words_into, WireAvg, WireChunk, WireFormat,
+    apply_wire_avg, check_wire_aligned, pack_chunks_at_edge, pack_words_checked_into,
+    packed_len, recycle_wire, unpack_words_into, WireAvg, WireChunk, WireFormat,
 };
 use super::CollectiveStats;
 
@@ -29,9 +32,13 @@ pub struct HierarchicalOptInc {
     pub cascade: Cascade,
     pub quantizer: GlobalQuantizer,
     session: Session,
+    reduce: ReducePlan,
     word_pool: BufferPool<u32>,
     byte_pool: BufferPool<u8>,
     float_pool: BufferPool<f32>,
+    // Outer per-server buffer list, reused across chunks (the inner
+    // buffers cycle through `word_pool`).
+    shard_bufs: Vec<Vec<u32>>,
 }
 
 impl HierarchicalOptInc {
@@ -43,14 +50,31 @@ impl HierarchicalOptInc {
             cascade,
             quantizer: GlobalQuantizer::new(bits),
             session: Session::default(),
+            reduce: ReducePlan::auto(),
             word_pool: BufferPool::new(),
             byte_pool: BufferPool::new(),
             float_pool: BufferPool::new(),
+            shard_bufs: Vec::new(),
         }
     }
 
     pub fn capacity(&self) -> usize {
         self.cascade.capacity()
+    }
+
+    /// Pin the full reduce plan (tests force a threshold of 1 so tiny
+    /// chunks exercise the parallel split).
+    pub fn set_reduce_plan(&mut self, plan: ReducePlan) {
+        self.reduce = plan;
+    }
+
+    /// Pool-growth observability (steady-state zero-growth tests).
+    pub fn word_pool_grows(&self) -> u64 {
+        self.word_pool.grows()
+    }
+
+    pub fn word_pool_allocations(&self) -> u64 {
+        self.word_pool.allocations()
     }
 }
 
@@ -94,45 +118,77 @@ impl ChunkedAllReduce for HierarchicalOptInc {
         }
     }
 
+    fn set_reduce_threads(&mut self, threads: usize) {
+        self.reduce = ReducePlan::with_threads(threads);
+    }
+
     fn reduce_wire_chunk(&mut self, chunks: &[WireChunk]) -> WireAvg {
         let n_servers = self.session.workers();
         assert_eq!(chunks.len(), n_servers, "cascade wired for {n_servers} servers");
         let bits = self.scenario.bits;
         let (_, elements, scale) = check_wire_aligned(chunks, bits);
 
-        // Unpack each server's transmission into recycled word buffers.
-        let mut words: Vec<Vec<u32>> = Vec::with_capacity(n_servers);
-        for c in chunks {
-            let mut buf = self.word_pool.take(elements);
-            unpack_words_into(&c.words, bits, &mut buf);
-            words.push(buf);
+        // Unpack each server's transmission into recycled word buffers
+        // (outer Vec reused across chunks, per-server decode split
+        // across scoped threads for large chunks).
+        let mut words = std::mem::take(&mut self.shard_bufs);
+        words.clear();
+        for _ in 0..n_servers {
+            words.push(self.word_pool.take(elements));
         }
+        par_for_each_mut(self.reduce, elements, &mut words, |i, buf| {
+            unpack_words_into(&chunks[i].words, bits, buf);
+        });
 
-        // One cascade traversal per element — word domain only.
+        // One cascade traversal per element — word domain only. Large
+        // chunks split the element range across scoped threads; the
+        // sequential arm keeps the pooled per-element gather buffer
+        // (allocation-free), the parallel arm gives each worker its own
+        // small gather buffer. `Cascade::aggregate` is `&self`, so the
+        // per-element arithmetic — and therefore the result — is
+        // identical either way.
         let mut avg_words = self.word_pool.take(elements);
-        let mut word_buf = self.word_pool.take(n_servers);
-        for i in 0..elements {
-            for (w, shard) in word_buf.iter_mut().zip(&words) {
-                *w = shard[i];
+        let cascade = &self.cascade;
+        let shards = &words;
+        if self.reduce.threads <= 1 || elements < self.reduce.threshold {
+            let mut word_buf = self.word_pool.take(n_servers);
+            for i in 0..elements {
+                for (w, shard) in word_buf.iter_mut().zip(shards) {
+                    *w = shard[i];
+                }
+                avg_words[i] = cascade.aggregate(&word_buf);
             }
-            avg_words[i] = self.cascade.aggregate(&word_buf);
+            self.word_pool.put(word_buf);
+        } else {
+            par_ranges_mut(self.reduce, &mut avg_words, |start, sub| {
+                let mut word_buf = vec![0u32; n_servers];
+                for (j, slot) in sub.iter_mut().enumerate() {
+                    let i = start + j;
+                    for (w, shard) in word_buf.iter_mut().zip(shards) {
+                        *w = shard[i];
+                    }
+                    *slot = cascade.aggregate(&word_buf);
+                }
+            });
         }
 
         // Pack the final quantized average once for the splitter
-        // broadcast.
+        // broadcast. Checked: the cascade output is a trust boundary
+        // for the wire (a word outside the bit range must fail loudly
+        // in release builds, not truncate into the broadcast).
         let mut packed = self.byte_pool.take_empty(packed_len(elements, bits));
-        pack_words_into(&avg_words, bits, &mut packed);
+        pack_words_checked_into(&avg_words, bits, &mut packed);
         let avg = WireAvg {
             words: packed.as_slice().into(),
             scale,
             elements,
         };
         self.byte_pool.put(packed);
-        self.word_pool.put(word_buf);
         self.word_pool.put(avg_words);
-        for buf in words {
+        for buf in words.drain(..) {
             self.word_pool.put(buf);
         }
+        self.shard_bufs = words;
 
         self.session.chunk_done(
             elements,
@@ -226,6 +282,46 @@ mod tests {
         let tol = c.quantizer.max_abs_error(scale) * 2.0 + 1e-6;
         c.all_reduce(&mut shards);
         assert!(max_diff(&shards[0], &want) <= tol * 2.0);
+    }
+
+    #[test]
+    fn steady_state_chunks_stop_growing_pools() {
+        // Satellite regression: the outer per-server Vec<Vec<u32>> used
+        // to be reallocated every chunk. With the buffer list held as a
+        // field and inner buffers pooled, a warm stream must neither
+        // allocate nor grow.
+        let sc = Scenario::table1(1).unwrap();
+        let mut c = HierarchicalOptInc::new(sc, CascadeMode::Remainder);
+        let base = random_shards(8, 500, 41);
+        let mut driver = ChunkedDriver::new(64); // ragged last chunk (52)
+        let mut warm = base.clone();
+        driver.all_reduce(&mut c, &mut warm);
+        let allocs = c.word_pool_allocations();
+        let grows = c.word_pool_grows();
+        for _ in 0..5 {
+            let mut s = base.clone();
+            driver.all_reduce(&mut c, &mut s);
+        }
+        assert_eq!(c.word_pool_allocations(), allocs, "warm steps must not allocate");
+        assert_eq!(c.word_pool_grows(), grows, "warm steps must not grow");
+    }
+
+    #[test]
+    fn parallel_reduce_is_bit_exact_vs_sequential() {
+        use crate::collectives::engine::ReducePlan;
+        let sc = Scenario::table1(1).unwrap();
+        let base = random_shards(16, 700, 43);
+        let mut want = base.clone();
+        let mut seq = HierarchicalOptInc::new(sc.clone(), CascadeMode::Remainder);
+        seq.set_reduce_plan(ReducePlan::sequential());
+        seq.all_reduce(&mut want);
+        for threads in [2usize, 7] {
+            let mut got = base.clone();
+            let mut par = HierarchicalOptInc::new(sc.clone(), CascadeMode::Remainder);
+            par.set_reduce_plan(ReducePlan::with_threads(threads).with_threshold(1));
+            par.all_reduce(&mut got);
+            assert_eq!(got, want, "threads={threads}");
+        }
     }
 
     #[test]

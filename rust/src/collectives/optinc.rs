@@ -33,10 +33,12 @@ use crate::optinc::switch::OptIncSwitch;
 use crate::quant::GlobalQuantizer;
 use crate::util::rng::Pcg32;
 
-use super::engine::{BufferPool, ChunkedAllReduce, Session, ShardChunk};
+use super::engine::{
+    par_for_each_mut, BufferPool, ChunkedAllReduce, ReducePlan, Session, ShardChunk,
+};
 use super::wire::{
-    apply_wire_avg, check_wire_aligned, pack_chunks_at_edge, pack_words_into, packed_len,
-    recycle_wire, unpack_words_into, WireAvg, WireChunk, WireFormat,
+    apply_wire_avg, check_wire_aligned, pack_chunks_at_edge, pack_words_checked_into,
+    packed_len, recycle_wire, unpack_words_into, WireAvg, WireChunk, WireFormat,
 };
 use super::CollectiveStats;
 
@@ -49,9 +51,14 @@ pub struct OptIncAllReduce {
     /// Running count of injected word errors (observability).
     pub injected_errors: u64,
     session: Session,
+    reduce: ReducePlan,
     word_pool: BufferPool<u32>,
     byte_pool: BufferPool<u8>,
     float_pool: BufferPool<f32>,
+    // The outer per-worker buffer list, kept as a field so its
+    // allocation survives across chunks (the inner buffers cycle
+    // through `word_pool`).
+    shard_bufs: Vec<Vec<u32>>,
 }
 
 impl OptIncAllReduce {
@@ -64,10 +71,20 @@ impl OptIncAllReduce {
             rng: Pcg32::seeded(seed),
             injected_errors: 0,
             session: Session::default(),
+            reduce: ReducePlan::auto(),
             word_pool: BufferPool::new(),
             byte_pool: BufferPool::new(),
             float_pool: BufferPool::new(),
+            shard_bufs: Vec::new(),
         }
+    }
+
+    /// Pin the full reduce plan — threads *and* sequential-fallback
+    /// threshold — for this leader and its switch (tests force a
+    /// threshold of 1 so tiny chunks exercise the parallel split).
+    pub fn set_reduce_plan(&mut self, plan: ReducePlan) {
+        self.reduce = plan;
+        self.switch.set_reduce_plan(plan);
     }
 
     /// Exact-oracle variant (perfectly-trained ONN) for a scenario.
@@ -136,19 +153,28 @@ impl ChunkedAllReduce for OptIncAllReduce {
         }
     }
 
+    fn set_reduce_threads(&mut self, threads: usize) {
+        self.reduce = ReducePlan::with_threads(threads);
+        self.switch.set_reduce_threads(threads);
+    }
+
     fn reduce_wire_chunk(&mut self, chunks: &[WireChunk]) -> WireAvg {
         let n = self.session.workers();
         assert_eq!(chunks.len(), n, "switch wired for {n} servers");
         let bits = self.switch.scenario.bits;
         let (_, elements, scale) = check_wire_aligned(chunks, bits);
 
-        // 1. Unpack each worker's packed words into recycled buffers.
-        let mut words: Vec<Vec<u32>> = Vec::with_capacity(n);
-        for c in chunks {
-            let mut buf = self.word_pool.take(elements);
-            unpack_words_into(&c.words, bits, &mut buf);
-            words.push(buf);
+        // 1. Unpack each worker's packed words into recycled buffers
+        //    (the outer Vec is a reused field, the per-worker decode
+        //    splits across scoped threads for large chunks).
+        let mut words = std::mem::take(&mut self.shard_bufs);
+        words.clear();
+        for _ in 0..n {
+            words.push(self.word_pool.take(elements));
         }
+        par_for_each_mut(self.reduce, elements, &mut words, |i, buf| {
+            unpack_words_into(&chunks[i].words, bits, buf);
+        });
 
         // 2. One traversal of the switch, the whole chunk as one batched
         //    frame set — word domain only, no float round-trip.
@@ -162,9 +188,12 @@ impl ChunkedAllReduce for OptIncAllReduce {
             self.error_model.inject(&mut avg_words, bits, &mut self.rng) as u64;
 
         // 3. Pack the average once; the Arc is the broadcast allocation
-        //    every worker shares.
+        //    every worker shares. Checked pack: the error model mutates
+        //    words the quantizer never saw, so the range check must
+        //    survive release builds (a corrupt broadcast poisons every
+        //    worker).
         let mut packed = self.byte_pool.take_empty(packed_len(elements, bits));
-        pack_words_into(&avg_words, bits, &mut packed);
+        pack_words_checked_into(&avg_words, bits, &mut packed);
         let avg = WireAvg {
             words: packed.as_slice().into(),
             scale,
@@ -172,9 +201,10 @@ impl ChunkedAllReduce for OptIncAllReduce {
         };
         self.byte_pool.put(packed);
         self.word_pool.put(avg_words);
-        for buf in words {
+        for buf in words.drain(..) {
             self.word_pool.put(buf);
         }
+        self.shard_bufs = words;
 
         self.session.chunk_done(
             elements,

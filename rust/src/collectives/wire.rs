@@ -27,6 +27,16 @@
 //! (`validate_bits`), 8/16/32-bit words are byte-aligned and 2/4-bit
 //! words pack 4/2 per byte.
 //!
+//! The codec runs over u64 lanes: byte-aligned widths (8/16/32 bits)
+//! take memcpy-style fast paths (`chunks_exact` lanes assembled with
+//! `to_le_bytes`/`from_le_bytes`), and every other width flows through
+//! an accumulator that fills and drains whole 64-bit words instead of
+//! dribbling single bytes. The fused [`pack_quantized_into`] /
+//! [`unpack_dequantize_into`] kernels quantize 4-element lanes in the
+//! same pass that lays out the bits. The pre-vectorization per-element
+//! loops are retained verbatim in [`reference`] as the property-test
+//! oracle (and the baseline the perf trajectory is measured against).
+//!
 //! ```
 //! use optinc::collectives::wire::{pack_words_into, unpack_words_into, packed_len};
 //!
@@ -49,6 +59,13 @@ pub fn packed_len(elements: usize, bits: u32) -> usize {
     (elements * bits as usize).div_ceil(8)
 }
 
+fn check_bits(bits: u32) {
+    assert!(
+        (1..=32).contains(&bits),
+        "packed wire supports 1..=32-bit words, got {bits}"
+    );
+}
+
 fn word_mask(bits: u32) -> u64 {
     debug_assert!((1..=32).contains(&bits));
     if bits == 32 {
@@ -58,64 +75,180 @@ fn word_mask(bits: u32) -> u64 {
     }
 }
 
-/// The one packing loop (the wire layout lives here and nowhere else:
-/// LSB-first, zero-padded tail). Every pack entry fuses its word source
-/// into the iterator.
-fn pack_core(words: impl Iterator<Item = u32>, bits: u32, out: &mut Vec<u8>) {
-    assert!(
-        (1..=32).contains(&bits),
-        "packed wire supports 1..=32-bit words, got {bits}"
-    );
-    let mask = word_mask(bits);
-    let mut acc = 0u64;
-    let mut nbits = 0u32;
-    for w in words {
-        debug_assert!(
-            (w as u64) <= mask,
-            "word {w} exceeds the {bits}-bit wire range"
-        );
-        acc |= ((w as u64) & mask) << nbits;
-        nbits += bits;
-        while nbits >= 8 {
-            out.push((acc & 0xFF) as u8);
-            acc >>= 8;
-            nbits -= 8;
+/// Streaming bit-packer for non-byte-aligned widths: words accumulate
+/// in a u128 and flush as whole little-endian u64 lanes, so the store
+/// loop runs once per 64 output bits instead of once per byte.
+struct Packer {
+    acc: u128,
+    nbits: u32,
+    bits: u32,
+    mask: u64,
+}
+
+impl Packer {
+    fn new(bits: u32) -> Packer {
+        Packer {
+            acc: 0,
+            nbits: 0,
+            bits,
+            mask: word_mask(bits),
         }
     }
-    if nbits > 0 {
-        out.push((acc & 0xFF) as u8);
+
+    #[inline]
+    fn push(&mut self, w: u32, out: &mut Vec<u8>) {
+        debug_assert!(
+            (w as u64) <= self.mask,
+            "word {w} exceeds the {}-bit wire range",
+            self.bits
+        );
+        // nbits < 64 here (flushed below), and bits <= 32, so the shift
+        // stays inside the u128 accumulator.
+        self.acc |= (((w as u64) & self.mask) as u128) << self.nbits;
+        self.nbits += self.bits;
+        if self.nbits >= 64 {
+            out.extend_from_slice(&(self.acc as u64).to_le_bytes());
+            self.acc >>= 64;
+            self.nbits -= 64;
+        }
+    }
+
+    /// Drain the partial tail (the final byte is zero-padded).
+    fn finish(mut self, out: &mut Vec<u8>) {
+        while self.nbits > 0 {
+            out.push((self.acc & 0xFF) as u8);
+            self.acc >>= 8;
+            self.nbits = self.nbits.saturating_sub(8);
+        }
     }
 }
 
-/// The one unpacking loop (inverse of [`pack_core`]); emits `count`
-/// words to the sink. Callers validate `packed.len()` first.
-fn unpack_core(packed: &[u8], bits: u32, count: usize, mut emit: impl FnMut(u32)) {
-    assert!(
-        (1..=32).contains(&bits),
-        "packed wire supports 1..=32-bit words, got {bits}"
-    );
-    let mask = word_mask(bits);
-    let mut acc = 0u64;
-    let mut nbits = 0u32;
-    let mut bytes = packed.iter();
-    for _ in 0..count {
-        while nbits < bits {
-            acc |= (*bytes.next().expect("length checked by caller") as u64) << nbits;
-            nbits += 8;
+/// Streaming unpack for non-byte-aligned widths: loads whole
+/// little-endian u64 lanes into a u128 accumulator and emits
+/// `(index, word)` pairs. Callers validate `packed.len()` first.
+fn unpack_generic(packed: &[u8], bits: u32, count: usize, mut emit: impl FnMut(usize, u32)) {
+    let mask = word_mask(bits) as u128;
+    let mut acc: u128 = 0;
+    let mut nbits: u32 = 0;
+    let mut produced = 0usize;
+    let mut lanes = packed.chunks_exact(8);
+    for lane in &mut lanes {
+        // nbits < bits <= 32 after the drain below, so nbits + 64 < 128.
+        acc |= (u64::from_le_bytes(lane.try_into().expect("8-byte lane")) as u128) << nbits;
+        nbits += 64;
+        while nbits >= bits && produced < count {
+            emit(produced, (acc & mask) as u32);
+            acc >>= bits;
+            nbits -= bits;
+            produced += 1;
         }
-        emit((acc & mask) as u32);
-        acc >>= bits;
-        nbits -= bits;
     }
+    for &b in lanes.remainder() {
+        acc |= (b as u128) << nbits;
+        nbits += 8;
+        while nbits >= bits && produced < count {
+            emit(produced, (acc & mask) as u32);
+            acc >>= bits;
+            nbits -= bits;
+            produced += 1;
+        }
+    }
+    debug_assert_eq!(produced, count, "length checked by caller");
 }
 
 /// Pack `B`-bit words densely into `out` (cleared first; capacity is
 /// reused, so pooled buffers make this allocation-free in steady
 /// state). Words must fit `bits` bits; the tail byte is zero-padded.
+///
+/// Range checks are `debug_assert!`s on this fast path — callers that
+/// did not produce the words themselves (the quantizer clamps, so
+/// edge-packed words are in range by construction) must go through
+/// [`pack_words_checked_into`] instead.
 pub fn pack_words_into(words: &[u32], bits: u32, out: &mut Vec<u8>) {
+    check_bits(bits);
     out.clear();
     out.reserve(packed_len(words.len(), bits));
-    pack_core(words.iter().copied(), bits, out);
+    match bits {
+        8 => {
+            let mut lanes = words.chunks_exact(4);
+            for lane in &mut lanes {
+                debug_assert!(
+                    lane.iter().all(|&w| w <= 0xFF),
+                    "word exceeds the 8-bit wire range"
+                );
+                out.extend_from_slice(&[
+                    lane[0] as u8,
+                    lane[1] as u8,
+                    lane[2] as u8,
+                    lane[3] as u8,
+                ]);
+            }
+            for &w in lanes.remainder() {
+                debug_assert!(w <= 0xFF, "word {w} exceeds the 8-bit wire range");
+                out.push(w as u8);
+            }
+        }
+        16 => {
+            let mut lanes = words.chunks_exact(4);
+            for lane in &mut lanes {
+                debug_assert!(
+                    lane.iter().all(|&w| w <= 0xFFFF),
+                    "word exceeds the 16-bit wire range"
+                );
+                let v = lane[0] as u64
+                    | (lane[1] as u64) << 16
+                    | (lane[2] as u64) << 32
+                    | (lane[3] as u64) << 48;
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            for &w in lanes.remainder() {
+                debug_assert!(w <= 0xFFFF, "word {w} exceeds the 16-bit wire range");
+                out.extend_from_slice(&(w as u16).to_le_bytes());
+            }
+        }
+        32 => {
+            let mut lanes = words.chunks_exact(2);
+            for lane in &mut lanes {
+                let v = lane[0] as u64 | (lane[1] as u64) << 32;
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            for &w in lanes.remainder() {
+                out.extend_from_slice(&w.to_le_bytes());
+            }
+        }
+        _ => {
+            let mut p = Packer::new(bits);
+            let mut lanes = words.chunks_exact(4);
+            for lane in &mut lanes {
+                p.push(lane[0], out);
+                p.push(lane[1], out);
+                p.push(lane[2], out);
+                p.push(lane[3], out);
+            }
+            for &w in lanes.remainder() {
+                p.push(w, out);
+            }
+            p.finish(out);
+        }
+    }
+}
+
+/// Like [`pack_words_into`], but the range check survives release
+/// builds. Use at trust boundaries — a leader packing averaged words it
+/// did not quantize itself (e.g. after error injection), where
+/// `(w & mask)` silently corrupting an out-of-range word would poison
+/// the broadcast for every worker. The pre-scan is a branch-free
+/// maximum the compiler vectorizes, so the cost is one cheap pass.
+pub fn pack_words_checked_into(words: &[u32], bits: u32, out: &mut Vec<u8>) {
+    check_bits(bits);
+    let mask = word_mask(bits);
+    if let Some(i) = words.iter().position(|&w| (w as u64) > mask) {
+        panic!(
+            "word {} at index {i} exceeds the {bits}-bit wire range",
+            words[i]
+        );
+    }
+    pack_words_into(words, bits, out);
 }
 
 /// Unpack `out.len()` `B`-bit words from a packed byte stream (inverse
@@ -123,6 +256,7 @@ pub fn pack_words_into(words: &[u32], bits: u32, out: &mut Vec<u8>) {
 /// `packed_len(out.len(), bits)` bytes — a truncated or oversized wire
 /// buffer is a framing bug, never silently tolerated.
 pub fn unpack_words_into(packed: &[u8], bits: u32, out: &mut [u32]) {
+    check_bits(bits);
     assert_eq!(
         packed.len(),
         packed_len(out.len(), bits),
@@ -131,16 +265,64 @@ pub fn unpack_words_into(packed: &[u8], bits: u32, out: &mut [u32]) {
         out.len(),
         packed_len(out.len(), bits)
     );
-    let count = out.len();
-    let mut slots = out.iter_mut();
-    unpack_core(packed, bits, count, |w| {
-        *slots.next().expect("one slot per word") = w;
-    });
+    match bits {
+        8 => {
+            let mut lanes = packed.chunks_exact(8);
+            let mut slots = out.chunks_exact_mut(8);
+            for (lane, dst) in (&mut lanes).zip(&mut slots) {
+                let v = u64::from_le_bytes(lane.try_into().expect("8-byte lane"));
+                for (k, slot) in dst.iter_mut().enumerate() {
+                    *slot = ((v >> (8 * k)) & 0xFF) as u32;
+                }
+            }
+            for (slot, &b) in slots.into_remainder().iter_mut().zip(lanes.remainder()) {
+                *slot = b as u32;
+            }
+        }
+        16 => {
+            let mut lanes = packed.chunks_exact(8);
+            let mut slots = out.chunks_exact_mut(4);
+            for (lane, dst) in (&mut lanes).zip(&mut slots) {
+                let v = u64::from_le_bytes(lane.try_into().expect("8-byte lane"));
+                for (k, slot) in dst.iter_mut().enumerate() {
+                    *slot = ((v >> (16 * k)) & 0xFFFF) as u32;
+                }
+            }
+            for (slot, pair) in slots
+                .into_remainder()
+                .iter_mut()
+                .zip(lanes.remainder().chunks_exact(2))
+            {
+                *slot = u16::from_le_bytes([pair[0], pair[1]]) as u32;
+            }
+        }
+        32 => {
+            for (slot, quad) in out.iter_mut().zip(packed.chunks_exact(4)) {
+                *slot = u32::from_le_bytes(quad.try_into().expect("4-byte word"));
+            }
+        }
+        _ => {
+            let count = out.len();
+            unpack_generic(packed, bits, count, |i, w| out[i] = w);
+        }
+    }
+}
+
+#[inline]
+fn quantize4(q: &GlobalQuantizer, scale: f32, lane: &[f32]) -> [u32; 4] {
+    [
+        q.quantize(lane[0], scale),
+        q.quantize(lane[1], scale),
+        q.quantize(lane[2], scale),
+        q.quantize(lane[3], scale),
+    ]
 }
 
 /// Quantize a float slice and pack it in one pass — what a worker does
-/// at the edge before its chunk touches the channel. `out` is cleared
-/// (capacity reused).
+/// at the edge before its chunk touches the channel. Floats quantize in
+/// 4-element lanes that feed the bit layout directly; the quantizer
+/// clamps to the wire range, so the fast pack path is safe. `out` is
+/// cleared (capacity reused).
 pub fn pack_quantized_into(
     gs: &[f32],
     quantizer: &GlobalQuantizer,
@@ -148,13 +330,61 @@ pub fn pack_quantized_into(
     out: &mut Vec<u8>,
 ) {
     let bits = quantizer.bits();
+    check_bits(bits);
     out.clear();
     out.reserve(packed_len(gs.len(), bits));
-    pack_core(gs.iter().map(|&g| quantizer.quantize(g, scale)), bits, out);
+    let mut lanes = gs.chunks_exact(4);
+    match bits {
+        8 => {
+            for lane in &mut lanes {
+                let w = quantize4(quantizer, scale, lane);
+                out.extend_from_slice(&[w[0] as u8, w[1] as u8, w[2] as u8, w[3] as u8]);
+            }
+            for &g in lanes.remainder() {
+                out.push(quantizer.quantize(g, scale) as u8);
+            }
+        }
+        16 => {
+            for lane in &mut lanes {
+                let w = quantize4(quantizer, scale, lane);
+                let v = w[0] as u64
+                    | (w[1] as u64) << 16
+                    | (w[2] as u64) << 32
+                    | (w[3] as u64) << 48;
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            for &g in lanes.remainder() {
+                out.extend_from_slice(&(quantizer.quantize(g, scale) as u16).to_le_bytes());
+            }
+        }
+        32 => {
+            for lane in &mut lanes {
+                for w in quantize4(quantizer, scale, lane) {
+                    out.extend_from_slice(&w.to_le_bytes());
+                }
+            }
+            for &g in lanes.remainder() {
+                out.extend_from_slice(&quantizer.quantize(g, scale).to_le_bytes());
+            }
+        }
+        _ => {
+            let mut p = Packer::new(bits);
+            for lane in &mut lanes {
+                for w in quantize4(quantizer, scale, lane) {
+                    p.push(w, out);
+                }
+            }
+            for &g in lanes.remainder() {
+                p.push(quantizer.quantize(g, scale), out);
+            }
+            p.finish(out);
+        }
+    }
 }
 
 /// Unpack a packed average and dequantize it into `out` in one pass —
-/// what a worker does with the broadcast. `packed` must hold exactly
+/// what a worker does with the broadcast. Byte-aligned widths decode
+/// 4-element lanes straight into floats; `packed` must hold exactly
 /// `out.len()` words.
 pub fn unpack_dequantize_into(
     packed: &[u8],
@@ -163,6 +393,7 @@ pub fn unpack_dequantize_into(
     out: &mut [f32],
 ) {
     let bits = quantizer.bits();
+    check_bits(bits);
     assert_eq!(
         packed.len(),
         packed_len(out.len(), bits),
@@ -171,11 +402,111 @@ pub fn unpack_dequantize_into(
         out.len(),
         packed_len(out.len(), bits)
     );
-    let count = out.len();
-    let mut slots = out.iter_mut();
-    unpack_core(packed, bits, count, |w| {
-        *slots.next().expect("one slot per word") = quantizer.dequantize(w, scale);
-    });
+    match bits {
+        8 => {
+            let mut lanes = packed.chunks_exact(4);
+            let mut slots = out.chunks_exact_mut(4);
+            for (lane, dst) in (&mut lanes).zip(&mut slots) {
+                for (slot, &b) in dst.iter_mut().zip(lane) {
+                    *slot = quantizer.dequantize(b as u32, scale);
+                }
+            }
+            for (slot, &b) in slots.into_remainder().iter_mut().zip(lanes.remainder()) {
+                *slot = quantizer.dequantize(b as u32, scale);
+            }
+        }
+        16 => {
+            let mut lanes = packed.chunks_exact(8);
+            let mut slots = out.chunks_exact_mut(4);
+            for (lane, dst) in (&mut lanes).zip(&mut slots) {
+                let v = u64::from_le_bytes(lane.try_into().expect("8-byte lane"));
+                for (k, slot) in dst.iter_mut().enumerate() {
+                    *slot = quantizer.dequantize(((v >> (16 * k)) & 0xFFFF) as u32, scale);
+                }
+            }
+            for (slot, pair) in slots
+                .into_remainder()
+                .iter_mut()
+                .zip(lanes.remainder().chunks_exact(2))
+            {
+                *slot = quantizer.dequantize(u16::from_le_bytes([pair[0], pair[1]]) as u32, scale);
+            }
+        }
+        32 => {
+            for (slot, quad) in out.iter_mut().zip(packed.chunks_exact(4)) {
+                let w = u32::from_le_bytes(quad.try_into().expect("4-byte word"));
+                *slot = quantizer.dequantize(w, scale);
+            }
+        }
+        _ => {
+            let count = out.len();
+            unpack_generic(packed, bits, count, |i, w| {
+                out[i] = quantizer.dequantize(w, scale);
+            });
+        }
+    }
+}
+
+/// Scalar reference codec — the pre-vectorization per-element loops,
+/// retained verbatim as the oracle the lane codec is property-tested
+/// against (`codec_matrix_matches_scalar_reference`) and as the
+/// per-element baseline the `BENCH_wire.json` trajectory is modeled
+/// from. Never used on a hot path.
+pub mod reference {
+    use super::{check_bits, packed_len, word_mask};
+
+    /// Per-element pack: one word at a time through a u64 accumulator,
+    /// dribbling single bytes.
+    pub fn pack_scalar(words: &[u32], bits: u32, out: &mut Vec<u8>) {
+        check_bits(bits);
+        out.clear();
+        out.reserve(packed_len(words.len(), bits));
+        let mask = word_mask(bits);
+        let mut acc = 0u64;
+        let mut nbits = 0u32;
+        for &w in words {
+            debug_assert!(
+                (w as u64) <= mask,
+                "word {w} exceeds the {bits}-bit wire range"
+            );
+            acc |= ((w as u64) & mask) << nbits;
+            nbits += bits;
+            while nbits >= 8 {
+                out.push((acc & 0xFF) as u8);
+                acc >>= 8;
+                nbits -= 8;
+            }
+        }
+        if nbits > 0 {
+            out.push((acc & 0xFF) as u8);
+        }
+    }
+
+    /// Per-element unpack: pulls bytes one at a time.
+    pub fn unpack_scalar(packed: &[u8], bits: u32, out: &mut [u32]) {
+        check_bits(bits);
+        assert_eq!(
+            packed.len(),
+            packed_len(out.len(), bits),
+            "packed buffer holds {} bytes but {} {bits}-bit words need {}",
+            packed.len(),
+            out.len(),
+            packed_len(out.len(), bits)
+        );
+        let mask = word_mask(bits);
+        let mut acc = 0u64;
+        let mut nbits = 0u32;
+        let mut bytes = packed.iter();
+        for slot in out.iter_mut() {
+            while nbits < bits {
+                acc |= (*bytes.next().expect("length checked by caller") as u64) << nbits;
+                nbits += 8;
+            }
+            *slot = (acc & mask) as u32;
+            acc >>= bits;
+            nbits -= bits;
+        }
+    }
 }
 
 /// A collective's native wire format — what actually crosses the
@@ -407,6 +738,66 @@ mod tests {
     }
 
     #[test]
+    fn codec_matrix_matches_scalar_reference() {
+        // The vectorized codec is pinned bit-exact against the retained
+        // per-element reference: every width 1..=32 × lengths spanning
+        // the lane boundaries (0, 1, 7, 63, 64, 65, 4096, prime 4093) ×
+        // random in-range words (plus the all-zeros / all-ones edges).
+        let mut rng = Pcg32::seeded(0xC0DEC);
+        for bits in 1u32..=32 {
+            let top = max_word(bits);
+            for len in [0usize, 1, 7, 63, 64, 65, 4096, 4093] {
+                let random: Vec<u32> = (0..len)
+                    .map(|_| (rng.next_u64() % (top + 1)) as u32)
+                    .collect();
+                for words in [random, vec![0u32; len], vec![top as u32; len]] {
+                    let mut fast = Vec::new();
+                    pack_words_into(&words, bits, &mut fast);
+                    let mut scalar = Vec::new();
+                    reference::pack_scalar(&words, bits, &mut scalar);
+                    assert_eq!(fast, scalar, "pack bits={bits} len={len}");
+                    assert_eq!(fast.len(), packed_len(len, bits));
+
+                    // Both unpacks invert both packs.
+                    let mut back_fast = vec![0u32; len];
+                    unpack_words_into(&scalar, bits, &mut back_fast);
+                    assert_eq!(back_fast, words, "fast unpack bits={bits} len={len}");
+                    let mut back_scalar = vec![0u32; len];
+                    reference::unpack_scalar(&fast, bits, &mut back_scalar);
+                    assert_eq!(back_scalar, words, "scalar unpack bits={bits} len={len}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn checked_pack_matches_unchecked_for_in_range_words() {
+        let mut rng = Pcg32::seeded(77);
+        for &bits in &WIDTHS {
+            let top = max_word(bits);
+            let words: Vec<u32> = (0..130)
+                .map(|_| (rng.next_u64() % (top + 1)) as u32)
+                .collect();
+            let mut fast = Vec::new();
+            pack_words_into(&words, bits, &mut fast);
+            let mut checked = Vec::new();
+            pack_words_checked_into(&words, bits, &mut checked);
+            assert_eq!(checked, fast, "bits={bits}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the 8-bit wire range")]
+    fn checked_pack_rejects_out_of_range_words_in_release_too() {
+        // Regression for the silent-truncation bug: the plain fast path
+        // only `debug_assert!`s, so a release build would mask 256 down
+        // to 0 and broadcast garbage. The checked variant used at trust
+        // boundaries panics in every build profile.
+        let mut out = Vec::new();
+        pack_words_checked_into(&[1, 2, 256, 3], 8, &mut out);
+    }
+
+    #[test]
     fn eight_bit_packing_is_byte_identity() {
         // At 8 bits the wire really is one byte per element — the whole
         // point of the fix (the f32 wire carried 4×).
@@ -433,23 +824,29 @@ mod tests {
 
     #[test]
     fn fused_quantize_pack_equals_two_step() {
-        let q = GlobalQuantizer::new(8);
+        // At every width class (byte-aligned lane paths and the generic
+        // accumulator) and ragged lengths around the 4-element lane.
         let mut rng = Pcg32::seeded(9);
-        let gs: Vec<f32> = (0..301).map(|_| (rng.normal() * 0.4) as f32).collect();
-        let scale = GlobalQuantizer::global_scale(&[&gs]);
+        for &bits in &[2u32, 4, 8, 16, 32] {
+            let q = GlobalQuantizer::new(bits);
+            for len in [0usize, 1, 3, 4, 5, 301] {
+                let gs: Vec<f32> = (0..len).map(|_| (rng.normal() * 0.4) as f32).collect();
+                let scale = GlobalQuantizer::global_scale(&[&gs]).max(1e-6);
 
-        let words: Vec<u32> = gs.iter().map(|&g| q.quantize(g, scale)).collect();
-        let mut two_step = Vec::new();
-        pack_words_into(&words, 8, &mut two_step);
-        let mut fused = Vec::new();
-        pack_quantized_into(&gs, &q, scale, &mut fused);
-        assert_eq!(fused, two_step);
+                let words: Vec<u32> = gs.iter().map(|&g| q.quantize(g, scale)).collect();
+                let mut two_step = Vec::new();
+                pack_words_into(&words, bits, &mut two_step);
+                let mut fused = Vec::new();
+                pack_quantized_into(&gs, &q, scale, &mut fused);
+                assert_eq!(fused, two_step, "bits={bits} len={len}");
 
-        // ...and the fused unpack inverts it through dequantize.
-        let mut back = vec![0.0f32; gs.len()];
-        unpack_dequantize_into(&fused, &q, scale, &mut back);
-        for (b, &w) in back.iter().zip(words.iter()) {
-            assert_eq!(*b, q.dequantize(w, scale));
+                // ...and the fused unpack inverts it through dequantize.
+                let mut back = vec![0.0f32; gs.len()];
+                unpack_dequantize_into(&fused, &q, scale, &mut back);
+                for (b, &w) in back.iter().zip(words.iter()) {
+                    assert_eq!(*b, q.dequantize(w, scale), "bits={bits} len={len}");
+                }
+            }
         }
     }
 

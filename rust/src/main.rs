@@ -16,7 +16,7 @@ const COMMANDS: &[Command] = &[
     },
     Command {
         name: "pipeline",
-        about: "Streaming engine demo: pipelined vs monolithic (ring|optinc|fabric --fan-in --levels --wire packed|f32 --backend threaded|event --servers N)",
+        about: "Streaming engine demo: pipelined vs monolithic (ring|optinc|fabric --fan-in --levels --wire packed|f32 --backend threaded|event --servers N --reduce-threads T)",
         run: cmd_pipeline,
     },
     Command {
@@ -183,6 +183,17 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         "f32" => true,
         other => anyhow::bail!("unknown --wire '{other}' (packed|f32)"),
     };
+    // Leader reduce parallelism: 0 (the default) auto-sizes to the
+    // host's cores, 1 forces the sequential path, n pins exactly n
+    // range-splitting threads. Applied to the collective's real reduce
+    // (threaded backend) and mirrored into the event backend's modeled
+    // reduce term.
+    let reduce_threads = args.usize_or("reduce-threads", 0)?;
+    let effective_reduce = if reduce_threads == 0 {
+        optinc::collectives::engine::auto_threads()
+    } else {
+        reduce_threads
+    };
 
     struct Synth {
         dim: usize,
@@ -281,11 +292,14 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         ),
     };
 
+    collective.set_reduce_threads(reduce_threads);
+
     let cluster = Cluster::new(workers)
         .with_chunk_elems(chunk)
         .with_f32_wire(force_f32)
         .with_backend(backend)
-        .with_seed(args.u64_or("seed", 0)?);
+        .with_seed(args.u64_or("seed", 0)?)
+        .with_reduce_parallelism(effective_reduce);
     let mut piped_metrics = ClusterMetrics::new("pipelined");
     let piped = cluster.run(
         steps,
@@ -305,7 +319,8 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     let m = &mono[0].stats;
     println!(
         "\nstreaming engine — {which}, N={workers}, {elements} elements, chunk {chunk}, \
-         backend {backend:?}"
+         backend {backend:?}, reduce threads {effective_reduce}{}",
+        if reduce_threads == 0 { " (auto)" } else { "" }
     );
     // Measured vs modeled wire bytes: the packed transport makes these
     // equal for the OptINC family; --wire f32 exposes the old 4x gap.

@@ -12,6 +12,7 @@
 
 use anyhow::Result;
 
+use crate::collectives::engine::{par_ranges_mut, ReducePlan};
 use crate::config::Scenario;
 use crate::onn::{OnnNetwork, OnnScratch};
 use crate::pam4::{snap_pam4, Pam4Codec};
@@ -37,6 +38,10 @@ pub struct OptIncSwitch {
     pub splitter: Splitter,
     codec: Pam4Codec,
     scratch: OnnScratch,
+    // How the exact-mode accumulation splits element ranges across
+    // scoped threads (bit-exact at any setting; see
+    // `collectives::engine::ReducePlan`).
+    reduce: ReducePlan,
     // Reusable batch-frame buffers: the streaming engine calls
     // `average_words_into` once per chunk, and after warmup none of
     // these reallocate.
@@ -61,6 +66,7 @@ impl OptIncSwitch {
             splitter,
             codec,
             scratch: OnnScratch::default(),
+            reduce: ReducePlan::auto(),
             plane_buf: Vec::new(),
             input_buf: Vec::new(),
             sym_buf: Vec::new(),
@@ -100,6 +106,18 @@ impl OptIncSwitch {
         &self.codec
     }
 
+    /// Set the exact-mode reduce parallelism (`0` = auto, `1` =
+    /// sequential). Collectives forward their `set_reduce_threads`
+    /// here; the averaged words are bit-identical at any setting.
+    pub fn set_reduce_threads(&mut self, threads: usize) {
+        self.reduce = ReducePlan::with_threads(threads);
+    }
+
+    /// Override the full reduce plan (tests pin thresholds with this).
+    pub fn set_reduce_plan(&mut self, plan: ReducePlan) {
+        self.reduce = plan;
+    }
+
     /// Average a batch of words: `shards[n][i]` is word `i` of server `n`.
     /// Returns the quantized average word per element — what every server
     /// receives back through the splitter.
@@ -129,21 +147,31 @@ impl OptIncSwitch {
             OnnMode::Exact => {
                 // Q(mean) arithmetically (eq. 3). Accumulate shard-major
                 // (sequential reads per shard) instead of element-major —
-                // ~8× faster on large batches (EXPERIMENTS.md §Perf).
+                // ~8× faster on large batches (EXPERIMENTS.md §Perf) —
+                // with the element range split across scoped threads for
+                // large chunks: each worker owns a disjoint subrange of
+                // sums_buf/out and applies identical arithmetic, so the
+                // result is bit-exact at any thread count.
                 self.sums_buf.clear();
                 self.sums_buf.resize(count, 0u64);
-                for s in shards {
-                    for (acc, &w) in self.sums_buf.iter_mut().zip(s.iter()) {
-                        *acc += w as u64;
+                par_ranges_mut(self.reduce, &mut self.sums_buf, |start, sums| {
+                    for s in shards {
+                        let src = &s[start..start + sums.len()];
+                        for (acc, &w) in sums.iter_mut().zip(src) {
+                            *acc += w as u64;
+                        }
                     }
-                }
+                });
                 let n64 = n as u64;
                 out.clear();
-                out.extend(
-                    self.sums_buf
-                        .iter()
-                        .map(|&s| ((s * 2 + n64) / (2 * n64)) as u32),
-                );
+                out.resize(count, 0u32);
+                let sums_buf = &self.sums_buf;
+                par_ranges_mut(self.reduce, out.as_mut_slice(), |start, sub| {
+                    let src = &sums_buf[start..start + sub.len()];
+                    for (o, &s) in sub.iter_mut().zip(src) {
+                        *o = ((s * 2 + n64) / (2 * n64)) as u32;
+                    }
+                });
             }
             OnnMode::Native(_) => self.average_words_onn(shards, count, out),
         }
@@ -286,6 +314,30 @@ mod tests {
         // Uniform-random words sit ~85 apart in a 0..255 range; a trained
         // switch must be far closer to the oracle than chance.
         assert!(mean_err < 60.0, "mean word err {mean_err}");
+    }
+
+    #[test]
+    fn parallel_exact_reduce_is_bit_exact_vs_sequential() {
+        // Force the split on tiny batches (threshold 1) at several
+        // thread counts: the averaged words must match the sequential
+        // switch exactly, including ragged range splits.
+        let sc = Scenario::table1(2).unwrap(); // 8 servers
+        for count in [1usize, 7, 96, 97, 98, 1000] {
+            let shards = random_shards(8, count, 8, count as u64);
+            let refs: Vec<&[u32]> = shards.iter().map(|s| s.as_slice()).collect();
+            let mut seq = OptIncSwitch::exact(sc.clone());
+            seq.set_reduce_plan(ReducePlan::sequential());
+            let want = seq.average_words(&refs);
+            for threads in [2usize, 7] {
+                let mut par = OptIncSwitch::exact(sc.clone());
+                par.set_reduce_plan(ReducePlan::with_threads(threads).with_threshold(1));
+                assert_eq!(
+                    par.average_words(&refs),
+                    want,
+                    "threads={threads} count={count}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,129 @@
+//! Parallel-reduce conformance (ISSUE 7 satellite).
+//!
+//! The leaders' word-domain reduces may fan out across
+//! `std::thread::scope` range splits
+//! ([`ReducePlan`](optinc::collectives::engine::ReducePlan)); this
+//! matrix pins the split **bit-exact** against the sequential path for
+//! every wire-native leader, at thread counts {1, 2, 7}, across the
+//! same chunk grains the cross-backend conformance harness uses
+//! ({1, 7, len−1, len, len+1} on a prime-length gradient) — the split
+//! must never change a word, a float, or a stat, regardless of where
+//! chunk boundaries land.
+
+use optinc::collectives::engine::{ChunkedAllReduce, ChunkedDriver, ReducePlan};
+use optinc::collectives::fabric::FabricAllReduce;
+use optinc::collectives::hierarchical::HierarchicalOptInc;
+use optinc::collectives::optinc::OptIncAllReduce;
+use optinc::config::Scenario;
+use optinc::optinc::cascade::CascadeMode;
+use optinc::util::rng::Pcg32;
+
+/// Prime gradient length: every grain in {1, 7, len−1, len, len+1}
+/// leaves a ragged tail chunk.
+const DIM: usize = 97;
+const GRAINS: [usize; 5] = [1, 7, DIM - 1, DIM, DIM + 1];
+const THREADS: [usize; 3] = [1, 2, 7];
+const WORKERS: usize = 16;
+
+fn shards(seed: u64) -> Vec<Vec<f32>> {
+    (0..WORKERS)
+        .map(|w| {
+            let mut rng = Pcg32::new(seed, w as u64);
+            (0..DIM).map(|_| rng.normal() as f32 * 0.1).collect()
+        })
+        .collect()
+}
+
+/// Stream the same shards through a sequential and a parallel instance
+/// of one leader at every grain × thread count; outputs and stats must
+/// match exactly.
+fn assert_split_invisible<M>(mut make: M, label: &str)
+where
+    M: FnMut(ReducePlan) -> Box<dyn ChunkedAllReduce>,
+{
+    let base = shards(0x5EED ^ label.len() as u64);
+    for grain in GRAINS {
+        let mut seq = make(ReducePlan::sequential());
+        let mut want = base.clone();
+        let mut driver = ChunkedDriver::new(grain);
+        let want_stats = driver.all_reduce(seq.as_mut(), &mut want);
+
+        for threads in THREADS {
+            // Threshold 1: even single-element chunks take the
+            // range-splitting path instead of the inline fallback.
+            let mut par = make(ReducePlan::with_threads(threads).with_threshold(1));
+            let mut got = base.clone();
+            let mut d = ChunkedDriver::new(grain);
+            let got_stats = d.all_reduce(par.as_mut(), &mut got);
+            assert_eq!(
+                got, want,
+                "{label}: grain={grain} threads={threads} changed a result"
+            );
+            assert_eq!(
+                got_stats, want_stats,
+                "{label}: grain={grain} threads={threads} changed the accounting"
+            );
+        }
+    }
+}
+
+#[test]
+fn optinc_switch_leader_split_is_bit_exact() {
+    assert_split_invisible(
+        |plan| {
+            let mut c = OptIncAllReduce::exact(Scenario::table1(3).unwrap(), 5);
+            c.set_reduce_plan(plan);
+            Box::new(c)
+        },
+        "optinc",
+    );
+}
+
+#[test]
+fn cascade_leader_split_is_bit_exact() {
+    assert_split_invisible(
+        |plan| {
+            let mut c =
+                HierarchicalOptInc::new(Scenario::table1(1).unwrap(), CascadeMode::Remainder);
+            c.set_reduce_plan(plan);
+            Box::new(c)
+        },
+        "cascade",
+    );
+}
+
+#[test]
+fn fabric_leader_split_is_bit_exact() {
+    assert_split_invisible(
+        |plan| {
+            let mut c = FabricAllReduce::for_workers(8, 4, WORKERS).unwrap();
+            c.set_reduce_plan(plan);
+            Box::new(c)
+        },
+        "fabric",
+    );
+}
+
+#[test]
+fn trait_level_thread_knob_is_also_invisible() {
+    // The `--reduce-threads` CLI path goes through the object-safe
+    // `ChunkedAllReduce::set_reduce_threads` (default threshold, so
+    // small chunks fall back inline — still bit-exact by definition).
+    let base = shards(0xBEEF);
+    let run = |threads: Option<usize>| -> (Vec<Vec<f32>>, optinc::collectives::CollectiveStats) {
+        let mut c: Box<dyn ChunkedAllReduce> =
+            Box::new(FabricAllReduce::for_workers(8, 4, WORKERS).unwrap());
+        if let Some(t) = threads {
+            c.set_reduce_threads(t);
+        }
+        let mut work = base.clone();
+        let stats = ChunkedDriver::new(7).all_reduce(c.as_mut(), &mut work);
+        (work, stats)
+    };
+    let (want, want_stats) = run(None);
+    for t in [0usize, 1, 2, 7] {
+        let (got, got_stats) = run(Some(t));
+        assert_eq!(got, want, "set_reduce_threads({t}) changed a result");
+        assert_eq!(got_stats, want_stats, "set_reduce_threads({t}) changed stats");
+    }
+}
