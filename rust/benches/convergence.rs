@@ -1,0 +1,72 @@
+//! Convergence bench: the bits × error-feedback × workload sweep on the
+//! event backend, timed end to end, with the convergence scalars the
+//! sweep exists to measure recorded per row — relative cumulative error
+//! (dense), synced-model gap and final loss (LocalSGD), and the virtual
+//! step time (the straggler rows stretch it without touching the
+//! arithmetic). `-- --json` writes the `BENCH_convergence.json`
+//! trajectory artifact.
+
+use optinc::experiments::convergence::{run as run_sweep, SweepConfig};
+use optinc::util::bench::{arg_flag, black_box, BenchSuite};
+
+fn main() {
+    let json_mode = arg_flag("--json");
+    let mut suite = if json_mode {
+        BenchSuite::quick("convergence-event")
+    } else {
+        BenchSuite::new("convergence")
+    };
+
+    let cfg = SweepConfig::default();
+
+    // Wall-clock: one full dense EF-on run per wire width (the sweep's
+    // hot cell — every step quantizes, feeds back, and streams).
+    for &bits in &cfg.bits {
+        let one = SweepConfig {
+            bits: vec![bits],
+            ..cfg.clone()
+        };
+        suite.bench_throughput(
+            &format!(
+                "sweep_cell/{}x{}xT{}/b{bits}",
+                one.workers, one.dim, one.steps
+            ),
+            (one.workers * one.dim * one.steps) as f64,
+            "elem",
+            || {
+                black_box(run_sweep(&one).unwrap());
+            },
+        );
+    }
+
+    // The convergence scalars themselves, from the canonical config —
+    // what EXPERIMENTS.md §Convergence quotes, tracked as a trajectory
+    // in BENCH_convergence.json.
+    let rows = run_sweep(&cfg).unwrap();
+    for r in &rows {
+        let ef = if r.ef { "on" } else { "off" };
+        suite.record_scalar(
+            &format!("rel_err/{}/b{}/ef_{ef}", r.workload, r.bits),
+            r.metric,
+            "rel",
+        );
+        if r.workload == "localsgd" {
+            suite.record_scalar(
+                &format!("final_loss/{}/b{}/ef_{ef}", r.workload, r.bits),
+                r.final_loss,
+                "loss",
+            );
+        }
+        suite.record_scalar(
+            &format!("virtual_step/{}/b{}/ef_{ef}", r.workload, r.bits),
+            r.mean_virtual_step_s * 1e6,
+            "us",
+        );
+    }
+
+    if json_mode {
+        suite.finish_named("BENCH_convergence");
+    } else {
+        suite.finish();
+    }
+}

@@ -42,7 +42,8 @@ use anyhow::Result;
 
 use crate::collectives::engine::{ChunkedAllReduce, ShardChunk};
 use crate::collectives::wire::{
-    pack_quantized_into, unpack_dequantize_into, WireAvg, WireChunk, WireFormat,
+    ef_store_residual, pack_quantized_into, unpack_dequantize_into, WireAvg, WireChunk,
+    WireFormat,
 };
 use crate::quant::GlobalQuantizer;
 use crate::util::rng::{Pcg32, SplitMix64};
@@ -166,6 +167,16 @@ where
     let mut records = Vec::with_capacity(steps);
     let mut clock = 0.0f64; // virtual seconds since the run began
 
+    // Worker-side error feedback: per-worker edge residuals, held for
+    // the lifetime of this run — exactly the lifetime of a threaded
+    // worker's `resid` local. A failed run drops them; the next run
+    // starts fresh, so no stale residual survives a fault.
+    let ef_on = match wire {
+        WireFormat::Packed { bits } => cl.error_feedback.active(bits),
+        WireFormat::F32 => false,
+    };
+    let mut resid: Vec<Vec<f32>> = vec![Vec::new(); n];
+
     for step in 0..steps {
         let t0 = clock;
 
@@ -223,6 +234,24 @@ where
                 cl.watchdog,
                 t0 + watchdog_s
             ));
+        }
+
+        // Compensate the whole shard before any scale probe, the same
+        // element order as the threaded worker's `g + r` pass: probes
+        // and packed words must be computed over compensated values.
+        // Empty steps (LocalSGD non-sync rounds) skip entirely — the
+        // residuals persist untouched, and zero-length shards never
+        // allocate residual state.
+        if ef_on && total > 0 {
+            for (g, r) in grads.iter_mut().zip(resid.iter_mut()) {
+                if r.len() != total {
+                    r.clear();
+                    r.resize(total, 0.0);
+                }
+                for (gi, ri) in g.iter_mut().zip(r.iter()) {
+                    *gi += *ri;
+                }
+            }
         }
 
         collective.begin(n, total);
@@ -292,12 +321,19 @@ where
                     for (w, grad) in grads.iter().enumerate() {
                         let mut words = Vec::new();
                         if total > 0 {
-                            pack_quantized_into(
-                                &grad[lo..hi],
-                                quantizer,
-                                scale.expect("sized packed chunks agreed a scale"),
-                                &mut words,
-                            );
+                            let scale = scale.expect("sized packed chunks agreed a scale");
+                            pack_quantized_into(&grad[lo..hi], quantizer, scale, &mut words);
+                            if ef_on {
+                                // Residual store at pack time: what the
+                                // low-bit wire just dropped is carried
+                                // into the next step's gradient.
+                                ef_store_residual(
+                                    quantizer,
+                                    scale,
+                                    &grad[lo..hi],
+                                    &mut resid[w][lo..hi],
+                                );
+                            }
                         }
                         observed_payload[w] += words.len() as u64;
                         uplink_free[w] = uplink_free[w].max(upload_gate[w])

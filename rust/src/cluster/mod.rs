@@ -60,12 +60,14 @@
 pub mod event;
 pub mod metrics;
 pub mod threaded;
+pub mod workloads;
 
 use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::collectives::engine::ChunkedAllReduce;
+use crate::collectives::engine::{ChunkedAllReduce, ErrorFeedback};
+use crate::collectives::wire::WireFormat;
 use crate::collectives::CollectiveStats;
 use crate::config::HardwareModel;
 pub use event::ComputeModel;
@@ -162,6 +164,15 @@ pub struct Cluster {
     /// Force the legacy f32 wire even for packed-native collectives
     /// (`pipeline --wire f32` — the before/after comparison).
     pub force_f32_wire: bool,
+    /// Error-feedback residual compensation on the packed wire
+    /// (`pipeline --error-feedback`): workers carry the per-element
+    /// quantization error across steps and the leader repays its
+    /// word-mean rounding debt, making the low-bit streamed mean
+    /// unbiased over steps. Requires a packed-native collective and the
+    /// packed wire — [`Cluster::run`] rejects the combination with
+    /// `--wire f32` (no edge quantization to compensate) instead of
+    /// carrying silently-dead residual state.
+    pub error_feedback: ErrorFeedback,
     /// Execution engine (threaded oracle or discrete-event simulation).
     pub backend: Backend,
     /// Replay seed: drives the event backend's compute-jitter streams,
@@ -204,6 +215,7 @@ impl Cluster {
             chunk_elems: DEFAULT_CHUNK_ELEMS,
             watchdog: DEFAULT_WATCHDOG,
             force_f32_wire: false,
+            error_feedback: ErrorFeedback::off(),
             backend: Backend::default(),
             seed: 0,
             compute: ComputeModel::default(),
@@ -256,6 +268,13 @@ impl Cluster {
         self
     }
 
+    /// Builder: enable error-feedback residual compensation on the
+    /// packed wire (see [`Cluster::error_feedback`]).
+    pub fn with_error_feedback(mut self, ef: ErrorFeedback) -> Cluster {
+        self.error_feedback = ef;
+        self
+    }
+
     /// Builder: select the execution backend.
     pub fn with_backend(mut self, backend: Backend) -> Cluster {
         self.backend = backend;
@@ -297,6 +316,23 @@ impl Cluster {
         F: Fn(usize) -> W,
     {
         anyhow::ensure!(self.workers > 0, "cluster needs at least one worker");
+        if self.error_feedback.enabled {
+            anyhow::ensure!(
+                matches!(collective.wire_format(), WireFormat::Packed { .. }),
+                "error feedback requires a packed-wire collective: '{}' streams raw f32, \
+                 so there is no edge quantization error to compensate",
+                collective.name()
+            );
+            anyhow::ensure!(
+                !self.force_f32_wire,
+                "error feedback is incompatible with --wire f32: the forced f32 wire \
+                 bypasses edge quantization, so the residual state would be silently dead"
+            );
+        }
+        // Installing the policy also resets all residual state, so a
+        // collective reused across runs — including after a failed run —
+        // starts every run clean.
+        collective.set_error_feedback(self.error_feedback);
         match self.backend {
             Backend::Threaded => threaded::run(self, steps, make_workload, collective, metrics),
             Backend::Event => event::run(self, steps, make_workload, collective, metrics),

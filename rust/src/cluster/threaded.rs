@@ -27,9 +27,10 @@ use std::thread;
 
 use anyhow::Result;
 
-use crate::collectives::engine::{BufferPool, ChunkedAllReduce, ShardChunk};
+use crate::collectives::engine::{BufferPool, ChunkedAllReduce, ErrorFeedback, ShardChunk};
 use crate::collectives::wire::{
-    pack_quantized_into, packed_len, unpack_dequantize_into, WireAvg, WireChunk, WireFormat,
+    ef_store_residual, pack_quantized_into, packed_len, unpack_dequantize_into, WireAvg,
+    WireChunk, WireFormat,
 };
 use crate::quant::GlobalQuantizer;
 
@@ -128,6 +129,7 @@ where
     let mut to_worker_txs = Vec::with_capacity(n);
     let mut handles = Vec::with_capacity(n);
 
+    let ef = cl.error_feedback;
     for w in 0..n {
         let leader_tx = to_leader_tx.clone();
         let (tx, rx) = mpsc::channel::<ToWorker>();
@@ -136,7 +138,7 @@ where
         handles.push(thread::spawn(move || match wire {
             WireFormat::F32 => worker_loop_f32(steps, w, chunk, &mut workload, &leader_tx, &rx),
             WireFormat::Packed { bits } => {
-                worker_loop_packed(steps, w, chunk, bits, &mut workload, &leader_tx, &rx)
+                worker_loop_packed(steps, w, chunk, bits, ef, &mut workload, &leader_tx, &rx)
             }
         }));
     }
@@ -408,11 +410,20 @@ fn worker_loop_f32<W: Workload>(
 /// dequantize the shared packed broadcast. The worker is the paper's
 /// transmitter — nothing but B-bit words (plus the one-float exchange)
 /// ever touches the channel.
+///
+/// With error feedback active the worker carries its per-element
+/// quantization residual across steps: the shard is compensated
+/// (`g + r`) **before** the scale probes, packed from the compensated
+/// values, and the fresh error stored back at pack time
+/// ([`ef_store_residual`]). The residual lives in this loop's locals, so
+/// its lifetime is exactly one run — a failed run's residuals die with
+/// the worker threads and can never leak into the next run.
 fn worker_loop_packed<W: Workload>(
     steps: usize,
     w: usize,
     chunk: usize,
     bits: u32,
+    ef: ErrorFeedback,
     workload: &mut W,
     leader_tx: &mpsc::Sender<ToLeader>,
     rx: &mpsc::Receiver<ToWorker>,
@@ -420,6 +431,9 @@ fn worker_loop_packed<W: Workload>(
     let quantizer = GlobalQuantizer::new(bits);
     let mut byte_pool = BufferPool::<u8>::new();
     let mut avg = Vec::<f32>::new();
+    let ef_on = ef.active(bits);
+    let mut resid = Vec::<f32>::new();
+    let mut comp = Vec::<f32>::new();
     for step in 0..steps {
         let (grad, loss) = workload.grad(step, w);
         let total = grad.len();
@@ -451,6 +465,22 @@ fn worker_loop_packed<W: Workload>(
             workload.apply(step, w, &[]);
             continue;
         }
+        // EF: compensate the whole shard before any probe departs, so
+        // the agreed block scale covers the compensated values. Sized
+        // lazily on the first non-empty step (a zero-length run never
+        // allocates residual state); an interleaved empty step above
+        // leaves the carried residual untouched.
+        let grad: &[f32] = if ef_on {
+            if resid.len() != total {
+                resid.clear();
+                resid.resize(total, 0.0);
+            }
+            comp.clear();
+            comp.extend(grad.iter().zip(&resid).map(|(g, r)| g + r));
+            &comp
+        } else {
+            &grad
+        };
         let nchunks = chunk_count(total, chunk);
         // 1. Ship every chunk's 4-byte scale probe up front (the upload
         //    half of the one-float exchange); probes pipeline freely.
@@ -480,6 +510,16 @@ fn worker_loop_packed<W: Workload>(
                     let hi = offset.saturating_add(chunk).min(total);
                     let mut words = byte_pool.take_empty(packed_len(hi - offset, bits));
                     pack_quantized_into(&grad[offset..hi], &quantizer, scale, &mut words);
+                    if ef_on {
+                        // The packed words are final for this chunk:
+                        // bank whatever they failed to encode.
+                        ef_store_residual(
+                            &quantizer,
+                            scale,
+                            &grad[offset..hi],
+                            &mut resid[offset..hi],
+                        );
+                    }
                     let msg = ToLeader::Wire {
                         total,
                         loss: None,

@@ -1,0 +1,308 @@
+//! Reusable cluster workloads for the convergence scenario zoo.
+//!
+//! Two things live here:
+//!
+//! 1. **The synthetic gradient generator** used by the convergence
+//!    suite (`rust/tests/convergence.rs`), the convergence experiment
+//!    sweep, and the calibration sim it was pinned against. Every
+//!    constant is a dyadic rational — `base = k/4096` with
+//!    `|k| ∈ [80, 200]`, `jitter = j/8192` with `j ∈ [-16, 16]` — so
+//!    `base + jitter = (2k + j)/8192` is exact in both f32 and f64:
+//!    the Rust run and the f64 reference sim see bit-identical inputs,
+//!    and the pinned error thresholds cannot be crossed by input
+//!    rounding.
+//! 2. **[`LocalSgd`]**: the LocalSGD workload with sync period τ.
+//!    Workers take one local SGD step on a private quadratic every
+//!    round, and only every τ-th round submit their accumulated model
+//!    movement for averaging — the other rounds ride the empty-step
+//!    protocol (a zero-length gradient crosses the wire as one empty
+//!    chunk, no scale exchange, no payload). Between syncs the models
+//!    drift apart; each sync snaps every worker to the average model.
+//!
+//! LocalSGD is the interesting stress for error feedback: EF residuals
+//! are written only on sync rounds and must survive the empty rounds
+//! in between untouched (zero-length shards never allocate or reset
+//! residual state — see `EfState::begin` and the backend worker loops).
+
+use crate::util::rng::{Pcg32, SplitMix64};
+
+use super::Workload;
+
+/// One SplitMix64 draw — the hash behind every synthetic constant.
+#[inline]
+fn mix(x: u64) -> u64 {
+    SplitMix64::new(x).next_u64()
+}
+
+/// Per-(worker, coordinate) gradient base: `±(80..=200)/4096`, sign and
+/// magnitude hashed from the seed. Constant across steps.
+pub fn synth_base(seed: u64, worker: usize, i: usize) -> f32 {
+    let h = mix(seed ^ ((worker as u64) << 32) ^ i as u64);
+    let mag = (80 + (h % 121)) as i64;
+    let sign = if (h >> 40) & 1 == 1 { -1 } else { 1 };
+    (sign * mag) as f32 / 4096.0
+}
+
+/// Per-(step, coordinate) jitter: `(-16..=16)/8192`, shared by all
+/// workers so the exact mean keeps the same dyadic form.
+pub fn synth_jitter(seed: u64, step: usize, i: usize) -> f32 {
+    let h = mix(seed ^ 0xA5A5_0000 ^ ((step as u64) << 20) ^ i as u64);
+    ((h % 33) as i64 - 16) as f32 / 8192.0
+}
+
+/// One worker's full synthetic gradient for one step.
+pub fn synth_grad(seed: u64, step: usize, worker: usize, dim: usize) -> Vec<f32> {
+    (0..dim)
+        .map(|i| synth_base(seed, worker, i) + synth_jitter(seed, step, i))
+        .collect()
+}
+
+/// The exact (f64) across-worker mean of [`synth_grad`] — the oracle
+/// the convergence suite integrates against.
+pub fn synth_exact_mean(seed: u64, step: usize, workers: usize, dim: usize) -> Vec<f64> {
+    (0..dim)
+        .map(|i| {
+            let s: f64 = (0..workers)
+                .map(|w| synth_base(seed, w, i) as f64 + synth_jitter(seed, step, i) as f64)
+                .sum();
+            s / workers as f64
+        })
+        .collect()
+}
+
+/// True on the rounds where a τ-periodic LocalSGD run syncs.
+#[inline]
+pub fn is_sync_step(step: usize, tau: usize) -> bool {
+    (step + 1) % tau == 0
+}
+
+/// Snap a loss to the 2⁻²⁰ dyadic grid. The threaded leader folds
+/// worker losses in arrival order; grid-snapped addends make that f64
+/// sum exact, so the fold order cannot show up in `mean_loss` and the
+/// backends stay bit-conformant on it.
+#[inline]
+pub fn grid_loss(loss: f64) -> f64 {
+    (loss * 1_048_576.0).round() / 1_048_576.0
+}
+
+/// LocalSGD with sync period τ over a per-worker quadratic objective
+/// `½‖x − target‖²`. All workers start at the origin and share every
+/// post-sync model, so the anchor (last synced model) stays identical
+/// across workers by induction; each sync submits `anchor − x` (the
+/// local movement) and lands every worker on the averaged model.
+pub struct LocalSgd {
+    tau: usize,
+    lr: f32,
+    x: Vec<f32>,
+    anchor: Vec<f32>,
+    target: Vec<f32>,
+    syncs: usize,
+}
+
+impl LocalSgd {
+    /// A worker's LocalSGD state: `target` is drawn per worker from the
+    /// seed on the 1/128 dyadic grid in `[-1, 1]`.
+    pub fn new(worker: usize, dim: usize, tau: usize, seed: u64) -> LocalSgd {
+        assert!(tau >= 1, "LocalSGD sync period must be at least 1");
+        assert!(dim > 0, "LocalSGD needs a non-empty model");
+        let mut rng = Pcg32::new(mix(seed), worker as u64);
+        let target = (0..dim)
+            .map(|_| (rng.next_u32() % 257) as f32 / 128.0 - 1.0)
+            .collect();
+        LocalSgd {
+            tau,
+            lr: 0.125,
+            x: vec![0.0; dim],
+            anchor: vec![0.0; dim],
+            target,
+            syncs: 0,
+        }
+    }
+
+    /// Override the learning rate (default 1/8; keep it dyadic if the
+    /// run is compared against an f64 reference).
+    pub fn with_lr(mut self, lr: f32) -> LocalSgd {
+        self.lr = lr;
+        self
+    }
+
+    /// The current local model.
+    pub fn model(&self) -> &[f32] {
+        &self.x
+    }
+
+    /// This worker's target (the quadratic's minimizer).
+    pub fn target(&self) -> &[f32] {
+        &self.target
+    }
+
+    /// Grid-snapped local loss at the current model.
+    pub fn loss(&self) -> f64 {
+        let l: f64 = self
+            .x
+            .iter()
+            .zip(&self.target)
+            .map(|(x, t)| {
+                let d = (x - t) as f64;
+                0.5 * d * d
+            })
+            .sum();
+        grid_loss(l)
+    }
+
+    /// How many sync rounds this worker has applied.
+    pub fn syncs(&self) -> usize {
+        self.syncs
+    }
+}
+
+impl Workload for LocalSgd {
+    fn grad(&mut self, step: usize, _worker: usize) -> (Vec<f32>, f64) {
+        let loss = self.loss();
+        // One local SGD step on the private quadratic.
+        for (x, t) in self.x.iter_mut().zip(&self.target) {
+            *x -= self.lr * (*x - *t);
+        }
+        if is_sync_step(step, self.tau) {
+            // Submit the movement since the last sync for averaging.
+            let delta: Vec<f32> = self
+                .anchor
+                .iter()
+                .zip(&self.x)
+                .map(|(a, x)| a - x)
+                .collect();
+            (delta, loss)
+        } else {
+            // Non-sync round: the empty-step protocol carries the loss.
+            (Vec::new(), loss)
+        }
+    }
+
+    fn apply(&mut self, step: usize, _worker: usize, avg: &[f32]) {
+        if !is_sync_step(step, self.tau) {
+            debug_assert!(avg.is_empty(), "non-sync rounds broadcast nothing");
+            return;
+        }
+        assert_eq!(
+            avg.len(),
+            self.x.len(),
+            "sync round must broadcast a full-model movement average"
+        );
+        // Every worker lands on the same model: shared anchor minus the
+        // shared averaged movement. The anchor stays identical across
+        // workers by induction, so it doubles as the next sync's base.
+        for ((x, a), d) in self.x.iter_mut().zip(&self.anchor).zip(avg) {
+            *x = a - d;
+        }
+        self.anchor.copy_from_slice(&self.x);
+        self.syncs += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_grads_are_exact_dyadics() {
+        // Every gradient value is (2k + j)/8192 with |2k + j| <= 416:
+        // exactly representable, so f32 and f64 agree to the bit.
+        for w in 0..5 {
+            for t in 0..8 {
+                for (i, g) in synth_grad(0xEF5EED, t, w, 24).into_iter().enumerate() {
+                    let scaled = g as f64 * 8192.0;
+                    assert_eq!(scaled, scaled.round(), "w{w} t{t} i{i}: {g}");
+                    assert!(scaled.abs() <= 416.0, "w{w} t{t} i{i}: {g}");
+                    let base = synth_base(0xEF5EED, w, i);
+                    let jit = synth_jitter(0xEF5EED, t, i);
+                    assert_eq!(g, base + jit);
+                    assert_eq!(g as f64, base as f64 + jit as f64);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn synth_exact_mean_matches_f32_mean_on_dyadics() {
+        let (seed, n, dim) = (0xEF5EED_u64, 4, 24);
+        let exact = synth_exact_mean(seed, 3, n, dim);
+        for (i, &m) in exact.iter().enumerate() {
+            let s: f64 = (0..n)
+                .map(|w| synth_grad(seed, 3, w, dim)[i] as f64)
+                .sum();
+            assert_eq!(m, s / n as f64, "coordinate {i}");
+        }
+    }
+
+    #[test]
+    fn local_sgd_converges_under_exact_averaging() {
+        // Drive tau = 4 LocalSGD by hand with exact f64 averaging of
+        // the sync deltas: the shared anchor must stay identical across
+        // workers and the mean loss must fall monotonically per sync.
+        let (n, dim, tau, seed) = (3usize, 6usize, 4usize, 0x10CA1_u64);
+        let mut workers: Vec<LocalSgd> =
+            (0..n).map(|w| LocalSgd::new(w, dim, tau, seed)).collect();
+        let mut sync_losses = Vec::new();
+        for step in 0..32 {
+            let mut deltas = Vec::new();
+            let mut losses = 0.0;
+            for (w, wk) in workers.iter_mut().enumerate() {
+                let (d, l) = wk.grad(step, w);
+                losses += l;
+                if is_sync_step(step, tau) {
+                    assert_eq!(d.len(), dim, "sync rounds submit the model movement");
+                    deltas.push(d);
+                } else {
+                    assert!(d.is_empty(), "non-sync rounds ride the empty-step protocol");
+                }
+            }
+            let avg: Vec<f32> = if is_sync_step(step, tau) {
+                (0..dim)
+                    .map(|i| {
+                        (deltas.iter().map(|d| d[i] as f64).sum::<f64>() / n as f64) as f32
+                    })
+                    .collect()
+            } else {
+                Vec::new()
+            };
+            for (w, wk) in workers.iter_mut().enumerate() {
+                wk.apply(step, w, &avg);
+            }
+            if is_sync_step(step, tau) {
+                sync_losses.push(losses / n as f64);
+                let m0 = workers[0].model().to_vec();
+                for wk in &workers[1..] {
+                    assert_eq!(wk.model(), &m0[..], "sync must equalize the models");
+                }
+            }
+        }
+        assert_eq!(workers[0].syncs(), 32 / tau);
+        for pair in sync_losses.windows(2) {
+            assert!(pair[1] < pair[0], "loss must fall per sync: {sync_losses:?}");
+        }
+        // The quadratic's floor for synced LocalSGD is the spread of the
+        // per-worker targets, not zero — but from the origin the loss
+        // must at least halve over 32 rounds.
+        assert!(
+            sync_losses.last().unwrap() < &(sync_losses[0] * 0.5),
+            "{sync_losses:?}"
+        );
+    }
+
+    #[test]
+    fn local_sgd_losses_sit_on_the_fold_order_grid() {
+        let mut wk = LocalSgd::new(1, 9, 2, 7);
+        for step in 0..10 {
+            let (_, l) = wk.grad(step, 1);
+            assert_eq!(l, grid_loss(l), "step {step}: loss off the 2^-20 grid");
+            let avg = vec![0.0f32; if is_sync_step(step, 2) { 9 } else { 0 }];
+            wk.apply(step, 1, &avg);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "sync period")]
+    fn local_sgd_rejects_tau_zero() {
+        LocalSgd::new(0, 4, 0, 1);
+    }
+}

@@ -111,6 +111,59 @@ pub trait ChunkedAllReduce {
     /// no-op for collectives with no word-domain reduce (ring,
     /// two-tree).
     fn set_reduce_threads(&mut self, _threads: usize) {}
+
+    /// Configure error-feedback residual compensation and **reset all
+    /// residual state** (leader-side and any collective-held edge
+    /// residuals). Drivers call this at the start of every run, so a
+    /// collective reused after a failed run starts from clean residuals.
+    /// Only [`WireFormat::Packed`] collectives support an enabled
+    /// config; the default panics when asked to enable EF on an
+    /// F32-native collective (drivers validate first and surface a
+    /// clean error).
+    fn set_error_feedback(&mut self, ef: ErrorFeedback) {
+        assert!(
+            !ef.enabled,
+            "{} has no packed wire path — error feedback needs edge quantization",
+            self.name()
+        );
+    }
+
+    /// The currently configured error-feedback policy.
+    fn error_feedback(&self) -> ErrorFeedback {
+        ErrorFeedback::off()
+    }
+}
+
+/// Error-feedback (EF) residual compensation policy for the packed
+/// wire: workers add their stored quantization residual to the gradient
+/// before edge quantize+pack, and the leader folds its word-mean
+/// rounding error back into the next chunk — so the low-bit streamed
+/// mean becomes unbiased over steps. Inactive at `bits >= 32`
+/// (`dequantize∘quantize` is already lossless there at f32 precision,
+/// so compensation would only inject rounding noise).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ErrorFeedback {
+    /// Whether residual compensation runs. `false` is bit-identical to
+    /// the pre-EF pipeline.
+    pub enabled: bool,
+}
+
+impl ErrorFeedback {
+    /// EF enabled.
+    pub fn on() -> ErrorFeedback {
+        ErrorFeedback { enabled: true }
+    }
+
+    /// EF disabled (the default).
+    pub fn off() -> ErrorFeedback {
+        ErrorFeedback { enabled: false }
+    }
+
+    /// Whether residual state is actually maintained at this wire
+    /// width: EF is a structural no-op at `bits >= 32`.
+    pub fn active(&self, bits: u32) -> bool {
+        self.enabled && bits < 32
+    }
 }
 
 /// Default element-count threshold below which [`par_ranges_mut`] /
@@ -790,6 +843,29 @@ mod tests {
         assert!(plan.threads >= 1);
         assert_eq!(ReducePlan::with_threads(3).threads, 3);
         assert_eq!(ReducePlan::sequential().threads, 1);
+    }
+
+    #[test]
+    fn error_feedback_activity_gates_on_bits() {
+        let ef = ErrorFeedback::on();
+        assert!(ef.active(2) && ef.active(4) && ef.active(16));
+        assert!(!ef.active(32), "32-bit dequant∘quant is lossless — EF idles");
+        assert!(!ErrorFeedback::off().active(2));
+        assert_eq!(ErrorFeedback::default(), ErrorFeedback::off());
+    }
+
+    #[test]
+    #[should_panic(expected = "no packed wire path")]
+    fn f32_native_collectives_reject_enabled_error_feedback() {
+        let mut spy = Spy { session: Session::default(), reduces: 0 };
+        spy.set_error_feedback(ErrorFeedback::on());
+    }
+
+    #[test]
+    fn f32_native_collectives_accept_disabled_error_feedback() {
+        let mut spy = Spy { session: Session::default(), reduces: 0 };
+        spy.set_error_feedback(ErrorFeedback::off());
+        assert_eq!(spy.error_feedback(), ErrorFeedback::off());
     }
 
     #[test]

@@ -44,11 +44,12 @@ use crate::optinc::switch::{OnnMode, OptIncSwitch};
 use crate::quant::GlobalQuantizer;
 
 use super::engine::{
-    par_for_each_mut, BufferPool, ChunkedAllReduce, ReducePlan, Session, ShardChunk,
+    par_for_each_mut, BufferPool, ChunkedAllReduce, ErrorFeedback, ReducePlan, Session,
+    ShardChunk,
 };
 use super::wire::{
     apply_wire_avg, check_wire_aligned, pack_chunks_at_edge, pack_words_checked_into,
-    packed_len, recycle_wire, unpack_words_into, WireAvg, WireChunk, WireFormat,
+    packed_len, recycle_wire, unpack_words_into, EfState, WireAvg, WireChunk, WireFormat,
 };
 use super::CollectiveStats;
 
@@ -170,6 +171,7 @@ pub struct FabricAllReduce {
     levels: Vec<Level>,
     session: Session,
     reduce: ReducePlan,
+    ef: EfState,
     word_pool: BufferPool<u32>,
     sum_pool: BufferPool<u64>,
     byte_pool: BufferPool<u8>,
@@ -222,6 +224,7 @@ impl FabricAllReduce {
             levels,
             session: Session::default(),
             reduce: ReducePlan::auto(),
+            ef: EfState::default(),
             word_pool: BufferPool::new(),
             sum_pool: BufferPool::new(),
             byte_pool: BufferPool::new(),
@@ -447,16 +450,21 @@ impl ChunkedAllReduce for FabricAllReduce {
             self.capacity()
         );
         self.session.begin(workers, elements);
+        self.ef.begin(self.bits, elements);
     }
 
     fn reduce_chunk(&mut self, chunks: &mut [ShardChunk]) {
         // Float adapter over the packed wire path (shared protocol in
         // `wire::pack_chunks_at_edge`/`apply_wire_avg`): leaf
         // transmitters quantize+pack at the edge, the cascade reduces
-        // in the word domain, the root average dequantizes once.
+        // in the word domain, the root average dequantizes once. With
+        // EF, compensate before the scale probe and store the fresh
+        // residual right after packing.
         let n = self.session.workers();
         assert_eq!(chunks.len(), n, "fabric opened for {n} workers");
+        self.ef.edge_compensate(&self.quantizer, chunks);
         let wire = pack_chunks_at_edge(&self.quantizer, &mut self.byte_pool, chunks);
+        self.ef.edge_store(&self.quantizer, wire[0].scale, chunks);
         let avg = self.reduce_wire_chunk(&wire);
         apply_wire_avg(&self.quantizer, &mut self.float_pool, &avg, chunks);
         recycle_wire(&mut self.byte_pool, wire);
@@ -483,10 +491,18 @@ impl ChunkedAllReduce for FabricAllReduce {
         }
     }
 
+    fn set_error_feedback(&mut self, ef: ErrorFeedback) {
+        self.ef.configure(ef);
+    }
+
+    fn error_feedback(&self) -> ErrorFeedback {
+        self.ef.config()
+    }
+
     fn reduce_wire_chunk(&mut self, chunks: &[WireChunk]) -> WireAvg {
         let n = self.session.workers();
         assert_eq!(chunks.len(), n, "fabric opened for {n} workers");
-        let (_, elements, scale) = check_wire_aligned(chunks, self.bits);
+        let (offset, elements, scale) = check_wire_aligned(chunks, self.bits);
 
         // 1. Unpack the leaf transmissions into recycled word buffers —
         //    the outer Vec is a field so steady-state chunks allocate
@@ -502,13 +518,24 @@ impl ChunkedAllReduce for FabricAllReduce {
             unpack_words_into(&chunks[i].words, bits, buf);
         });
 
+        // EF stages the exact element-wise leaf word sums before the
+        // routes drain `nodes` — the leader residual accounts against
+        // the ideal flat mean, whatever per-level rounding the chosen
+        // mode then applies.
+        self.ef
+            .stage(bits, elements, nodes.iter().map(|b| b.as_slice()));
+
         // 2. One traversal up the cascade — word domain only. The
         //    routes drain `nodes` and give the emptied outer Vec back.
-        let root = match self.mode {
+        let mut root = match self.mode {
             FabricMode::Basic => self.route_basic(&mut nodes, elements),
             FabricMode::Remainder => self.route_remainder(&mut nodes, elements),
         };
         self.leaf_bufs = nodes;
+
+        // Leader-side EF on the root words (clamped to the wire range,
+        // so the checked pack below cannot trip on it).
+        self.ef.apply(&self.quantizer, offset, scale, &mut root);
 
         // 3. Pack the root average once; the Arc rides the splitter tree
         //    back down to every worker. Checked pack: the root words

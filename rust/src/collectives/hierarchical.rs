@@ -18,12 +18,12 @@ use crate::optinc::cascade::{Cascade, CascadeMode};
 use crate::quant::GlobalQuantizer;
 
 use super::engine::{
-    par_for_each_mut, par_ranges_mut, BufferPool, ChunkedAllReduce, ReducePlan, Session,
-    ShardChunk,
+    par_for_each_mut, par_ranges_mut, BufferPool, ChunkedAllReduce, ErrorFeedback, ReducePlan,
+    Session, ShardChunk,
 };
 use super::wire::{
     apply_wire_avg, check_wire_aligned, pack_chunks_at_edge, pack_words_checked_into,
-    packed_len, recycle_wire, unpack_words_into, WireAvg, WireChunk, WireFormat,
+    packed_len, recycle_wire, unpack_words_into, EfState, WireAvg, WireChunk, WireFormat,
 };
 use super::CollectiveStats;
 
@@ -33,6 +33,7 @@ pub struct HierarchicalOptInc {
     pub quantizer: GlobalQuantizer,
     session: Session,
     reduce: ReducePlan,
+    ef: EfState,
     word_pool: BufferPool<u32>,
     byte_pool: BufferPool<u8>,
     float_pool: BufferPool<f32>,
@@ -51,6 +52,7 @@ impl HierarchicalOptInc {
             quantizer: GlobalQuantizer::new(bits),
             session: Session::default(),
             reduce: ReducePlan::auto(),
+            ef: EfState::default(),
             word_pool: BufferPool::new(),
             byte_pool: BufferPool::new(),
             float_pool: BufferPool::new(),
@@ -94,15 +96,19 @@ impl ChunkedAllReduce for HierarchicalOptInc {
             self.capacity()
         );
         self.session.begin(workers, elements);
+        self.ef.begin(self.quantizer.bits(), elements);
     }
 
     fn reduce_chunk(&mut self, chunks: &mut [ShardChunk]) {
         // Float adapter over the packed wire path (shared protocol in
         // `wire::pack_chunks_at_edge`/`apply_wire_avg`), as in the flat
-        // and fabric collectives.
+        // and fabric collectives — with EF, compensate before the scale
+        // probe and store the residual right after packing.
         let n_servers = self.session.workers();
         assert_eq!(chunks.len(), n_servers, "cascade wired for {n_servers} servers");
+        self.ef.edge_compensate(&self.quantizer, chunks);
         let wire = pack_chunks_at_edge(&self.quantizer, &mut self.byte_pool, chunks);
+        self.ef.edge_store(&self.quantizer, wire[0].scale, chunks);
         let avg = self.reduce_wire_chunk(&wire);
         apply_wire_avg(&self.quantizer, &mut self.float_pool, &avg, chunks);
         recycle_wire(&mut self.byte_pool, wire);
@@ -122,11 +128,19 @@ impl ChunkedAllReduce for HierarchicalOptInc {
         self.reduce = ReducePlan::with_threads(threads);
     }
 
+    fn set_error_feedback(&mut self, ef: ErrorFeedback) {
+        self.ef.configure(ef);
+    }
+
+    fn error_feedback(&self) -> ErrorFeedback {
+        self.ef.config()
+    }
+
     fn reduce_wire_chunk(&mut self, chunks: &[WireChunk]) -> WireAvg {
         let n_servers = self.session.workers();
         assert_eq!(chunks.len(), n_servers, "cascade wired for {n_servers} servers");
         let bits = self.scenario.bits;
-        let (_, elements, scale) = check_wire_aligned(chunks, bits);
+        let (offset, elements, scale) = check_wire_aligned(chunks, bits);
 
         // Unpack each server's transmission into recycled word buffers
         // (outer Vec reused across chunks, per-server decode split
@@ -139,6 +153,11 @@ impl ChunkedAllReduce for HierarchicalOptInc {
         par_for_each_mut(self.reduce, elements, &mut words, |i, buf| {
             unpack_words_into(&chunks[i].words, bits, buf);
         });
+
+        // EF stages the exact element-wise word sums before the cascade
+        // rounds, so the leader residual can repay whatever rounding the
+        // two-level traversal introduces.
+        self.ef.stage(bits, elements, words.iter().map(|w| w.as_slice()));
 
         // One cascade traversal per element — word domain only. Large
         // chunks split the element range across scoped threads; the
@@ -171,6 +190,10 @@ impl ChunkedAllReduce for HierarchicalOptInc {
                 }
             });
         }
+
+        // Leader-side EF on the cascade's emitted words (clamped to the
+        // wire range, so the checked pack below cannot trip on it).
+        self.ef.apply(&self.quantizer, offset, scale, &mut avg_words);
 
         // Pack the final quantized average once for the splitter
         // broadcast. Checked: the cascade output is a trust boundary

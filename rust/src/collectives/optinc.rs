@@ -34,11 +34,12 @@ use crate::quant::GlobalQuantizer;
 use crate::util::rng::Pcg32;
 
 use super::engine::{
-    par_for_each_mut, BufferPool, ChunkedAllReduce, ReducePlan, Session, ShardChunk,
+    par_for_each_mut, BufferPool, ChunkedAllReduce, ErrorFeedback, ReducePlan, Session,
+    ShardChunk,
 };
 use super::wire::{
     apply_wire_avg, check_wire_aligned, pack_chunks_at_edge, pack_words_checked_into,
-    packed_len, recycle_wire, unpack_words_into, WireAvg, WireChunk, WireFormat,
+    packed_len, recycle_wire, unpack_words_into, EfState, WireAvg, WireChunk, WireFormat,
 };
 use super::CollectiveStats;
 
@@ -52,6 +53,7 @@ pub struct OptIncAllReduce {
     pub injected_errors: u64,
     session: Session,
     reduce: ReducePlan,
+    ef: EfState,
     word_pool: BufferPool<u32>,
     byte_pool: BufferPool<u8>,
     float_pool: BufferPool<f32>,
@@ -72,6 +74,7 @@ impl OptIncAllReduce {
             injected_errors: 0,
             session: Session::default(),
             reduce: ReducePlan::auto(),
+            ef: EfState::default(),
             word_pool: BufferPool::new(),
             byte_pool: BufferPool::new(),
             float_pool: BufferPool::new(),
@@ -126,6 +129,7 @@ impl ChunkedAllReduce for OptIncAllReduce {
             self.switch.scenario.servers
         );
         self.session.begin(workers, elements);
+        self.ef.begin(self.quantizer.bits(), elements);
     }
 
     fn reduce_chunk(&mut self, chunks: &mut [ShardChunk]) {
@@ -134,10 +138,15 @@ impl ChunkedAllReduce for OptIncAllReduce {
         // at the edge exactly as a worker thread would, reduce in the
         // word domain, dequantize the shared average once. One
         // reduction implementation serves both wire formats, so they
-        // cannot drift apart.
+        // cannot drift apart. With EF enabled the adapter also plays
+        // the worker's role: compensate before the scale probe, store
+        // the residual after packing (before the average overwrites
+        // the chunk data).
         let n = self.session.workers();
         assert_eq!(chunks.len(), n, "switch wired for {n} servers");
+        self.ef.edge_compensate(&self.quantizer, chunks);
         let wire = pack_chunks_at_edge(&self.quantizer, &mut self.byte_pool, chunks);
+        self.ef.edge_store(&self.quantizer, wire[0].scale, chunks);
         let avg = self.reduce_wire_chunk(&wire);
         apply_wire_avg(&self.quantizer, &mut self.float_pool, &avg, chunks);
         recycle_wire(&mut self.byte_pool, wire);
@@ -158,11 +167,19 @@ impl ChunkedAllReduce for OptIncAllReduce {
         self.switch.set_reduce_threads(threads);
     }
 
+    fn set_error_feedback(&mut self, ef: ErrorFeedback) {
+        self.ef.configure(ef);
+    }
+
+    fn error_feedback(&self) -> ErrorFeedback {
+        self.ef.config()
+    }
+
     fn reduce_wire_chunk(&mut self, chunks: &[WireChunk]) -> WireAvg {
         let n = self.session.workers();
         assert_eq!(chunks.len(), n, "switch wired for {n} servers");
         let bits = self.switch.scenario.bits;
-        let (_, elements, scale) = check_wire_aligned(chunks, bits);
+        let (offset, elements, scale) = check_wire_aligned(chunks, bits);
 
         // 1. Unpack each worker's packed words into recycled buffers
         //    (the outer Vec is a reused field, the per-worker decode
@@ -177,8 +194,12 @@ impl ChunkedAllReduce for OptIncAllReduce {
         });
 
         // 2. One traversal of the switch, the whole chunk as one batched
-        //    frame set — word domain only, no float round-trip.
+        //    frame set — word domain only, no float round-trip. EF
+        //    stages the exact element-wise word sums first, so the
+        //    leader residual can account for whatever the pipeline
+        //    (switch rounding + injected errors) actually emits.
         let word_views: Vec<&[u32]> = words.iter().map(|w| w.as_slice()).collect();
+        self.ef.stage(bits, elements, word_views.iter().copied());
         let mut avg_words = self.word_pool.take(elements);
         self.switch.average_words_into(&word_views, &mut avg_words);
         drop(word_views);
@@ -186,6 +207,10 @@ impl ChunkedAllReduce for OptIncAllReduce {
         // 2b. Residual ONN error injection (Fig. 7a with-errors runs).
         self.injected_errors +=
             self.error_model.inject(&mut avg_words, bits, &mut self.rng) as u64;
+
+        // 2c. Leader-side EF: repay the word-mean rounding debt (and
+        //     absorb any injected deviation) on the emitted words.
+        self.ef.apply(&self.quantizer, offset, scale, &mut avg_words);
 
         // 3. Pack the average once; the Arc is the broadcast allocation
         //    every worker shares. Checked pack: the error model mutates

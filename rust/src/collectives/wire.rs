@@ -51,7 +51,7 @@
 
 use std::sync::Arc;
 
-use super::engine::{check_aligned, BufferPool, ShardChunk};
+use super::engine::{check_aligned, BufferPool, ErrorFeedback, ShardChunk};
 use crate::quant::GlobalQuantizer;
 
 /// Bytes `elements` B-bit words occupy on the wire.
@@ -660,6 +660,252 @@ pub fn recycle_wire(pool: &mut BufferPool<u8>, wire: Vec<WireChunk>) {
     }
 }
 
+/// Store the edge quantization error for the next step's compensation:
+/// `resid[i] = comp[i] − dequantize(quantize(comp[i], scale))`.
+///
+/// `comp` must be the **compensated** gradient (raw gradient plus the
+/// previous residual) — the same values that were packed — and `scale`
+/// the block scale those values were packed under. One shared function
+/// so the three edge sites (threaded worker loop, event backend, float
+/// adapter) cannot drift: the residual a worker carries must be exactly
+/// the error its packed words encode, or the telescoping sum that makes
+/// the streamed mean unbiased breaks.
+pub fn ef_store_residual(
+    quantizer: &GlobalQuantizer,
+    scale: f32,
+    comp: &[f32],
+    resid: &mut [f32],
+) {
+    assert_eq!(
+        comp.len(),
+        resid.len(),
+        "EF residual buffer does not match the compensated chunk"
+    );
+    for (r, &c) in resid.iter_mut().zip(comp) {
+        *r = c - quantizer.dequantize(quantizer.quantize(c, scale), scale);
+    }
+}
+
+/// Error-feedback state held by a wire-native leader: the collective's
+/// half of the two-sided EF scheme.
+///
+/// Two residual families live here:
+///
+/// * **Edge residuals** (`edge`, f32, one vec per worker) serve the
+///   float `reduce_chunk` adapter only — in-memory drivers like
+///   `ChunkedDriver` / `DpTrainer` have no worker processes, so the
+///   collective compensates and stores at [`pack_chunks_at_edge`] time.
+///   The cluster backends keep worker residuals on the worker side
+///   instead and never touch these.
+/// * **The leader residual** (`lead`, f64, one scalar per gradient
+///   element, in *float* units) absorbs the rounding bias of the
+///   pipeline's word mean. Worker-side EF alone is not enough: the
+///   round-half-up word mean `((Σw)·2+n)/(2n)` injects up to half a
+///   quantization step of bias per chunk per step, and that bias does
+///   not telescope — at 2 bits it dominates the EF gain. The leader
+///   therefore tracks, in f64 (exactly reproducible on every backend),
+///   the difference between the ideal word mean `Σw/n` plus carried
+///   residual and what the emitted word actually decodes to, and nudges
+///   the next emitted word to repay it. Float units (not word units)
+///   because the per-chunk scale changes every step — a word-unit debt
+///   has no stable meaning across scales.
+///
+/// All arithmetic is IEEE-deterministic (integer sums, f64 ops in fixed
+/// order), so two backends running the same schedule produce bit-exact
+/// words — the conformance matrix relies on this.
+#[derive(Clone, Debug, Default)]
+pub struct EfState {
+    cfg: ErrorFeedback,
+    /// Full-shard element count, recorded at `begin` (sizes `lead` and
+    /// lazily-allocated `edge` rows).
+    elements: usize,
+    /// Per-worker edge residuals for the float adapter path. Allocated
+    /// lazily on first `edge_compensate` — cluster runs never pay for
+    /// them (a 1024-worker event run must not allocate 1024 shard-sized
+    /// vectors it will never read).
+    edge: Vec<Vec<f32>>,
+    /// Leader rounding residual, one f64 per gradient element.
+    lead: Vec<f64>,
+    /// Per-chunk element-wise word sums staged before the pipeline's own
+    /// averaging/routing runs (scratch, reused across chunks).
+    sums: Vec<u64>,
+    /// Leaf count behind `sums` (0 = nothing staged).
+    staged: usize,
+}
+
+impl EfState {
+    /// Install a policy and **drop all residual state**. Drivers call
+    /// this at the start of every run, which is what guarantees a
+    /// collective reused after a failed run starts clean instead of
+    /// leaking a dead run's residuals into the next one.
+    pub fn configure(&mut self, cfg: ErrorFeedback) {
+        self.cfg = cfg;
+        self.elements = 0;
+        self.edge.clear();
+        self.lead.clear();
+        self.sums.clear();
+        self.staged = 0;
+    }
+
+    pub fn config(&self) -> ErrorFeedback {
+        self.cfg
+    }
+
+    pub fn active(&self, bits: u32) -> bool {
+        self.cfg.active(bits)
+    }
+
+    /// Per-step sizing, called from the collective's `begin`. Residuals
+    /// persist across steps; they are only (re)built when the shard
+    /// length actually changes, and an empty step (`elements == 0`,
+    /// e.g. a LocalSGD non-sync round) touches nothing — state carries
+    /// straight through to the next sync step, and a zero-length run
+    /// never allocates residual storage at all.
+    pub fn begin(&mut self, bits: u32, elements: usize) {
+        if !self.active(bits) || elements == 0 {
+            return;
+        }
+        if self.elements != elements {
+            self.elements = elements;
+            self.edge.clear();
+            self.lead.clear();
+        }
+        if self.lead.len() != elements {
+            self.lead.resize(elements, 0.0);
+        }
+    }
+
+    /// Float-adapter edge hook: add each worker's carried residual into
+    /// its chunk **before** [`pack_chunks_at_edge`] runs, so the block
+    /// scale is probed over the compensated values (exactly what the
+    /// cluster backends do worker-side).
+    pub fn edge_compensate(&mut self, quantizer: &GlobalQuantizer, chunks: &mut [ShardChunk]) {
+        if !self.active(quantizer.bits()) {
+            return;
+        }
+        let (offset, len) = check_aligned(chunks);
+        if len == 0 {
+            return;
+        }
+        for c in chunks.iter_mut() {
+            if self.edge.len() <= c.worker {
+                self.edge.resize_with(c.worker + 1, Vec::new);
+            }
+            let resid = &mut self.edge[c.worker];
+            if resid.len() != self.elements {
+                resid.clear();
+                resid.resize(self.elements, 0.0);
+            }
+            for (g, &r) in c.data.iter_mut().zip(&resid[offset..offset + len]) {
+                *g += r;
+            }
+        }
+    }
+
+    /// Float-adapter edge hook: after the chunks were packed under
+    /// `scale`, store each worker's fresh quantization error back into
+    /// its residual row. Must run before [`apply_wire_avg`] overwrites
+    /// the chunk data with the average.
+    pub fn edge_store(&mut self, quantizer: &GlobalQuantizer, scale: f32, chunks: &[ShardChunk]) {
+        if !self.active(quantizer.bits()) {
+            return;
+        }
+        let (offset, len) = check_aligned(chunks);
+        if len == 0 {
+            return;
+        }
+        for c in chunks {
+            let resid = &mut self.edge[c.worker];
+            ef_store_residual(quantizer, scale, &c.data, &mut resid[offset..offset + len]);
+        }
+    }
+
+    /// Stage the element-wise word sums of a chunk's leaf words, before
+    /// the pipeline averages/routes them. `leaves` yields one unpacked
+    /// word slice per worker, each `elements` long.
+    pub fn stage<'a>(
+        &mut self,
+        bits: u32,
+        elements: usize,
+        leaves: impl IntoIterator<Item = &'a [u32]>,
+    ) {
+        if !self.active(bits) {
+            self.staged = 0;
+            return;
+        }
+        self.sums.clear();
+        self.sums.resize(elements, 0);
+        let mut n = 0usize;
+        for leaf in leaves {
+            assert_eq!(
+                leaf.len(),
+                elements,
+                "EF stage: leaf word count does not match the chunk"
+            );
+            for (s, &w) in self.sums.iter_mut().zip(leaf) {
+                *s += w as u64;
+            }
+            n += 1;
+        }
+        self.staged = n;
+    }
+
+    /// Repay the leader residual on the pipeline's output words for one
+    /// chunk at shard offset `offset`, packed under `scale`.
+    ///
+    /// Per element: let `s` be the staged word sum over `n` leaves and
+    /// `base = ⌊(2s+n)/(2n)⌋` the exact round-half-up mean the ideal
+    /// pipeline would emit (integer arithmetic — immune to f64 tie
+    /// surprises). The ideal float mean plus carried residual is
+    /// `y = (s/n − half)·step + ρ` with `step = scale/steps`; the word
+    /// that best encodes it is `des = ⌊y/step + half + 0.5⌋`. The emitted
+    /// word is the pipeline's own output shifted by the correction
+    /// `des − base` (so a trained-ONN or basic-mode pipeline keeps its
+    /// deviation, which the residual then absorbs), clamped to the wire
+    /// range; whatever the emitted word fails to encode becomes the new
+    /// residual `ρ' = y − (w_out − half)·step`.
+    pub fn apply(
+        &mut self,
+        quantizer: &GlobalQuantizer,
+        offset: usize,
+        scale: f32,
+        avg_words: &mut [u32],
+    ) {
+        let bits = quantizer.bits();
+        if !self.active(bits) {
+            return;
+        }
+        assert!(self.staged > 0, "EF apply without staged word sums");
+        assert_eq!(
+            avg_words.len(),
+            self.sums.len(),
+            "EF apply: output words do not match the staged chunk"
+        );
+        assert!(
+            offset + avg_words.len() <= self.lead.len(),
+            "EF apply: chunk exceeds the shard the leader residual was sized for"
+        );
+        let n = self.staged as u64;
+        let nf = self.staged as f64;
+        let half = 1i64 << (bits - 1);
+        let half_f = half as f64;
+        let steps = (half - 1) as f64;
+        let max_word = word_mask(bits) as i64;
+        let scale_f = scale as f64;
+        let step = scale_f / steps;
+        for (j, w) in avg_words.iter_mut().enumerate() {
+            let s = self.sums[j];
+            let base = ((s * 2 + n) / (2 * n)) as i64;
+            let y = (s as f64 / nf - half_f) * step + self.lead[offset + j];
+            let des = (y / scale_f * steps + half_f + 0.5).floor() as i64;
+            let out = (*w as i64 + (des - base)).clamp(0, max_word);
+            *w = out as u32;
+            self.lead[offset + j] = y - (out - half) as f64 * step;
+        }
+        self.staged = 0;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -881,5 +1127,129 @@ mod tests {
             WireChunk { worker: 1, offset: 0, words: vec![0], scale: 2.0, elements: 1 },
         ];
         check_wire_aligned(&chunks, 8);
+    }
+
+    #[test]
+    fn ef_store_residual_matches_roundtrip_error() {
+        let q = GlobalQuantizer::new(4);
+        let scale = 1.0f32;
+        let comp = [0.33f32, -0.71, 0.0, 1.0, -1.0];
+        let mut resid = vec![9.0f32; comp.len()];
+        ef_store_residual(&q, scale, &comp, &mut resid);
+        for (i, (&c, &r)) in comp.iter().zip(&resid).enumerate() {
+            let back = q.dequantize(q.quantize(c, scale), scale);
+            assert_eq!(r, c - back, "i={i}");
+            assert!(r.abs() <= q.max_abs_error(scale) * 1.0001, "i={i}");
+        }
+    }
+
+    #[test]
+    fn ef_state_inactive_paths_touch_nothing() {
+        // Disabled config, or bits = 32, must never allocate residual
+        // state — and begin with zero elements must not either (the
+        // zero-length-shard guard).
+        let q2 = GlobalQuantizer::new(2);
+        let mut off = EfState::default();
+        off.begin(2, 64);
+        assert!(off.lead.is_empty() && off.edge.is_empty());
+
+        let mut ef = EfState::default();
+        ef.configure(ErrorFeedback::on());
+        ef.begin(32, 64); // EF is defined as inactive at full width
+        assert!(ef.lead.is_empty());
+        ef.begin(2, 0); // empty step: no allocation
+        assert!(ef.lead.is_empty());
+        ef.begin(2, 64);
+        assert_eq!(ef.lead.len(), 64);
+        // An interleaved empty step (LocalSGD non-sync round) must not
+        // disturb the carried residual.
+        ef.lead[3] = 0.5;
+        ef.begin(2, 0);
+        assert_eq!(ef.lead[3], 0.5);
+        ef.begin(2, 64);
+        assert_eq!(ef.lead[3], 0.5);
+        // stage/apply are no-ops when inactive.
+        let mut words = vec![1u32, 2];
+        off.stage(2, 2, [&[1u32, 2][..], &[3, 0]]);
+        off.apply(&q2, 0, 1.0, &mut words);
+        assert_eq!(words, vec![1, 2]);
+        // configure drops everything (the post-fault reset).
+        ef.configure(ErrorFeedback::on());
+        assert!(ef.lead.is_empty() && ef.edge.is_empty());
+    }
+
+    #[test]
+    fn ef_leader_apply_repays_word_mean_rounding() {
+        // Two workers whose word mean always rounds up by half a step:
+        // without EF the emitted word is biased +0.5 words every step;
+        // with the leader residual the emitted words must alternate so
+        // the running decoded sum tracks the ideal mean s/n.
+        let q = GlobalQuantizer::new(4);
+        let scale = 1.0f32;
+        let bits = 4;
+        let half = 1i64 << (bits - 1);
+        let steps = (half - 1) as f64;
+        let leaves: [&[u32]; 2] = [&[10u32], &[11u32]]; // mean 10.5 → base 11
+        let ideal_per_step = (10.5 - half as f64) / steps; // decoded ideal mean
+        let mut ef = EfState::default();
+        ef.configure(ErrorFeedback::on());
+        ef.begin(bits, 1);
+        let mut decoded_sum = 0.0f64;
+        let mut seen = std::collections::BTreeSet::new();
+        for t in 0..64 {
+            ef.stage(bits, 1, leaves.iter().copied());
+            let mut words = vec![quantized_mean_word(&[10, 11])];
+            ef.apply(&q, 0, scale, &mut words);
+            seen.insert(words[0]);
+            decoded_sum += q.dequantize(words[0], scale) as f64;
+            let ideal_sum = ideal_per_step * (t + 1) as f64;
+            assert!(
+                (decoded_sum - ideal_sum).abs() <= 0.5 / steps + 1e-9,
+                "step {t}: decoded sum {decoded_sum} drifted from ideal {ideal_sum}"
+            );
+        }
+        assert_eq!(
+            seen.into_iter().collect::<Vec<_>>(),
+            vec![10, 11],
+            "EF must alternate around the half-step tie, not emit one side"
+        );
+    }
+
+    fn quantized_mean_word(words: &[u32]) -> u32 {
+        let n = words.len() as u64;
+        let s: u64 = words.iter().map(|&w| w as u64).sum();
+        ((s * 2 + n) / (2 * n)) as u32
+    }
+
+    #[test]
+    fn ef_edge_hooks_compensate_then_store() {
+        // One worker, one element, repeated steps: with the edge hooks
+        // the cumulative dequantized value must track the cumulative
+        // true gradient to within one quantization step, while the
+        // uncompensated path keeps a constant per-step bias.
+        let q = GlobalQuantizer::new(2);
+        let g = 0.3f32; // quantizes coarsely at 2 bits
+        let scale = 1.0f32;
+        let mut ef = EfState::default();
+        ef.configure(ErrorFeedback::on());
+        let mut cum_ef = 0.0f64;
+        let mut cum_raw = 0.0f64;
+        for _ in 0..50 {
+            ef.begin(2, 1);
+            let mut chunks = vec![ShardChunk { worker: 0, offset: 0, data: vec![g] }];
+            ef.edge_compensate(&q, &mut chunks);
+            let w = q.quantize(chunks[0].data[0], scale);
+            ef.edge_store(&q, scale, &chunks);
+            cum_ef += q.dequantize(w, scale) as f64;
+            cum_raw += q.dequantize(q.quantize(g, scale), scale) as f64;
+        }
+        let true_cum = 0.3f64 * 50.0;
+        assert!(
+            (cum_ef - true_cum).abs() <= 1.0,
+            "EF edge cumulative {cum_ef} vs true {true_cum}"
+        );
+        // 2-bit raw quantization of 0.3 at scale 1.0 lands on 0.0 every
+        // step — the uncompensated bias never shrinks.
+        assert!((cum_raw - true_cum).abs() >= 10.0);
     }
 }

@@ -10,6 +10,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::collectives::engine::ErrorFeedback;
 use crate::collectives::optinc::OptIncAllReduce;
 use crate::collectives::ring::RingAllReduce;
 use crate::config::Scenario;
@@ -84,18 +85,20 @@ pub fn run(
     // Baseline: exact fp32 ring averaging.
     let mut ring = RingAllReduce::new();
     let mut t = DpTrainer::new(rt.clone(), kind)?;
-    let baseline = t.run(workers, steps, &mut ring, seed, log_every)?;
+    let baseline = t.run(workers, steps, &mut ring, ErrorFeedback::off(), seed, log_every)?;
 
     // OptINC, perfectly-trained ONN (quantization effect only).
     let mut clean = OptIncAllReduce::exact(sc.clone(), seed);
     let mut t = DpTrainer::new(rt.clone(), kind)?;
-    let optinc_clean = t.run(workers, steps, &mut clean, seed, log_every)?;
+    let optinc_clean =
+        t.run(workers, steps, &mut clean, ErrorFeedback::off(), seed, log_every)?;
 
     // OptINC with Table II residual errors.
     let em = ErrorModel::paper_table2(table2_row, seed + 1);
     let mut with_err = OptIncAllReduce::new(OptIncSwitch::exact(sc), em, seed + 1);
     let mut t = DpTrainer::new(rt, kind)?;
-    let optinc_errors = t.run(workers, steps, &mut with_err, seed, log_every)?;
+    let optinc_errors =
+        t.run(workers, steps, &mut with_err, ErrorFeedback::off(), seed, log_every)?;
 
     Ok(Fig7aResult {
         workload,

@@ -3,6 +3,7 @@
 //! source of truth for every reproduced number.
 
 pub mod cascade;
+pub mod convergence;
 pub mod fig6;
 #[cfg(feature = "pjrt")]
 pub mod fig7a;

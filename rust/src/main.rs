@@ -16,8 +16,13 @@ const COMMANDS: &[Command] = &[
     },
     Command {
         name: "pipeline",
-        about: "Streaming engine demo: pipelined vs monolithic (ring|optinc|fabric --fan-in --levels --wire packed|f32 --backend threaded|event --servers N --reduce-threads T)",
+        about: "Streaming engine demo: pipelined vs monolithic (ring|optinc|fabric --fan-in --levels --wire packed|f32 --backend threaded|event --servers N --reduce-threads T --error-feedback --bits B)",
         run: cmd_pipeline,
+    },
+    Command {
+        name: "convergence",
+        about: "Convergence sweep: bits x error-feedback x workload (dense, straggler, LocalSGD --tau) on the event backend",
+        run: cmd_convergence,
     },
     Command {
         name: "scale",
@@ -77,7 +82,10 @@ fn main() {
         print_usage("optinc-repro", COMMANDS);
         std::process::exit(2);
     };
-    let args = match Args::parse(&argv[1..], &["quick", "help", "errors-only", "post-hoc"]) {
+    let args = match Args::parse(
+        &argv[1..],
+        &["quick", "help", "errors-only", "post-hoc", "error-feedback"],
+    ) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("argument error: {e}");
@@ -139,7 +147,7 @@ fn cmd_fig7a(_args: &Args) -> Result<()> {
 /// pipeline, and report the modeled step times.
 fn cmd_pipeline(args: &Args) -> Result<()> {
     use optinc::cluster::{Backend, Cluster, ClusterMetrics, Workload};
-    use optinc::collectives::engine::ChunkedAllReduce;
+    use optinc::collectives::engine::{ChunkedAllReduce, ErrorFeedback};
     use optinc::collectives::fabric::{FabricAllReduce, FabricMode, FabricTopology};
     use optinc::collectives::optinc::OptIncAllReduce;
     use optinc::collectives::ring::RingAllReduce;
@@ -182,6 +190,15 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         "packed" => false,
         "f32" => true,
         other => anyhow::bail!("unknown --wire '{other}' (packed|f32)"),
+    };
+    // Error feedback compensates edge quantization error across steps,
+    // so it needs the packed wire; `--wire f32 --error-feedback` is
+    // rejected by `Cluster::run` with a clear error rather than running
+    // with silently-dead residual state.
+    let error_feedback = if args.flag("error-feedback") {
+        ErrorFeedback::on()
+    } else {
+        ErrorFeedback::off()
     };
     // Leader reduce parallelism: 0 (the default) auto-sizes to the
     // host's cores, 1 forces the sequential path, n pins exactly n
@@ -299,7 +316,8 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         .with_f32_wire(force_f32)
         .with_backend(backend)
         .with_seed(args.u64_or("seed", 0)?)
-        .with_reduce_parallelism(effective_reduce);
+        .with_reduce_parallelism(effective_reduce)
+        .with_error_feedback(error_feedback);
     let mut piped_metrics = ClusterMetrics::new("pipelined");
     let piped = cluster.run(
         steps,
@@ -319,8 +337,13 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     let m = &mono[0].stats;
     println!(
         "\nstreaming engine — {which}, N={workers}, {elements} elements, chunk {chunk}, \
-         backend {backend:?}, reduce threads {effective_reduce}{}",
-        if reduce_threads == 0 { " (auto)" } else { "" }
+         backend {backend:?}, reduce threads {effective_reduce}{}{}",
+        if reduce_threads == 0 { " (auto)" } else { "" },
+        if error_feedback.enabled {
+            ", error feedback on"
+        } else {
+            ""
+        }
     );
     // Measured vs modeled wire bytes: the packed transport makes these
     // equal for the OptINC family; --wire f32 exposes the old 4x gap.
@@ -407,6 +430,37 @@ fn cmd_scale(args: &Args) -> Result<()> {
     std::fs::create_dir_all(dir)?;
     let path = dir.join("scale_sweep.json");
     std::fs::write(&path, optinc::experiments::scale::to_json(&cfg, &rows).to_pretty())?;
+    println!("  rows -> {}", path.display());
+    Ok(())
+}
+
+/// Convergence sweep: bits × error-feedback × workload on the event
+/// backend — the scenario zoo behind `BENCH_convergence.json`, runnable
+/// as `optinc-repro convergence --bits 2,4,8 --tau 4 --steps 256`.
+fn cmd_convergence(args: &Args) -> Result<()> {
+    let cfg = optinc::experiments::convergence::SweepConfig {
+        workers: args.usize_or("workers", 8)?,
+        dim: args.usize_or("elements", 256)?,
+        steps: args.usize_or("steps", 256)?,
+        chunk: args.usize_or("chunk", 48)?,
+        bits: args
+            .usize_list_or("bits", &[2, 4, 8])?
+            .into_iter()
+            .map(|b| b as u32)
+            .collect(),
+        tau: args.usize_or("tau", 4)?,
+        seed: args.u64_or("seed", 0xEF5EED)?,
+    };
+    let rows = optinc::experiments::convergence::run(&cfg)?;
+    optinc::experiments::convergence::print(&cfg, &rows);
+    // Persist for EXPERIMENTS.md provenance.
+    let dir = std::path::Path::new("target/bench-results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join("convergence_sweep.json");
+    std::fs::write(
+        &path,
+        optinc::experiments::convergence::to_json(&cfg, &rows).to_pretty(),
+    )?;
     println!("  rows -> {}", path.display());
     Ok(())
 }

@@ -184,6 +184,116 @@ pub fn chunked_reference_mean(shards: &[Vec<f32>], chunk: usize, bits: u32) -> V
     out
 }
 
+/// Stateful streaming reference for the **error-feedback** wire path:
+/// what [`chunked_reference_mean`] is to the plain quantized mean, this
+/// is to the two-sided EF scheme every wire-native collective runs when
+/// `ErrorFeedback` is enabled. Feed it one round of raw per-worker
+/// shards at a time; it returns exactly (bit for bit) what the
+/// collectives apply that round.
+///
+/// The two residual families it carries between steps:
+///
+/// * **worker residuals** (f32, one per worker per element): each
+///   worker's shard is compensated `comp = g + r` *before* the block
+///   scale is probed, packed from the compensated values, and the fresh
+///   quantization error `comp − dequant(quant(comp))` stored back;
+/// * **the leader residual** (f64, per element, float units): the
+///   round-half-up word mean `⌊(2Σw+n)/(2n)⌋` injects up to half a
+///   quantization step of bias per chunk which worker-side EF cannot
+///   see; the leader tracks the exact f64 mean `Σw/n` plus carried
+///   debt and shifts the emitted word to repay it, clamped to the wire
+///   range.
+///
+/// Together the two residuals telescope: the cumulative applied mean
+/// differs from the cumulative true mean by at most the residual still
+/// in flight (≈ one quantization step), so the relative error of the
+/// low-bit streamed mean decays like 1/T instead of plateauing.
+///
+/// EF is defined as **inactive at `bits = 32`** (a full-width float
+/// round trip is not the identity, so "compensation" would inject
+/// noise); there this reference collapses to [`chunked_reference_mean`].
+/// An empty round (zero-length shards — e.g. a LocalSGD non-sync step)
+/// is a no-op that neither touches nor allocates residual state.
+pub struct ChunkedEfReference {
+    quantizer: GlobalQuantizer,
+    chunk: usize,
+    resid: Vec<Vec<f32>>,
+    lead: Vec<f64>,
+}
+
+impl ChunkedEfReference {
+    pub fn new(bits: u32, chunk: usize) -> Self {
+        assert!(chunk >= 1, "chunk size must be at least one element");
+        ChunkedEfReference {
+            quantizer: GlobalQuantizer::new(bits),
+            chunk,
+            resid: Vec::new(),
+            lead: Vec::new(),
+        }
+    }
+
+    /// One synchronization round: returns the applied average for this
+    /// step and advances the residual state.
+    pub fn step(&mut self, shards: &[Vec<f32>]) -> Vec<f32> {
+        assert!(!shards.is_empty(), "reference mean needs at least one shard");
+        let bits = self.quantizer.bits();
+        if bits >= 32 {
+            return chunked_reference_mean(shards, self.chunk, bits);
+        }
+        let len = shards[0].len();
+        if len == 0 {
+            return Vec::new();
+        }
+        let n = shards.len();
+        if self.resid.len() != n || self.lead.len() != len {
+            self.resid = vec![vec![0.0; len]; n];
+            self.lead = vec![0.0; len];
+        }
+        let q = &self.quantizer;
+        let half = 1i64 << (bits - 1);
+        let half_f = half as f64;
+        let steps_f = (half - 1) as f64;
+        let max_word = (1i64 << bits) - 1;
+        let nf = n as f64;
+        let mut out = vec![0.0f32; len];
+        let mut lo = 0usize;
+        while lo < len {
+            let hi = lo.saturating_add(self.chunk).min(len);
+            // Edge: compensate, probe the scale over compensated values,
+            // quantize, store the fresh residual back.
+            let comp: Vec<Vec<f32>> = (0..n)
+                .map(|w| (lo..hi).map(|i| shards[w][i] + self.resid[w][i]).collect())
+                .collect();
+            let views: Vec<&[f32]> = comp.iter().map(|c| c.as_slice()).collect();
+            let scale = GlobalQuantizer::global_scale(&views);
+            drop(views);
+            let words: Vec<Vec<u32>> = comp.iter().map(|c| q.quantize_vec(c, scale)).collect();
+            for w in 0..n {
+                for j in 0..hi - lo {
+                    self.resid[w][lo + j] = comp[w][j] - q.dequantize(words[w][j], scale);
+                }
+            }
+            // Leader: exact word mean, then repay the f64 rounding debt
+            // on the emitted word.
+            let scale_f = scale as f64;
+            let step = scale_f / steps_f;
+            for j in 0..hi - lo {
+                let s: u64 = words.iter().map(|ws| ws[j] as u64).sum();
+                // The exact pipeline emits base = round-half-up(Σw/n);
+                // the EF correction shifts it by (des − base), so for an
+                // exact pipeline the emitted word is just des, clamped.
+                let y = (s as f64 / nf - half_f) * step + self.lead[lo + j];
+                let des = (y / scale_f * steps_f + half_f + 0.5).floor() as i64;
+                let w_out = des.clamp(0, max_word);
+                out[lo + j] = q.dequantize(w_out as u32, scale);
+                self.lead[lo + j] = y - (w_out - half) as f64 * step;
+            }
+            lo = hi;
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -373,5 +483,72 @@ mod tests {
     #[should_panic(expected = "got 9")]
     fn odd_bit_width_fails_at_the_quantizer_edge() {
         GlobalQuantizer::new(9);
+    }
+
+    #[test]
+    fn ef_reference_at_full_width_is_the_plain_reference() {
+        let mut rng = Pcg32::seeded(41);
+        let shards: Vec<Vec<f32>> =
+            (0..3).map(|_| (0..17).map(|_| rng.uniform(-1.0, 1.0) as f32).collect()).collect();
+        let mut ef = ChunkedEfReference::new(32, 5);
+        for _ in 0..3 {
+            let got = ef.step(&shards);
+            let want = chunked_reference_mean(&shards, 5, 32);
+            assert_eq!(got, want, "bits=32 EF must collapse to the plain reference");
+        }
+    }
+
+    #[test]
+    fn ef_reference_unbiases_the_low_bit_mean() {
+        // Heterogeneous 3-worker gradients at 2 bits: the plain
+        // quantized mean carries a persistent per-step bias; the EF
+        // reference's cumulative applied mean must track the exact
+        // cumulative mean to within ~one quantization step total.
+        let shards: Vec<Vec<f32>> = vec![vec![0.9, -0.07], vec![0.7, 0.55], vec![-0.8, 0.19]];
+        let exact: Vec<f64> = (0..2)
+            .map(|i| shards.iter().map(|s| s[i] as f64).sum::<f64>() / 3.0)
+            .collect();
+        let mut ef = ChunkedEfReference::new(2, 1);
+        let t = 400usize;
+        let mut cum_ef = [0.0f64; 2];
+        let mut cum_off = [0.0f64; 2];
+        for _ in 0..t {
+            let a = ef.step(&shards);
+            let b = chunked_reference_mean(&shards, 1, 2);
+            for i in 0..2 {
+                cum_ef[i] += a[i] as f64;
+                cum_off[i] += b[i] as f64;
+            }
+        }
+        for i in 0..2 {
+            let ef_err = (cum_ef[i] / t as f64 - exact[i]).abs();
+            let off_err = (cum_off[i] / t as f64 - exact[i]).abs();
+            assert!(ef_err < 1e-2, "i={i}: EF mean error {ef_err} did not vanish");
+            assert!(
+                off_err > 10.0 * ef_err.max(1e-6),
+                "i={i}: EF-off error {off_err} should dwarf EF-on {ef_err}"
+            );
+        }
+    }
+
+    #[test]
+    fn ef_reference_skips_empty_rounds_and_keeps_state() {
+        let shards = vec![vec![0.3f32], vec![-0.2f32]];
+        let empty = vec![Vec::new(), Vec::new()];
+        let mut a = ChunkedEfReference::new(4, 1);
+        let mut b = ChunkedEfReference::new(4, 1);
+        for _ in 0..10 {
+            let x = a.step(&shards);
+            // b interleaves empty LocalSGD-style rounds — they must not
+            // disturb the carried residuals.
+            assert!(b.step(&empty).is_empty());
+            let y = b.step(&shards);
+            assert_eq!(x, y, "empty rounds must not perturb EF state");
+        }
+        assert!(a.resid.iter().all(|r| r.len() == 1));
+        // Empty-only usage never allocates residual state.
+        let mut c = ChunkedEfReference::new(4, 1);
+        c.step(&empty);
+        assert!(c.resid.is_empty() && c.lead.is_empty());
     }
 }

@@ -20,6 +20,8 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use crate::collectives::engine::{ChunkedAllReduce, ErrorFeedback};
+use crate::collectives::wire::WireFormat;
 use crate::collectives::AllReduce;
 use crate::runtime::{lit_f32, lit_i32, lit_scalar_f32, to_f32, Executor, Runtime};
 use crate::util::json::Json;
@@ -152,14 +154,30 @@ impl DpTrainer {
     /// Run synchronous DP training for `steps` with `workers` shards.
     /// Per-worker data streams are seeded independently; the collective is
     /// pluggable (ring vs OptINC — the Fig. 7a comparison).
+    ///
+    /// `ef` enables error feedback on the collective's packed wire:
+    /// residuals are reset here at run start (fresh state per training
+    /// run) and then persist across the run's steps. Collectives that
+    /// stream raw f32 have no edge quantization error to compensate, so
+    /// enabling EF on one is a configuration error, not a silent no-op.
     pub fn run(
         &mut self,
         workers: usize,
         steps: usize,
-        collective: &mut dyn AllReduce,
+        collective: &mut dyn ChunkedAllReduce,
+        ef: ErrorFeedback,
         seed: u64,
         log_every: usize,
     ) -> Result<Vec<StepLog>> {
+        if ef.enabled {
+            anyhow::ensure!(
+                matches!(collective.wire_format(), WireFormat::Packed { .. }),
+                "error feedback requires a packed-wire collective: '{}' streams raw \
+                 f32, so there is no edge quantization error to compensate",
+                collective.name()
+            );
+        }
+        collective.set_error_feedback(ef);
         // Per-worker data sources (same underlying task, different
         // streams — the data-parallel setting).
         let mut corpora: Vec<Option<SyntheticCorpus>> = Vec::new();

@@ -19,8 +19,9 @@
 
 use std::sync::mpsc;
 
+use optinc::cluster::workloads::{is_sync_step, LocalSgd};
 use optinc::cluster::{Backend, Cluster, ClusterMetrics, ComputeModel, StepRecord, Workload};
-use optinc::collectives::engine::ChunkedAllReduce;
+use optinc::collectives::engine::{ChunkedAllReduce, ErrorFeedback};
 use optinc::collectives::fabric::FabricAllReduce;
 use optinc::collectives::optinc::OptIncAllReduce;
 use optinc::collectives::ring::RingAllReduce;
@@ -185,6 +186,221 @@ fn matrix_fabric() {
                     || Box::new(FabricAllReduce::for_workers(bits, 4, workers).unwrap()),
                     &format!("fabric b{bits}"),
                 );
+            }
+        }
+    }
+}
+
+/// Like [`run_one`] but with a caller-chosen step count, error-feedback
+/// policy, and workload factory — the EF and LocalSGD axes need longer
+/// horizons (residuals only matter across steps) and stateful per-worker
+/// models.
+fn run_custom<W, F>(
+    backend: Backend,
+    workers: usize,
+    grain: usize,
+    steps: usize,
+    ef: ErrorFeedback,
+    make_workload: F,
+    collective: &mut dyn ChunkedAllReduce,
+) -> Vec<StepRecord>
+where
+    W: Workload,
+    F: Fn(usize) -> W,
+{
+    let cluster = Cluster::new(workers)
+        .with_chunk_elems(grain)
+        .with_backend(backend)
+        .with_seed(SEED)
+        .with_error_feedback(ef);
+    let mut metrics = ClusterMetrics::new("conformance");
+    cluster
+        .run(steps, make_workload, collective, &mut metrics)
+        .unwrap()
+}
+
+/// Error-feedback conformance: with EF residuals live on both the
+/// worker and the leader side, the threaded and event backends must
+/// still replay each other bit for bit — applied averages, accounted
+/// stats, observed wire bytes — across the full worker × grain × bits
+/// matrix, over enough steps for residual state to matter.
+#[test]
+fn matrix_error_feedback() {
+    const EF_STEPS: usize = 4;
+    for workers in WORKER_COUNTS {
+        for grain in GRAINS {
+            for bits in BITS {
+                let ctx = format!(
+                    "fabric-ef b{bits}: N={workers} grain={grain} — replay with seed {SEED:#x}"
+                );
+                let mut streams = Vec::new();
+                for backend in [Backend::Threaded, Backend::Event] {
+                    let mut coll = FabricAllReduce::for_workers(bits, 4, workers).unwrap();
+                    let (tx, rx) = mpsc::channel();
+                    let records = run_custom(
+                        backend,
+                        workers,
+                        grain,
+                        EF_STEPS,
+                        ErrorFeedback::on(),
+                        move |_| Synth {
+                            dim: DIM,
+                            tx: tx.clone(),
+                        },
+                        &mut coll,
+                    );
+                    let mut applied: Applied = rx.try_iter().collect();
+                    applied.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+                    streams.push((records, applied));
+                }
+                let (tr, ta) = &streams[0];
+                let (er, ea) = &streams[1];
+                assert_eq!(
+                    ta.len(),
+                    workers * EF_STEPS,
+                    "{ctx}: every worker applies every step"
+                );
+                assert_eq!(ta, ea, "{ctx}: EF applied averages must be bit-exact");
+                for (t, e) in tr.iter().zip(er) {
+                    assert_eq!(t.stats, e.stats, "{ctx} step {}: accounted stats", t.step);
+                    assert_eq!(
+                        t.observed_wire_bytes_per_server, e.observed_wire_bytes_per_server,
+                        "{ctx} step {}: observed wire bytes",
+                        t.step
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// EF must actually move the stream at low bit widths (guards against a
+/// silently disconnected residual path passing the conformance matrix
+/// by being a no-op).
+#[test]
+fn error_feedback_changes_the_low_bit_stream() {
+    let run = |ef: ErrorFeedback| -> Applied {
+        let mut coll = FabricAllReduce::for_workers(4, 4, 5).unwrap();
+        let (tx, rx) = mpsc::channel();
+        run_custom(
+            Backend::Event,
+            5,
+            7,
+            4,
+            ef,
+            move |_| Synth {
+                dim: DIM,
+                tx: tx.clone(),
+            },
+            &mut coll,
+        );
+        let mut applied: Applied = rx.try_iter().collect();
+        applied.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        applied
+    };
+    assert_ne!(
+        run(ErrorFeedback::on()),
+        run(ErrorFeedback::off()),
+        "EF on a 4-bit wire must change the applied stream (seed {SEED:#x})"
+    );
+}
+
+/// LocalSGD workload that ships, after every apply, the applied average
+/// AND the resulting model, both as raw bit patterns — so conformance
+/// covers the workload state the sync actually produces, not just the
+/// wire.
+struct TapSgd {
+    inner: LocalSgd,
+    tx: mpsc::Sender<(usize, usize, Vec<u32>)>,
+}
+
+impl Workload for TapSgd {
+    fn grad(&mut self, step: usize, worker: usize) -> (Vec<f32>, f64) {
+        self.inner.grad(step, worker)
+    }
+
+    fn apply(&mut self, step: usize, worker: usize, avg: &[f32]) {
+        self.inner.apply(step, worker, avg);
+        let mut rec: Vec<u32> = avg.iter().map(|v| v.to_bits()).collect();
+        rec.extend(self.inner.model().iter().map(|v| v.to_bits()));
+        self.tx.send((step, worker, rec)).ok();
+    }
+}
+
+/// LocalSGD conformance: sync period τ ∈ {1, 4} (τ=1 degenerates to
+/// every-step sync; τ=4 interleaves three empty non-sync rounds between
+/// syncs), with EF both off and on. Applied deltas and post-apply
+/// models must be bit-exact across backends, and the per-step byte
+/// accounting must show traffic exactly on the sync steps.
+#[test]
+fn matrix_localsgd_sync_period() {
+    const SGD_STEPS: usize = 8;
+    const BITS_SGD: u32 = 4;
+    for tau in [1usize, 4] {
+        for workers in [2usize, 5] {
+            for grain in [1usize, 7, DIM] {
+                for ef in [ErrorFeedback::off(), ErrorFeedback::on()] {
+                    let ctx = format!(
+                        "localsgd tau={tau} ef={} b{BITS_SGD}: N={workers} grain={grain} \
+                         — replay with seed {SEED:#x}",
+                        ef.enabled
+                    );
+                    let mut streams = Vec::new();
+                    for backend in [Backend::Threaded, Backend::Event] {
+                        let mut coll =
+                            FabricAllReduce::for_workers(BITS_SGD, 4, workers).unwrap();
+                        let (tx, rx) = mpsc::channel();
+                        let records = run_custom(
+                            backend,
+                            workers,
+                            grain,
+                            SGD_STEPS,
+                            ef,
+                            move |w| TapSgd {
+                                inner: LocalSgd::new(w, DIM, tau, SEED),
+                                tx: tx.clone(),
+                            },
+                            &mut coll,
+                        );
+                        let mut applied: Applied = rx.try_iter().collect();
+                        applied.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+                        streams.push((records, applied));
+                    }
+                    let (tr, ta) = &streams[0];
+                    let (er, ea) = &streams[1];
+                    assert_eq!(
+                        ta.len(),
+                        workers * SGD_STEPS,
+                        "{ctx}: every worker applies every step"
+                    );
+                    assert_eq!(
+                        ta, ea,
+                        "{ctx}: applied deltas and models must be bit-exact"
+                    );
+                    for (t, e) in tr.iter().zip(er) {
+                        let step = t.step;
+                        assert_eq!(t.stats, e.stats, "{ctx} step {step}: accounted stats");
+                        assert_eq!(
+                            t.observed_wire_bytes_per_server,
+                            e.observed_wire_bytes_per_server,
+                            "{ctx} step {step}: observed wire bytes"
+                        );
+                        assert_eq!(t.mean_loss, e.mean_loss, "{ctx} step {step}: mean loss");
+                        // Traffic exactly on sync rounds: non-sync rounds
+                        // run the empty-step protocol (no payload).
+                        if is_sync_step(step, tau) {
+                            assert!(
+                                t.stats.bytes_sent_per_server > 0,
+                                "{ctx} step {step}: sync round must move bytes"
+                            );
+                        } else {
+                            assert_eq!(
+                                t.stats.bytes_sent_per_server, 0,
+                                "{ctx} step {step}: non-sync round must be empty"
+                            );
+                        }
+                    }
+                }
             }
         }
     }

@@ -5,8 +5,9 @@
 
 use std::time::Duration;
 
+use optinc::cluster::workloads::synth_grad;
 use optinc::cluster::{Backend, Cluster, ClusterMetrics, Workload};
-use optinc::collectives::engine::ChunkedAllReduce;
+use optinc::collectives::engine::{ChunkedAllReduce, ErrorFeedback};
 use optinc::collectives::fabric::FabricAllReduce;
 use optinc::collectives::hierarchical::HierarchicalOptInc;
 use optinc::collectives::optinc::OptIncAllReduce;
@@ -509,6 +510,240 @@ fn dropped_leader_channels_surface_clean_err() {
                     "{name}: fault must land at step 1: {msg}"
                 );
             }
+        }
+    }
+}
+
+/// Fault injection with live error-feedback state (ISSUE 8 satellite):
+/// a worker panic mid-step leaves residuals from the completed steps
+/// inside the collective. Reusing it must not leak them — `Cluster::run`
+/// reinstalls the EF policy, which drops all residual state, so the
+/// first post-fault step is bit-identical to a run on a freshly built
+/// collective.
+#[test]
+fn ef_fault_recovery_does_not_leak_residuals() {
+    const SEED: u64 = 0xEF5EED;
+    const DIM: usize = 20;
+
+    struct EfPanicAt {
+        dim: usize,
+        victim: usize,
+        at_step: usize,
+        tx: std::sync::mpsc::Sender<(usize, usize, Vec<u32>)>,
+    }
+    impl Workload for EfPanicAt {
+        fn grad(&mut self, step: usize, worker: usize) -> (Vec<f32>, f64) {
+            if worker == self.victim && step == self.at_step {
+                panic!("injected worker fault with live EF residuals (test)");
+            }
+            (synth_grad(SEED, step, worker, self.dim), 0.0)
+        }
+        fn apply(&mut self, step: usize, worker: usize, avg: &[f32]) {
+            self.tx
+                .send((step, worker, avg.iter().map(|v| v.to_bits()).collect()))
+                .ok();
+        }
+    }
+
+    let workers = 4usize;
+    let make = || FabricAllReduce::for_workers(2, 4, workers).unwrap();
+    for backend in [Backend::Threaded, Backend::Event] {
+        // Steps 0 and 1 complete and charge residual state (2-bit wire:
+        // large quantization error, so any leak is numerically visible);
+        // the panic lands at step 2.
+        let mut survivor = make();
+        let fault = Cluster::new(workers)
+            .with_chunk_elems(7)
+            .with_backend(backend)
+            .with_seed(SEED)
+            .with_error_feedback(ErrorFeedback::on())
+            .with_watchdog(Duration::from_millis(300));
+        let (tx, _rx) = std::sync::mpsc::channel();
+        let mut metrics = ClusterMetrics::new("ef-fault");
+        let err = fault
+            .run(
+                4,
+                move |_| EfPanicAt {
+                    dim: DIM,
+                    victim: 2,
+                    at_step: 2,
+                    tx: tx.clone(),
+                },
+                &mut survivor,
+                &mut metrics,
+            )
+            .expect_err("a dead worker must fail the run");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("watchdog") || msg.contains("dropped") || msg.contains("panicked"),
+            "{backend:?}: unexpected fault shape (seed {SEED:#x}): {msg}"
+        );
+
+        // Post-fault reuse vs a fresh collective: identical clean run,
+        // step for step, bit for bit — stale residuals would shift the
+        // very first applied average.
+        let clean_run = |coll: &mut dyn ChunkedAllReduce| -> Vec<(usize, usize, Vec<u32>)> {
+            let (tx, rx) = std::sync::mpsc::channel();
+            let cluster = Cluster::new(workers)
+                .with_chunk_elems(7)
+                .with_backend(backend)
+                .with_seed(SEED)
+                .with_error_feedback(ErrorFeedback::on());
+            let mut metrics = ClusterMetrics::new("ef-recovery");
+            cluster
+                .run(
+                    2,
+                    move |_| EfPanicAt {
+                        dim: DIM,
+                        victim: usize::MAX,
+                        at_step: usize::MAX,
+                        tx: tx.clone(),
+                    },
+                    coll,
+                    &mut metrics,
+                )
+                .unwrap_or_else(|e| {
+                    panic!("{backend:?}: post-fault run must succeed (seed {SEED:#x}): {e:#}")
+                });
+            let mut applied: Vec<_> = rx.try_iter().collect();
+            applied.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+            applied
+        };
+        let reused = clean_run(&mut survivor);
+        let mut fresh_coll = make();
+        let fresh = clean_run(&mut fresh_coll);
+        assert_eq!(reused.len(), workers * 2, "{backend:?}: every worker applies");
+        assert_eq!(
+            reused, fresh,
+            "{backend:?}: reused collective must not leak pre-fault EF residuals \
+             (replay with seed {SEED:#x})"
+        );
+    }
+}
+
+/// EF on a raw-f32 wire is a contradiction — there is no edge
+/// quantization error to compensate — so it must be rejected loudly at
+/// run start (on both backends, for both ways of getting an f32 wire),
+/// never silently carried as dead residual state.
+#[test]
+fn ef_on_f32_wire_is_a_validated_error() {
+    struct Null;
+    impl Workload for Null {
+        fn grad(&mut self, _step: usize, _worker: usize) -> (Vec<f32>, f64) {
+            (vec![1.0; 8], 0.0)
+        }
+        fn apply(&mut self, _step: usize, _worker: usize, _avg: &[f32]) {}
+    }
+
+    for backend in [Backend::Threaded, Backend::Event] {
+        // An f32-native collective…
+        let mut ring = RingAllReduce::new();
+        let mut metrics = ClusterMetrics::new("ef-f32");
+        let err = Cluster::new(2)
+            .with_backend(backend)
+            .with_error_feedback(ErrorFeedback::on())
+            .run(1, |_| Null, &mut ring, &mut metrics)
+            .expect_err("EF on the f32 wire must be rejected");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("packed-wire") && msg.contains("ring"),
+            "{backend:?}: rejection must name the wire and the collective: {msg}"
+        );
+
+        // …and a packed collective forced onto the legacy f32 wire
+        // (`pipeline --wire f32`).
+        let mut packed = FabricAllReduce::for_workers(4, 4, 2).unwrap();
+        let mut metrics = ClusterMetrics::new("ef-forced-f32");
+        let err = Cluster::new(2)
+            .with_backend(backend)
+            .with_f32_wire(true)
+            .with_error_feedback(ErrorFeedback::on())
+            .run(1, |_| Null, &mut packed, &mut metrics)
+            .expect_err("EF with --wire f32 must be rejected");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("--wire f32") && msg.contains("residual"),
+            "{backend:?}: forced-f32 rejection must explain the dead residuals: {msg}"
+        );
+    }
+}
+
+/// Zero-length shards with EF enabled: the empty-step protocol must run
+/// to completion on both backends without ever allocating residual
+/// state, and the collective must stay bit-exact for the sized steps
+/// that follow.
+#[test]
+fn ef_zero_length_shards_allocate_no_residuals() {
+    const SEED: u64 = 0xEF5EED;
+
+    struct EmptyThenDense {
+        dim: usize,
+        tx: std::sync::mpsc::Sender<(usize, usize, Vec<u32>)>,
+    }
+    impl Workload for EmptyThenDense {
+        fn grad(&mut self, step: usize, worker: usize) -> (Vec<f32>, f64) {
+            // Steps 0–1 are empty (a LocalSGD-style non-sync prefix);
+            // step 2 is the first sized round.
+            if step < 2 {
+                (Vec::new(), 0.0)
+            } else {
+                (synth_grad(SEED, step, worker, self.dim), 0.0)
+            }
+        }
+        fn apply(&mut self, step: usize, worker: usize, avg: &[f32]) {
+            self.tx
+                .send((step, worker, avg.iter().map(|v| v.to_bits()).collect()))
+                .ok();
+        }
+    }
+
+    let workers = 4usize;
+    for backend in [Backend::Threaded, Backend::Event] {
+        let mut coll = FabricAllReduce::for_workers(4, 4, workers).unwrap();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let cluster = Cluster::new(workers)
+            .with_chunk_elems(5)
+            .with_backend(backend)
+            .with_seed(SEED)
+            .with_error_feedback(ErrorFeedback::on());
+        let mut metrics = ClusterMetrics::new("ef-empty");
+        let records = cluster
+            .run(
+                3,
+                move |_| EmptyThenDense {
+                    dim: 13,
+                    tx: tx.clone(),
+                },
+                &mut coll,
+                &mut metrics,
+            )
+            .unwrap_or_else(|e| {
+                panic!("{backend:?}: empty EF steps must succeed (seed {SEED:#x}): {e:#}")
+            });
+        assert_eq!(records.len(), 3);
+        let mut applied: Vec<_> = rx.try_iter().collect();
+        applied.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        for (step, _, avg) in &applied {
+            if *step < 2 {
+                assert!(avg.is_empty(), "{backend:?}: empty step must apply nothing");
+            }
+        }
+        // The first sized step after the empty prefix equals a fresh EF
+        // stream (no residual state can have formed on empty rounds).
+        let shards: Vec<Vec<f32>> = (0..workers).map(|w| synth_grad(SEED, 2, w, 13)).collect();
+        let want: Vec<u32> = optinc::quant::ChunkedEfReference::new(4, 5)
+            .step(&shards)
+            .iter()
+            .map(|v| v.to_bits())
+            .collect();
+        let dense: Vec<_> = applied.iter().filter(|(s, _, _)| *s == 2).collect();
+        assert_eq!(dense.len(), workers, "{backend:?}: all workers apply step 2");
+        for (_, w, avg) in dense {
+            assert_eq!(
+                avg, &want,
+                "{backend:?} worker {w}: step after empty prefix must match a \
+                 fresh EF stream (replay with seed {SEED:#x})"
+            );
         }
     }
 }
