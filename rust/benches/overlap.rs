@@ -1,0 +1,58 @@
+//! Overlap bench: the reconfiguration-scheduling sweep behind
+//! `BENCH_overlap.json` — per-strategy exposed / hidden / queued OCS
+//! reconfiguration across fabric depths {2,3} and concurrent-job counts
+//! {1,4} on the event backend. Times the wall-clock cost of one sweep
+//! and records every cell's virtual-clock scalars so the trajectory
+//! pins the `serial ≥ pipelined ≥ eager` exposed-wait ordering.
+//! `-- --json` writes the `BENCH_overlap.json` artifact.
+
+use optinc::experiments::overlap::{run as run_sweep, SweepConfig};
+use optinc::util::bench::{arg_flag, black_box, BenchSuite};
+
+fn main() {
+    let json_mode = arg_flag("--json");
+    let mut suite = if json_mode {
+        BenchSuite::quick("overlap-event")
+    } else {
+        BenchSuite::new("overlap")
+    };
+
+    let cfg = SweepConfig::default();
+
+    // Wall-clock: one full sweep (12 event-backend cells).
+    suite.bench_throughput(
+        "overlap_sweep/d2,3/j1,4/3-strategies",
+        (cfg.depths.len() * cfg.jobs.len() * cfg.strategies.len()) as f64,
+        "cell",
+        || {
+            let rows = run_sweep(&cfg).unwrap();
+            black_box(rows.len());
+        },
+    );
+
+    // Virtual-clock scalars: one row of scalars per sweep cell — the
+    // numbers EXPERIMENTS.md §Overlap strategies quotes.
+    let rows = run_sweep(&cfg).unwrap();
+    for r in &rows {
+        let key = format!("{}/d{}/j{}", r.strategy.name(), r.depth, r.jobs);
+        suite.record_scalar(
+            &format!("virtual_step/{key}"),
+            r.mean_virtual_step_s * 1e6,
+            "us",
+        );
+        suite.record_scalar(&format!("exposed/{key}"), r.mean_exposed_s * 1e6, "us");
+        suite.record_scalar(&format!("hidden/{key}"), r.mean_hidden_s * 1e6, "us");
+        suite.record_scalar(&format!("queued/{key}"), r.mean_queued_s * 1e6, "us");
+        suite.record_scalar(
+            &format!("steady_exposed/{key}"),
+            r.steady_exposed_s * 1e6,
+            "us",
+        );
+    }
+
+    if json_mode {
+        suite.finish_named("BENCH_overlap");
+    } else {
+        suite.finish();
+    }
+}

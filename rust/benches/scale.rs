@@ -2,9 +2,10 @@
 //! a 3-level fabric, in one process. Times the wall-clock cost of the
 //! simulation itself (can this laptop sweep 1024 servers?) and records
 //! the virtual-clock scalars the sweep exists to measure — mean virtual
-//! step time, total OCS reconfiguration-gate wait, and the closed-form
-//! modeled step time it is checked against. `-- --json` writes the
-//! `BENCH_scale.json` trajectory artifact.
+//! step time, mean per-step OCS reconfiguration-gate wait, and the
+//! closed-form modeled communication time per step it is checked
+//! against. `-- --json` writes the `BENCH_scale.json` trajectory
+//! artifact.
 
 use optinc::cluster::{Backend, Cluster, ClusterMetrics, Workload};
 use optinc::collectives::fabric::{FabricAllReduce, FabricMode, FabricTopology};
@@ -77,13 +78,13 @@ fn main() {
             "us",
         );
         suite.record_scalar(
-            &format!("modeled_step/{}x{}/d{}", r.servers, cfg.elements, cfg.levels),
-            r.mean_modeled_step_s * 1e6,
+            &format!("modeled_comm/{}x{}/d{}", r.servers, cfg.elements, cfg.levels),
+            r.mean_modeled_comm_s * 1e6,
             "us",
         );
         suite.record_scalar(
             &format!("reconfig_wait/{}x{}/d{}", r.servers, cfg.elements, cfg.levels),
-            r.virtual_reconfig_wait_s * 1e6,
+            r.mean_virtual_reconfig_wait_s * 1e6,
             "us",
         );
         suite.record_scalar(

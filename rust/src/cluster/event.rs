@@ -17,14 +17,20 @@
 //!    resources — per-worker uplink/downlink serialization at
 //!    [`HardwareModel::server_bandwidth_bytes`], one hop of
 //!    [`link_latency_s`](crate::config::HardwareModel::link_latency_s)
-//!    per fabric level ([`ChunkedAllReduce::levels`]), and per-level OCS
-//!    reconfiguration gates that open `level × ocs_reconfig_s` into the
-//!    step — so [`StepRecord::virtual_time_s`] *measures* the pipelined
-//!    step time the closed-form
+//!    per fabric level ([`ChunkedAllReduce::levels`]), and per-level
+//!    OCS entry gates emitted by the
+//!    [`ReconfigScheduler`](crate::collectives::sched::ReconfigScheduler):
+//!    a step that must reprogram the cascade pays gates per its
+//!    [`OverlapStrategy`](crate::collectives::sched::OverlapStrategy),
+//!    while steady-state steps with an unchanged fabric pattern pay
+//!    **zero** reconfiguration — so [`StepRecord::virtual_time_s`]
+//!    *measures* the pipelined step time the closed-form
 //!    [`modeled_step_time_s`](crate::collectives::CollectiveStats::modeled_step_time_s)
-//!    predicts, and
-//!    [`StepRecord::virtual_reconfig_wait_s`] measures how much
-//!    reconfiguration wait the chunk stream actually absorbed.
+//!    predicts, and [`StepRecord::virtual_reconfig_wait_s`] /
+//!    [`StepRecord::reconfig_hidden_s`] /
+//!    [`StepRecord::reconfig_queued_s`] split each step's scheduled
+//!    reconfiguration into what the chunk stream absorbed, hid, or
+//!    queued behind a conflicting job.
 //! 3. **Determinism.** Faults and stragglers resolve in virtual time:
 //!    a panicking workload trips the watchdog at an exact virtual
 //!    deadline, and compute jitter streams replay byte-for-byte from
@@ -41,6 +47,7 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use anyhow::Result;
 
 use crate::collectives::engine::{ChunkedAllReduce, ShardChunk};
+use crate::collectives::sched::ReconfigScheduler;
 use crate::collectives::wire::{
     ef_store_residual, pack_quantized_into, unpack_dequantize_into, WireAvg, WireChunk,
     WireFormat,
@@ -167,6 +174,17 @@ where
     let mut records = Vec::with_capacity(steps);
     let mut clock = 0.0f64; // virtual seconds since the run began
 
+    // Reconfiguration scheduling: the fabric pattern is an identity
+    // held across steps. A step whose target config equals the
+    // currently programmed one (the steady state) pays zero
+    // reconfiguration; a changed pattern — the first step, a topology
+    // morph, or another job's conflicting circuit assignment under
+    // `with_concurrent_jobs` — schedules its per-level windows against
+    // the chunk stream per `Cluster::overlap_strategy`.
+    let base_config = collective.fabric_config();
+    let jobs = cl.concurrent_jobs.max(1) as u64;
+    let mut sched = ReconfigScheduler::new(cl.overlap_strategy);
+
     // Worker-side error feedback: per-worker edge residuals, held for
     // the lifetime of this run — exactly the lifetime of a threaded
     // worker's `resid` local. A failed run drops them; the next run
@@ -259,14 +277,21 @@ where
         // ---- 2. Virtual resources ---------------------------------
         // Each worker serializes its own uplink and downlink at the
         // server bandwidth; each fabric level is one hop of link
-        // latency behind an OCS gate that opens `level × reconfig`
-        // into the step (patterns reprogram sequentially up the
-        // cascade). Level 0 needs no reconfiguration — it is the
-        // always-on ingress.
+        // latency behind the OCS entry gates the reconfiguration
+        // scheduler emits. Empty steps (LocalSGD non-sync rounds)
+        // carry no pattern-specific traffic and reuse whatever is
+        // programmed; sized fabric steps target their job's config.
+        let target = if total == 0 {
+            None
+        } else {
+            base_config.map(|c| c.for_job((step as u64) % jobs))
+        };
+        let plan = sched.begin_step(target, t0, hops, reconfig);
+        let level_gate = &plan.gates;
         let mut uplink_free = compute_done.clone();
         let mut downlink_free = vec![t0; n];
-        let level_gate: Vec<f64> = (0..hops).map(|l| t0 + l as f64 * reconfig).collect();
         let mut level_free = vec![t0; hops];
+        let mut fabric_busy_until = t0;
         let mut reconfig_wait = 0.0f64;
         let mut worker_done = compute_done.clone();
 
@@ -417,6 +442,7 @@ where
                 level_free[l] = entry;
                 t = entry + lat;
             }
+            fabric_busy_until = fabric_busy_until.max(t);
 
             // Broadcast: the averaged chunk serializes down every
             // worker's downlink (one shared allocation — each worker
@@ -439,6 +465,19 @@ where
             worker_done.iter().fold(t0, |acc, &d| acc.max(d)) + extra_rounds * lat;
         let virtual_s = step_end - t0;
         clock = step_end;
+        sched.end_step(fabric_busy_until);
+
+        // Per-step reconfiguration accounting: of the reprogramming
+        // work scheduled this step plus any contention-queue delay, the
+        // measured gate wait is what reached the critical path — the
+        // rest the stream (or an eager head start) hid. A contended
+        // reprogram (another job evicted our pattern) additionally
+        // attributes its whole gate wait to the contention queue: a
+        // single-tenant run past warmup would have paid nothing.
+        let reconfig_hidden =
+            (plan.scheduled_s + plan.queued_s - reconfig_wait).max(0.0);
+        let reconfig_queued = plan.queued_s
+            + if plan.contended { reconfig_wait } else { 0.0 };
 
         let observed = observed_payload
             .iter()
@@ -457,6 +496,7 @@ where
         metrics.record(&stats, comm_s);
         metrics.record_observed_wire(observed);
         metrics.record_virtual(virtual_s, reconfig_wait);
+        metrics.record_reconfig(reconfig_hidden, reconfig_queued);
         records.push(StepRecord {
             step,
             mean_loss: losses / n as f64,
@@ -465,6 +505,9 @@ where
             observed_wire_bytes_per_server: observed,
             virtual_time_s: Some(virtual_s),
             virtual_reconfig_wait_s: Some(reconfig_wait),
+            reconfig_hidden_s: Some(reconfig_hidden),
+            reconfig_exposed_s: Some(reconfig_wait),
+            reconfig_queued_s: Some(reconfig_queued),
         });
     }
     Ok(records)

@@ -19,6 +19,8 @@ pub struct ClusterMetrics {
     virtual_time_s: f64,
     virtual_reconfig_wait_s: f64,
     virtual_steps: usize,
+    reconfig_hidden_s: f64,
+    reconfig_queued_s: f64,
 }
 
 impl ClusterMetrics {
@@ -37,6 +39,8 @@ impl ClusterMetrics {
             virtual_time_s: 0.0,
             virtual_reconfig_wait_s: 0.0,
             virtual_steps: 0,
+            reconfig_hidden_s: 0.0,
+            reconfig_queued_s: 0.0,
         }
     }
 
@@ -82,9 +86,57 @@ impl ClusterMetrics {
     }
 
     /// Total virtual seconds chunks spent waiting on OCS reconfiguration
-    /// gates (0.0 on the threaded backend and on flat collectives).
+    /// gates (0.0 on the threaded backend and on flat collectives). This
+    /// is the run's total **exposed** reconfiguration.
     pub fn total_virtual_reconfig_wait_s(&self) -> f64 {
         self.virtual_reconfig_wait_s
+    }
+
+    /// Record one step of the event backend's hidden/queued
+    /// reconfiguration split (the exposed side rides in
+    /// [`Self::record_virtual`] as the measured gate wait).
+    pub fn record_reconfig(&mut self, hidden_s: f64, queued_s: f64) {
+        self.reconfig_hidden_s += hidden_s;
+        self.reconfig_queued_s += queued_s;
+    }
+
+    /// Total reconfiguration work the chunk stream / eager head start
+    /// hid off the critical path across all steps.
+    pub fn total_reconfig_hidden_s(&self) -> f64 {
+        self.reconfig_hidden_s
+    }
+
+    /// Total contention-queue wait behind conflicting jobs' reprograms
+    /// across all steps (0.0 for single-job runs).
+    pub fn total_reconfig_queued_s(&self) -> f64 {
+        self.reconfig_queued_s
+    }
+
+    /// Mean exposed reconfiguration wait per virtual step (0.0 when no
+    /// virtual step was recorded).
+    pub fn mean_virtual_reconfig_wait_s(&self) -> f64 {
+        if self.virtual_steps == 0 {
+            return 0.0;
+        }
+        self.virtual_reconfig_wait_s / self.virtual_steps as f64
+    }
+
+    /// Mean hidden reconfiguration per virtual step (0.0 when no
+    /// virtual step was recorded).
+    pub fn mean_reconfig_hidden_s(&self) -> f64 {
+        if self.virtual_steps == 0 {
+            return 0.0;
+        }
+        self.reconfig_hidden_s / self.virtual_steps as f64
+    }
+
+    /// Mean contention-queue wait per virtual step (0.0 when no virtual
+    /// step was recorded).
+    pub fn mean_reconfig_queued_s(&self) -> f64 {
+        if self.virtual_steps == 0 {
+            return 0.0;
+        }
+        self.reconfig_queued_s / self.virtual_steps as f64
     }
 
     /// Mean virtual step time across the steps the event backend ran
@@ -186,6 +238,12 @@ impl ClusterMetrics {
                 Json::Num(self.virtual_reconfig_wait_s),
             ),
             ("mean_virtual_step_s", Json::Num(self.mean_virtual_step_s())),
+            (
+                "mean_virtual_reconfig_wait_s",
+                Json::Num(self.mean_virtual_reconfig_wait_s()),
+            ),
+            ("reconfig_hidden_s", Json::Num(self.reconfig_hidden_s)),
+            ("reconfig_queued_s", Json::Num(self.reconfig_queued_s)),
         ])
     }
 }
@@ -270,6 +328,34 @@ mod tests {
         let j = m.to_json();
         assert!((j.get("virtual_time_s").as_f64().unwrap() - 6e-5).abs() < 1e-18);
         assert!((j.get("mean_virtual_step_s").as_f64().unwrap() - 3e-5).abs() < 1e-18);
+    }
+
+    #[test]
+    fn reconfig_split_accumulates_and_means_stay_zero_step_safe() {
+        let mut m = ClusterMetrics::new("reconfig");
+        assert_eq!(m.total_reconfig_hidden_s(), 0.0);
+        assert_eq!(m.mean_virtual_reconfig_wait_s(), 0.0);
+        assert_eq!(m.mean_reconfig_hidden_s(), 0.0);
+        assert_eq!(m.mean_reconfig_queued_s(), 0.0);
+        // Step 0: a reprogram that exposed 1 µs and hid 19 µs.
+        m.record_virtual(4e-5, 1e-6);
+        m.record_reconfig(1.9e-5, 0.0);
+        // Step 1: steady state — all zero.
+        m.record_virtual(2e-5, 0.0);
+        m.record_reconfig(0.0, 0.0);
+        // Step 2: a contended reprogram queued 5 µs.
+        m.record_virtual(4e-5, 2e-6);
+        m.record_reconfig(1.8e-5, 5e-6);
+        assert!((m.total_virtual_reconfig_wait_s() - 3e-6).abs() < 1e-18);
+        assert!((m.total_reconfig_hidden_s() - 3.7e-5).abs() < 1e-18);
+        assert!((m.total_reconfig_queued_s() - 5e-6).abs() < 1e-18);
+        assert!((m.mean_virtual_reconfig_wait_s() - 1e-6).abs() < 1e-18);
+        let j = m.to_json();
+        assert!((j.get("reconfig_hidden_s").as_f64().unwrap() - 3.7e-5).abs() < 1e-18);
+        assert!((j.get("reconfig_queued_s").as_f64().unwrap() - 5e-6).abs() < 1e-18);
+        assert!(
+            (j.get("mean_virtual_reconfig_wait_s").as_f64().unwrap() - 1e-6).abs() < 1e-18
+        );
     }
 
     #[test]

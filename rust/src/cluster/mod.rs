@@ -67,6 +67,7 @@ use std::time::Duration;
 use anyhow::Result;
 
 use crate::collectives::engine::{ChunkedAllReduce, ErrorFeedback};
+use crate::collectives::sched::OverlapStrategy;
 use crate::collectives::wire::WireFormat;
 use crate::collectives::CollectiveStats;
 use crate::config::HardwareModel;
@@ -144,8 +145,24 @@ pub struct StepRecord {
     /// reconfiguration gates this step (event backend; `None` on
     /// threaded). The stream hides most of this wait behind later chunk
     /// uploads — compare with the modeled
-    /// [`CollectiveStats::exposed_reconfig_s`].
+    /// [`CollectiveStats::exposed_reconfig_s`]. This is the historical
+    /// alias of [`Self::reconfig_exposed_s`].
     pub virtual_reconfig_wait_s: Option<f64>,
+    /// Reconfiguration work this step's reprogram scheduled that the
+    /// chunk stream / compute hid off the critical path (event backend;
+    /// `None` on threaded). Zero on steady-state steps — an unchanged
+    /// fabric pattern schedules no reprogram at all.
+    pub reconfig_hidden_s: Option<f64>,
+    /// Reconfiguration wait left on the step's critical path: virtual
+    /// seconds chunks actually spent blocked at per-level OCS gates
+    /// (event backend; `None` on threaded). Includes any contention
+    /// delay the gates inherited from [`Self::reconfig_queued_s`].
+    pub reconfig_exposed_s: Option<f64>,
+    /// Contention-queue wait: how long this step's reprogram sat behind
+    /// a conflicting job's in-flight reconfiguration of the shared
+    /// fabric (event backend with [`Cluster::with_concurrent_jobs`];
+    /// `None` on threaded, zero for single-job runs).
+    pub reconfig_queued_s: Option<f64>,
 }
 
 /// The cluster driver.
@@ -195,6 +212,19 @@ pub struct Cluster {
     /// virtual-time number (BENCH_scale.json, conformance deadlines)
     /// unchanged unless a run opts in.
     pub reduce_per_word_s: f64,
+    /// How the event backend schedules per-level OCS reconfiguration
+    /// windows against the chunk stream when a step must reprogram the
+    /// cascade. The default ([`OverlapStrategy::Pipelined`]) reproduces
+    /// the historical first-step gate ladder bit-for-bit; steady-state
+    /// steps with an unchanged pattern pay zero under every strategy.
+    pub overlap_strategy: OverlapStrategy,
+    /// Concurrent jobs time-sharing one event-backend fabric
+    /// (round-robin by step). Each job's circuit assignment is a
+    /// distinct [`FabricConfig`](crate::collectives::FabricConfig), so
+    /// with more than one job every fabric step is a reprogram and
+    /// conflicting reprograms queue ([`StepRecord::reconfig_queued_s`]).
+    /// 1 — the default — is the single-job steady state.
+    pub concurrent_jobs: usize,
 }
 
 /// Chunks a `total`-element gradient splits into at grain `chunk`
@@ -205,6 +235,20 @@ pub(crate) fn chunk_count(total: usize, chunk: usize) -> usize {
     } else {
         total.div_ceil(chunk)
     }
+}
+
+/// The one shared streaming-grain check, at the CLI edge (same shape as
+/// [`crate::pam4::validate_bits`]): `--chunk 0` surfaces as a clean
+/// error here instead of panicking through the
+/// [`Cluster::with_chunk_elems`] assert or dividing by zero in the
+/// chunk count.
+pub fn validate_chunk_elems(chunk_elems: usize) -> Result<()> {
+    anyhow::ensure!(
+        chunk_elems >= 1,
+        "--chunk must be at least 1 element, got {chunk_elems}: the streaming grain \
+         divides the gradient into chunks, and a zero grain has no chunk count"
+    );
+    Ok(())
 }
 
 impl Cluster {
@@ -221,7 +265,24 @@ impl Cluster {
             compute: ComputeModel::default(),
             reduce_parallelism: 1,
             reduce_per_word_s: 0.0,
+            overlap_strategy: OverlapStrategy::default(),
+            concurrent_jobs: 1,
         }
+    }
+
+    /// Builder: select the event backend's reconfiguration overlap
+    /// strategy (see [`Cluster::overlap_strategy`]).
+    pub fn with_overlap_strategy(mut self, strategy: OverlapStrategy) -> Cluster {
+        self.overlap_strategy = strategy;
+        self
+    }
+
+    /// Builder: model `jobs` concurrent jobs round-robin sharing one
+    /// event-backend fabric (see [`Cluster::concurrent_jobs`]; 0 is
+    /// normalized to 1).
+    pub fn with_concurrent_jobs(mut self, jobs: usize) -> Cluster {
+        self.concurrent_jobs = jobs.max(1);
+        self
     }
 
     /// Builder: set the leader reduce parallelism the event backend's

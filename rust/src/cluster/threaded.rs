@@ -309,6 +309,9 @@ where
             observed_wire_bytes_per_server: observed,
             virtual_time_s: None,
             virtual_reconfig_wait_s: None,
+            reconfig_hidden_s: None,
+            reconfig_exposed_s: None,
+            reconfig_queued_s: None,
         });
     }
     // Shutdown path shared by success and failure: closing the

@@ -92,6 +92,24 @@ pub trait ChunkedAllReduce {
         1
     }
 
+    /// Identity of the fabric pattern this collective's traffic needs
+    /// programmed into the switch cascade, or `None` for flat
+    /// topologies and server-side collectives (whose static pattern
+    /// never reprograms). The discrete-event backend hands this to the
+    /// [`ReconfigScheduler`](super::sched::ReconfigScheduler) each
+    /// step: equal configs across steps are the steady state and pay
+    /// zero reconfiguration. The default keys an anonymous config on
+    /// [`Self::levels`]; cascaded fabrics override with a real topology
+    /// fingerprint so distinct cascades conflict.
+    fn fabric_config(&self) -> Option<super::sched::FabricConfig> {
+        let levels = self.levels();
+        if levels > 1 {
+            Some(super::sched::FabricConfig::from_levels(levels))
+        } else {
+            None
+        }
+    }
+
     /// Word-domain reduce: average one aligned set of packed chunks and
     /// return the packed average (one shared allocation — the broadcast
     /// payload) plus its block scale. The leader never round-trips

@@ -42,6 +42,7 @@ use crate::config::Scenario;
 use crate::onn::OnnNetwork;
 use crate::optinc::switch::{OnnMode, OptIncSwitch};
 use crate::quant::GlobalQuantizer;
+use crate::util::rng::SplitMix64;
 
 use super::engine::{
     par_for_each_mut, BufferPool, ChunkedAllReduce, ErrorFeedback, ReducePlan, Session,
@@ -482,6 +483,28 @@ impl ChunkedAllReduce for FabricAllReduce {
 
     fn levels(&self) -> u32 {
         self.depth() as u32
+    }
+
+    /// The cascade's pattern identity: two fabrics share a programmed
+    /// configuration only if their shape (per-level fan-ins), reduce
+    /// mode, and wire bit width all agree — the terms that determine
+    /// the circuit assignment through the switches.
+    fn fabric_config(&self) -> Option<super::sched::FabricConfig> {
+        let mut mix = SplitMix64::new(0x0C5_F4B21 ^ self.bits as u64);
+        let mut fingerprint = mix.next_u64();
+        for f in self.fan_ins() {
+            mix = SplitMix64::new(fingerprint ^ f as u64);
+            fingerprint = mix.next_u64();
+        }
+        let mode_salt = match self.mode {
+            FabricMode::Basic => 0x9E37,
+            FabricMode::Remainder => 0x79B9,
+        };
+        mix = SplitMix64::new(fingerprint ^ mode_salt);
+        Some(super::sched::FabricConfig::with_fingerprint(
+            self.depth() as u32,
+            mix.next_u64(),
+        ))
     }
 
     fn set_reduce_threads(&mut self, threads: usize) {

@@ -38,10 +38,13 @@ pub mod fabric;
 pub mod hierarchical;
 pub mod optinc;
 pub mod ring;
+pub mod sched;
 pub mod two_tree;
 pub mod wire;
 
 use crate::config::HardwareModel;
+
+pub use sched::{FabricConfig, OverlapStrategy, ReconfigScheduler, ReconfigSplit};
 
 /// Accounting for one all-reduce invocation.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -110,12 +113,37 @@ impl CollectiveStats {
     /// `chunks → ∞` this approaches [`Self::modeled_time_s`], the
     /// paper's "communication overhead eliminated" ideal.
     pub fn modeled_step_time_s(&self, hw: &HardwareModel) -> f64 {
+        self.modeled_step_time_with_strategy(hw, OverlapStrategy::Pipelined)
+    }
+
+    /// [`Self::modeled_step_time_s`] under an explicit
+    /// [`OverlapStrategy`] — the strategies differ only in how much of
+    /// a reprogramming step's `(L−1)·T_r` they leave exposed on the
+    /// critical path (see [`Self::reconfig_split`]).
+    pub fn modeled_step_time_with_strategy(
+        &self,
+        hw: &HardwareModel,
+        strategy: OverlapStrategy,
+    ) -> f64 {
         let bw = hw.server_bandwidth_bytes();
         let wire =
             (self.bytes_sent_per_server + self.sync_bytes_per_server) as f64 / bw;
         wire + wire * (1.0 - self.overlap_fraction)
             + self.rounds as f64 * hw.link_latency_s
-            + self.exposed_reconfig_s(hw)
+            + self.reconfig_split(hw, strategy).exposed_s
+    }
+
+    /// Modeled hidden/exposed reconfiguration split for a step that
+    /// must reprogram the cascade — the closed-form counterpart of the
+    /// event backend's measured per-step accounting
+    /// ([`StepRecord`](crate::cluster::StepRecord)'s
+    /// `reconfig_hidden_s` / `reconfig_exposed_s`). Flat topologies
+    /// (`levels ≤ 1`) keep a static pattern and the split is zero; a
+    /// steady-state step with an unchanged pattern also pays nothing,
+    /// which is the [`ReconfigScheduler`]'s call to make — this method
+    /// prices the reprogram itself.
+    pub fn reconfig_split(&self, hw: &HardwareModel, strategy: OverlapStrategy) -> ReconfigSplit {
+        ReconfigSplit::modeled(hw, self.levels, self.overlap_fraction, strategy)
     }
 
     /// SWOT-style reconfiguration overlap (arXiv 2510.19322): a cascaded
@@ -124,10 +152,10 @@ impl CollectiveStats {
     /// earlier chunk uploads, so only the non-overlapped fraction of the
     /// `levels − 1` forwarding-level reconfigurations reaches the
     /// critical path. Flat topologies (`levels ≤ 1`) keep a static
-    /// pattern and pay nothing.
+    /// pattern and pay nothing. This is the exposed term of the default
+    /// ([`Pipelined`](OverlapStrategy::Pipelined)) split.
     pub fn exposed_reconfig_s(&self, hw: &HardwareModel) -> f64 {
-        let extra = self.levels.saturating_sub(1) as f64;
-        extra * hw.ocs_reconfig_s * (1.0 - self.overlap_fraction)
+        self.reconfig_split(hw, OverlapStrategy::Pipelined).exposed_s
     }
 }
 

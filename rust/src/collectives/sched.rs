@@ -1,0 +1,443 @@
+//! Reconfiguration scheduling: fabric configurations as identities held
+//! across steps, per-level reconfiguration windows scheduled against
+//! the chunk stream, and a contention queue for jobs that want
+//! conflicting patterns on one fabric.
+//!
+//! The OCS cascade is circuit-switched: a pattern, once programmed,
+//! carries traffic for free until somebody programs a different one.
+//! The scalar `(L−1)·T_r·(1−overlap)` model (and the event backend's
+//! old per-step gate ladder) re-paid the full reconfiguration every
+//! step, which is wrong in exactly the regime the fabric is supposed to
+//! win: steady-state training re-uses one pattern for thousands of
+//! steps. This module makes the pattern explicit:
+//!
+//! - [`FabricConfig`] is the identity of a programmed pattern (levels +
+//!   a topology fingerprint + the owning job). Two steps with equal
+//!   configs share the programmed cascade; unequal configs force a
+//!   reprogram.
+//! - [`OverlapStrategy`] selects *when* the per-level windows open
+//!   relative to the chunk stream: [`Serial`](OverlapStrategy::Serial)
+//!   holds all traffic until the whole cascade is reprogrammed,
+//!   [`Pipelined`](OverlapStrategy::Pipelined) (the default, and the
+//!   historical behavior for a first step) opens level `l` at
+//!   `l × T_r` so early levels carry traffic while late levels still
+//!   program, and [`Eager`](OverlapStrategy::Eager) begins reprogramming
+//!   as soon as the fabric drains — during the next step's compute —
+//!   so the windows are usually open before any chunk arrives.
+//! - [`ReconfigScheduler`] holds the cross-step state: the currently
+//!   programmed config, when its programming finishes, and when the
+//!   fabric last carried traffic. Concurrent jobs ([`Cluster::
+//!   with_concurrent_jobs`](crate::cluster::Cluster::with_concurrent_jobs))
+//!   round-robin the fabric; a job whose config conflicts with the
+//!   previously programmed one queues behind that reprogram
+//!   ([`StepPlan::queued_s`]).
+//! - [`ReconfigSplit`] is the closed-form per-step split the modeled
+//!   path reports: of the `(L−1)·T_r` a reprogramming step schedules,
+//!   how much the strategy exposes on the critical path vs hides behind
+//!   the stream.
+
+use crate::config::HardwareModel;
+use crate::util::rng::SplitMix64;
+
+/// Identity of a programmed fabric pattern. Equality is the whole
+/// contract: a step whose target config equals the currently programmed
+/// one pays **zero** reconfiguration; anything else is a reprogram.
+///
+/// The fingerprint folds the topology shape (fan-ins, reduce mode, bit
+/// width) through SplitMix64 so distinct cascades compare unequal
+/// without the scheduler holding a reference to the collective. `job`
+/// salts the identity per concurrent job: two jobs running the *same*
+/// topology still conflict, because each job's circuit assignment maps
+/// different endpoints through the switches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct FabricConfig {
+    /// Switch levels in the cascade (gates apply past the first).
+    pub levels: u32,
+    /// Topology fingerprint (fan-ins, mode, bits — see
+    /// [`FabricAllReduce::fabric_config`](crate::collectives::fabric::FabricAllReduce)).
+    pub fingerprint: u64,
+    /// Owning job (0 for single-job runs).
+    pub job: u64,
+}
+
+impl FabricConfig {
+    /// Anonymous config keyed only on the level count — the default for
+    /// any multi-level collective that does not describe its topology.
+    pub fn from_levels(levels: u32) -> FabricConfig {
+        FabricConfig {
+            levels,
+            fingerprint: SplitMix64::new(levels as u64).next_u64(),
+            job: 0,
+        }
+    }
+
+    /// Same pattern, fingerprinted for a specific topology.
+    pub fn with_fingerprint(levels: u32, fingerprint: u64) -> FabricConfig {
+        FabricConfig {
+            levels,
+            fingerprint,
+            job: 0,
+        }
+    }
+
+    /// The same pattern as seen by concurrent job `job` — unequal to
+    /// every other job's view of it.
+    pub fn for_job(mut self, job: u64) -> FabricConfig {
+        self.job = job;
+        self
+    }
+}
+
+/// When the per-level reconfiguration windows open relative to the
+/// chunk stream, for a step that must reprogram the cascade.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum OverlapStrategy {
+    /// Hold all traffic until the whole cascade is reprogrammed: every
+    /// level's window opens at `(L−1)·T_r`. The full reprogram sits on
+    /// the critical path — the pessimistic baseline.
+    Serial,
+    /// SWOT-style pipelining (the default, and bit-for-bit the
+    /// historical first-step behavior): level `l`'s window opens
+    /// `l × T_r` into the step, so level 0 carries the head chunk while
+    /// upper levels still program and later chunks hide the rest.
+    #[default]
+    Pipelined,
+    /// Pre-reconfigure during compute: reprogramming starts the moment
+    /// the fabric drains the previous step's traffic, so by the time
+    /// this step's first chunk reaches the cascade the windows are
+    /// (usually) already open. Admission-time programming makes the
+    /// very first step free too.
+    Eager,
+}
+
+impl OverlapStrategy {
+    /// Every strategy, in pessimism order — the sweep axis.
+    pub const ALL: [OverlapStrategy; 3] = [
+        OverlapStrategy::Serial,
+        OverlapStrategy::Pipelined,
+        OverlapStrategy::Eager,
+    ];
+
+    /// CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            OverlapStrategy::Serial => "serial",
+            OverlapStrategy::Pipelined => "pipelined",
+            OverlapStrategy::Eager => "eager",
+        }
+    }
+
+    /// Parse a CLI name (`serial` / `pipelined` / `eager`).
+    pub fn parse(s: &str) -> anyhow::Result<OverlapStrategy> {
+        match s {
+            "serial" => Ok(OverlapStrategy::Serial),
+            "pipelined" => Ok(OverlapStrategy::Pipelined),
+            "eager" => Ok(OverlapStrategy::Eager),
+            other => Err(anyhow::anyhow!(
+                "unknown overlap strategy {other:?} (expected serial, pipelined, or eager)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for OverlapStrategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Closed-form per-step reconfiguration split for a step that
+/// reprograms the cascade — the modeled counterpart of the event
+/// backend's measured [`StepPlan`] accounting. A steady-state step
+/// (unchanged config) schedules nothing and all three terms are zero.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReconfigSplit {
+    /// Total reprogramming work scheduled: `(L−1)·T_r`.
+    pub scheduled_s: f64,
+    /// The part the strategy hides behind the chunk stream / compute.
+    pub hidden_s: f64,
+    /// The part left on the step's critical path.
+    pub exposed_s: f64,
+}
+
+impl ReconfigSplit {
+    /// The all-zero split of a steady-state (unchanged-pattern) step.
+    pub fn zero() -> ReconfigSplit {
+        ReconfigSplit {
+            scheduled_s: 0.0,
+            hidden_s: 0.0,
+            exposed_s: 0.0,
+        }
+    }
+
+    /// Modeled split for a reprogramming step: `levels` cascade levels,
+    /// `overlap_fraction` of the stream available to hide behind
+    /// (`(chunks−1)/chunks` — see
+    /// [`CollectiveStats::overlap_fraction`](crate::collectives::CollectiveStats)).
+    pub fn modeled(
+        hw: &HardwareModel,
+        levels: u32,
+        overlap_fraction: f64,
+        strategy: OverlapStrategy,
+    ) -> ReconfigSplit {
+        let scheduled = levels.saturating_sub(1) as f64 * hw.ocs_reconfig_s;
+        let exposed = match strategy {
+            OverlapStrategy::Serial => scheduled,
+            OverlapStrategy::Pipelined => scheduled * (1.0 - overlap_fraction),
+            OverlapStrategy::Eager => 0.0,
+        };
+        ReconfigSplit {
+            scheduled_s: scheduled,
+            hidden_s: scheduled - exposed,
+            exposed_s: exposed,
+        }
+    }
+}
+
+/// One step's gate schedule plus its accounting, from
+/// [`ReconfigScheduler::begin_step`].
+#[derive(Clone, Debug)]
+pub struct StepPlan {
+    /// Per-level entry gates for the chunk stream (`gates[l]` is the
+    /// earliest virtual time a chunk may enter level `l`). Steady-state
+    /// steps get gates at `t0`, i.e. no wait.
+    pub gates: Vec<f64>,
+    /// Reprogramming work scheduled this step (`(L−1)·T_r` on a
+    /// reprogram, zero otherwise).
+    pub scheduled_s: f64,
+    /// Contention-queue wait: how long after `t0` this job's reprogram
+    /// could begin, because a conflicting reprogram was still in flight
+    /// on the shared fabric.
+    pub queued_s: f64,
+    /// Whether this step reprogrammed the cascade.
+    pub reprogrammed: bool,
+    /// Whether the reprogram was forced by **contention**: the fabric
+    /// held another job's pattern (`current.job != target.job`), so this
+    /// step's entire reconfiguration cost is attributable to sharing
+    /// the fabric — a single-tenant run past warmup would have paid
+    /// nothing. The event backend charges a contended step's measured
+    /// gate wait as queued time.
+    pub contended: bool,
+}
+
+/// Cross-step reconfiguration state for one event-backend fabric run.
+///
+/// The scheduler is the single owner of "what is programmed right now":
+/// [`begin_step`](ReconfigScheduler::begin_step) compares the step's
+/// target config against it and emits the gate ladder (plus queue
+/// accounting), [`end_step`](ReconfigScheduler::end_step) records when
+/// the fabric drained so [`Eager`](OverlapStrategy::Eager) knows the
+/// earliest moment the next reprogram may start.
+#[derive(Clone, Debug)]
+pub struct ReconfigScheduler {
+    strategy: OverlapStrategy,
+    current: Option<FabricConfig>,
+    /// When the in-flight (or last) reprogram finishes. `-inf` before
+    /// any reprogram — admission-time programming is free.
+    reprogram_done_at: f64,
+    /// When the fabric last carried traffic — the earliest moment an
+    /// eager reprogram may start tearing the pattern down.
+    fabric_idle_at: f64,
+}
+
+impl ReconfigScheduler {
+    /// Fresh scheduler: nothing programmed, fabric idle since forever.
+    pub fn new(strategy: OverlapStrategy) -> ReconfigScheduler {
+        ReconfigScheduler {
+            strategy,
+            current: None,
+            reprogram_done_at: f64::NEG_INFINITY,
+            fabric_idle_at: f64::NEG_INFINITY,
+        }
+    }
+
+    /// The currently programmed config, if any.
+    pub fn current(&self) -> Option<FabricConfig> {
+        self.current
+    }
+
+    /// Plan one step starting at virtual time `t0` whose traffic wants
+    /// `target` programmed across `hops` levels (`None` = the step
+    /// carries no pattern-specific traffic — flat collectives and empty
+    /// LocalSGD rounds — and reuses whatever is programmed).
+    pub fn begin_step(
+        &mut self,
+        target: Option<FabricConfig>,
+        t0: f64,
+        hops: usize,
+        reconfig_s: f64,
+    ) -> StepPlan {
+        let changed = match target {
+            None => false,
+            Some(cfg) => self.current != Some(cfg),
+        };
+        if !changed || hops <= 1 {
+            if let Some(cfg) = target {
+                self.current = Some(cfg);
+            }
+            // Steady state: the pattern is already in the switches —
+            // the gates impose no wait (chunks never arrive before t0).
+            return StepPlan {
+                gates: vec![t0; hops],
+                scheduled_s: 0.0,
+                queued_s: 0.0,
+                reprogrammed: false,
+                contended: false,
+            };
+        }
+        let contended = match (self.current, target) {
+            (Some(cur), Some(tgt)) => cur.job != tgt.job,
+            _ => false,
+        };
+
+        let extra = (hops - 1) as f64;
+        let scheduled = extra * reconfig_s;
+        // A conflicting reprogram still in flight serializes us behind
+        // it — the contention queue on the shared fabric.
+        let start = match self.strategy {
+            OverlapStrategy::Serial | OverlapStrategy::Pipelined => {
+                t0.max(self.reprogram_done_at)
+            }
+            // Eager reprogramming began when the fabric drained (which
+            // may predate t0 — that head start is the whole point), but
+            // never before a conflicting reprogram finished.
+            OverlapStrategy::Eager => self.fabric_idle_at.max(self.reprogram_done_at),
+        };
+        let queued = (start - t0).max(0.0);
+        let gates: Vec<f64> = match self.strategy {
+            OverlapStrategy::Serial => vec![start + scheduled; hops],
+            OverlapStrategy::Pipelined | OverlapStrategy::Eager => {
+                (0..hops).map(|l| start + l as f64 * reconfig_s).collect()
+            }
+        };
+        self.reprogram_done_at = start + scheduled;
+        self.current = target;
+        StepPlan {
+            gates,
+            scheduled_s: scheduled,
+            queued_s: queued,
+            reprogrammed: true,
+            contended,
+        }
+    }
+
+    /// Record when the fabric drained this step's traffic (the latest
+    /// virtual time any chunk occupied a switch level).
+    pub fn end_step(&mut self, fabric_busy_until: f64) {
+        self.fabric_idle_at = self.fabric_idle_at.max(fabric_busy_until);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const R: f64 = 10e-6;
+
+    #[test]
+    fn first_pipelined_step_reproduces_the_historical_gate_ladder() {
+        let mut sched = ReconfigScheduler::new(OverlapStrategy::Pipelined);
+        let cfg = FabricConfig::from_levels(3);
+        let plan = sched.begin_step(Some(cfg), 1.5, 3, R);
+        // Bit-for-bit the old `t0 + l × reconfig` ladder.
+        assert_eq!(plan.gates, vec![1.5, 1.5 + R, 1.5 + 2.0 * R]);
+        assert_eq!(plan.scheduled_s, 2.0 * R);
+        assert_eq!(plan.queued_s, 0.0);
+        assert!(plan.reprogrammed);
+    }
+
+    #[test]
+    fn unchanged_pattern_steps_schedule_nothing() {
+        let mut sched = ReconfigScheduler::new(OverlapStrategy::Pipelined);
+        let cfg = FabricConfig::from_levels(3);
+        sched.begin_step(Some(cfg), 0.0, 3, R);
+        let steady = sched.begin_step(Some(cfg), 2.0, 3, R);
+        assert!(!steady.reprogrammed);
+        assert_eq!(steady.scheduled_s, 0.0);
+        assert_eq!(steady.queued_s, 0.0);
+        // Gates at t0: a chunk arriving at the cascade (always ≥ t0)
+        // never waits.
+        assert_eq!(steady.gates, vec![2.0; 3]);
+    }
+
+    #[test]
+    fn serial_gates_hold_every_level_until_the_cascade_is_programmed() {
+        let mut sched = ReconfigScheduler::new(OverlapStrategy::Serial);
+        let cfg = FabricConfig::from_levels(3);
+        let plan = sched.begin_step(Some(cfg), 0.0, 3, R);
+        assert_eq!(plan.gates, vec![2.0 * R; 3]);
+    }
+
+    #[test]
+    fn eager_preprograms_before_the_first_chunk() {
+        let mut sched = ReconfigScheduler::new(OverlapStrategy::Eager);
+        let cfg = FabricConfig::from_levels(3);
+        // Admission-time programming: the fabric has been idle forever,
+        // so every gate predates t0 and no chunk ever waits.
+        let plan = sched.begin_step(Some(cfg), 1.0, 3, R);
+        assert!(plan.gates.iter().all(|&g| g < 1.0));
+        assert_eq!(plan.queued_s, 0.0);
+
+        // A morph after the fabric drained at t=0.9 starts there, not
+        // at the step boundary.
+        sched.end_step(0.9);
+        let morph = sched.begin_step(Some(FabricConfig::from_levels(3).for_job(1)), 1.0, 3, R);
+        assert_eq!(morph.gates[0], 0.9);
+        assert_eq!(morph.gates[2], 0.9 + 2.0 * R);
+    }
+
+    #[test]
+    fn conflicting_jobs_queue_for_the_fabric() {
+        let mut sched = ReconfigScheduler::new(OverlapStrategy::Pipelined);
+        let a = FabricConfig::from_levels(3).for_job(0);
+        let b = FabricConfig::from_levels(3).for_job(1);
+        let first = sched.begin_step(Some(a), 0.0, 3, R);
+        assert_eq!(first.queued_s, 0.0);
+        assert!(!first.contended, "an empty fabric is nobody's eviction");
+        // Job b wants the fabric at t0 = 5 µs, but job a's reprogram
+        // runs until 20 µs — b queues for the remainder, and the
+        // reprogram is contention: job a's pattern is being evicted.
+        let second = sched.begin_step(Some(b), 5e-6, 3, R);
+        assert!((second.queued_s - 15e-6).abs() < 1e-15);
+        assert_eq!(second.gates[0], 2.0 * R);
+        assert!(second.contended);
+    }
+
+    #[test]
+    fn none_target_reuses_whatever_is_programmed() {
+        let mut sched = ReconfigScheduler::new(OverlapStrategy::Serial);
+        let cfg = FabricConfig::from_levels(3);
+        sched.begin_step(Some(cfg), 0.0, 3, R);
+        // An empty LocalSGD round: no fabric traffic, no reprogram —
+        // and the programmed config survives for the next sync round.
+        let idle = sched.begin_step(None, 1.0, 3, R);
+        assert!(!idle.reprogrammed);
+        assert_eq!(sched.current(), Some(cfg));
+        let resync = sched.begin_step(Some(cfg), 2.0, 3, R);
+        assert!(!resync.reprogrammed, "morphing back reuses the pattern");
+    }
+
+    #[test]
+    fn modeled_split_orders_strategies() {
+        let hw = HardwareModel::default();
+        let ov = 7.0 / 8.0;
+        let serial = ReconfigSplit::modeled(&hw, 3, ov, OverlapStrategy::Serial);
+        let piped = ReconfigSplit::modeled(&hw, 3, ov, OverlapStrategy::Pipelined);
+        let eager = ReconfigSplit::modeled(&hw, 3, ov, OverlapStrategy::Eager);
+        assert_eq!(serial.exposed_s, 2.0 * hw.ocs_reconfig_s);
+        assert!((piped.exposed_s - 2.0 * hw.ocs_reconfig_s / 8.0).abs() < 1e-18);
+        assert_eq!(eager.exposed_s, 0.0);
+        assert!(serial.exposed_s >= piped.exposed_s && piped.exposed_s >= eager.exposed_s);
+        for s in [serial, piped, eager] {
+            assert!((s.hidden_s + s.exposed_s - s.scheduled_s).abs() < 1e-18);
+        }
+    }
+
+    #[test]
+    fn job_salt_and_fingerprint_break_equality() {
+        let a = FabricConfig::from_levels(3);
+        assert_eq!(a, FabricConfig::from_levels(3));
+        assert_ne!(a, a.for_job(1));
+        assert_ne!(a, FabricConfig::with_fingerprint(3, 0xdead_beef));
+    }
+}

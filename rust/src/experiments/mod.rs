@@ -8,6 +8,7 @@ pub mod fig6;
 #[cfg(feature = "pjrt")]
 pub mod fig7a;
 pub mod fig7b;
+pub mod overlap;
 pub mod scale;
 pub mod table1;
 pub mod table2;

@@ -1,0 +1,366 @@
+//! Overlap-strategy sweep: where each reconfiguration scheduling
+//! strategy leaves the OCS reprogramming cost, across fabric depths and
+//! concurrent-job counts, on the discrete-event backend.
+//!
+//! Each cell runs one event-backend cluster through a uniform cascade
+//! and splits every step's scheduled reconfiguration into **exposed**
+//! (measured gate wait on the chunk stream's critical path), **hidden**
+//! (reprogramming the stream or an eager head start absorbed), and
+//! **queued** (contention behind a conflicting job's reprogram). With
+//! one job only the first step reprograms — the steady state pays
+//! zero under every strategy — so the strategies separate on the
+//! multi-job cells, where round-robin jobs force a reprogram every
+//! step: `serial ≥ pipelined ≥ eager` on exposed wait, per cell. The
+//! CLI (`optinc-repro overlap`) prints the table and persists
+//! `target/bench-results/overlap_sweep.json`; `benches/overlap.rs`
+//! emits the same sweep as `BENCH_overlap.json`.
+
+use anyhow::Result;
+
+use crate::cluster::{Backend, Cluster, ClusterMetrics, Workload};
+use crate::collectives::fabric::{FabricAllReduce, FabricMode, FabricTopology};
+use crate::collectives::sched::OverlapStrategy;
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+
+/// One sweep configuration (the CLI's `--depths/--jobs/...`).
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    /// Cascade depths to sweep (uniform fan-in, `fan_in^depth` servers).
+    pub depths: Vec<usize>,
+    /// Concurrent-job counts to sweep (round-robin on one fabric).
+    pub jobs: Vec<usize>,
+    /// Strategies to compare.
+    pub strategies: Vec<OverlapStrategy>,
+    /// Uniform per-level fan-in.
+    pub fan_in: usize,
+    /// Gradient elements per step.
+    pub elements: usize,
+    /// Streaming grain (elements per chunk).
+    pub chunk: usize,
+    /// Steps per cell.
+    pub steps: usize,
+    /// Gradient word width on the wire.
+    pub bits: u32,
+    /// Replay seed for the event backend.
+    pub seed: u64,
+}
+
+impl Default for SweepConfig {
+    fn default() -> SweepConfig {
+        SweepConfig {
+            depths: vec![2, 3],
+            jobs: vec![1, 4],
+            strategies: OverlapStrategy::ALL.to_vec(),
+            fan_in: 4,
+            elements: 4_096,
+            chunk: 512,
+            steps: 8,
+            bits: 8,
+            seed: 42,
+        }
+    }
+}
+
+/// One (strategy × depth × jobs) cell's measured row.
+#[derive(Clone, Debug)]
+pub struct OverlapRow {
+    pub strategy: OverlapStrategy,
+    pub depth: usize,
+    pub jobs: usize,
+    /// Servers the uniform cascade serves (`fan_in^depth`).
+    pub servers: usize,
+    /// Mean virtual step time over the cell's steps.
+    pub mean_virtual_step_s: f64,
+    /// Mean exposed reconfiguration wait per step (measured gate wait).
+    pub mean_exposed_s: f64,
+    /// Mean hidden reconfiguration per step.
+    pub mean_hidden_s: f64,
+    /// Mean contention-queue wait per step.
+    pub mean_queued_s: f64,
+    /// The first step's exposed wait (every strategy's reprogram step).
+    pub first_step_exposed_s: f64,
+    /// Mean exposed wait over the warm steps (step ≥ jobs, i.e. each
+    /// job past its own first step). Exactly zero for single-job runs —
+    /// the steady-state guarantee.
+    pub steady_exposed_s: f64,
+    /// Closed-form modeled exposed reconfiguration for one reprogramming
+    /// step under this strategy ([`ReconfigSplit::modeled`]
+    /// (crate::collectives::ReconfigSplit::modeled)).
+    pub modeled_exposed_s: f64,
+}
+
+struct Synth {
+    dim: usize,
+    seed: u64,
+}
+
+impl Workload for Synth {
+    fn grad(&mut self, step: usize, worker: usize) -> (Vec<f32>, f64) {
+        let mut rng = Pcg32::new(self.seed ^ ((step as u64) << 32), worker as u64);
+        let g = (0..self.dim).map(|_| rng.normal() as f32 * 0.1).collect();
+        (g, 0.0)
+    }
+
+    fn apply(&mut self, _step: usize, _worker: usize, _avg: &[f32]) {}
+}
+
+/// Run the sweep: one event-backend cluster per (depth × jobs ×
+/// strategy) cell, all streaming through a uniform remainder-mode
+/// fabric at full capacity.
+pub fn run(cfg: &SweepConfig) -> Result<Vec<OverlapRow>> {
+    anyhow::ensure!(!cfg.depths.is_empty(), "sweep needs at least one depth");
+    anyhow::ensure!(!cfg.jobs.is_empty(), "sweep needs at least one job count");
+    anyhow::ensure!(
+        !cfg.strategies.is_empty(),
+        "sweep needs at least one strategy"
+    );
+    crate::cluster::validate_chunk_elems(cfg.chunk)?;
+    let mut rows = Vec::new();
+    for &depth in &cfg.depths {
+        let topo = FabricTopology::uniform(cfg.fan_in, depth)?;
+        let servers = topo.capacity();
+        for &jobs in &cfg.jobs {
+            for &strategy in &cfg.strategies {
+                let mut fabric =
+                    FabricAllReduce::exact(cfg.bits, &topo, FabricMode::Remainder)?;
+                let cluster = Cluster::new(servers)
+                    .with_chunk_elems(cfg.chunk)
+                    .with_backend(Backend::Event)
+                    .with_seed(cfg.seed)
+                    .with_overlap_strategy(strategy)
+                    .with_concurrent_jobs(jobs);
+                let mut metrics = ClusterMetrics::new("overlap");
+                let dim = cfg.elements;
+                let seed = cfg.seed;
+                let records = cluster.run(
+                    cfg.steps,
+                    move |_| Synth { dim, seed },
+                    &mut fabric,
+                    &mut metrics,
+                )?;
+                let exposed = |r: &crate::cluster::StepRecord| {
+                    r.reconfig_exposed_s.expect("event backend accounts reconfig")
+                };
+                let warm: Vec<f64> = records
+                    .iter()
+                    .skip(jobs.max(1))
+                    .map(&exposed)
+                    .collect();
+                let steady = if warm.is_empty() {
+                    0.0
+                } else {
+                    warm.iter().sum::<f64>() / warm.len() as f64
+                };
+                let modeled = records
+                    .first()
+                    .map(|r| r.stats.reconfig_split(&cluster.hw, strategy).exposed_s)
+                    .unwrap_or(0.0);
+                rows.push(OverlapRow {
+                    strategy,
+                    depth,
+                    jobs,
+                    servers,
+                    mean_virtual_step_s: metrics.mean_virtual_step_s(),
+                    mean_exposed_s: metrics.mean_virtual_reconfig_wait_s(),
+                    mean_hidden_s: metrics.mean_reconfig_hidden_s(),
+                    mean_queued_s: metrics.mean_reconfig_queued_s(),
+                    first_step_exposed_s: records.first().map(&exposed).unwrap_or(0.0),
+                    steady_exposed_s: steady,
+                    modeled_exposed_s: modeled,
+                });
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// Print the sweep table.
+pub fn print(cfg: &SweepConfig, rows: &[OverlapRow]) {
+    println!(
+        "overlap sweep — event backend, fan-in {}, {} elements, chunk {}, {}-bit wire, \
+         {} steps, seed {}",
+        cfg.fan_in, cfg.elements, cfg.chunk, cfg.bits, cfg.steps, cfg.seed
+    );
+    println!(
+        "  {:>9}  {:>5}  {:>4}  {:>7}  {:>12}  {:>12}  {:>12}  {:>12}  {:>12}",
+        "strategy",
+        "depth",
+        "jobs",
+        "servers",
+        "virtual/step",
+        "exposed/step",
+        "hidden/step",
+        "queued/step",
+        "steady expo"
+    );
+    for r in rows {
+        println!(
+            "  {:>9}  {:>5}  {:>4}  {:>7}  {:>9.3} us  {:>9.3} us  {:>9.3} us  {:>9.3} us  {:>9.3} us",
+            r.strategy.name(),
+            r.depth,
+            r.jobs,
+            r.servers,
+            r.mean_virtual_step_s * 1e6,
+            r.mean_exposed_s * 1e6,
+            r.mean_hidden_s * 1e6,
+            r.mean_queued_s * 1e6,
+            r.steady_exposed_s * 1e6
+        );
+    }
+}
+
+/// The sweep as JSON (the `overlap_sweep.json` / `BENCH_overlap.json`
+/// rows).
+pub fn to_json(cfg: &SweepConfig, rows: &[OverlapRow]) -> Json {
+    Json::obj(vec![
+        ("fan_in", Json::Num(cfg.fan_in as f64)),
+        ("elements", Json::Num(cfg.elements as f64)),
+        ("chunk", Json::Num(cfg.chunk as f64)),
+        ("steps", Json::Num(cfg.steps as f64)),
+        ("bits", Json::Num(cfg.bits as f64)),
+        ("seed", Json::Num(cfg.seed as f64)),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("strategy", Json::Str(r.strategy.name().to_string())),
+                            ("depth", Json::Num(r.depth as f64)),
+                            ("jobs", Json::Num(r.jobs as f64)),
+                            ("servers", Json::Num(r.servers as f64)),
+                            ("mean_virtual_step_s", Json::Num(r.mean_virtual_step_s)),
+                            ("mean_exposed_s", Json::Num(r.mean_exposed_s)),
+                            ("mean_hidden_s", Json::Num(r.mean_hidden_s)),
+                            ("mean_queued_s", Json::Num(r.mean_queued_s)),
+                            (
+                                "first_step_exposed_s",
+                                Json::Num(r.first_step_exposed_s),
+                            ),
+                            ("steady_exposed_s", Json::Num(r.steady_exposed_s)),
+                            ("modeled_exposed_s", Json::Num(r.modeled_exposed_s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> SweepConfig {
+        SweepConfig {
+            depths: vec![2, 3],
+            jobs: vec![1, 2],
+            strategies: OverlapStrategy::ALL.to_vec(),
+            fan_in: 2,
+            elements: 256,
+            chunk: 64,
+            steps: 4,
+            bits: 8,
+            seed: 7,
+        }
+    }
+
+    fn cell<'a>(
+        rows: &'a [OverlapRow],
+        strategy: OverlapStrategy,
+        depth: usize,
+        jobs: usize,
+    ) -> &'a OverlapRow {
+        rows.iter()
+            .find(|r| r.strategy == strategy && r.depth == depth && r.jobs == jobs)
+            .expect("sweep covers every cell")
+    }
+
+    #[test]
+    fn strategies_order_exposed_wait_in_every_cell() {
+        let cfg = small_cfg();
+        let rows = run(&cfg).unwrap();
+        assert_eq!(rows.len(), 2 * 2 * 3);
+        for &depth in &cfg.depths {
+            for &jobs in &cfg.jobs {
+                let serial = cell(&rows, OverlapStrategy::Serial, depth, jobs);
+                let piped = cell(&rows, OverlapStrategy::Pipelined, depth, jobs);
+                let eager = cell(&rows, OverlapStrategy::Eager, depth, jobs);
+                assert!(
+                    serial.mean_exposed_s >= piped.mean_exposed_s
+                        && piped.mean_exposed_s >= eager.mean_exposed_s,
+                    "d{depth} j{jobs}: serial {:.3e} >= pipelined {:.3e} >= eager {:.3e}",
+                    serial.mean_exposed_s,
+                    piped.mean_exposed_s,
+                    eager.mean_exposed_s
+                );
+                // The modeled per-reprogram split orders the same way.
+                assert!(
+                    serial.modeled_exposed_s >= piped.modeled_exposed_s
+                        && piped.modeled_exposed_s >= eager.modeled_exposed_s
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_job_steady_state_pays_zero_under_every_strategy() {
+        let cfg = small_cfg();
+        let rows = run(&cfg).unwrap();
+        for r in rows.iter().filter(|r| r.jobs == 1) {
+            assert_eq!(
+                r.steady_exposed_s, 0.0,
+                "{} d{}: unchanged pattern must be free",
+                r.strategy, r.depth
+            );
+            assert_eq!(r.mean_queued_s, 0.0, "one job never queues");
+        }
+        // ...while the multi-job cells keep reprogramming: the serial
+        // strategy's warm steps stay exposed.
+        let contended = cell(&rows, OverlapStrategy::Serial, 3, 2);
+        assert!(
+            contended.steady_exposed_s > 0.0,
+            "conflicting jobs reprogram every step"
+        );
+    }
+
+    #[test]
+    fn eager_hides_the_first_reprogram_entirely() {
+        let cfg = small_cfg();
+        let rows = run(&cfg).unwrap();
+        for &depth in &cfg.depths {
+            let eager = cell(&rows, OverlapStrategy::Eager, depth, 1);
+            assert_eq!(
+                eager.first_step_exposed_s, 0.0,
+                "admission-time programming opens the windows before any chunk"
+            );
+            let serial = cell(&rows, OverlapStrategy::Serial, depth, 1);
+            assert!(serial.first_step_exposed_s > 0.0);
+            // What serial exposes, eager hides: both schedule the same
+            // (L−1)·T_r reprogram on step 0.
+            assert!(eager.mean_hidden_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn sweep_json_carries_every_cell() {
+        let cfg = SweepConfig {
+            depths: vec![2],
+            jobs: vec![1],
+            strategies: vec![OverlapStrategy::Pipelined],
+            fan_in: 2,
+            elements: 128,
+            chunk: 64,
+            steps: 2,
+            bits: 8,
+            seed: 1,
+        };
+        let rows = run(&cfg).unwrap();
+        let j = to_json(&cfg, &rows);
+        assert_eq!(j.get("rows").as_arr().map(|a| a.len()), Some(1));
+        let row = &j.get("rows").as_arr().unwrap()[0];
+        assert_eq!(row.get("strategy").as_str(), Some("pipelined"));
+        assert!(row.get("mean_virtual_step_s").as_f64().unwrap() > 0.0);
+    }
+}

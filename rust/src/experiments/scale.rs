@@ -60,11 +60,14 @@ pub struct ScaleRow {
     pub fan_in: usize,
     /// Mean virtual step time over the sweep's steps.
     pub mean_virtual_step_s: f64,
-    /// Mean closed-form modeled step time — the prediction the virtual
-    /// clock is measuring against.
-    pub mean_modeled_step_s: f64,
-    /// Total virtual OCS reconfiguration-gate wait across all steps.
-    pub virtual_reconfig_wait_s: f64,
+    /// Mean closed-form modeled **communication** time per step (the
+    /// collective only — no compute term), named for what it carries.
+    pub mean_modeled_comm_s: f64,
+    /// Mean virtual OCS reconfiguration-gate wait per step — a per-step
+    /// value like the columns it prints beside. With the persistent
+    /// reconfiguration scheduler only reprogramming steps (the first
+    /// step of a steady single-job run) contribute.
+    pub mean_virtual_reconfig_wait_s: f64,
     /// Modeled exposed reconfiguration per step (overlap-discounted).
     pub modeled_exposed_reconfig_s: f64,
     /// Per-server wire bytes per step (payload + sync).
@@ -96,6 +99,7 @@ impl Workload for Synth {
 /// streaming through a `levels`-deep remainder-mode fabric.
 pub fn run(cfg: &SweepConfig) -> Result<Vec<ScaleRow>> {
     anyhow::ensure!(!cfg.servers.is_empty(), "sweep needs at least one server count");
+    crate::cluster::validate_chunk_elems(cfg.chunk)?;
     let mut rows = Vec::with_capacity(cfg.servers.len());
     for &n in &cfg.servers {
         let topo = FabricTopology::for_workers_with_depth(n, cfg.levels)?;
@@ -122,8 +126,8 @@ pub fn run(cfg: &SweepConfig) -> Result<Vec<ScaleRow>> {
             servers: n,
             fan_in,
             mean_virtual_step_s: metrics.mean_virtual_step_s(),
-            mean_modeled_step_s: metrics.mean_modeled_comm_s(),
-            virtual_reconfig_wait_s: metrics.total_virtual_reconfig_wait_s(),
+            mean_modeled_comm_s: metrics.mean_modeled_comm_s(),
+            mean_virtual_reconfig_wait_s: metrics.mean_virtual_reconfig_wait_s(),
             modeled_exposed_reconfig_s: exposed,
             wire_bytes_per_server: metrics.total_bytes_per_server() / cfg.steps.max(1) as u64,
             chunks_per_step: metrics.total_chunks() / cfg.steps.max(1) as u64,
@@ -140,17 +144,23 @@ pub fn print(cfg: &SweepConfig, rows: &[ScaleRow]) {
         cfg.elements, cfg.chunk, cfg.levels, cfg.bits, cfg.steps, cfg.seed
     );
     println!(
-        "  {:>7}  {:>6}  {:>14}  {:>14}  {:>16}  {:>14}  {:>8}",
-        "servers", "fan-in", "virtual/step", "modeled/step", "reconfig wait", "wire B/server", "chunks"
+        "  {:>7}  {:>6}  {:>14}  {:>17}  {:>19}  {:>14}  {:>8}",
+        "servers",
+        "fan-in",
+        "virtual/step",
+        "modeled comm/step",
+        "reconfig wait/step",
+        "wire B/server",
+        "chunks"
     );
     for r in rows {
         println!(
-            "  {:>7}  {:>6}  {:>11.4} ms  {:>11.4} ms  {:>13.2} us  {:>14}  {:>8}",
+            "  {:>7}  {:>6}  {:>11.4} ms  {:>14.4} ms  {:>16.2} us  {:>14}  {:>8}",
             r.servers,
             r.fan_in,
             r.mean_virtual_step_s * 1e3,
-            r.mean_modeled_step_s * 1e3,
-            r.virtual_reconfig_wait_s * 1e6,
+            r.mean_modeled_comm_s * 1e3,
+            r.mean_virtual_reconfig_wait_s * 1e6,
             r.wire_bytes_per_server,
             r.chunks_per_step
         );
@@ -175,10 +185,10 @@ pub fn to_json(cfg: &SweepConfig, rows: &[ScaleRow]) -> Json {
                             ("servers", Json::Num(r.servers as f64)),
                             ("fan_in", Json::Num(r.fan_in as f64)),
                             ("mean_virtual_step_s", Json::Num(r.mean_virtual_step_s)),
-                            ("mean_modeled_step_s", Json::Num(r.mean_modeled_step_s)),
+                            ("mean_modeled_comm_s", Json::Num(r.mean_modeled_comm_s)),
                             (
-                                "virtual_reconfig_wait_s",
-                                Json::Num(r.virtual_reconfig_wait_s),
+                                "mean_virtual_reconfig_wait_s",
+                                Json::Num(r.mean_virtual_reconfig_wait_s),
                             ),
                             (
                                 "modeled_exposed_reconfig_s",
@@ -220,8 +230,12 @@ mod tests {
         assert_eq!(rows[1].fan_in, 3, "3^3 = 27 servers");
         for r in &rows {
             assert!(r.mean_virtual_step_s > 0.0);
-            assert!(r.mean_modeled_step_s > 0.0);
-            assert!(r.virtual_reconfig_wait_s > 0.0, "3 levels must gate");
+            assert!(r.mean_modeled_comm_s > 0.0);
+            assert!(
+                r.mean_virtual_reconfig_wait_s > 0.0,
+                "the first step reprograms the 3-level cascade, so the \
+                 per-step mean wait stays positive"
+            );
             assert_eq!(r.chunks_per_step, 4);
             // 8-bit wire: 1 B/element payload + (4 + 1) sync per chunk.
             assert_eq!(r.wire_bytes_per_server, 512 + 4 * 5);
@@ -231,6 +245,19 @@ mod tests {
         assert!(rows[1].mean_virtual_step_s >= rows[0].mean_virtual_step_s * 0.5);
         let j = to_json(&cfg, &rows);
         assert_eq!(j.get("rows").as_arr().map(|a| a.len()), Some(2));
+    }
+
+    #[test]
+    fn sweep_rejects_zero_chunk_with_a_named_error() {
+        // Regression (ISSUE 9 satellite): `--chunk 0` used to panic
+        // through `Cluster::with_chunk_elems`'s assert; now it surfaces
+        // as the shared CLI-edge error before any cluster is built.
+        let cfg = SweepConfig {
+            chunk: 0,
+            ..SweepConfig::default()
+        };
+        let err = run(&cfg).unwrap_err().to_string();
+        assert!(err.contains("--chunk"), "named error, not a panic: {err}");
     }
 
     #[test]

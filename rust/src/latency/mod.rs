@@ -136,7 +136,12 @@ impl LatencyBreakdown {
     }
 
     /// Overall latency reduction (the paper's ">25%" / "~17%" numbers).
+    /// A degenerate all-zero baseline (`ring_total() == 0`) leaves
+    /// nothing to reduce: the reduction is defined as 0.0, never NaN.
     pub fn reduction(&self) -> f64 {
+        if self.ring_total() <= 0.0 {
+            return 0.0;
+        }
         1.0 - self.optinc_total() / self.ring_total()
     }
 
@@ -154,8 +159,13 @@ impl LatencyBreakdown {
         self.optinc_total() - hideable.min(self.compute_s)
     }
 
-    /// Latency reduction of the pipelined engine vs the ring baseline.
+    /// Latency reduction of the pipelined engine vs the ring baseline
+    /// (0.0 — never NaN — on an all-zero baseline, like
+    /// [`Self::reduction`]).
     pub fn pipelined_reduction(&self, chunks: u32) -> f64 {
+        if self.ring_total() <= 0.0 {
+            return 0.0;
+        }
         1.0 - self.pipelined_total(chunks) / self.ring_total()
     }
 
@@ -181,8 +191,12 @@ impl LatencyBreakdown {
     }
 
     /// Latency reduction of the streamed fabric vs the ring baseline —
-    /// what scale-out costs relative to the flat switch's win.
+    /// what scale-out costs relative to the flat switch's win (0.0 —
+    /// never NaN — on an all-zero baseline, like [`Self::reduction`]).
     pub fn fabric_reduction(&self, hw: &HardwareModel, levels: usize, chunks: u32) -> f64 {
+        if self.ring_total() <= 0.0 {
+            return 0.0;
+        }
         1.0 - self.fabric_total(hw, levels, chunks) / self.ring_total()
     }
 
@@ -201,6 +215,31 @@ impl LatencyBreakdown {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn zero_baseline_reductions_are_zero_not_nan() {
+        // Regression (ISSUE 9 satellite): a degenerate workload model
+        // with zero compute and zero communication used to make every
+        // reduction 1 − 0/0 = NaN, which poisons JSON and breaks every
+        // ordered comparison downstream. Pin the defined value.
+        let hw = HardwareModel::default();
+        let b = LatencyBreakdown {
+            workload: "degenerate".into(),
+            servers: 4,
+            compute_s: 0.0,
+            ring_comm_s: 0.0,
+            optinc_comm_s: 0.0,
+        };
+        assert_eq!(b.ring_total(), 0.0);
+        assert_eq!(b.reduction(), 0.0);
+        assert_eq!(b.pipelined_reduction(8), 0.0);
+        assert_eq!(b.fabric_reduction(&hw, 3, 8), 0.0);
+        assert!(
+            b.reduction().is_finite()
+                && b.pipelined_reduction(1).is_finite()
+                && b.fabric_reduction(&hw, 1, 1).is_finite()
+        );
+    }
 
     #[test]
     fn resnet_is_comm_dominated_and_improves_over_25pct() {

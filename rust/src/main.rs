@@ -30,6 +30,11 @@ const COMMANDS: &[Command] = &[
         run: cmd_scale,
     },
     Command {
+        name: "overlap",
+        about: "Overlap-strategy sweep: exposed vs hidden OCS reconfiguration across depths x jobs x strategies (--depths 2,3 --jobs 1,4 --strategies serial,pipelined,eager)",
+        run: cmd_overlap,
+    },
+    Command {
         name: "table1",
         about: "Table I: area ratios + ONN accuracy per scenario",
         run: cmd_table1,
@@ -170,7 +175,15 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     };
     let steps = args.usize_or("steps", 3)?;
     let chunk = match args.usize_opt("chunk")? {
-        Some(c) => c.max(1),
+        Some(c) => {
+            // The one shared streaming-grain check, at the CLI edge
+            // (same shape as the `--bits` check below): an explicit
+            // `--chunk 0` is a clear error here, not a panic inside
+            // the cluster builder or a zero division in the chunk
+            // count. (It used to be silently clamped to 1.)
+            optinc::cluster::validate_chunk_elems(c)?;
+            c
+        }
         None => (elements / 16).max(1),
     };
     // A topology flag without --collective means the fabric: `pipeline
@@ -423,6 +436,7 @@ fn cmd_scale(args: &Args) -> Result<()> {
         bits: args.usize_or("bits", 8)? as u32,
         seed: args.u64_or("seed", 42)?,
     };
+    optinc::cluster::validate_chunk_elems(cfg.chunk)?;
     let rows = optinc::experiments::scale::run(&cfg)?;
     optinc::experiments::scale::print(&cfg, &rows);
     // Persist for EXPERIMENTS.md provenance.
@@ -430,6 +444,44 @@ fn cmd_scale(args: &Args) -> Result<()> {
     std::fs::create_dir_all(dir)?;
     let path = dir.join("scale_sweep.json");
     std::fs::write(&path, optinc::experiments::scale::to_json(&cfg, &rows).to_pretty())?;
+    println!("  rows -> {}", path.display());
+    Ok(())
+}
+
+/// Overlap-strategy sweep: exposed vs hidden OCS reconfiguration across
+/// depths × concurrent jobs × scheduling strategies on the event backend —
+/// the experiment behind `BENCH_overlap.json`, runnable as
+/// `optinc-repro overlap --depths 2,3 --jobs 1,4 --strategies serial,pipelined,eager`.
+fn cmd_overlap(args: &Args) -> Result<()> {
+    use optinc::collectives::OverlapStrategy;
+    let strategies = args
+        .str_or("strategies", "serial,pipelined,eager")
+        .split(',')
+        .map(|s| OverlapStrategy::parse(s.trim()))
+        .collect::<Result<Vec<_>>>()?;
+    let cfg = optinc::experiments::overlap::SweepConfig {
+        depths: args.usize_list_or("depths", &[2, 3])?,
+        jobs: args.usize_list_or("jobs", &[1, 4])?,
+        strategies,
+        fan_in: args.usize_or("fan-in", 4)?,
+        elements: args.usize_or("elements", 4_096)?,
+        chunk: args.usize_or("chunk", 512)?,
+        steps: args.usize_or("steps", 8)?,
+        bits: args.usize_or("bits", 8)? as u32,
+        seed: args.u64_or("seed", 42)?,
+    };
+    optinc::pam4::validate_bits(cfg.bits)?;
+    optinc::cluster::validate_chunk_elems(cfg.chunk)?;
+    let rows = optinc::experiments::overlap::run(&cfg)?;
+    optinc::experiments::overlap::print(&cfg, &rows);
+    // Persist for EXPERIMENTS.md provenance.
+    let dir = std::path::Path::new("target/bench-results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join("overlap_sweep.json");
+    std::fs::write(
+        &path,
+        optinc::experiments::overlap::to_json(&cfg, &rows).to_pretty(),
+    )?;
     println!("  rows -> {}", path.display());
     Ok(())
 }
@@ -451,6 +503,7 @@ fn cmd_convergence(args: &Args) -> Result<()> {
         tau: args.usize_or("tau", 4)?,
         seed: args.u64_or("seed", 0xEF5EED)?,
     };
+    optinc::cluster::validate_chunk_elems(cfg.chunk)?;
     let rows = optinc::experiments::convergence::run(&cfg)?;
     optinc::experiments::convergence::print(&cfg, &rows);
     // Persist for EXPERIMENTS.md provenance.

@@ -1,0 +1,280 @@
+//! Reconfiguration-scheduling conformance (ISSUE 9 tentpole).
+//!
+//! The event backend's **measured** per-step reconfiguration accounting
+//! (gate waits on the virtual clock) and the scheduler's **modeled**
+//! split ([`ReconfigSplit::modeled`]) describe the same physics two
+//! ways; this suite pins them against each other per strategy:
+//!
+//!   - a step that reprograms never waits longer than the reprogram it
+//!     scheduled (`measured exposed ≤ (L−1)·T_r`), strategy by strategy;
+//!   - strategies order the measured exposed wait the way the model
+//!     says they must: serial ≥ pipelined ≥ eager, with eager exactly 0;
+//!   - steady-state steps with an unchanged fabric pattern report
+//!     **zero** reconfiguration on *both* accounting paths — measured
+//!     (`virtual_reconfig_wait_s` / `reconfig_exposed_s`) and scheduled
+//!     (`reconfig_hidden_s`, since hidden = scheduled − exposed);
+//!   - the strategy knob changes the virtual clock only: applied
+//!     averages and accounted stats stay bit-exact against the threaded
+//!     oracle under every strategy;
+//!   - plus the `--chunk 0` CLI-edge regression
+//!     ([`validate_chunk_elems`]).
+
+use std::sync::mpsc;
+
+use optinc::cluster::{validate_chunk_elems, Backend, Cluster, ClusterMetrics, StepRecord, Workload};
+use optinc::collectives::fabric::{FabricAllReduce, FabricMode, FabricTopology};
+use optinc::collectives::{OverlapStrategy, ReconfigSplit};
+use optinc::util::rng::Pcg32;
+
+const DIM: usize = 384;
+const GRAIN: usize = 48;
+const STEPS: usize = 4;
+const DEPTH: usize = 3;
+const FAN_IN: usize = 2;
+const SEED: u64 = 0x5C_ED;
+
+struct Synth {
+    dim: usize,
+    tx: Option<mpsc::Sender<(usize, usize, Vec<u32>)>>,
+}
+
+impl Workload for Synth {
+    fn grad(&mut self, step: usize, worker: usize) -> (Vec<f32>, f64) {
+        let mut rng = Pcg32::new(SEED ^ ((step as u64) << 20), worker as u64);
+        let g = (0..self.dim).map(|_| rng.normal() as f32 * 0.1).collect();
+        (g, (step * 7 + worker + 1) as f64)
+    }
+
+    fn apply(&mut self, step: usize, worker: usize, avg: &[f32]) {
+        if let Some(tx) = &self.tx {
+            tx.send((step, worker, avg.iter().map(|v| v.to_bits()).collect()))
+                .ok();
+        }
+    }
+}
+
+fn run_fabric(strategy: OverlapStrategy, jobs: usize) -> (Cluster, Vec<StepRecord>) {
+    let topo = FabricTopology::uniform(FAN_IN, DEPTH).unwrap();
+    let mut fabric = FabricAllReduce::exact(8, &topo, FabricMode::Remainder).unwrap();
+    let cluster = Cluster::new(topo.capacity())
+        .with_chunk_elems(GRAIN)
+        .with_backend(Backend::Event)
+        .with_seed(SEED)
+        .with_overlap_strategy(strategy)
+        .with_concurrent_jobs(jobs);
+    let mut metrics = ClusterMetrics::new("reconfig-sched");
+    let records = cluster
+        .run(
+            STEPS,
+            |_| Synth {
+                dim: DIM,
+                tx: None,
+            },
+            &mut fabric,
+            &mut metrics,
+        )
+        .unwrap();
+    (cluster, records)
+}
+
+/// Measured exposed wait vs the modeled split, per strategy: the first
+/// (reprogramming) step's gate wait never exceeds the reprogram it
+/// scheduled, eager's is exactly zero, and the strategies order the way
+/// [`ReconfigSplit::modeled`] orders them.
+#[test]
+fn measured_exposed_wait_stays_within_the_modeled_schedule_per_strategy() {
+    let mut first_exposed = Vec::new();
+    for strategy in OverlapStrategy::ALL {
+        let (cluster, records) = run_fabric(strategy, 1);
+        let scheduled = (DEPTH - 1) as f64 * cluster.hw.ocs_reconfig_s;
+        let split = ReconfigSplit::modeled(
+            &cluster.hw,
+            DEPTH as u32,
+            records[0].stats.overlap_fraction,
+            strategy,
+        );
+        assert_eq!(
+            split.scheduled_s, scheduled,
+            "{strategy}: model schedules (L-1)*T_r per reprogram"
+        );
+        let exposed = records[0]
+            .reconfig_exposed_s
+            .expect("event backend accounts reconfig");
+        assert!(
+            exposed <= scheduled + 1e-12,
+            "{strategy}: measured exposed {exposed:.3e} s must stay within the \
+             scheduled reprogram {scheduled:.3e} s (seed {SEED:#x})"
+        );
+        assert!(
+            split.exposed_s <= scheduled + 1e-12 && split.hidden_s >= -1e-12,
+            "{strategy}: modeled split stays within schedule"
+        );
+        // Measured and modeled agree on the historical alias.
+        assert_eq!(
+            records[0].virtual_reconfig_wait_s,
+            records[0].reconfig_exposed_s,
+            "{strategy}: alias and split field are one measurement"
+        );
+        first_exposed.push((strategy, exposed, split.exposed_s));
+    }
+    let get = |s: OverlapStrategy| {
+        first_exposed
+            .iter()
+            .find(|(st, _, _)| *st == s)
+            .copied()
+            .unwrap()
+    };
+    let (_, serial_m, serial_mod) = get(OverlapStrategy::Serial);
+    let (_, piped_m, piped_mod) = get(OverlapStrategy::Pipelined);
+    let (_, eager_m, eager_mod) = get(OverlapStrategy::Eager);
+    assert!(
+        serial_m >= piped_m && piped_m >= eager_m,
+        "measured ordering serial {serial_m:.3e} >= pipelined {piped_m:.3e} \
+         >= eager {eager_m:.3e}"
+    );
+    assert!(serial_mod >= piped_mod && piped_mod >= eager_mod, "modeled ordering");
+    assert_eq!(eager_m, 0.0, "eager pre-programs before the first chunk");
+    assert!(serial_m > 0.0, "serial holds every level closed until programmed");
+}
+
+/// The steady-state guarantee, on both accounting paths: with an
+/// unchanged fabric pattern, every step after the first schedules
+/// nothing (hidden = 0), waits on nothing (exposed = alias = 0), and
+/// queues behind nobody — under every strategy.
+#[test]
+fn unchanged_pattern_steps_report_zero_reconfiguration_on_both_paths() {
+    for strategy in OverlapStrategy::ALL {
+        let (_, records) = run_fabric(strategy, 1);
+        assert!(records.len() == STEPS);
+        for r in &records[1..] {
+            let step = r.step;
+            assert_eq!(
+                r.reconfig_exposed_s,
+                Some(0.0),
+                "{strategy} step {step}: steady-state measured exposed"
+            );
+            assert_eq!(
+                r.virtual_reconfig_wait_s,
+                Some(0.0),
+                "{strategy} step {step}: historical alias"
+            );
+            assert_eq!(
+                r.reconfig_hidden_s,
+                Some(0.0),
+                "{strategy} step {step}: nothing scheduled, nothing hidden"
+            );
+            assert_eq!(
+                r.reconfig_queued_s,
+                Some(0.0),
+                "{strategy} step {step}: single job never queues"
+            );
+        }
+        // ...and the first step is the one that paid: it scheduled the
+        // whole reprogram (hidden + exposed account for all of it).
+        let first = &records[0];
+        let total = first.reconfig_hidden_s.unwrap() + first.reconfig_exposed_s.unwrap();
+        assert!(
+            total > 0.0,
+            "{strategy}: step 0 programs the cascade from cold"
+        );
+    }
+}
+
+/// Conflicting jobs on one fabric reprogram every step and charge the
+/// contention queue; a single job past warmup never does.
+#[test]
+fn concurrent_jobs_queue_where_a_single_job_is_free() {
+    let (_, multi) = run_fabric(OverlapStrategy::Pipelined, 2);
+    // Every step past the first evicts the other job's pattern: the
+    // fabric keeps reprogramming and the queue accounting shows it.
+    let queued: f64 = multi[1..]
+        .iter()
+        .map(|r| r.reconfig_queued_s.unwrap())
+        .sum();
+    assert!(
+        queued > 0.0,
+        "two jobs round-robin on one fabric must queue (seed {SEED:#x})"
+    );
+    let (_, single) = run_fabric(OverlapStrategy::Pipelined, 1);
+    assert!(single[1..]
+        .iter()
+        .all(|r| r.reconfig_queued_s == Some(0.0)));
+}
+
+/// The strategy knob must never change results — only the virtual
+/// clock. Applied averages and accounted stats stay bit-exact against
+/// the threaded oracle (which has no reconfiguration accounting at all)
+/// under every strategy and job count.
+#[test]
+fn strategies_change_the_clock_not_the_data() {
+    let run_applied = |backend: Backend,
+                       strategy: OverlapStrategy,
+                       jobs: usize|
+     -> (Vec<StepRecord>, Vec<(usize, usize, Vec<u32>)>) {
+        let topo = FabricTopology::uniform(FAN_IN, DEPTH).unwrap();
+        let mut fabric = FabricAllReduce::exact(8, &topo, FabricMode::Remainder).unwrap();
+        let cluster = Cluster::new(topo.capacity())
+            .with_chunk_elems(GRAIN)
+            .with_backend(backend)
+            .with_seed(SEED)
+            .with_overlap_strategy(strategy)
+            .with_concurrent_jobs(jobs);
+        let (tx, rx) = mpsc::channel();
+        let mut metrics = ClusterMetrics::new("reconfig-sched");
+        let records = cluster
+            .run(
+                STEPS,
+                move |_| Synth {
+                    dim: DIM,
+                    tx: Some(tx.clone()),
+                },
+                &mut fabric,
+                &mut metrics,
+            )
+            .unwrap();
+        let mut applied: Vec<_> = rx.try_iter().collect();
+        applied.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        (records, applied)
+    };
+
+    let (oracle_records, oracle_applied) =
+        run_applied(Backend::Threaded, OverlapStrategy::default(), 1);
+    for r in &oracle_records {
+        assert_eq!(r.reconfig_exposed_s, None, "threaded has no virtual clock");
+        assert_eq!(r.reconfig_hidden_s, None);
+        assert_eq!(r.reconfig_queued_s, None);
+    }
+    for strategy in OverlapStrategy::ALL {
+        for jobs in [1usize, 3] {
+            let (records, applied) = run_applied(Backend::Event, strategy, jobs);
+            let ctx = format!("{strategy} jobs={jobs} — replay with seed {SEED:#x}");
+            assert_eq!(
+                applied, oracle_applied,
+                "{ctx}: applied averages must be bit-exact"
+            );
+            for (t, e) in oracle_records.iter().zip(&records) {
+                assert_eq!(t.stats, e.stats, "{ctx} step {}: accounted stats", t.step);
+                assert_eq!(
+                    t.observed_wire_bytes_per_server, e.observed_wire_bytes_per_server,
+                    "{ctx} step {}: observed wire bytes",
+                    t.step
+                );
+                assert_eq!(t.mean_loss, e.mean_loss, "{ctx} step {}", t.step);
+            }
+        }
+    }
+}
+
+/// The `--chunk 0` regression (satellite): the CLI-edge validator
+/// rejects a zero streaming grain with a named error instead of letting
+/// `Cluster::with_chunk_elems` panic or `chunk_count` divide by zero.
+#[test]
+fn zero_chunk_is_a_named_error_not_a_panic() {
+    let err = validate_chunk_elems(0).unwrap_err().to_string();
+    assert!(
+        err.contains("--chunk") && err.contains("got 0"),
+        "error must name the flag and the value: {err}"
+    );
+    validate_chunk_elems(1).unwrap();
+    validate_chunk_elems(usize::MAX).unwrap();
+}
