@@ -1,0 +1,119 @@
+//! ONN-forward mesh bench: dense Clements array vs butterfly
+//! factorization across switch radices n ∈ {16, 64, 256, 1024}.
+//!
+//! Measures propagate throughput (the per-symbol optical matmul cost the
+//! switch pays on every frame), records the analytic MZI counts
+//! (`n(n−1)/2` vs `(n/2)·log₂n`), the butterfly programming residuals
+//! (≈0 for realizable targets, O(1) for arbitrary orthogonal ones), the
+//! Table I area ratios under both mesh kinds, and the equal-area radix a
+//! butterfly budget buys. `-- --json` writes the `BENCH_onn.json`
+//! artifact CI uploads.
+//!
+//! Dense meshes are built directly from random angles in the interleaved
+//! column pattern — programming a 1024×1024 target through the O(n³)
+//! decomposition would dominate the bench without changing the
+//! propagate cost being measured.
+
+use optinc::config::Scenario;
+use optinc::linalg::random_orthogonal;
+use optinc::photonics::area::{
+    area_ratio_kind, butterfly_unitary_mzis, equal_area_radix, unitary_mzis,
+};
+use optinc::photonics::butterfly::{ButterflyMesh, FitConfig};
+use optinc::photonics::mesh::MeshKind;
+use optinc::photonics::mesh::MziMesh;
+use optinc::photonics::mzi::Mzi;
+use optinc::util::bench::{arg_flag, black_box, BenchSuite};
+use optinc::util::rng::Pcg32;
+
+/// A random-angle dense mesh in the interleaved column pattern: `n`
+/// columns alternating `n/2` and `n/2 − 1` MZIs (even `n`) — exactly
+/// `n(n−1)/2` rotations, the same structure `MziMesh::program` emits.
+fn random_dense_mesh(n: usize, seed: u64) -> MziMesh {
+    let mut rng = Pcg32::seeded(seed);
+    let mut mzis = Vec::with_capacity(n * (n - 1) / 2);
+    for col in 0..n {
+        let mut port = col % 2;
+        while port + 1 < n {
+            mzis.push(Mzi::new(
+                port,
+                rng.uniform(-std::f64::consts::PI, std::f64::consts::PI),
+            ));
+            port += 2;
+        }
+    }
+    assert_eq!(mzis.len(), n * (n - 1) / 2);
+    let signs = (0..n)
+        .map(|_| if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 })
+        .collect();
+    MziMesh {
+        size: n,
+        mzis,
+        signs,
+    }
+}
+
+fn main() {
+    let json_mode = arg_flag("--json");
+    let mut suite = if json_mode {
+        BenchSuite::quick("onn")
+    } else {
+        BenchSuite::new("onn")
+    };
+
+    // Propagate throughput + device counts per radix.
+    for &n in &[16usize, 64, 256, 1024] {
+        suite.record_scalar(&format!("mzis/dense/{n}"), unitary_mzis(n) as f64, "mzi");
+        suite.record_scalar(
+            &format!("mzis/butterfly/{n}"),
+            butterfly_unitary_mzis(n) as f64,
+            "mzi",
+        );
+
+        let dense = random_dense_mesh(n, 0xD0 + n as u64);
+        let bf = ButterflyMesh::random(n, 0xBF + n as u64);
+        let mut rng = Pcg32::seeded(n as u64);
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        suite.bench_throughput(&format!("propagate/dense/{n}"), 1.0, "prop", || {
+            black_box(dense.propagate(&x));
+        });
+        suite.bench_throughput(&format!("propagate/butterfly/{n}"), 1.0, "prop", || {
+            black_box(bf.propagate(&x));
+        });
+    }
+
+    // Programming residuals: exact on the butterfly-realizable set,
+    // honest O(1) on arbitrary orthogonal targets (the set is smaller).
+    let realizable = ButterflyMesh::random(16, 7).to_matrix();
+    let (_, res) = ButterflyMesh::fit(&realizable, &FitConfig::default());
+    suite.record_scalar("fit_residual/realizable/16", res, "rel");
+    for &n in &[16usize, 64] {
+        let mut rng = Pcg32::seeded(0x0A + n as u64);
+        let q = random_orthogonal(&mut rng, n);
+        let (_, res) = ButterflyMesh::fit(&q, &FitConfig::default());
+        suite.record_scalar(&format!("fit_residual/orthogonal/{n}"), res, "rel");
+    }
+
+    // Table I area ratios under both mesh kinds (shared dense full-SVD
+    // denominator) + the equal-area radix a 256-port dense budget buys.
+    for id in 1..=4 {
+        let sc = Scenario::table1(id).unwrap();
+        suite.record_scalar(
+            &format!("area_ratio/dense/s{id}"),
+            area_ratio_kind(&sc, MeshKind::Dense),
+            "ratio",
+        );
+        suite.record_scalar(
+            &format!("area_ratio/butterfly/s{id}"),
+            area_ratio_kind(&sc, MeshKind::Butterfly),
+            "ratio",
+        );
+    }
+    suite.record_scalar("equal_area_radix/256", equal_area_radix(256) as f64, "port");
+
+    if json_mode {
+        suite.finish_named("BENCH_onn");
+    } else {
+        suite.finish();
+    }
+}

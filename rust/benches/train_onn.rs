@@ -10,6 +10,7 @@ use optinc::onn::train::{
     evaluate, train_for_scenario, AveragingDataset, HardwareMode, Optimizer, TrainConfig, Trainer,
 };
 use optinc::photonics::approx::project_weights_f32;
+use optinc::photonics::mesh::MeshKind;
 use optinc::photonics::noise::NoiseModel;
 use optinc::util::bench::{black_box, BenchSuite};
 
@@ -50,6 +51,7 @@ fn main() {
                 reproject_every: 1,
                 noise: NoiseModel::new(0.01, 0.0, 0),
                 approx_layers: vec![1, 2, 3],
+                mesh: MeshKind::Dense,
             },
         ),
     ] {

@@ -4,11 +4,18 @@
 //! training needed). Accuracies come from the training metrics JSONs that
 //! `python -m compile.train_onn` wrote into artifacts/ — rows without a
 //! trained artifact are reported as "not trained" rather than invented.
+//!
+//! Each scenario is costed under both mesh parameterizations at equal
+//! radix: the paper's dense Clements meshes and the `O(n log n)`
+//! butterfly factorization ([`crate::photonics::butterfly`]). Both kinds
+//! share the dense full-SVD denominator, so the columns are directly
+//! comparable; the paper column only applies to the dense rows.
 
 use anyhow::Result;
 
 use crate::config::{artifacts_dir, Scenario};
 use crate::photonics::area;
+use crate::photonics::mesh::MeshKind;
 use crate::util::json::Json;
 
 #[derive(Clone, Debug)]
@@ -18,15 +25,58 @@ pub struct Table1Row {
     pub servers: usize,
     pub layers: Vec<usize>,
     pub approx_layers: Vec<usize>,
+    /// Mesh parameterization this row's approximated unitaries use.
+    pub mesh: MeshKind,
+    /// Approximated-ONN MZIs over the *dense* full-SVD MZIs.
     pub area_ratio: f64,
-    pub paper_area_ratio: f64,
+    /// Paper Table I value — only published for dense meshes.
+    pub paper_area_ratio: Option<f64>,
     /// (accuracy, trained-on-samples, exhaustive?) when metrics exist.
     pub accuracy: Option<(f64, u64, bool)>,
 }
 
 pub const PAPER_AREA: [f64; 4] = [0.393, 0.409, 0.404, 0.493];
 
+/// Render an approx-layers set faithfully: contiguous runs compress to
+/// `a–b`, gaps stay explicit (`[1, 3]` → `"1,3"`, never `"1–3"`).
+pub fn render_approx_set(approx_layers: &[usize]) -> String {
+    if approx_layers.is_empty() {
+        return "none".to_string();
+    }
+    let mut sorted = approx_layers.to_vec();
+    sorted.sort_unstable();
+    sorted.dedup();
+    let mut parts = Vec::new();
+    let mut run = (sorted[0], sorted[0]);
+    for &l in &sorted[1..] {
+        if l == run.1 + 1 {
+            run.1 = l;
+        } else {
+            parts.push(run);
+            run = (l, l);
+        }
+    }
+    parts.push(run);
+    parts
+        .into_iter()
+        .map(|(a, b)| match b - a {
+            0 => a.to_string(),
+            1 => format!("{a},{b}"),
+            _ => format!("{a}–{b}"),
+        })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// The paper's dense-mesh rows (the pre-butterfly behavior, and what the
+/// paper-comparison test pins).
 pub fn rows() -> Result<Vec<Table1Row>> {
+    rows_for(MeshKind::Dense)
+}
+
+/// Table I rows with every approximated unitary realized by `kind`
+/// meshes at the scenario's own radix.
+pub fn rows_for(kind: MeshKind) -> Result<Vec<Table1Row>> {
     let dir = artifacts_dir();
     let mut out = Vec::new();
     for id in 1..=4 {
@@ -48,8 +98,12 @@ pub fn rows() -> Result<Vec<Table1Row>> {
             servers: sc.servers,
             layers: sc.layers.clone(),
             approx_layers: sc.approx_layers.clone(),
-            area_ratio: area::area_ratio(&sc),
-            paper_area_ratio: PAPER_AREA[id - 1],
+            mesh: kind,
+            area_ratio: area::area_ratio_kind(&sc, kind),
+            paper_area_ratio: match kind {
+                MeshKind::Dense => Some(PAPER_AREA[id - 1]),
+                MeshKind::Butterfly => None,
+            },
             accuracy,
         });
     }
@@ -59,46 +113,42 @@ pub fn rows() -> Result<Vec<Table1Row>> {
 pub fn print() -> Result<()> {
     println!("\nTable I — area ratio & ONN accuracy per scenario");
     println!(
-        "{:<4} {:<5} {:<8} {:<44} {:>10} {:>10} {:>12}",
-        "#", "bits", "servers", "ONN structure (approx layers)", "area", "paper", "accuracy"
+        "{:<4} {:<10} {:<5} {:<8} {:<44} {:>10} {:>10} {:>12}",
+        "#", "mesh", "bits", "servers", "ONN structure (approx layers)", "area", "paper", "accuracy"
     );
-    for r in rows()? {
+    let mut all = rows()?;
+    all.extend(rows_for(MeshKind::Butterfly)?);
+    for r in all {
         let layers = r
             .layers
             .iter()
             .map(|l| l.to_string())
             .collect::<Vec<_>>()
             .join("-");
-        let approx = format!(
-            "{} ({})",
-            layers,
-            if r.approx_layers.is_empty() {
-                "none".to_string()
-            } else {
-                format!(
-                    "{}–{}",
-                    r.approx_layers.first().unwrap(),
-                    r.approx_layers.last().unwrap()
-                )
-            }
-        );
+        let approx = format!("{} ({})", layers, render_approx_set(&r.approx_layers));
         let acc = match r.accuracy {
             Some((a, n, true)) => format!("{:.4}% ({n} exh.)", a * 100.0),
             Some((a, n, false)) => format!("{:.4}% ({n} smp.)", a * 100.0),
             None => "not trained".to_string(),
         };
+        let paper = match r.paper_area_ratio {
+            Some(p) => format!("{:>9.1}%", p * 100.0),
+            None => format!("{:>10}", "—"),
+        };
         println!(
-            "{:<4} {:<5} {:<8} {:<44} {:>9.1}% {:>9.1}% {:>12}",
+            "{:<4} {:<10} {:<5} {:<8} {:<44} {:>9.1}% {} {:>12}",
             r.scenario,
+            r.mesh.as_str(),
             r.bits,
             r.servers,
             approx,
             r.area_ratio * 100.0,
-            r.paper_area_ratio * 100.0,
+            paper,
             acc
         );
     }
-    println!("(paper accuracies: 100% for all rows; area model max dev < 0.2 pp)");
+    println!("(paper accuracies: 100% for all rows; dense area model max dev < 0.2 pp;");
+    println!(" butterfly rows share the dense full-SVD denominator at equal radix)");
     Ok(())
 }
 
@@ -111,13 +161,47 @@ mod tests {
         let rows = rows().unwrap();
         assert_eq!(rows.len(), 4);
         for r in &rows {
+            let paper = r.paper_area_ratio.expect("dense rows carry paper values");
+            assert_eq!(r.mesh, MeshKind::Dense);
             assert!(
-                (r.area_ratio - r.paper_area_ratio).abs() < 0.002,
+                (r.area_ratio - paper).abs() < 0.002,
                 "scenario {}: {} vs paper {}",
                 r.scenario,
                 r.area_ratio,
-                r.paper_area_ratio
+                paper
             );
         }
+    }
+
+    #[test]
+    fn butterfly_rows_cost_less_and_omit_paper_column() {
+        let dense = rows().unwrap();
+        let bf = rows_for(MeshKind::Butterfly).unwrap();
+        assert_eq!(bf.len(), 4);
+        for (d, b) in dense.iter().zip(&bf) {
+            assert_eq!(b.mesh, MeshKind::Butterfly);
+            assert!(b.paper_area_ratio.is_none());
+            assert!(
+                b.area_ratio < d.area_ratio * 0.5,
+                "scenario {}: butterfly {} not ≪ dense {}",
+                b.scenario,
+                b.area_ratio,
+                d.area_ratio
+            );
+        }
+    }
+
+    #[test]
+    fn approx_set_renders_gaps_faithfully() {
+        // The old `first..last` rendering collapsed [1, 3] to "1–3";
+        // the set must be shown as it is.
+        assert_eq!(render_approx_set(&[]), "none");
+        assert_eq!(render_approx_set(&[2]), "2");
+        assert_eq!(render_approx_set(&[1, 3]), "1,3");
+        assert_eq!(render_approx_set(&[1, 2]), "1,2");
+        assert_eq!(render_approx_set(&[1, 2, 3]), "1–3");
+        assert_eq!(render_approx_set(&[1, 2, 3, 5, 7, 8, 9]), "1–3,5,7–9");
+        // Unsorted / duplicated input is normalized, not misrendered.
+        assert_eq!(render_approx_set(&[3, 1, 3, 2]), "1–3");
     }
 }

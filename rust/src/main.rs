@@ -5,18 +5,19 @@
 
 use anyhow::Result;
 use optinc::cli::{print_usage, Args, Command};
+use optinc::photonics::mesh::MeshKind;
 #[cfg(feature = "pjrt")]
 use optinc::train::WorkloadKind;
 
 const COMMANDS: &[Command] = &[
     Command {
         name: "train-onn",
-        about: "Hardware-aware native ONN training; emits .otsr + metrics",
+        about: "Hardware-aware native ONN training (--mode aware|plain --mesh dense|butterfly); emits .otsr + metrics",
         run: cmd_train_onn,
     },
     Command {
         name: "pipeline",
-        about: "Streaming engine demo: pipelined vs monolithic (ring|optinc|fabric --fan-in --levels --wire packed|f32 --backend threaded|event --servers N --reduce-threads T --error-feedback --bits B)",
+        about: "Streaming engine demo: pipelined vs monolithic (ring|optinc|fabric --fan-in --levels --wire packed|f32 --backend threaded|event --servers N --reduce-threads T --error-feedback --bits B --mesh dense|butterfly)",
         run: cmd_pipeline,
     },
     Command {
@@ -251,15 +252,18 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
                 // the exact oracle (practical for N=4; the larger
                 // scenario structures train slowly — see EXPERIMENTS.md
                 // §Hardware-aware training).
+                let mesh = MeshKind::parse(&args.str_or("mesh", "dense"))?;
                 let tcfg = optinc::onn::train::TrainConfig {
                     steps: args.usize_or("train-steps", 200)?,
                     hardware: optinc::onn::train::HardwareMode::Aware {
                         reproject_every: 8,
                         noise: optinc::photonics::noise::NoiseModel::new(0.01, 0.0, 0),
                         approx_layers: Vec::new(),
+                        mesh,
                     },
                     ..Default::default()
                 };
+                println!("mesh parameterization: {mesh}");
                 println!("training switch ONN natively ({} steps)…", tcfg.steps);
                 Box::new(OptIncAllReduce::trained(Scenario::table1(id)?, &tcfg, 11)?)
             } else {
@@ -294,8 +298,10 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
                 "fabric-basic" => FabricAllReduce::exact(bits, &topo, FabricMode::Basic)?,
                 _ => {
                     // One hardware-aware ONN trained natively per level.
+                    let mesh = MeshKind::parse(&args.str_or("mesh", "dense"))?;
                     let tcfg = optinc::onn::train::TrainConfig {
                         steps: args.usize_or("train-steps", 200)?,
+                        hardware: optinc::onn::train::HardwareMode::aware_with_mesh(mesh),
                         ..Default::default()
                     };
                     println!(
@@ -556,6 +562,7 @@ fn cmd_train_onn(args: &Args) -> Result<()> {
     };
 
     let mode = args.str_or("mode", "aware");
+    let mesh = MeshKind::parse(&args.str_or("mesh", "dense"))?;
     let optimizer = match args.str_or("optimizer", "adam").as_str() {
         "adam" => Optimizer::adam(),
         "sgd" => Optimizer::sgd(args.f64_or("momentum", 0.9)? as f32),
@@ -567,6 +574,7 @@ fn cmd_train_onn(args: &Args) -> Result<()> {
             reproject_every: args.usize_or("reproject-every", 1)?.max(1),
             noise: NoiseModel::new(args.f64_or("noise", 0.01)?, args.f64_or("loss-db", 0.0)?, 0),
             approx_layers: Vec::new(), // filled in from the scenario
+            mesh,
         },
         other => anyhow::bail!("unknown --mode '{other}' (aware|plain)"),
     };
@@ -579,7 +587,10 @@ fn cmd_train_onn(args: &Args) -> Result<()> {
         seed: args.u64_or("seed", 0)?,
     };
 
-    println!("train-onn — {label}: layers {:?}, mode {mode}", sc.layers);
+    println!(
+        "train-onn — {label}: layers {:?}, mode {mode}, mesh {mesh}",
+        sc.layers
+    );
     let t0 = std::time::Instant::now();
     let (net, report) = train_for_scenario(&sc, &cfg);
     let secs = t0.elapsed().as_secs_f64();
@@ -652,6 +663,7 @@ fn cmd_train_onn(args: &Args) -> Result<()> {
         ("steps", Json::Num(cfg.steps as f64)),
         ("eval_samples", Json::Num(eval_samples as f64)),
         ("mode", Json::Str(mode.clone())),
+        ("mesh", Json::Str(mesh.as_str().to_string())),
     ];
     if let Some((rel_ph, words_ph)) = post_hoc {
         fields.push(("post_hoc_rel_err", Json::Num(rel_ph)));

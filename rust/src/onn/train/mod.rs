@@ -37,7 +37,8 @@ pub mod optim;
 use anyhow::{ensure, Result};
 
 use crate::config::Scenario;
-use crate::photonics::approx::project_weights_f32;
+use crate::photonics::approx::{project_weights_f32, project_weights_f32_kind};
+use crate::photonics::mesh::MeshKind;
 use crate::photonics::noise::NoiseModel;
 use crate::util::rng::Pcg32;
 
@@ -64,22 +65,46 @@ pub enum HardwareMode {
         /// outside the set use full-SVD meshes, which realize arbitrary
         /// matrices, so they stay unconstrained.
         approx_layers: Vec<usize>,
+        /// Unitary-mesh parameterization the projection targets:
+        /// [`MeshKind::Dense`] keeps weights on the `Σ·U` set (any
+        /// orthogonal factor), [`MeshKind::Butterfly`] on the smaller
+        /// `diag(d)·B(θ)` set an `O(n log n)` butterfly can realize.
+        mesh: MeshKind,
     },
 }
 
 impl HardwareMode {
     /// Default hardware-aware mode: reproject every step, mild phase
-    /// noise (σ = 0.01 rad), constrain every weight matrix.
+    /// noise (σ = 0.01 rad), constrain every weight matrix, dense meshes.
     pub fn aware_default() -> HardwareMode {
+        HardwareMode::aware_with_mesh(MeshKind::Dense)
+    }
+
+    /// [`Self::aware_default`] targeting butterfly meshes.
+    pub fn aware_butterfly() -> HardwareMode {
+        HardwareMode::aware_with_mesh(MeshKind::Butterfly)
+    }
+
+    /// Default aware mode for an arbitrary mesh kind.
+    pub fn aware_with_mesh(mesh: MeshKind) -> HardwareMode {
         HardwareMode::Aware {
             reproject_every: 1,
             noise: NoiseModel::new(0.01, 0.0, 0),
             approx_layers: Vec::new(),
+            mesh,
         }
     }
 
     pub fn is_aware(&self) -> bool {
         matches!(self, HardwareMode::Aware { .. })
+    }
+
+    /// The mesh kind this mode projects onto (dense when unconstrained).
+    pub fn mesh_kind(&self) -> MeshKind {
+        match self {
+            HardwareMode::Aware { mesh, .. } => *mesh,
+            HardwareMode::Unconstrained => MeshKind::Dense,
+        }
     }
 }
 
@@ -297,16 +322,23 @@ impl Trainer {
         loss
     }
 
-    /// Project the constrained weight matrices onto the realizable `Σ·U`
-    /// set (no-op when unconstrained). Idempotent up to `f32` rounding.
+    /// Project the constrained weight matrices onto the set the
+    /// configured mesh kind can realize (`Σ·U` for dense, `diag(d)·B(θ)`
+    /// for butterfly; no-op when unconstrained). Idempotent up to `f32`
+    /// rounding.
     pub fn reproject(&mut self) {
-        let HardwareMode::Aware { approx_layers, .. } = &self.cfg.hardware else {
+        let HardwareMode::Aware {
+            approx_layers,
+            mesh,
+            ..
+        } = &self.cfg.hardware
+        else {
             return;
         };
         for (l, layer) in self.net.layers.iter_mut().enumerate() {
             let idx = l + 1; // 1-based weight-matrix index
             if approx_layers.is_empty() || approx_layers.contains(&idx) {
-                project_weights_f32(&mut layer.weight, layer.n_in, layer.n_out);
+                project_weights_f32_kind(&mut layer.weight, layer.n_in, layer.n_out, *mesh);
             }
         }
     }
@@ -476,6 +508,30 @@ mod tests {
                 .map(|(a, b)| (a - b).abs())
                 .fold(0.0f32, f32::max);
             assert!(max < 1e-4, "projection must be idempotent, moved {max}");
+        }
+    }
+
+    #[test]
+    fn butterfly_aware_training_reduces_loss_and_stays_realizable() {
+        let sc = tiny_scenario();
+        let (net, report) =
+            train_for_scenario(&sc, &quick_cfg(HardwareMode::aware_butterfly(), 6));
+        let head: f64 = report.losses[..10].iter().sum::<f64>() / 10.0;
+        assert!(
+            report.tail_loss(10) < head,
+            "butterfly-projected training still descends"
+        );
+        // Realizable fixed point of the *butterfly* projection.
+        for layer in &net.layers {
+            let mut again = layer.weight.clone();
+            project_weights_f32_kind(&mut again, layer.n_in, layer.n_out, MeshKind::Butterfly);
+            let max = layer
+                .weight
+                .iter()
+                .zip(&again)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(max < 1e-3, "butterfly projection must be idempotent, moved {max}");
         }
     }
 

@@ -32,6 +32,8 @@
 //! assert!(a.relative_error(&w) < 1e-9);
 //! ```
 
+use super::butterfly::{ButterflyMesh, FitConfig};
+use super::mesh::MeshKind;
 use crate::linalg::{svd, Mat};
 
 /// One approximated square block: `W_a = diag(d) · U_a`.
@@ -159,6 +161,142 @@ impl ApproxMatrix {
     }
 }
 
+/// One butterfly-approximated square block: `W_a = diag(d) · B(θ)` where
+/// `B` is the logical matrix of a programmed [`ButterflyMesh`] — the
+/// `O(n log n)` counterpart of [`ApproxBlock`]. `Σ_a` stays a diagonal
+/// amplitude column; only the unitary factor changes parameterization.
+#[derive(Clone, Debug)]
+pub struct ButterflyBlock {
+    pub d: Vec<f64>,
+    pub mesh: ButterflyMesh,
+    /// Relative Frobenius residual of fitting the butterfly to the
+    /// Procrustes factor `U_a` (0 ⇔ `U_a` was butterfly-realizable).
+    pub fit_residual: f64,
+}
+
+impl ButterflyBlock {
+    /// Dense form `diag(d) · B` (logical truncation of the mesh).
+    pub fn to_matrix(&self) -> Mat {
+        let mut m = self.mesh.logical_matrix();
+        for i in 0..m.rows {
+            let di = self.d[i];
+            for x in m.row_mut(i) {
+                *x *= di;
+            }
+        }
+        m
+    }
+
+    /// `y = diag(d) · B·x` via the `O(n log n)` optical path.
+    pub fn apply(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = self.mesh.propagate_logical(x);
+        for (yi, &di) in y.iter_mut().zip(&self.d) {
+            *yi *= di;
+        }
+        y
+    }
+}
+
+/// Approximate one square matrix as `diag(d)·B(θ)`: Procrustes factor
+/// per eq. 5, butterfly fit of `U_a` ([`ButterflyMesh::fit`]), then the
+/// eq.-6 least-squares diagonal **re-solved against the realized rows**
+/// `B_i` (not `U_a`'s) — so the diagonal absorbs what it can of the fit
+/// residual, and `diag(d)·B` inputs round-trip exactly.
+pub fn approximate_square_butterfly(w: &Mat, cfg: &FitConfig) -> ButterflyBlock {
+    assert_eq!(w.rows, w.cols, "approximation operates on square blocks");
+    let ua = approximate_square(w).u;
+    let (mesh, fit_residual) = ButterflyMesh::fit(&ua, cfg);
+    let b = mesh.logical_matrix();
+    let d: Vec<f64> = (0..w.rows)
+        .map(|i| {
+            let num: f64 = w.row(i).iter().zip(b.row(i)).map(|(&a, &x)| a * x).sum();
+            let den: f64 = b.row(i).iter().map(|&x| x * x).sum();
+            num / den.max(1e-30)
+        })
+        .collect();
+    ButterflyBlock {
+        d,
+        mesh,
+        fit_residual,
+    }
+}
+
+/// Butterfly counterpart of [`ApproxMatrix`]: same Fig.-4 partition, each
+/// block approximated as `diag(d)·B(θ)`.
+#[derive(Clone, Debug)]
+pub struct ButterflyMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub blocks: Vec<ButterflyBlock>,
+    pub vertical: bool,
+}
+
+impl ButterflyMatrix {
+    pub fn from_dense(w: &Mat, cfg: &FitConfig) -> ButterflyMatrix {
+        let (m, n) = (w.rows, w.cols);
+        let s = m.min(n);
+        let vertical = m >= n;
+        let count = m.max(n).div_ceil(s);
+        let mut blocks = Vec::with_capacity(count);
+        for b in 0..count {
+            let mut sq = Mat::zeros(s, s);
+            if vertical {
+                let r0 = b * s;
+                let rows = s.min(m - r0);
+                sq.set_block(0, 0, &w.block(r0, 0, rows, s));
+            } else {
+                let c0 = b * s;
+                let cols = s.min(n - c0);
+                sq.set_block(0, 0, &w.block(0, c0, s, cols));
+            }
+            blocks.push(approximate_square_butterfly(&sq, cfg));
+        }
+        ButterflyMatrix {
+            rows: m,
+            cols: n,
+            blocks,
+            vertical,
+        }
+    }
+
+    /// Reassemble the dense approximation.
+    pub fn to_matrix(&self) -> Mat {
+        let s = self.rows.min(self.cols);
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for (b, blk) in self.blocks.iter().enumerate() {
+            let dense = blk.to_matrix();
+            if self.vertical {
+                let r0 = b * s;
+                let rows = s.min(self.rows - r0);
+                out.set_block(r0, 0, &dense.block(0, 0, rows, s));
+            } else {
+                let c0 = b * s;
+                let cols = s.min(self.cols - c0);
+                out.set_block(0, c0, &dense.block(0, 0, s, cols));
+            }
+        }
+        out
+    }
+
+    /// Relative Frobenius approximation error vs the original.
+    pub fn relative_error(&self, w: &Mat) -> f64 {
+        let diff = self
+            .to_matrix()
+            .data
+            .iter()
+            .zip(&w.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        diff / w.frobenius().max(1e-300)
+    }
+
+    /// Worst per-block butterfly fit residual (reporting hook).
+    pub fn max_fit_residual(&self) -> f64 {
+        self.blocks.iter().map(|b| b.fit_residual).fold(0.0, f64::max)
+    }
+}
+
 /// Project a dense row-major `f32` weight matrix onto the realizable
 /// `Σ·U` set in place (`from_dense → to_matrix`, round-tripped through
 /// f64). This is the hardware-aware training hook
@@ -167,9 +305,24 @@ impl ApproxMatrix {
 /// SGD), which is what preserves accuracy versus projecting once after
 /// training. Idempotent up to floating-point rounding.
 pub fn project_weights_f32(weight: &mut [f32], rows: usize, cols: usize) {
+    project_weights_f32_kind(weight, rows, cols, MeshKind::Dense)
+}
+
+/// [`project_weights_f32`] parameterized by mesh kind: the butterfly mode
+/// projects onto the much smaller `diag(d)·B(θ)` set (fit with the cheap
+/// [`FitConfig::projection`] budget — the peel is exact once weights are
+/// near the set, so the in-loop polish stays short). Also idempotent:
+/// the Procrustes factor of `diag(d)·B` is `diag(sign d)·B`, which is
+/// itself butterfly-realizable.
+pub fn project_weights_f32_kind(weight: &mut [f32], rows: usize, cols: usize, kind: MeshKind) {
     assert_eq!(weight.len(), rows * cols);
     let dense = Mat::from_f32(rows, cols, weight);
-    let projected = ApproxMatrix::from_dense(&dense).to_matrix();
+    let projected = match kind {
+        MeshKind::Dense => ApproxMatrix::from_dense(&dense).to_matrix(),
+        MeshKind::Butterfly => {
+            ButterflyMatrix::from_dense(&dense, &FitConfig::projection()).to_matrix()
+        }
+    };
     for (dst, &src) in weight.iter_mut().zip(projected.data.iter()) {
         *dst = src as f32;
     }
@@ -279,6 +432,57 @@ mod tests {
         for (a, b) in weights.iter().zip(&once) {
             assert!((a - b).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn butterfly_block_roundtrips_realizable_input() {
+        // W = diag(d)·B with B butterfly-realizable is exactly
+        // representable: Procrustes recovers diag(sign d)·B, the peel is
+        // exact on it, and the re-solved diagonal restores the gains.
+        let b = ButterflyMesh::random(8, 3).to_matrix();
+        let gains = [2.0, 0.5, -1.5, 3.0, 1.0, 0.25, -0.75, 1.25];
+        let mut w = b.clone();
+        for i in 0..8 {
+            for x in w.row_mut(i) {
+                *x *= gains[i];
+            }
+        }
+        let blk = approximate_square_butterfly(&w, &FitConfig::default());
+        assert!(blk.fit_residual < 1e-9, "residual {}", blk.fit_residual);
+        assert!(blk.to_matrix().max_abs_diff(&w) < 1e-8);
+        // apply() takes the O(n log n) path to the same numbers.
+        let x: Vec<f64> = (0..8).map(|i| 0.4 * i as f64 - 1.0).collect();
+        let via_apply = blk.apply(&x);
+        let via_dense = blk.to_matrix().matvec(&x);
+        for (p, q) in via_apply.iter().zip(&via_dense) {
+            assert!((p - q).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn butterfly_projection_is_idempotent_and_coarser_than_dense() {
+        let mut rng = Pcg32::seeded(28);
+        let w = random_mat(&mut rng, 12, 20);
+        let mut weights = w.to_f32();
+        project_weights_f32_kind(&mut weights, 12, 20, MeshKind::Butterfly);
+        let once = weights.clone();
+        project_weights_f32_kind(&mut weights, 12, 20, MeshKind::Butterfly);
+        for (a, b) in weights.iter().zip(&once) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+        // The butterfly set is strictly smaller than Σ·U, so a random
+        // matrix projects with more error — but still bounded.
+        let bf = ButterflyMatrix::from_dense(&w, &FitConfig::default());
+        let dn = ApproxMatrix::from_dense(&w);
+        assert!(bf.relative_error(&w) >= dn.relative_error(&w) - 1e-9);
+        assert!(bf.relative_error(&w) < 1.0);
+        assert!(bf.max_fit_residual() > 0.0);
+        // Dense-kind dispatch is the existing projection, bit-identical.
+        let mut a = w.to_f32();
+        let mut b = w.to_f32();
+        project_weights_f32(&mut a, 12, 20);
+        project_weights_f32_kind(&mut b, 12, 20, MeshKind::Dense);
+        assert_eq!(a, b);
     }
 
     #[test]

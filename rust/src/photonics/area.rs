@@ -12,58 +12,164 @@
 //! These formulas reproduce the paper's Table I area ratios to within
 //! 0.2 pp (39.1/40.8/40.3/49.2% vs 39.3/40.9/40.4/49.3%) and the Table II
 //! sweep — see `rust/benches/table1_area.rs`.
+//!
+//! Every count is parameterized by [`MeshKind`]: the dense interleaving
+//! array pays `n(n−1)/2` MZIs per `n×n` unitary, the butterfly
+//! factorization pays `(p/2)·log₂p` with `p = n.next_power_of_two()`.
+//! The diagonal columns (`Σ`, `Σ_a`) are mesh-independent. The `_kind`
+//! suffix variants take the mesh kind; the original names delegate to
+//! [`MeshKind::Dense`] so all pre-butterfly callers and tests are
+//! bit-identical.
 
+use super::butterfly::physical_size;
+use super::mesh::MeshKind;
 use crate::config::Scenario;
 
-/// MZIs for an `n×n` unitary implemented as an interleaving array.
+/// MZIs for an `n×n` unitary implemented as a dense interleaving array.
 pub fn unitary_mzis(n: usize) -> usize {
-    n * (n - 1) / 2
+    unitary_mzis_kind(n, MeshKind::Dense)
 }
 
-/// MZIs for a full `m×n` matrix via SVD: `U Σ Vᵀ`.
+/// MZIs for an `n×n` unitary realized by a butterfly mesh:
+/// `(p/2)·log₂p` with `p = n.next_power_of_two()` (pad ports are real
+/// hardware even when dark).
+pub fn butterfly_unitary_mzis(n: usize) -> usize {
+    if n < 2 {
+        return 0;
+    }
+    let p = physical_size(n);
+    p / 2 * p.trailing_zeros() as usize
+}
+
+/// MZIs for an `n×n` unitary under the given mesh kind.
+pub fn unitary_mzis_kind(n: usize, kind: MeshKind) -> usize {
+    match kind {
+        MeshKind::Dense => {
+            if n < 2 {
+                0
+            } else {
+                n * (n - 1) / 2
+            }
+        }
+        MeshKind::Butterfly => butterfly_unitary_mzis(n),
+    }
+}
+
+/// MZIs for a full `m×n` matrix via SVD: `U Σ Vᵀ` (dense meshes).
 pub fn full_matrix_mzis(m: usize, n: usize) -> usize {
-    m * (m + 1) / 2 + n * (n - 1) / 2
+    full_matrix_mzis_kind(m, n, MeshKind::Dense)
+}
+
+/// MZIs for a full `m×n` matrix via SVD under the given mesh kind:
+/// two unitaries plus the `Σ` column of `m` diagonal MZIs.
+pub fn full_matrix_mzis_kind(m: usize, n: usize, kind: MeshKind) -> usize {
+    unitary_mzis_kind(m, kind) + m + unitary_mzis_kind(n, kind)
 }
 
 /// MZIs for one approximated square block: `Σ_a U_a` (one unitary + one
-/// diagonal column).
+/// diagonal column), dense mesh.
 pub fn approx_block_mzis(s: usize) -> usize {
-    s * (s + 1) / 2
+    approx_block_mzis_kind(s, MeshKind::Dense)
+}
+
+/// MZIs for one approximated square block under the given mesh kind.
+pub fn approx_block_mzis_kind(s: usize, kind: MeshKind) -> usize {
+    unitary_mzis_kind(s, kind) + s
 }
 
 /// MZIs for an `m×n` matrix partitioned into square blocks of side
 /// `s = min(m, n)` (horizontal or vertical partitioning, Fig. 4), each
-/// approximated per eq. 4. Partial blocks are padded to `s`.
+/// approximated per eq. 4. Partial blocks are padded to `s`; degenerate
+/// zero-dim matrices cost nothing.
 pub fn approx_matrix_mzis(m: usize, n: usize) -> usize {
+    approx_matrix_mzis_kind(m, n, MeshKind::Dense)
+}
+
+/// [`approx_matrix_mzis`] under the given mesh kind.
+pub fn approx_matrix_mzis_kind(m: usize, n: usize, kind: MeshKind) -> usize {
     let s = m.min(n);
+    if s == 0 {
+        return 0;
+    }
     let blocks = m.max(n).div_ceil(s);
-    blocks * approx_block_mzis(s)
+    blocks * approx_block_mzis_kind(s, kind)
 }
 
 /// MZI count for a weight matrix taking `n_in` inputs to `n_out` outputs.
 pub fn layer_mzis(n_out: usize, n_in: usize, approximated: bool) -> usize {
+    layer_mzis_kind(n_out, n_in, approximated, MeshKind::Dense)
+}
+
+/// [`layer_mzis`] under the given mesh kind.
+pub fn layer_mzis_kind(n_out: usize, n_in: usize, approximated: bool, kind: MeshKind) -> usize {
     if approximated {
-        approx_matrix_mzis(n_out, n_in)
+        approx_matrix_mzis_kind(n_out, n_in, kind)
     } else {
-        full_matrix_mzis(n_out, n_in)
+        full_matrix_mzis_kind(n_out, n_in, kind)
     }
 }
 
 /// Total MZIs for an ONN scenario (weight matrix `l` is
 /// `layers[l] × layers[l-1]`, 1-based `l`).
 pub fn scenario_mzis(sc: &Scenario, with_approximation: bool) -> usize {
+    scenario_mzis_kind(sc, with_approximation, MeshKind::Dense)
+}
+
+/// [`scenario_mzis`] under the given mesh kind. Only the *approximated*
+/// layers change parameterization: a layer outside `approx_layers` must
+/// realize an arbitrary matrix, which needs a full dense SVD mesh — the
+/// butterfly set is too small (cf. `HardwareMode::Aware`, which likewise
+/// leaves those layers unconstrained). The `with_approximation = false`
+/// denominator is therefore identical across kinds.
+pub fn scenario_mzis_kind(sc: &Scenario, with_approximation: bool, kind: MeshKind) -> usize {
     (1..sc.layers.len())
         .map(|l| {
             let approx = with_approximation && sc.approx_layers.contains(&l);
-            layer_mzis(sc.layers[l], sc.layers[l - 1], approx)
+            if approx {
+                approx_matrix_mzis_kind(sc.layers[l], sc.layers[l - 1], kind)
+            } else {
+                full_matrix_mzis(sc.layers[l], sc.layers[l - 1])
+            }
         })
         .sum()
 }
 
 /// Area ratio of a scenario with its configured approximation vs none —
-/// Table I's "Area Ratio" column.
+/// Table I's "Area Ratio" column. Degenerate scenarios with no MZIs at
+/// all (zero layers / zero dims) report 0.0, not NaN (cf. the PR 9
+/// `LatencyBreakdown` guards).
 pub fn area_ratio(sc: &Scenario) -> f64 {
-    scenario_mzis(sc, true) as f64 / scenario_mzis(sc, false) as f64
+    area_ratio_kind(sc, MeshKind::Dense)
+}
+
+/// Area of a `kind`-mesh approximated scenario relative to the **dense**
+/// full-SVD implementation — so dense and butterfly rows in Table I share
+/// one denominator and are directly comparable. Returns 0.0 for
+/// degenerate scenarios whose full implementation has no MZIs.
+pub fn area_ratio_kind(sc: &Scenario, kind: MeshKind) -> f64 {
+    let full = scenario_mzis(sc, false);
+    if full == 0 {
+        return 0.0;
+    }
+    scenario_mzis_kind(sc, true, kind) as f64 / full as f64
+}
+
+/// Largest power-of-two butterfly radix whose unitary costs no more MZIs
+/// than a dense `n×n` unitary — the "equal-area bigger radix" a butterfly
+/// switch buys (e.g. `n = 256` → 4096: 24 576 butterfly MZIs vs 32 640
+/// dense). Bigger radix means fewer OCS fabric levels for the same
+/// worker population.
+pub fn equal_area_radix(n: usize) -> usize {
+    let budget = unitary_mzis(n);
+    let mut p = 2usize;
+    while butterfly_unitary_mzis(p * 2) <= budget {
+        p *= 2;
+    }
+    if butterfly_unitary_mzis(p) <= budget {
+        p
+    } else {
+        0
+    }
 }
 
 /// Total MZIs of a multi-level fabric serving `workers` leaves:
@@ -74,14 +180,19 @@ pub fn area_ratio(sc: &Scenario) -> f64 {
 /// realizes eq. 10 fraction forwarding — the generalized "~10.5% per
 /// forwarding level" overhead of §IV.
 pub fn fabric_mzis(levels: &[Scenario], workers: usize) -> usize {
+    fabric_mzis_kind(levels, workers, MeshKind::Dense)
+}
+
+/// [`fabric_mzis`] with every switch ONN realized by `kind` meshes.
+pub fn fabric_mzis_kind(levels: &[Scenario], workers: usize, kind: MeshKind) -> usize {
     let mut nodes = workers;
     let mut total = 0usize;
     for (l, sc) in levels.iter().enumerate() {
         let switches = nodes.div_ceil(sc.servers);
         let per_switch = if l + 1 < levels.len() {
-            scenario_mzis(&sc.with_remainder_expansion(), true)
+            scenario_mzis_kind(&sc.with_remainder_expansion(), true, kind)
         } else {
-            scenario_mzis(sc, true)
+            scenario_mzis_kind(sc, true, kind)
         };
         total += switches * per_switch;
         nodes = switches;
@@ -94,14 +205,23 @@ pub fn fabric_mzis(levels: &[Scenario], workers: usize) -> usize {
 /// 0 for a depth-1 fabric; approaches the single-switch expansion
 /// overhead (~10.5% for scenario 1) as the leaf levels dominate.
 pub fn fabric_overhead(levels: &[Scenario], workers: usize) -> f64 {
+    fabric_overhead_kind(levels, workers, MeshKind::Dense)
+}
+
+/// [`fabric_overhead`] under the given mesh kind. A degenerate fabric
+/// with no baseline MZIs reports 0.0 overhead, not NaN.
+pub fn fabric_overhead_kind(levels: &[Scenario], workers: usize, kind: MeshKind) -> f64 {
     let mut nodes = workers;
     let mut base = 0usize;
     for sc in levels {
         let switches = nodes.div_ceil(sc.servers);
-        base += switches * scenario_mzis(sc, true);
+        base += switches * scenario_mzis_kind(sc, true, kind);
         nodes = switches;
     }
-    fabric_mzis(levels, workers) as f64 / base as f64 - 1.0
+    if base == 0 {
+        return 0.0;
+    }
+    fabric_mzis_kind(levels, workers, kind) as f64 / base as f64 - 1.0
 }
 
 /// Per-layer cost breakdown for reporting.
@@ -209,6 +329,82 @@ mod tests {
         // workers.
         let three = [sc.clone(), sc.clone(), sc];
         assert!(fabric_mzis(&three, 64) > fabric_mzis(&levels, 16));
+    }
+
+    #[test]
+    fn degenerate_scenario_area_ratio_is_zero_not_nan() {
+        // Satellite: zero-layer / zero-dim scenarios must not divide by
+        // the zero full-mesh count.
+        let empty = Scenario {
+            id: 99,
+            bits: 8,
+            servers: 4,
+            layers: vec![],
+            approx_layers: vec![],
+        };
+        assert_eq!(area_ratio(&empty), 0.0);
+        let zero_dim = Scenario {
+            layers: vec![0, 0],
+            ..empty.clone()
+        };
+        assert_eq!(area_ratio(&zero_dim), 0.0);
+        assert_eq!(area_ratio_kind(&zero_dim, MeshKind::Butterfly), 0.0);
+        assert_eq!(fabric_overhead_kind(&[zero_dim], 4, MeshKind::Dense), 0.0);
+    }
+
+    #[test]
+    fn butterfly_counts_match_formula() {
+        // (p/2)·log₂p with power-of-2 padding.
+        for (n, want) in [
+            (2usize, 1usize),
+            (4, 4),
+            (16, 32),
+            (31, 80),
+            (64, 192),
+            (256, 1024),
+            (1024, 5120),
+        ] {
+            assert_eq!(butterfly_unitary_mzis(n), want, "n={n}");
+        }
+        // vs dense at the headline radices.
+        assert_eq!(unitary_mzis(256), 32640);
+        assert_eq!(unitary_mzis(1024), 523776);
+    }
+
+    #[test]
+    fn butterfly_scenarios_cost_far_less_area() {
+        for id in 1..=4 {
+            let sc = Scenario::table1(id).unwrap();
+            let dense = area_ratio_kind(&sc, MeshKind::Dense);
+            let bf = area_ratio_kind(&sc, MeshKind::Butterfly);
+            assert_eq!(dense, area_ratio(&sc), "dense kind must be the default");
+            // Scenario 4 approximates only 3 of 8 layers, so its saving
+            // is bounded by those layers' share; the others approximate
+            // nearly everything and drop below a tenth of dense.
+            assert!(
+                bf < 0.5 * dense,
+                "scenario {id}: butterfly {bf:.4} not ≪ dense {dense:.4}"
+            );
+            assert!(bf > 0.0);
+        }
+        // Fabric-level accounting follows.
+        let sc = Scenario::table1(1).unwrap();
+        let levels = [sc.clone(), sc];
+        assert!(
+            fabric_mzis_kind(&levels, 16, MeshKind::Butterfly)
+                < fabric_mzis_kind(&levels, 16, MeshKind::Dense) / 4
+        );
+    }
+
+    #[test]
+    fn equal_area_radix_buys_bigger_switches() {
+        // A 256-radix dense unitary budget (32 640 MZIs) funds a 4096-port
+        // butterfly (24 576 MZIs); 8192 ports (53 248) would overrun.
+        assert_eq!(equal_area_radix(256), 4096);
+        assert!(butterfly_unitary_mzis(4096) <= unitary_mzis(256));
+        assert!(butterfly_unitary_mzis(8192) > unitary_mzis(256));
+        assert_eq!(equal_area_radix(2), 2);
+        assert_eq!(equal_area_radix(1), 0);
     }
 
     #[test]

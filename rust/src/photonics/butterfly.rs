@@ -1,0 +1,610 @@
+//! Butterfly-parameterized unitary mesh: `O(n log n)` optical switches.
+//!
+//! The dense [`MziMesh`](super::mesh::MziMesh) realizes an arbitrary
+//! `n×n` orthogonal matrix with `n(n−1)/2` MZIs and `O(n²)` propagation
+//! cost — which caps the practical switch radix. The EUNN-style butterfly
+//! factorization (Jing et al.; cf. Bernstein et al., "Freely scalable and
+//! reconfigurable optical hardware") trades expressivity for scale:
+//! `log₂p` stages of 2×2 couplers on stride-`2^k` port pairings, one
+//! rotation per pair, plus an output ±1 sign bank:
+//!
+//! ```text
+//! Q(θ) = S · C_{p/2}(θ_L) · … · C_2(θ_2) · C_1(θ_1)
+//! ```
+//!
+//! where `C_s` rotates every pair `(i, i+s)` with `(i/s)` even — the FFT
+//! butterfly data-flow. That is `(p/2)·log₂p` MZIs and `O(p log p)`
+//! propagation, with optical depth `log₂p` (vs ~`p` for the dense array,
+//! so insertion loss compounds logarithmically too).
+//!
+//! Ragged sizes pad to the next power of two (`p = n.next_power_of_two()`):
+//! the extra ports are dark — logical inputs embed with zeros and logical
+//! outputs truncate ([`ButterflyMesh::propagate_logical`]).
+//!
+//! **Programming.** The product is exactly peelable: for the outermost
+//! stage (stride `h = p/2`), rows `i` and `i+h` of a realizable target
+//! decompose as `Q[i,:h] = c·T_i`, `Q[i+h,:h] = s·T_i`, `Q[i,h:] = −s·B_i`,
+//! `Q[i+h,h:] = c·B_i` with unit rows `T_i`/`B_i` of two independent
+//! half-size butterflies. The angle has the Givens-type closed form
+//! `2θ = atan2(2(⟨u,v⟩−⟨p,q⟩), ‖u‖²+‖q‖²−‖v‖²−‖p‖²)`, exact for
+//! realizable targets and least-squares otherwise; leaf 1×1 blocks are
+//! the signs, which commute out through a stage by flipping the pair
+//! angle (`R(θ)·diag(σᵢ,σⱼ) = diag(σᵢ,σⱼ)·R(σᵢσⱼθ)`). For non-realizable
+//! targets, [`ButterflyMesh::fit`] refines the peel initialization with
+//! backpropagated gradient descent on `‖Q(θ) − T‖²_F` (line-searched,
+//! deterministic) and reports the relative residual.
+
+use anyhow::Result;
+
+use super::mesh::{ensure_orthogonal, UnitaryMesh};
+use crate::linalg::Mat;
+use crate::util::rng::Pcg32;
+
+/// One butterfly stage: a bank of rotations on pairs `(i, i + stride)`.
+#[derive(Clone, Debug)]
+pub struct ButterflyStage {
+    /// Port-pairing stride (`2^k` for stage `k`).
+    pub stride: usize,
+    /// One rotation angle per pair, ascending-`i` order; len = `size/2`.
+    pub thetas: Vec<f64>,
+}
+
+impl ButterflyStage {
+    /// Iterate the port pairs of this stage for physical size `p`:
+    /// `(pair_index, lo_port, hi_port)`.
+    fn pairs(&self, p: usize) -> impl Iterator<Item = (usize, usize, usize)> + '_ {
+        let s = self.stride;
+        (0..p / (2 * s)).flat_map(move |block| {
+            (0..s).map(move |k| {
+                let i = block * 2 * s + k;
+                (block * s + k, i, i + s)
+            })
+        })
+    }
+}
+
+/// Descent parameters for [`ButterflyMesh::fit`].
+#[derive(Clone, Copy, Debug)]
+pub struct FitConfig {
+    /// Maximum gradient-descent iterations after the analytic peel.
+    pub max_iters: usize,
+    /// Stop once the relative Frobenius residual falls below this.
+    pub tol: f64,
+}
+
+impl Default for FitConfig {
+    fn default() -> Self {
+        FitConfig {
+            max_iters: 48,
+            tol: 1e-10,
+        }
+    }
+}
+
+impl FitConfig {
+    /// Cheaper config for the in-training-loop projection
+    /// ([`crate::photonics::approx::project_weights_f32_kind`]): the
+    /// projection runs every optimizer step, and near-realizable weights
+    /// need only a short polish after the exact peel.
+    pub fn projection() -> FitConfig {
+        FitConfig {
+            max_iters: 12,
+            tol: 1e-10,
+        }
+    }
+}
+
+/// A programmed butterfly mesh (see module docs for the factorization).
+#[derive(Clone, Debug)]
+pub struct ButterflyMesh {
+    /// Physical port count `p` (a power of two).
+    pub size: usize,
+    /// Logical dimension `n ≤ p` this mesh stands in for (pad ports dark).
+    pub logical: usize,
+    /// Stages in propagation order: strides `1, 2, …, p/2`.
+    pub stages: Vec<ButterflyStage>,
+    /// Output sign bank (±1 per waveguide).
+    pub signs: Vec<f64>,
+}
+
+/// Physical port count backing `n` logical channels: next power of two.
+pub fn physical_size(n: usize) -> usize {
+    n.next_power_of_two().max(1)
+}
+
+impl ButterflyMesh {
+    /// The identity mesh on `logical` channels (all angles 0, signs +1).
+    pub fn identity(logical: usize) -> ButterflyMesh {
+        assert!(logical >= 1);
+        let p = physical_size(logical);
+        let stages = (0..p.trailing_zeros())
+            .map(|k| ButterflyStage {
+                stride: 1 << k,
+                thetas: vec![0.0; p / 2],
+            })
+            .collect();
+        ButterflyMesh {
+            size: p,
+            logical,
+            stages,
+            signs: vec![1.0; p],
+        }
+    }
+
+    /// A random mesh (uniform angles, random signs) — bench/property fuel.
+    pub fn random(logical: usize, seed: u64) -> ButterflyMesh {
+        let mut mesh = ButterflyMesh::identity(logical);
+        let mut rng = Pcg32::seeded(seed);
+        for stage in &mut mesh.stages {
+            for t in &mut stage.thetas {
+                *t = rng.uniform(-std::f64::consts::PI, std::f64::consts::PI);
+            }
+        }
+        for s in &mut mesh.signs {
+            *s = if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 };
+        }
+        mesh
+    }
+
+    /// Number of programmable MZIs: exactly `(p/2)·log₂p`.
+    pub fn mzi_count(&self) -> usize {
+        self.size / 2 * self.stages.len()
+    }
+
+    /// Propagate a physical signal vector (`x.len() == size`):
+    /// `O(p log p)` — each stage is `p/2` rotations.
+    pub fn propagate(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.size);
+        let mut y = x.to_vec();
+        for stage in &self.stages {
+            for (t, i, j) in stage.pairs(self.size) {
+                let (s, c) = stage.thetas[t].sin_cos();
+                let (a, b) = (y[i], y[j]);
+                y[i] = c * a - s * b;
+                y[j] = s * a + c * b;
+            }
+        }
+        for (v, &s) in y.iter_mut().zip(&self.signs) {
+            *v *= s;
+        }
+        y
+    }
+
+    /// Logical propagation: embed `x` (`len == logical`) with dark pad
+    /// ports, propagate, truncate back to `logical` outputs.
+    pub fn propagate_logical(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.logical);
+        let mut full = vec![0.0; self.size];
+        full[..self.logical].copy_from_slice(x);
+        let mut y = self.propagate(&full);
+        y.truncate(self.logical);
+        y
+    }
+
+    /// The physical `p×p` matrix this mesh realizes (always orthogonal).
+    pub fn to_matrix(&self) -> Mat {
+        let p = self.size;
+        // Start from the identity and push all rows through the stages at
+        // once: column j of the result is propagate(e_j).
+        let mut m = Mat::identity(p);
+        for stage in &self.stages {
+            for (t, i, j) in stage.pairs(p) {
+                let (s, c) = stage.thetas[t].sin_cos();
+                rotate_rows(&mut m, i, j, c, s);
+            }
+        }
+        for i in 0..p {
+            let sg = self.signs[i];
+            for v in m.row_mut(i) {
+                *v *= sg;
+            }
+        }
+        m
+    }
+
+    /// The logical `n×n` truncation of [`Self::to_matrix`] — what
+    /// [`Self::propagate_logical`] realizes (orthogonal only when the pad
+    /// ports are decoupled, e.g. for meshes programmed from a padded
+    /// target).
+    pub fn logical_matrix(&self) -> Mat {
+        self.to_matrix().block(0, 0, self.logical, self.logical)
+    }
+
+    /// Add flat `deltas` (len = [`Self::mzi_count`]) to the phases, one
+    /// stage bank after another in propagation order.
+    pub fn perturb(&mut self, deltas: &[f64]) {
+        assert_eq!(deltas.len(), self.mzi_count());
+        let mut off = 0;
+        for stage in &mut self.stages {
+            for t in &mut stage.thetas {
+                *t += deltas[off];
+                off += 1;
+            }
+        }
+    }
+
+    /// Program an *orthogonal* target (checked to `tol`, same named
+    /// error as [`MziMesh::program`](super::mesh::MziMesh::program)) and
+    /// return the mesh plus the relative Frobenius residual
+    /// `‖Q(θ) − T‖_F / ‖T‖_F` — ~1e-15 for butterfly-realizable targets
+    /// (the peel is exact), > 0 for arbitrary orthogonal ones (the
+    /// butterfly set is a measure-zero subset of the orthogonal group).
+    /// Ragged `n` embeds the target as `diag(T, I)` in the padded size.
+    pub fn program(q: &Mat, tol: f64) -> Result<(ButterflyMesh, f64)> {
+        ensure_orthogonal("ButterflyMesh::program", q, tol)?;
+        Ok(Self::fit(q, &FitConfig::default()))
+    }
+
+    /// Least-squares fit to any square target: analytic recursive peel
+    /// (exact for realizable targets) then line-searched gradient descent
+    /// on `‖Q(θ) − T‖²_F`. Returns `(mesh, relative residual)`.
+    /// Deterministic — no RNG — so the in-loop training projection is
+    /// replayable.
+    pub fn fit(target: &Mat, cfg: &FitConfig) -> (ButterflyMesh, f64) {
+        assert_eq!(target.rows, target.cols, "butterfly fit needs a square target");
+        let n = target.rows.max(1);
+        let p = physical_size(n);
+        // Pad ragged targets as diag(T, I): dark ports pass through.
+        let padded;
+        let t = if p == n {
+            target
+        } else {
+            let mut m = Mat::identity(p);
+            m.set_block(0, 0, target);
+            padded = m;
+            &padded
+        };
+        let (stage_banks, signs) = peel(t);
+        let stages = stage_banks
+            .into_iter()
+            .enumerate()
+            .map(|(k, thetas)| ButterflyStage {
+                stride: 1 << k,
+                thetas,
+            })
+            .collect();
+        let mut mesh = ButterflyMesh {
+            size: p,
+            logical: n,
+            stages,
+            signs,
+        };
+        let residual = descend(&mut mesh, t, cfg);
+        (mesh, residual)
+    }
+}
+
+impl UnitaryMesh for ButterflyMesh {
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    fn mzi_count(&self) -> usize {
+        ButterflyMesh::mzi_count(self)
+    }
+
+    /// One coupler per stage on every light path: `log₂p`.
+    fn optical_depth(&self) -> usize {
+        self.stages.len()
+    }
+
+    fn propagate(&self, x: &[f64]) -> Vec<f64> {
+        ButterflyMesh::propagate(self, x)
+    }
+
+    fn to_matrix(&self) -> Mat {
+        ButterflyMesh::to_matrix(self)
+    }
+
+    fn perturb(&mut self, deltas: &[f64]) {
+        ButterflyMesh::perturb(self, deltas)
+    }
+}
+
+/// Rotate rows `i`/`j` of `m`: `(rᵢ, rⱼ) ← (c·rᵢ − s·rⱼ, s·rᵢ + c·rⱼ)`.
+fn rotate_rows(m: &mut Mat, i: usize, j: usize, c: f64, s: f64) {
+    let w = m.cols;
+    let (lo, hi) = (i.min(j) * w, i.max(j) * w);
+    let (head, tail) = m.data.split_at_mut(hi);
+    let (ri, rj) = if i < j {
+        (&mut head[lo..lo + w], &mut tail[..w])
+    } else {
+        (&mut tail[..w], &mut head[lo..lo + w])
+    };
+    for (a, b) in ri.iter_mut().zip(rj.iter_mut()) {
+        let (x, y) = (*a, *b);
+        *a = c * x - s * y;
+        *b = s * x + c * y;
+    }
+}
+
+/// Inverse of [`rotate_rows`] (θ → −θ): used to rewind stage inputs
+/// during backprop so memory stays `O(p²)` instead of `O(p² log p)`.
+fn rotate_rows_inv(m: &mut Mat, i: usize, j: usize, c: f64, s: f64) {
+    rotate_rows(m, i, j, c, -s);
+}
+
+/// Recursive analytic peel of a `p×p` (power-of-two) target into
+/// per-stride theta banks (index `k` = stride `2^k`, each full length for
+/// the *sub-block* it came from) and the leaf sign bank. See module docs
+/// for the per-pair closed form.
+fn peel(q: &Mat) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let n = q.rows;
+    if n == 1 {
+        return (Vec::new(), vec![if q[(0, 0)] >= 0.0 { 1.0 } else { -1.0 }]);
+    }
+    let h = n / 2;
+    let mut thetas = vec![0.0; h];
+    let mut top = Mat::zeros(h, h);
+    let mut bot = Mat::zeros(h, h);
+    for i in 0..h {
+        let (u, pp) = q.row(i).split_at(h);
+        let (v, qq) = q.row(i + h).split_at(h);
+        let dot = |a: &[f64], b: &[f64]| a.iter().zip(b).map(|(x, y)| x * y).sum::<f64>();
+        let num_s = dot(u, v) - dot(pp, qq);
+        let num_c = 0.5 * (dot(u, u) + dot(qq, qq) - dot(v, v) - dot(pp, pp));
+        let theta = if num_s == 0.0 && num_c == 0.0 {
+            0.0
+        } else {
+            0.5 * num_s.atan2(num_c)
+        };
+        let (s, c) = theta.sin_cos();
+        thetas[i] = theta;
+        // Least-squares sub-rows: T_i ∝ c·u + s·v, B_i ∝ c·q − s·p
+        // (exact unit rows for realizable targets).
+        for k in 0..h {
+            top[(i, k)] = c * u[k] + s * v[k];
+            bot[(i, k)] = c * qq[k] - s * pp[k];
+        }
+        normalize_row(&mut top, i);
+        normalize_row(&mut bot, i);
+    }
+    let (mut stages_t, signs_t) = peel(&top);
+    let (stages_b, signs_b) = peel(&bot);
+    // Merge half banks: at stride s < h, the bottom half's pairs occupy
+    // the later blocks of the full-size stage, so banks concatenate.
+    for (st, sb) in stages_t.iter_mut().zip(stages_b) {
+        st.extend(sb);
+    }
+    // Commute the sub-mesh signs out through this stage:
+    // R(θ)·diag(σᵢ,σⱼ) = diag(σᵢ,σⱼ)·R(σᵢσⱼ·θ).
+    for i in 0..h {
+        thetas[i] *= signs_t[i] * signs_b[i];
+    }
+    stages_t.push(thetas);
+    let mut signs = signs_t;
+    signs.extend(signs_b);
+    (stages_t, signs)
+}
+
+/// Normalize row `i` in place; degenerate ~0 rows fall back to `e_i`
+/// (only reachable for non-orthogonal fit targets).
+fn normalize_row(m: &mut Mat, i: usize) {
+    let norm = m.row(i).iter().map(|v| v * v).sum::<f64>().sqrt();
+    if norm < 1e-12 {
+        for (k, v) in m.row_mut(i).iter_mut().enumerate() {
+            *v = if k == i { 1.0 } else { 0.0 };
+        }
+    } else {
+        for v in m.row_mut(i) {
+            *v /= norm;
+        }
+    }
+}
+
+/// Frobenius loss `‖S·X(θ) − T‖²_F` and its gradient wrt every theta.
+/// Forward keeps only the final activation; the backward pass rewinds
+/// stage inputs with inverse rotations.
+fn loss_and_grad(mesh: &ButterflyMesh, target: &Mat) -> (f64, Vec<Vec<f64>>) {
+    let p = mesh.size;
+    // Forward.
+    let mut x = Mat::identity(p);
+    for stage in &mesh.stages {
+        for (t, i, j) in stage.pairs(p) {
+            let (s, c) = stage.thetas[t].sin_cos();
+            rotate_rows(&mut x, i, j, c, s);
+        }
+    }
+    // Loss and dL/dX_L (signs fold into the residual).
+    let mut loss = 0.0;
+    let mut g = Mat::zeros(p, p);
+    for i in 0..p {
+        let sg = mesh.signs[i];
+        for k in 0..p {
+            let d = sg * x[(i, k)] - target[(i, k)];
+            loss += d * d;
+            g[(i, k)] = 2.0 * sg * d;
+        }
+    }
+    // Backward through the stages in reverse.
+    let mut grads: Vec<Vec<f64>> = mesh
+        .stages
+        .iter()
+        .map(|st| vec![0.0; st.thetas.len()])
+        .collect();
+    for (li, stage) in mesh.stages.iter().enumerate().rev() {
+        let bank = &mut grads[li];
+        for (t, i, j) in stage.pairs(p) {
+            let (s, c) = stage.thetas[t].sin_cos();
+            // dθ = ⟨Gᵢ, −yⱼ⟩ + ⟨Gⱼ, yᵢ⟩ with y = this stage's output rows.
+            let w = p;
+            let (gi0, gj0) = (i * w, j * w);
+            let (yi0, yj0) = (i * w, j * w);
+            let mut acc = 0.0;
+            for k in 0..w {
+                acc += g.data[gi0 + k] * -x.data[yj0 + k] + g.data[gj0 + k] * x.data[yi0 + k];
+            }
+            bank[t] = acc;
+            // Grad wrt stage inputs, then rewind x to the stage input.
+            rotate_rows_inv(&mut g, i, j, c, s);
+            rotate_rows_inv(&mut x, i, j, c, s);
+        }
+    }
+    (loss, grads)
+}
+
+/// Line-searched gradient descent on the theta banks (signs fixed from
+/// the peel). Returns the final relative Frobenius residual.
+fn descend(mesh: &mut ButterflyMesh, target: &Mat, cfg: &FitConfig) -> f64 {
+    let fro2 = target.data.iter().map(|v| v * v).sum::<f64>().max(1e-300);
+    let (mut loss, mut grads) = loss_and_grad(mesh, target);
+    let mut step = 0.5;
+    for _ in 0..cfg.max_iters {
+        if loss / fro2 <= cfg.tol * cfg.tol {
+            break;
+        }
+        let gn2: f64 = grads.iter().flat_map(|b| b.iter()).map(|g| g * g).sum();
+        if gn2 < 1e-24 {
+            break;
+        }
+        let mut accepted = false;
+        for _ in 0..24 {
+            let mut trial = mesh.clone();
+            for (stage, bank) in trial.stages.iter_mut().zip(&grads) {
+                for (t, g) in stage.thetas.iter_mut().zip(bank) {
+                    *t -= step * g;
+                }
+            }
+            let (tl, tg) = loss_and_grad(&trial, target);
+            if tl < loss {
+                *mesh = trial;
+                loss = tl;
+                grads = tg;
+                step *= 1.5;
+                accepted = true;
+                break;
+            }
+            step *= 0.5;
+        }
+        if !accepted {
+            break;
+        }
+    }
+    (loss / fro2).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::random_orthogonal;
+
+    #[test]
+    fn identity_mesh_is_identity() {
+        for n in [1usize, 2, 4, 7, 16] {
+            let mesh = ButterflyMesh::identity(n);
+            assert!(mesh.to_matrix().max_abs_diff(&Mat::identity(mesh.size)) < 1e-15);
+            assert_eq!(mesh.size, physical_size(n));
+        }
+    }
+
+    #[test]
+    fn mzi_count_is_half_p_log2_p() {
+        for (n, want) in [(2usize, 1usize), (4, 4), (16, 32), (31, 80), (256, 1024)] {
+            assert_eq!(ButterflyMesh::identity(n).mzi_count(), want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn peel_roundtrips_realizable_targets_exactly() {
+        for n in [2usize, 4, 8, 16, 64] {
+            let mesh = ButterflyMesh::random(n, 40 + n as u64);
+            let q = mesh.to_matrix();
+            let (back, res) = ButterflyMesh::program(&q, 1e-9).unwrap();
+            assert!(res < 1e-12, "n={n}: residual {res}");
+            assert!(back.to_matrix().max_abs_diff(&q) < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn fit_reports_residual_for_arbitrary_orthogonal() {
+        // Random orthogonal matrices are (a.s.) outside the butterfly
+        // set: the fit must report a real residual, and the mesh must
+        // still be exactly orthogonal (structure preserves unitarity).
+        let mut rng = Pcg32::seeded(77);
+        let q = random_orthogonal(&mut rng, 16);
+        let (mesh, res) = ButterflyMesh::program(&q, 1e-8).unwrap();
+        assert!(res > 0.1, "residual {res} suspiciously small");
+        assert!(res < 1.5, "residual {res} worse than the zero mesh");
+        assert!(mesh.to_matrix().orthogonality_error() < 1e-12);
+    }
+
+    #[test]
+    fn descent_improves_on_the_peel() {
+        let mut rng = Pcg32::seeded(78);
+        let q = random_orthogonal(&mut rng, 8);
+        let (_, peel_only) = ButterflyMesh::fit(&q, &FitConfig { max_iters: 0, tol: 1e-10 });
+        let (_, refined) = ButterflyMesh::fit(&q, &FitConfig::default());
+        assert!(
+            refined <= peel_only + 1e-12,
+            "descent must not regress: {refined} vs {peel_only}"
+        );
+        assert!(refined < peel_only - 1e-3, "descent should improve: {refined} vs {peel_only}");
+    }
+
+    #[test]
+    fn ragged_sizes_pad_to_power_of_two() {
+        let mesh = ButterflyMesh::identity(31);
+        assert_eq!(mesh.size, 32);
+        assert_eq!(mesh.logical, 31);
+        // diag(T, I) embedding: a realizable padded target programs
+        // exactly and the logical view matches the target.
+        let inner = ButterflyMesh::random(8, 5).to_matrix();
+        let (mesh, res) = ButterflyMesh::program(&inner, 1e-9).unwrap();
+        assert_eq!(mesh.size, 8);
+        assert!(res < 1e-12);
+        // Logical propagation equals the logical matrix matvec.
+        let sub = inner.block(0, 0, 7, 7); // NOT orthogonal; fit instead
+        let (mesh7, _) = ButterflyMesh::fit(&sub, &FitConfig::default());
+        assert_eq!(mesh7.size, 8);
+        assert_eq!(mesh7.logical, 7);
+        let x: Vec<f64> = (0..7).map(|i| (i as f64) * 0.3 - 1.0).collect();
+        let via_prop = mesh7.propagate_logical(&x);
+        let via_mat = mesh7.logical_matrix().matvec(&x);
+        for (a, b) in via_prop.iter().zip(&via_mat) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn non_orthogonal_program_rejected_with_named_error() {
+        let mut m = Mat::identity(4);
+        m[(0, 1)] = 0.7;
+        let msg = format!("{:#}", ButterflyMesh::program(&m, 1e-8).unwrap_err());
+        assert!(msg.contains("NonUnitaryInput"), "{msg}");
+        assert!(msg.contains("ButterflyMesh::program"), "{msg}");
+    }
+
+    #[test]
+    fn propagate_matches_matrix_and_preserves_power() {
+        for n in [2usize, 8, 32] {
+            let mesh = ButterflyMesh::random(n, 90 + n as u64);
+            let q = mesh.to_matrix();
+            let mut rng = Pcg32::seeded(n as u64);
+            let x: Vec<f64> = (0..mesh.size).map(|_| rng.normal()).collect();
+            let y = mesh.propagate(&x);
+            let want = q.matvec(&x);
+            for (a, b) in y.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-12, "n={n}");
+            }
+            let px: f64 = x.iter().map(|v| v * v).sum();
+            let py: f64 = y.iter().map(|v| v * v).sum();
+            assert!((px - py).abs() < 1e-9, "n={n}: power {px} -> {py}");
+        }
+    }
+
+    #[test]
+    fn perturb_distributes_over_stage_banks() {
+        let mut mesh = ButterflyMesh::identity(8);
+        let m = mesh.mzi_count();
+        let deltas: Vec<f64> = (0..m).map(|i| i as f64 * 0.01).collect();
+        mesh.perturb(&deltas);
+        let mut off = 0;
+        for stage in &mesh.stages {
+            for t in &stage.thetas {
+                assert!((t - deltas[off]).abs() < 1e-15);
+                off += 1;
+            }
+        }
+        assert_eq!(off, m);
+    }
+}

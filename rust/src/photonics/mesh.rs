@@ -12,6 +12,104 @@
 use super::mzi::Mzi;
 use crate::linalg::Mat;
 
+/// Which unitary parameterization a mesh (or a training/projection run)
+/// uses. Every layer that used to hard-code the dense mesh — area
+/// accounting, matrix approximation, hardware-aware training, the CLI —
+/// now dispatches on this.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum MeshKind {
+    /// Dense Clements/Reck-style interleaving array: `n(n−1)/2` MZIs and
+    /// `O(n²)` propagation. Realizes *any* `n×n` orthogonal matrix.
+    #[default]
+    Dense,
+    /// EUNN-style butterfly factorization
+    /// ([`ButterflyMesh`](super::butterfly::ButterflyMesh)):
+    /// `(p/2)·log₂p` MZIs and `O(p log p)` propagation, `p = n` rounded
+    /// up to a power of two. Realizes a structured subset of the
+    /// orthogonal group; programming arbitrary targets is least-squares
+    /// with a reported residual.
+    Butterfly,
+}
+
+impl MeshKind {
+    /// Parse a CLI spelling (`--mesh dense|butterfly`).
+    pub fn parse(s: &str) -> anyhow::Result<MeshKind> {
+        match s {
+            "dense" => Ok(MeshKind::Dense),
+            "butterfly" => Ok(MeshKind::Butterfly),
+            other => anyhow::bail!("unknown mesh kind '{other}' (dense|butterfly)"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            MeshKind::Dense => "dense",
+            MeshKind::Butterfly => "butterfly",
+        }
+    }
+}
+
+impl std::fmt::Display for MeshKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Shared behavior of programmable unitary meshes — the dense
+/// [`MziMesh`] and the structured
+/// [`ButterflyMesh`](super::butterfly::ButterflyMesh) behind one
+/// interface, so the noise model, the property suites, and the benches
+/// are written once.
+///
+/// `to_matrix` / `propagate` operate on the mesh's *physical* port count
+/// ([`UnitaryMesh::size`]; for a butterfly mesh the logical dimension
+/// padded up to a power of two), so the realized matrix is always
+/// orthogonal and propagation always equals its matvec — logical
+/// embedding/truncation is a separate, mesh-specific concern.
+pub trait UnitaryMesh {
+    /// Physical waveguide count (the dimension of [`Self::to_matrix`]).
+    fn size(&self) -> usize;
+
+    /// Number of programmable MZI phases ([`Self::perturb`] length).
+    fn mzi_count(&self) -> usize;
+
+    /// MZIs a single light path crosses (dense interleaved array: ~`size`;
+    /// butterfly: `log₂ size`) — the insertion-loss exponent.
+    fn optical_depth(&self) -> usize;
+
+    /// Propagate a physical signal vector: `y = Q·x`.
+    fn propagate(&self, x: &[f64]) -> Vec<f64>;
+
+    /// Dense matrix the mesh realizes (always orthogonal).
+    fn to_matrix(&self) -> Mat;
+
+    /// Add `deltas` (len = [`Self::mzi_count`]) to the phases, phase bank
+    /// by phase bank in propagation order (the noise-injection hook).
+    fn perturb(&mut self, deltas: &[f64]);
+}
+
+/// Shared orthogonality gate for mesh programming: a named error carrying
+/// the measured deviation, the tolerance, and the shape — so a caller
+/// handing a non-unitary matrix to [`MziMesh::program`] or
+/// [`ButterflyMesh::program`](super::butterfly::ButterflyMesh::program)
+/// sees *how far* off it was, not an opaque refusal.
+pub fn ensure_orthogonal(who: &str, q: &Mat, tol: f64) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        q.rows == q.cols,
+        "{who}: NonUnitaryInput: matrix must be square, got {}×{}",
+        q.rows,
+        q.cols
+    );
+    let err = q.orthogonality_error();
+    anyhow::ensure!(
+        err <= tol,
+        "{who}: NonUnitaryInput: ‖QᵀQ−I‖_max = {err:.3e} exceeds tol {tol:.3e} \
+         ({n}×{n} matrix)",
+        n = q.rows
+    );
+    Ok(())
+}
+
 /// A fully-programmed mesh realizing one orthogonal matrix.
 #[derive(Clone, Debug)]
 pub struct MziMesh {
@@ -26,14 +124,10 @@ pub struct MziMesh {
 impl MziMesh {
     /// Decompose an orthogonal matrix `q` (‖QᵀQ−I‖ small) into a mesh.
     ///
-    /// Returns an error if `q` is not square or not orthogonal to `tol`.
+    /// Returns a [`ensure_orthogonal`] error if `q` is not square or not
+    /// orthogonal to `tol`.
     pub fn program(q: &Mat, tol: f64) -> anyhow::Result<MziMesh> {
-        anyhow::ensure!(q.rows == q.cols, "mesh needs a square matrix");
-        let err = q.orthogonality_error();
-        anyhow::ensure!(
-            err <= tol,
-            "matrix is not orthogonal (error {err:.3e} > tol {tol:.3e})"
-        );
+        ensure_orthogonal("MziMesh::program", q, tol)?;
         let n = q.rows;
         let mut w = q.clone();
         // Eliminate from the RIGHT with adjacent-column rotations:
@@ -126,6 +220,33 @@ impl MziMesh {
     }
 }
 
+impl UnitaryMesh for MziMesh {
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    fn mzi_count(&self) -> usize {
+        MziMesh::mzi_count(self)
+    }
+
+    /// Every light path in an interleaved dense mesh crosses ~`M` MZIs.
+    fn optical_depth(&self) -> usize {
+        self.size
+    }
+
+    fn propagate(&self, x: &[f64]) -> Vec<f64> {
+        MziMesh::propagate(self, x)
+    }
+
+    fn to_matrix(&self) -> Mat {
+        MziMesh::to_matrix(self)
+    }
+
+    fn perturb(&mut self, deltas: &[f64]) {
+        MziMesh::perturb(self, deltas)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -197,5 +318,48 @@ mod tests {
         let mut m = Mat::identity(3);
         m[(0, 1)] = 0.5;
         assert!(MziMesh::program(&m, 1e-8).is_err());
+    }
+
+    #[test]
+    fn non_orthogonal_error_is_named_and_reports_deviation() {
+        // Deliberately non-unitary: I + 0.5 off-diagonal. The error must
+        // be the named NonUnitaryInput with the measured ‖QᵀQ−I‖_max
+        // deviation in it, not an opaque refusal.
+        let mut m = Mat::identity(3);
+        m[(0, 1)] = 0.5;
+        let want_dev = m.orthogonality_error();
+        let msg = format!("{:#}", MziMesh::program(&m, 1e-8).unwrap_err());
+        assert!(msg.contains("NonUnitaryInput"), "unnamed error: {msg}");
+        assert!(msg.contains("MziMesh::program"), "no source: {msg}");
+        assert!(
+            msg.contains(&format!("{want_dev:.3e}")),
+            "deviation {want_dev:.3e} missing from: {msg}"
+        );
+        // Non-square inputs are named the same way.
+        let rect = Mat::zeros(2, 3);
+        let msg = format!("{:#}", MziMesh::program(&rect, 1e-8).unwrap_err());
+        assert!(msg.contains("NonUnitaryInput") && msg.contains("2×3"), "{msg}");
+    }
+
+    #[test]
+    fn mesh_kind_parses_and_displays() {
+        assert_eq!(MeshKind::parse("dense").unwrap(), MeshKind::Dense);
+        assert_eq!(MeshKind::parse("butterfly").unwrap(), MeshKind::Butterfly);
+        assert!(MeshKind::parse("fft").is_err());
+        assert_eq!(MeshKind::Butterfly.to_string(), "butterfly");
+        assert_eq!(MeshKind::default(), MeshKind::Dense);
+    }
+
+    #[test]
+    fn trait_object_view_matches_inherent_api() {
+        let mut rng = Pcg32::seeded(12);
+        let q = random_orthogonal(&mut rng, 8);
+        let mesh = MziMesh::program(&q, 1e-8).unwrap();
+        let dyn_mesh: &dyn UnitaryMesh = &mesh;
+        assert_eq!(dyn_mesh.size(), 8);
+        assert_eq!(dyn_mesh.mzi_count(), 28);
+        assert_eq!(dyn_mesh.optical_depth(), 8);
+        let x: Vec<f64> = (0..8).map(|i| i as f64 - 3.5).collect();
+        assert_eq!(dyn_mesh.propagate(&x), mesh.propagate(&x));
     }
 }

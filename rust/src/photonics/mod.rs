@@ -2,9 +2,13 @@
 //!
 //! - [`mzi`] — the 2×2 Mach-Zehnder-Interferometer transfer model and
 //!   meshes of MZIs over adjacent waveguide pairs.
-//! - [`mesh`] — decomposition of orthogonal matrices into `M(M−1)/2`
-//!   adjacent-pair MZI rotations (+ output sign shifters), and signal
-//!   propagation through the programmed mesh (light through the array).
+//! - [`mesh`] — the [`mesh::UnitaryMesh`] abstraction over programmable
+//!   unitary hardware, plus the dense Clements-style decomposition of
+//!   orthogonal matrices into `M(M−1)/2` adjacent-pair MZI rotations
+//!   (+ output sign shifters) and signal propagation through it.
+//! - [`butterfly`] — the EUNN-style butterfly factorization:
+//!   `(n/2)·log₂n` MZIs, `O(n log n)` propagation, power-of-2 padding,
+//!   analytic peel + descent programming with reported residual.
 //! - [`area`] — the paper's hardware-cost model: MZI counts for full
 //!   (SVD) and approximated (Σ·U) layer implementations; reproduces the
 //!   Table I / Table II area ratios.
@@ -14,6 +18,7 @@
 
 pub mod approx;
 pub mod area;
+pub mod butterfly;
 pub mod mesh;
 pub mod mzi;
 pub mod noise;

@@ -7,7 +7,7 @@
 //! - **insertion loss**: per-MZI amplitude attenuation (dB), compounding
 //!   along each light path.
 
-use super::mesh::MziMesh;
+use super::mesh::UnitaryMesh;
 use crate::util::rng::Pcg32;
 
 /// Non-ideality parameters.
@@ -39,29 +39,34 @@ impl NoiseModel {
         }
     }
 
-    /// Apply this noise model to a mesh, returning the perturbed copy and
-    /// the global amplitude factor from insertion loss.
+    /// Apply this noise model to any [`UnitaryMesh`], returning the
+    /// perturbed copy and the global amplitude factor from insertion loss.
     ///
-    /// Every light path in an interleaved mesh of size `M` crosses ~`M`
-    /// MZIs, so loss is modeled as a uniform `(10^(−loss/20))^M` amplitude
-    /// factor (power loss per MZI is `10^(−loss/10)`).
-    pub fn apply(&self, mesh: &MziMesh) -> (MziMesh, f64) {
+    /// Phase noise draws one Gaussian delta per programmable MZI (a dense
+    /// mesh perturbs per rotation, a butterfly per phase-bank entry — the
+    /// flat delta vector is handed to the mesh's own [`UnitaryMesh::perturb`],
+    /// which distributes it stage bank by stage bank). Every light path
+    /// crosses [`UnitaryMesh::optical_depth`] MZIs (~`M` for the dense
+    /// interleaved array, `log₂p` for the butterfly), so loss is a uniform
+    /// `(10^(−loss/20))^depth` amplitude factor (power loss per MZI is
+    /// `10^(−loss/10)`).
+    pub fn apply<M: UnitaryMesh + Clone>(&self, mesh: &M) -> (M, f64) {
         let mut noisy = mesh.clone();
         if self.phase_sigma > 0.0 {
             let mut rng = Pcg32::seeded(self.seed);
-            let deltas: Vec<f64> = (0..mesh.mzis.len())
+            let deltas: Vec<f64> = (0..mesh.mzi_count())
                 .map(|_| rng.normal() * self.phase_sigma)
                 .collect();
             noisy.perturb(&deltas);
         }
-        let amp = 10f64.powf(-self.insertion_loss_db / 20.0 * mesh.size as f64);
+        let amp = 10f64.powf(-self.insertion_loss_db / 20.0 * mesh.optical_depth() as f64);
         (noisy, amp)
     }
 
     /// Matrix-level deviation introduced by this noise on a given mesh:
     /// `‖Q̃ − Q‖_max` (ignoring the uniform loss factor, which transceiver
     /// AGC compensates).
-    pub fn matrix_deviation(&self, mesh: &MziMesh) -> f64 {
+    pub fn matrix_deviation<M: UnitaryMesh + Clone>(&self, mesh: &M) -> f64 {
         let (noisy, _) = self.apply(mesh);
         noisy.to_matrix().max_abs_diff(&mesh.to_matrix())
     }
@@ -105,6 +110,7 @@ impl NoiseModel {
 mod tests {
     use super::*;
     use crate::linalg::random_orthogonal;
+    use crate::photonics::mesh::MziMesh;
     use crate::util::rng::Pcg32;
 
     fn mesh(n: usize, seed: u64) -> MziMesh {
@@ -175,6 +181,22 @@ mod tests {
         for v in out {
             assert!((v - want).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn butterfly_deviation_grows_with_sigma_and_loss_uses_log_depth() {
+        use crate::photonics::butterfly::ButterflyMesh;
+        let m = ButterflyMesh::random(16, 11);
+        let d1 = NoiseModel::new(0.001, 0.0, 7).matrix_deviation(&m);
+        let d2 = NoiseModel::new(0.05, 0.0, 7).matrix_deviation(&m);
+        assert!(d1 > 0.0 && d1 < d2, "{d1} !< {d2}");
+        // Butterfly optical depth is log₂p = 4, not p = 16: insertion
+        // loss compounds over 4 couplers only.
+        let (_, amp) = NoiseModel::new(0.0, 0.1, 7).apply(&m);
+        assert!((amp - 10f64.powf(-0.1 * 4.0 / 20.0)).abs() < 1e-12);
+        // Phase noise preserves the butterfly's structural unitarity.
+        let (noisy, _) = NoiseModel::new(0.05, 0.0, 9).apply(&m);
+        assert!(noisy.to_matrix().orthogonality_error() < 1e-12);
     }
 
     #[test]

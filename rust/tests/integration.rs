@@ -912,3 +912,56 @@ fn trained_collective_tracks_exact_oracle() {
         "trained collective mad {err_t} vs scale {scale}"
     );
 }
+
+#[test]
+fn butterfly_trained_collective_tracks_exact_oracle() {
+    // Same end-to-end contract as the dense trained switch, with the
+    // hardware-aware projection targeting the O(n log n) butterfly set:
+    // the factorization is coarser, but the trained collective must stay
+    // within the same tolerance the table2 path enforces.
+    use optinc::onn::train::{HardwareMode, TrainConfig};
+
+    let sc = Scenario {
+        id: 0,
+        bits: 8,
+        servers: 4,
+        layers: vec![4, 16, 16, 4],
+        approx_layers: vec![1, 2, 3],
+    };
+    let cfg = TrainConfig {
+        steps: 300,
+        batch: 32,
+        seed: 21,
+        hardware: HardwareMode::aware_butterfly(),
+        ..Default::default()
+    };
+    let mut trained = OptIncAllReduce::trained(sc.clone(), &cfg, 9).unwrap();
+    let mut exact = OptIncAllReduce::exact(sc, 9);
+
+    let base = random_shards(4, 512, 33);
+    let want = exact_mean(&base);
+    let mut got_t = base.clone();
+    trained.all_reduce(&mut got_t);
+    let mut got_e = base.clone();
+    exact.all_reduce(&mut got_e);
+
+    for s in &got_t[1..] {
+        assert_eq!(s, &got_t[0]);
+    }
+    let mad = |xs: &[f32]| -> f64 {
+        xs.iter()
+            .zip(&want)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .sum::<f64>()
+            / xs.len() as f64
+    };
+    let err_t = mad(&got_t[0]);
+    let err_e = mad(&got_e[0]);
+    assert!(err_e <= err_t, "oracle can't be worse than a trained net");
+    let views: Vec<&[f32]> = base.iter().map(|s| s.as_slice()).collect();
+    let scale = optinc::quant::GlobalQuantizer::global_scale(&views) as f64;
+    assert!(
+        err_t < scale * 0.5,
+        "butterfly trained collective mad {err_t} vs scale {scale}"
+    );
+}

@@ -1,0 +1,135 @@
+//! Property matrix for the unitary-mesh abstraction: the dense Clements
+//! array and the butterfly factorization must agree on the contracts the
+//! rest of the stack leans on — `to_matrix` orthogonality, `propagate`
+//! ≡ matrix·vector, the `(n/2)·log₂n` device count, exact programming on
+//! realizable targets, power-of-2 padding, and noise-perturbation
+//! monotonicity shared through the `UnitaryMesh` trait.
+
+use optinc::linalg::{random_orthogonal, Mat};
+use optinc::photonics::butterfly::{physical_size, ButterflyMesh, FitConfig};
+use optinc::photonics::mesh::{MziMesh, UnitaryMesh};
+use optinc::photonics::noise::NoiseModel;
+use optinc::util::rng::Pcg32;
+
+const SIZES: [usize; 6] = [2, 4, 8, 16, 31, 64];
+
+fn random_input(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+#[test]
+fn butterfly_to_matrix_is_orthogonal_at_every_size() {
+    for n in SIZES {
+        let mesh = ButterflyMesh::random(n, 100 + n as u64);
+        let q = mesh.to_matrix();
+        // Physical matrix (padded for n = 31): structurally orthogonal.
+        assert_eq!(q.rows, physical_size(n));
+        let err = q.orthogonality_error();
+        assert!(err < 1e-12, "n={n}: ‖QᵀQ−I‖ = {err:.3e}");
+    }
+}
+
+#[test]
+fn propagate_agrees_with_matrix_matvec_for_both_kinds() {
+    for n in SIZES {
+        // Butterfly: random mesh, physical-length input.
+        let bf = ButterflyMesh::random(n, 200 + n as u64);
+        let x = random_input(bf.size, 300 + n as u64);
+        let via_prop = ButterflyMesh::propagate(&bf, &x);
+        let via_mat = bf.to_matrix().matvec(&x);
+        for (a, b) in via_prop.iter().zip(&via_mat) {
+            assert!((a - b).abs() < 1e-11, "butterfly n={n}");
+        }
+
+        // Dense: programmed from a random orthogonal target (dense
+        // meshes take any n — no padding).
+        let mut rng = Pcg32::seeded(400 + n as u64);
+        let q = random_orthogonal(&mut rng, n);
+        let dense = MziMesh::program(&q, 1e-8).unwrap();
+        let x = random_input(n, 500 + n as u64);
+        let via_prop = MziMesh::propagate(&dense, &x);
+        let via_mat = dense.to_matrix().matvec(&x);
+        for (a, b) in via_prop.iter().zip(&via_mat) {
+            assert!((a - b).abs() < 1e-9, "dense n={n}");
+        }
+    }
+}
+
+#[test]
+fn butterfly_mzi_count_is_half_p_log2_p() {
+    for n in SIZES {
+        let mesh = ButterflyMesh::random(n, n as u64);
+        let p = physical_size(n);
+        let want = p / 2 * (p.trailing_zeros() as usize);
+        assert_eq!(UnitaryMesh::mzi_count(&mesh), want, "n={n}");
+        // And the propagate cost is O(p log p): one rotation per MZI
+        // plus the sign bank — count them via the stage structure.
+        let rotations: usize = mesh.stages.iter().map(|s| s.thetas.len()).sum();
+        assert_eq!(rotations, want, "n={n}");
+    }
+}
+
+#[test]
+fn butterfly_program_is_exact_on_realizable_targets() {
+    for n in [2usize, 4, 8, 16, 64] {
+        let target = ButterflyMesh::random(n, 600 + n as u64).to_matrix();
+        let (back, residual) = ButterflyMesh::program(&target, 1e-9).unwrap();
+        assert!(residual < 1e-12, "n={n}: residual {residual:.3e}");
+        assert!(back.to_matrix().max_abs_diff(&target) < 1e-9, "n={n}");
+    }
+}
+
+#[test]
+fn padded_logical_view_is_consistent() {
+    // n = 31 pads to 32 physical ports; the logical propagate must match
+    // the logical matrix exactly, with the dark pad port invisible.
+    let peel_only = FitConfig { max_iters: 0, tol: 1e-10 };
+    let (mesh, _) = ButterflyMesh::fit(&Mat::identity(31), &peel_only);
+    assert_eq!(mesh.size, 32);
+    assert_eq!(mesh.logical, 31);
+    let x = random_input(31, 7);
+    let got = mesh.propagate_logical(&x);
+    for (a, b) in got.iter().zip(&x) {
+        assert!((a - b).abs() < 1e-12, "identity fit must pass through");
+    }
+
+    let rnd = ButterflyMesh::random(31, 9);
+    let x = random_input(31, 11);
+    let via_prop = rnd.propagate_logical(&x);
+    let via_mat = rnd.logical_matrix().matvec(&x);
+    for (a, b) in via_prop.iter().zip(&via_mat) {
+        assert!((a - b).abs() < 1e-11);
+    }
+}
+
+/// Shared monotonicity contract: more phase noise ⇒ at least as much
+/// matrix deviation, for any `UnitaryMesh` implementation, through the
+/// same generic `NoiseModel` entry point the trainer uses.
+fn deviation_grows_with_sigma<M: UnitaryMesh + Clone>(mesh: &M, label: &str) {
+    let sigmas = [0.001, 0.01, 0.05];
+    let devs: Vec<f64> = sigmas
+        .iter()
+        .map(|&s| NoiseModel::new(s, 0.0, 7).matrix_deviation(mesh))
+        .collect();
+    for (w, (s_lo, s_hi)) in devs.windows(2).zip(sigmas.windows(2).map(|w| (w[0], w[1]))) {
+        assert!(
+            w[0] < w[1],
+            "{label}: deviation not monotone (σ={s_lo}: {}, σ={s_hi}: {})",
+            w[0],
+            w[1]
+        );
+    }
+    assert!(devs[0] > 0.0, "{label}: noise must move the matrix");
+}
+
+#[test]
+fn perturbation_deviation_is_monotone_for_both_kinds() {
+    let mut rng = Pcg32::seeded(42);
+    let q = random_orthogonal(&mut rng, 16);
+    let dense = MziMesh::program(&q, 1e-8).unwrap();
+    deviation_grows_with_sigma(&dense, "dense");
+
+    let bf = ButterflyMesh::random(16, 43);
+    deviation_grows_with_sigma(&bf, "butterfly");
+}
